@@ -1,0 +1,91 @@
+//! End-to-end benches: one per paper table/figure family, exercising the
+//! full live engine and the AOT/PJRT execution path.
+//!
+//! Run: `cargo bench --offline` (add `-- fast` for a quick pass).
+
+use dpsnn::config::{Mode, NetworkParams, RunConfig};
+use dpsnn::coordinator;
+use dpsnn::util::bench::{black_box, Bench};
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "fast" || a == "--fast");
+    let mut b = if fast { Bench::fast() } else { Bench::new() };
+    // end-to-end iterations are seconds-long; keep sample counts small
+    b.measure = std::time::Duration::from_secs(if fast { 2 } else { 6 });
+
+    println!("== end-to-end (live engine, this host) ==");
+    live_scaling(&mut b, fast);
+    println!("== xla artifact execution (L1/L2 via PJRT) ==");
+    xla_exec(&mut b);
+    println!("== harness regeneration (modeled pipeline) ==");
+    harness_sweeps(&mut b);
+}
+
+/// Fig 2-family: live wall-clock per simulated second at several P.
+fn live_scaling(b: &mut Bench, fast: bool) {
+    let host = std::thread::available_parallelism().unwrap().get() as u32;
+    let sim_s = if fast { 0.2 } else { 0.5 };
+    for procs in [1u32, 2, 4, host.min(8)] {
+        let mut cfg = RunConfig::default();
+        cfg.net = NetworkParams::paper_20480();
+        cfg.procs = procs;
+        cfg.sim_seconds = sim_s;
+        cfg.mode = Mode::Live;
+        let steps = cfg.steps() as f64 * procs as f64;
+        b.bench_elems(
+            &format!("live 20480N P={procs} ({sim_s}s sim)"),
+            steps,
+            || black_box(coordinator::run(&cfg).unwrap().wall_s),
+        );
+    }
+}
+
+/// Table IV-family: the per-step cost of the AOT LIF+SFA artifact.
+fn xla_exec(b: &mut Bench) {
+    use dpsnn::model::population::PopulationState;
+    use dpsnn::runtime::backend::XlaBackend;
+    use dpsnn::runtime::NeuronBackend;
+
+    if !std::path::Path::new("artifacts").exists() {
+        println!("  (skipped: run `make artifacts`)");
+        return;
+    }
+    for n in [2048u32, 20_480] {
+        let net = NetworkParams::paper(n.max(4608)); // keep fan-out < n
+        let pop = PopulationState::init(&net, 1, 0, n);
+        let mut be = match XlaBackend::new(&net, pop, std::path::Path::new("artifacts")) {
+            Ok(b) => b,
+            Err(e) => {
+                println!("  (xla backend unavailable: {e})");
+                return;
+            }
+        };
+        let i_syn = vec![0.5f32; n as usize];
+        let i_ext = vec![1.0f32; n as usize];
+        let mut spiked = Vec::new();
+        b.bench_elems(&format!("xla_step n={n}"), n as f64, || {
+            spiked.clear();
+            be.step(&i_syn, &i_ext, &mut spiked).unwrap()
+        });
+    }
+}
+
+/// Table I/II/III-family: the modeled pipeline that regenerates them.
+fn harness_sweeps(b: &mut Bench) {
+    let run = |platform: &str, ic: &str, procs: u32| {
+        let mut cfg = RunConfig::default();
+        cfg.net = NetworkParams::paper_20480();
+        cfg.procs = procs;
+        cfg.sim_seconds = 1.0;
+        cfg.mode = Mode::Modeled;
+        cfg.platform = platform.to_string();
+        cfg.interconnect = ic.to_string();
+        coordinator::run(&cfg).unwrap().wall_s
+    };
+    b.bench("modeled table2 row (westmere+ib, 32p, 1s)", || {
+        black_box(run("westmere", "ib", 32))
+    });
+    b.bench("modeled table3 row (jetson+eth, 8p, 1s)", || {
+        black_box(run("jetson", "eth1g", 8))
+    });
+}

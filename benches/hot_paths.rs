@@ -1,0 +1,144 @@
+//! Micro-benchmarks of the per-step hot paths (in-tree harness,
+//! `dpsnn::util::bench`; criterion is unavailable offline).
+//!
+//! Run: `cargo bench --offline` (or `cargo bench -- fast` for a quick pass).
+
+use dpsnn::comm::aer::{decode_spikes, encode_spikes};
+use dpsnn::config::NetworkParams;
+use dpsnn::engine::delay_queue::DelayRing;
+use dpsnn::engine::spike::Spike;
+use dpsnn::model::connectivity::{ConnectivityParams, IncomingSynapses};
+use dpsnn::model::neuron::{step_native, StepParams};
+use dpsnn::model::poisson::ExternalStimulus;
+use dpsnn::util::bench::{black_box, Bench};
+use dpsnn::util::rng::SplitMix64;
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "fast" || a == "--fast");
+    let mut b = if fast { Bench::fast() } else { Bench::new() };
+    println!("== hot paths ==");
+
+    neuron_update(&mut b);
+    synaptic_delivery(&mut b);
+    poisson_fill(&mut b);
+    aer_codec(&mut b);
+    delay_ring(&mut b);
+    connectivity_build(&mut b);
+    modeled_replay(&mut b);
+}
+
+/// L3-native LIF+SFA update — must sustain >> real-time per core.
+fn neuron_update(b: &mut Bench) {
+    for n in [2_560usize, 20_480] {
+        let params = StepParams::from_network(&NetworkParams::paper_20480());
+        let mut rng = SplitMix64::new(1);
+        let mut v: Vec<f32> = (0..n).map(|_| rng.next_f64() as f32 * 19.0).collect();
+        let mut w = vec![0.1f32; n];
+        let mut rf = vec![0.0f32; n];
+        let i_syn: Vec<f32> = (0..n).map(|_| rng.next_f64() as f32 * 2.0).collect();
+        let i_ext = vec![1.0f32; n];
+        let sfa = vec![0.12f32; n];
+        let mut spiked = Vec::with_capacity(n);
+        b.bench_elems(&format!("neuron_update n={n}"), n as f64, || {
+            spiked.clear();
+            step_native(&params, &mut v, &mut w, &mut rf, &i_syn, &i_ext, &sfa, &mut spiked)
+        });
+    }
+}
+
+/// Synaptic event delivery through CSR rows into the delay ring —
+/// the paper's dominant computation component.
+fn synaptic_delivery(b: &mut Bench) {
+    let n = 20_480u32;
+    let net = NetworkParams::paper_20480();
+    let cp = ConnectivityParams::from_network(&net, 7);
+    let inc = IncomingSynapses::build(&cp, 0, n);
+    let mut ring = DelayRing::new(n as usize, net.delay_max_steps);
+    // one step's worth of spikes at 3.2 Hz
+    let mut rng = SplitMix64::new(3);
+    let spikes: Vec<u32> = (0..66).map(|_| rng.next_below(n)).collect();
+    let events: usize = spikes.iter().map(|&s| inc.row(s).0.len()).sum();
+    b.bench_elems(
+        &format!("deliver {} spikes -> {events} syn events", spikes.len()),
+        events as f64,
+        || {
+            for &s in &spikes {
+                let (tgts, delays) = inc.row(s);
+                for (&t, &d) in tgts.iter().zip(delays) {
+                    ring.add(d, t, 0.4);
+                }
+            }
+            ring.advance();
+        },
+    );
+}
+
+fn poisson_fill(b: &mut Bench) {
+    let net = NetworkParams::paper_20480();
+    let stim = ExternalStimulus::new(&net, 5);
+    let mut buf = vec![0.0f32; 20_480];
+    let mut step = 0u32;
+    b.bench_elems("poisson_fill n=20480 (lambda 1.2)", 20_480.0, || {
+        step = step.wrapping_add(1);
+        stim.fill(step, 0, &mut buf);
+    });
+}
+
+fn aer_codec(b: &mut Bench) {
+    let spikes: Vec<Spike> = (0..1000).map(|i| Spike::new(i * 13, i)).collect();
+    let mut wire = Vec::new();
+    b.bench_elems("aer_encode 1000 spikes", 1000.0, || {
+        wire.clear();
+        encode_spikes(&spikes, 1.0, &mut wire);
+    });
+    let mut out = Vec::new();
+    b.bench_elems("aer_decode 1000 spikes", 1000.0, || {
+        out.clear();
+        decode_spikes(&wire, 1.0, &mut out).unwrap()
+    });
+}
+
+fn delay_ring(b: &mut Bench) {
+    let mut ring = DelayRing::new(20_480, 16);
+    let mut rng = SplitMix64::new(9);
+    let adds: Vec<(u8, u32)> = (0..10_000)
+        .map(|_| (1 + rng.next_below(16) as u8, rng.next_below(20_480)))
+        .collect();
+    b.bench_elems("delay_ring 10k adds + advance", 10_000.0, || {
+        for &(d, t) in &adds {
+            ring.add(d, t, 0.25);
+        }
+        ring.advance();
+    });
+}
+
+/// One-off cost amortized per run: partition-aware connectivity build.
+fn connectivity_build(b: &mut Bench) {
+    let net = NetworkParams::paper_20480();
+    let cp = ConnectivityParams::from_network(&net, 11);
+    b.bench_elems(
+        "connectivity_build 20480x1125 (1 rank of 8)",
+        net.total_synapses() as f64,
+        || black_box(IncomingSynapses::build(&cp, 0, 2560).n_synapses()),
+    );
+}
+
+/// The modeled-mode replay engine itself (harnesses sweep it heavily).
+fn modeled_replay(b: &mut Bench) {
+    use dpsnn::platform::hetero::HeteroCluster;
+    use dpsnn::platform::presets::XEON_E5_2630V2;
+    use dpsnn::simnet::alltoall_model::AllToAllModel;
+    use dpsnn::simnet::presets::IB;
+    use dpsnn::timing::replay::ModelRun;
+    use dpsnn::trace::analytic::AnalyticWorkload;
+
+    let trace = AnalyticWorkload::paper_regime(NetworkParams::paper_20480(), 3)
+        .generate(32, 1.0);
+    let run = ModelRun::new(
+        HeteroCluster::homogeneous(XEON_E5_2630V2, 32, 12),
+        AllToAllModel::new(IB, 12),
+    );
+    b.bench_elems("modeled_replay 1000 steps x 32 ranks", 32_000.0, || {
+        black_box(run.replay(&trace).wall_s)
+    });
+}

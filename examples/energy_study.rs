@@ -1,0 +1,89 @@
+//! Energy study: sweep platforms × interconnects × core counts through
+//! the modeled pipeline and chart the paper's central trade-off — the
+//! energy-to-solution minimum at intermediate parallelism, the IB-vs-ETH
+//! gap, and the ARM-vs-Intel efficiency/speed trade.
+//!
+//! ```bash
+//! cargo run --release --example energy_study
+//! ```
+
+use dpsnn::config::{Mode, NetworkParams, RunConfig};
+use dpsnn::coordinator;
+use dpsnn::util::table::{ascii_chart, Table};
+
+fn run(platform: &str, interconnect: &str, procs: u32) -> anyhow::Result<(f64, f64, f64)> {
+    let mut cfg = RunConfig::default();
+    cfg.net = NetworkParams::paper_20480();
+    cfg.procs = procs;
+    cfg.sim_seconds = 10.0;
+    cfg.mode = Mode::Modeled;
+    cfg.platform = platform.into();
+    cfg.interconnect = interconnect.into();
+    let r = coordinator::run(&cfg)?;
+    let e = r.energy.unwrap();
+    Ok((r.wall_s, e.energy_j, e.uj_per_syn_event))
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut table = Table::new(
+        "Energy-to-solution, 20480N x 10 s (modeled)",
+        &["platform", "cores", "time (s)", "energy (J)", "uJ/syn event"],
+    );
+    let mut series: Vec<(&str, Vec<(f64, f64)>)> = Vec::new();
+
+    let sweeps: &[(&str, &str, &[u32])] = &[
+        ("westmere", "ib", &[1, 2, 4, 8, 16, 32, 64]),
+        ("westmere", "eth1g", &[32, 64]),
+        ("jetson", "eth1g", &[1, 2, 4, 8]),
+        ("trenz", "eth1g", &[1, 2, 4, 8, 16]),
+    ];
+    for (platform, ic, procs) in sweeps {
+        let mut pts = Vec::new();
+        for &p in *procs {
+            let (t, e, uj) = run(platform, ic, p)?;
+            table.row(vec![
+                format!("{platform}+{ic}"),
+                p.to_string(),
+                format!("{t:.1}"),
+                format!("{e:.0}"),
+                format!("{uj:.2}"),
+            ]);
+            pts.push((p as f64, e));
+        }
+        series.push((
+            match (*platform, *ic) {
+                ("westmere", "ib") => "x86+IB",
+                ("westmere", _) => "x86+ETH",
+                ("jetson", _) => "jetson",
+                _ => "trenz",
+            },
+            pts,
+        ));
+    }
+
+    println!("{}", table.render());
+    println!(
+        "{}",
+        ascii_chart(
+            "energy-to-solution vs cores (log-log): note the x86 minimum at ~8",
+            &series,
+            true,
+            true,
+            60,
+            16,
+        )
+    );
+    table.write_csv(std::path::Path::new("results/energy_study.csv"))?;
+
+    // The paper's conclusion in one line:
+    let (t_arm, e_arm, uj_arm) = run("jetson", "eth1g", 4)?;
+    let (t_x86, e_x86, uj_x86) = run("westmere", "ib", 4)?;
+    println!(
+        "ARM vs Intel at 4 cores: {:.1}x slower, {:.1}x less energy \
+         ({uj_arm:.2} vs {uj_x86:.2} uJ/syn-event; paper: ~5x slower, ~3x cheaper)",
+        t_arm / t_x86,
+        e_x86 / e_arm,
+    );
+    let _ = (e_arm, e_x86);
+    Ok(())
+}

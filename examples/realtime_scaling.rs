@@ -1,0 +1,75 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E).
+//!
+//! Runs the paper's real workload — the 20480-neuron / 2.3e7-synapse
+//! benchmark network, 10 s of activity — live on this host across a
+//! process sweep, reporting the paper's headline metrics: wall-clock vs
+//! the soft real-time threshold and the comp/comm/barrier decomposition.
+//! This exercises every layer: connectivity generation, delay rings, AER
+//! packing, the all-to-all transport, the barrier, the profiler, and the
+//! LIF+SFA backend (pass `--backend xla` for the AOT/PJRT path after
+//! `make artifacts`).
+//!
+//! ```bash
+//! cargo run --release --example realtime_scaling -- [--seconds S] [--max-procs P]
+//! ```
+
+use dpsnn::config::{Mode, NetworkParams, RunConfig};
+use dpsnn::coordinator;
+use dpsnn::util::cli::Args;
+use dpsnn::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let seconds: f64 = args.get_or("seconds", 10.0)?;
+    let host_cores = std::thread::available_parallelism()?.get() as u32;
+    let max_procs: u32 = args.get_or("max-procs", host_cores)?;
+    let backend = args.get_or("backend", "native".to_string())?;
+
+    let mut table = Table::new(
+        &format!(
+            "20480N live strong scaling on this host ({} s simulated, {} backend)",
+            seconds, backend
+        ),
+        &[
+            "procs", "wall (s)", "x real-time", "rate (Hz)", "comp %", "comm %",
+            "barrier %",
+        ],
+    );
+
+    let mut procs = 1u32;
+    while procs <= max_procs {
+        let mut cfg = RunConfig::default();
+        cfg.net = NetworkParams::paper_20480();
+        cfg.procs = procs;
+        cfg.sim_seconds = seconds;
+        cfg.mode = Mode::Live;
+        cfg.backend = backend.parse()?;
+        let r = coordinator::run(&cfg)?;
+        let (comp, comm, barrier) = r.components.fractions();
+        table.row(vec![
+            procs.to_string(),
+            format!("{:.2}", r.wall_s),
+            format!(
+                "{:.2}{}",
+                r.realtime_factor(),
+                if r.is_realtime() { " RT" } else { "" }
+            ),
+            format!("{:.2}", r.mean_rate_hz),
+            format!("{:.1}", comp * 100.0),
+            format!("{:.1}", comm * 100.0),
+            format!("{:.1}", barrier * 100.0),
+        ]);
+        eprintln!(
+            "  P={procs}: wall {:.2} s (x{:.2} real-time), rate {:.2} Hz",
+            r.wall_s,
+            r.realtime_factor(),
+            r.mean_rate_hz
+        );
+        procs *= 2;
+    }
+
+    println!("\n{}", table.render());
+    table.write_csv(std::path::Path::new("results/realtime_scaling_live.csv"))?;
+    println!("CSV written to results/realtime_scaling_live.csv");
+    Ok(())
+}

@@ -1,0 +1,121 @@
+"""AOT compile path: lower the L2 population step to HLO text artifacts.
+
+Run once via `make artifacts`; the rust runtime loads the resulting
+`artifacts/lif_sfa_<n>.hlo.txt` files through the PJRT C API and Python is
+never needed again.
+
+Interchange format is HLO *text*, NOT `lowered.compile().serialize()` or a
+serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects (`proto.id() <=
+INT_MAX`). The text parser reassigns ids, so text round-trips cleanly
+(see /opt/xla-example/gen_hlo.py and its README).
+
+A `manifest.json` records the size ladder and the ABI so the rust side can
+pick the right artifact and verify its assumptions at load time.
+
+Usage:  cd python && python -m compile.aot [--out-dir ../artifacts]
+                                           [--sizes 1024,2048,...]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile.model import (lower_population_step_packed, population_step,
+                           population_step_packed, make_params)
+from compile.kernels.lif_sfa import N_PARAMS, DEFAULT_BLOCK, vmem_bytes_per_block
+from compile.kernels.ref import lif_sfa_step_ref
+
+# Population-size ladder: rank populations are padded up to the nearest
+# rung. Covers 20480/P for P = 1..256 (80 neurons/rank) up to a whole
+# 32K-neuron rank.
+DEFAULT_SIZES = [256, 512, 1024, 2048, 4096, 8192, 16384, 20480, 32768]
+
+
+def to_hlo_text(lowered, return_tuple=False) -> str:
+    """StableHLO -> XlaComputation -> HLO text.
+
+    The packed ABI has a single array result, so we lower with
+    return_tuple=False: the rust side then reads the output PjRtBuffer
+    directly with copy_raw_to_host_sync (no tuple unwrap, §Perf).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def sanity_check(n: int) -> None:
+    """Run the jitted steps (plain + packed) against the pure-jnp oracle."""
+    rng = np.random.default_rng(n)
+    params = make_params(0.95, 0.998, 20.0, 0.0, 2.0, -40.0)
+    args = [params] + [
+        jnp.asarray(rng.normal(0.0, 5.0, n).astype(np.float32)) for _ in range(3)
+    ] + [
+        jnp.asarray(rng.normal(0.0, 2.0, n).astype(np.float32)) for _ in range(2)
+    ] + [jnp.full((n,), 0.3, jnp.float32)]
+    got = population_step(*args)
+    want = lif_sfa_step_ref(*args)
+    for g, w_ in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w_), rtol=1e-6, atol=1e-6)
+    state = jnp.concatenate(args[1:4])
+    packed = population_step_packed(params, state, *args[4:])
+    np.testing.assert_array_equal(
+        np.asarray(packed), np.concatenate([np.asarray(x) for x in got])
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default=",".join(str(s) for s in DEFAULT_SIZES))
+    ap.add_argument("--skip-check", action="store_true")
+    args = ap.parse_args()
+
+    sizes = sorted({int(s) for s in args.sizes.split(",") if s})
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = []
+    for n in sizes:
+        if not args.skip_check:
+            sanity_check(n)
+        lowered = lower_population_step_packed(n)
+        text = to_hlo_text(lowered, return_tuple=False)
+        name = f"lif_sfa_{n}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append({"n": n, "file": name, "bytes": len(text)})
+        print(f"  lif_sfa n={n:>6} -> {name} ({len(text)} chars)")
+
+    manifest = {
+        "kernel": "lif_sfa",
+        "abi": {
+            "version": 2,
+            "inputs": ["params[8]", "state[3n] = v|w|rf", "i_syn[n]",
+                       "i_ext[n]", "sfa_inc[n]"],
+            "outputs": ["packed[4n] = v|w|rf|spiked"],
+            "dtype": "f32",
+            "n_params": N_PARAMS,
+            "param_names": ["decay_v", "decay_w", "theta", "v_reset",
+                            "t_ref_steps", "v_floor", "pad", "pad"],
+            "return_tuple": False,
+        },
+        "block": DEFAULT_BLOCK,
+        "vmem_bytes_per_block": vmem_bytes_per_block(),
+        "sizes": entries,
+        "jax_version": jax.__version__,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(sizes)} artifacts + manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Layer-1 Pallas kernel: one 1 ms update of a LIF + SFA neuron population.
+
+This is the compute hot-spot of the DPSNN mini-app: advance the membrane
+potential, spike-frequency-adaptation (SFA) current and refractory counter
+of every neuron in a rank's population by one network time step, given the
+synaptic input accumulated for this step by the coordinator.
+
+Dynamics (per neuron, step dt = 1 ms; see DESIGN.md §7):
+
+    i      = i_syn + i_ext                        # instantaneous PSCs (mV)
+    v'     = v * decay_v + i - w        (if not refractory)
+    v'     = v_reset                    (if refractory)
+    spike  = (not refractory) and v' >= theta
+    v''    = v_reset                    (if spike)      else v'
+    w'     = w * decay_w + sfa_inc      (if spike)      else w * decay_w
+    rf'    = t_ref_steps                (if spike)      else max(rf - 1, 0)
+
+`sfa_inc` is a per-neuron vector so excitatory neurons carry adaptation
+(fatigue) while inhibitory neurons have it switched off, exactly as in the
+paper ("SFA is switched off for inhibitory neurons").
+
+Scalar model parameters arrive in a tiny `params` vector (rather than being
+baked into the HLO) so a single AOT artifact serves any parameterisation:
+
+    params = [decay_v, decay_w, theta, v_reset, t_ref_steps, v_floor, 0, 0]
+
+TPU adaptation note (DESIGN.md §3): the update is elementwise over the
+neuron axis, so the kernel tiles that axis into VMEM-resident blocks via a
+1-D grid; the six state/input vectors stream HBM -> VMEM once per step.
+There is no MXU work — this kernel is VPU/bandwidth bound. `interpret=True`
+keeps the lowering to plain HLO so the rust CPU PJRT client can run it.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Number of f32 scalars in the params vector (fixed ABI with the rust side).
+N_PARAMS = 8
+
+# Default neuron-axis block: small enough that the ~7 live f32 vectors
+# (6 inputs + outputs reuse) fit comfortably in a 16 MB VMEM even with
+# double-buffering headroom: 7 * 4 B * 8192 = 229 KB per block.
+DEFAULT_BLOCK = 8192
+
+
+def _lif_sfa_kernel(params_ref, v_ref, w_ref, rf_ref, isyn_ref, iext_ref,
+                    sfa_ref, vo_ref, wo_ref, rfo_ref, sp_ref):
+    decay_v = params_ref[0]
+    decay_w = params_ref[1]
+    theta = params_ref[2]
+    v_reset = params_ref[3]
+    t_ref = params_ref[4]
+    v_floor = params_ref[5]
+
+    v = v_ref[...]
+    w = w_ref[...]
+    rf = rf_ref[...]
+    i = isyn_ref[...] + iext_ref[...]
+
+    active = rf <= 0.0
+    v_int = v * decay_v + i - w
+    v_int = jnp.maximum(v_int, v_floor)  # reflecting floor (inhib. barrier)
+    v_new = jnp.where(active, v_int, v_reset)
+    spiked = active & (v_new >= theta)
+
+    vo_ref[...] = jnp.where(spiked, v_reset, v_new)
+    wo_ref[...] = w * decay_w + jnp.where(spiked, sfa_ref[...], 0.0)
+    rfo_ref[...] = jnp.where(spiked, t_ref, jnp.maximum(rf - 1.0, 0.0))
+    sp_ref[...] = spiked.astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def lif_sfa_step(params, v, w, rf, i_syn, i_ext, sfa_inc, *, block=DEFAULT_BLOCK):
+    """Advance a population one step. All vector args are f32[n], n % block == 0.
+
+    Returns (v', w', rf', spiked) with spiked in {0.0, 1.0}.
+    """
+    n = v.shape[0]
+    if n % block != 0:
+        raise ValueError(f"population size {n} not a multiple of block {block}")
+    grid = (n // block,)
+    vec = pl.BlockSpec((block,), lambda b: (b,))
+    par = pl.BlockSpec((N_PARAMS,), lambda b: (0,))
+    out_shape = [jax.ShapeDtypeStruct((n,), jnp.float32) for _ in range(4)]
+    return tuple(
+        pl.pallas_call(
+            _lif_sfa_kernel,
+            grid=grid,
+            in_specs=[par, vec, vec, vec, vec, vec, vec],
+            out_specs=[vec, vec, vec, vec],
+            out_shape=out_shape,
+            interpret=True,  # CPU-PJRT: real-TPU lowering emits Mosaic calls
+        )(params, v, w, rf, i_syn, i_ext, sfa_inc)
+    )
+
+
+def vmem_bytes_per_block(block=DEFAULT_BLOCK):
+    """Estimated VMEM residency per grid step (for DESIGN.md §Perf)."""
+    n_vectors = 6 + 4  # inputs + outputs live simultaneously
+    return n_vectors * 4 * block + N_PARAMS * 4

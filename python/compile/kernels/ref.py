@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the LIF+SFA step kernel.
+
+The same arithmetic as kernels/lif_sfa.py written without Pallas; used by
+pytest to validate the kernel and by aot.py sanity checks.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def lif_sfa_step_ref(params, v, w, rf, i_syn, i_ext, sfa_inc):
+    decay_v, decay_w, theta, v_reset, t_ref, v_floor = (
+        params[0], params[1], params[2], params[3], params[4], params[5],
+    )
+    i = i_syn + i_ext
+    active = rf <= 0.0
+    v_int = v * decay_v + i - w
+    v_int = jnp.maximum(v_int, v_floor)
+    v_new = jnp.where(active, v_int, v_reset)
+    spiked = active & (v_new >= theta)
+    v_out = jnp.where(spiked, v_reset, v_new)
+    w_out = w * decay_w + jnp.where(spiked, sfa_inc, 0.0)
+    rf_out = jnp.where(spiked, t_ref, jnp.maximum(rf - 1.0, 0.0))
+    return v_out, w_out, rf_out, spiked.astype(jnp.float32)
+
+
+def multi_step_ref(params, state, inputs):
+    """Run several steps; `inputs` is a list of (i_syn, i_ext) pairs.
+
+    Returns the final state and the list of spike rasters.
+    """
+    v, w, rf, sfa_inc = state
+    rasters = []
+    for i_syn, i_ext in inputs:
+        v, w, rf, sp = lif_sfa_step_ref(params, v, w, rf, i_syn, i_ext, sfa_inc)
+        rasters.append(sp)
+    return (v, w, rf, sfa_inc), rasters

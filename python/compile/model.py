@@ -1,0 +1,75 @@
+"""Layer-2 JAX model: the per-rank population step exported to rust.
+
+The DPSNN coordinator (rust, layer 3) owns connectivity, delay queues and
+spike exchange; the dense per-neuron dynamics — the compute hot-spot — live
+here, built on the layer-1 Pallas kernel. This module is lowered once by
+aot.py to HLO text; Python never runs at simulation time.
+
+Exported signature (all f32, fixed ABI with rust/src/runtime/):
+
+    population_step(params[8], v[n], w[n], rf[n], i_syn[n], i_ext[n],
+                    sfa_inc[n]) -> (v[n], w[n], rf[n], spiked[n])
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.lif_sfa import lif_sfa_step, DEFAULT_BLOCK, N_PARAMS
+
+
+def pick_block(n, cap=DEFAULT_BLOCK):
+    """Largest power-of-two block <= cap that divides n (falls back to n)."""
+    b = min(cap, n)
+    while b > 1:
+        if n % b == 0:
+            return b
+        b //= 2
+    return n
+
+
+def population_step(params, v, w, rf, i_syn, i_ext, sfa_inc):
+    """One 1 ms update of a whole rank population (wraps the L1 kernel)."""
+    n = v.shape[0]
+    block = pick_block(n)
+    return lif_sfa_step(params, v, w, rf, i_syn, i_ext, sfa_inc, block=block)
+
+
+def make_params(decay_v, decay_w, theta, v_reset, t_ref_steps, v_floor):
+    """Pack model scalars into the params vector the kernel expects."""
+    p = jnp.zeros((N_PARAMS,), jnp.float32)
+    p = p.at[0].set(decay_v).at[1].set(decay_w).at[2].set(theta)
+    p = p.at[3].set(v_reset).at[4].set(t_ref_steps).at[5].set(v_floor)
+    return p
+
+
+def lower_population_step(n):
+    """Lower population_step for a population of n neurons; returns Lowered."""
+    f32 = jnp.float32
+    par = jax.ShapeDtypeStruct((N_PARAMS,), f32)
+    vec = jax.ShapeDtypeStruct((n,), f32)
+    return jax.jit(population_step).lower(par, vec, vec, vec, vec, vec, vec)
+
+
+def population_step_packed(params, state, i_syn, i_ext, sfa_inc):
+    """Packed-ABI variant for the rust hot path (EXPERIMENTS.md §Perf).
+
+    The three state vectors travel as one f32[3n] buffer and the result as
+    one f32[4n] = [v' | w' | rf' | spiked] buffer, so the rust runtime does
+    a single host<->device copy each way and no tuple unwrapping::
+
+        packed_step(params[8], state[3n], i_syn[n], i_ext[n], sfa_inc[n])
+            -> f32[4n]
+    """
+    n = i_syn.shape[0]
+    v, w, rf = state[:n], state[n:2 * n], state[2 * n:]
+    v2, w2, rf2, sp = population_step(params, v, w, rf, i_syn, i_ext, sfa_inc)
+    return jnp.concatenate([v2, w2, rf2, sp])
+
+
+def lower_population_step_packed(n):
+    """Lower the packed variant for a population of n neurons."""
+    f32 = jnp.float32
+    par = jax.ShapeDtypeStruct((N_PARAMS,), f32)
+    st = jax.ShapeDtypeStruct((3 * n,), f32)
+    vec = jax.ShapeDtypeStruct((n,), f32)
+    return jax.jit(population_step_packed).lower(par, st, vec, vec, vec)

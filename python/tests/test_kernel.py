@@ -1,0 +1,151 @@
+"""L1 kernel vs pure-jnp oracle, across shapes, regimes and edge cases."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels.lif_sfa import lif_sfa_step, DEFAULT_BLOCK, N_PARAMS
+from compile.kernels.ref import lif_sfa_step_ref, multi_step_ref
+from compile.model import make_params, population_step
+
+PARAMS = make_params(
+    decay_v=float(np.exp(-1.0 / 20.0)),
+    decay_w=float(np.exp(-1.0 / 500.0)),
+    theta=20.0,
+    v_reset=0.0,
+    t_ref_steps=2.0,
+    v_floor=-40.0,
+)
+
+
+def rand_state(n, seed, v_scale=10.0):
+    rng = np.random.default_rng(seed)
+    v = rng.uniform(-30.0, 25.0, n).astype(np.float32)
+    w = rng.uniform(0.0, 5.0, n).astype(np.float32)
+    rf = rng.integers(0, 3, n).astype(np.float32)
+    i_syn = rng.normal(0.0, v_scale, n).astype(np.float32)
+    i_ext = rng.normal(1.0, 2.0, n).astype(np.float32)
+    sfa = np.where(rng.uniform(size=n) < 0.8, 0.3, 0.0).astype(np.float32)
+    return tuple(jnp.asarray(a) for a in (v, w, rf, i_syn, i_ext, sfa))
+
+
+def assert_matches_ref(params, state, block=None):
+    kwargs = {} if block is None else {"block": block}
+    got = lif_sfa_step(params, *state, **kwargs)
+    want = lif_sfa_step_ref(params, *state)
+    for g, w_, name in zip(got, want, ["v", "w", "rf", "spiked"]):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w_), rtol=1e-6, atol=1e-6, err_msg=name
+        )
+
+
+@pytest.mark.parametrize("n", [8, 64, 256, 1024, 4096, 8192, 16384])
+def test_kernel_matches_ref_sizes(n):
+    assert_matches_ref(PARAMS, rand_state(n, n), block=min(n, DEFAULT_BLOCK))
+
+
+@pytest.mark.parametrize("block", [8, 128, 2048, 8192])
+def test_kernel_block_invariance(block):
+    n = 8192
+    state = rand_state(n, 7)
+    a = lif_sfa_step(PARAMS, *state, block=block)
+    b = lif_sfa_step_ref(PARAMS, *state)
+    for g, w_ in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w_))
+
+
+def test_block_must_divide_population():
+    state = rand_state(100, 3)
+    with pytest.raises(ValueError):
+        lif_sfa_step(PARAMS, *state, block=64)
+
+
+def test_refractory_neurons_do_not_spike():
+    n = 256
+    v = jnp.full((n,), 0.0, jnp.float32)
+    w = jnp.zeros((n,), jnp.float32)
+    rf = jnp.full((n,), 2.0, jnp.float32)   # all refractory
+    i = jnp.full((n,), 100.0, jnp.float32)  # huge input
+    z = jnp.zeros((n,), jnp.float32)
+    v2, w2, rf2, sp = lif_sfa_step(PARAMS, v, w, rf, i, z, z, block=n)
+    assert float(jnp.sum(sp)) == 0.0
+    np.testing.assert_array_equal(np.asarray(v2), 0.0)   # pinned at reset
+    np.testing.assert_array_equal(np.asarray(rf2), 1.0)  # counted down
+
+
+def test_spike_resets_and_sets_refractory():
+    n = 8
+    v = jnp.full((n,), 19.0, jnp.float32)
+    z = jnp.zeros((n,), jnp.float32)
+    i = jnp.full((n,), 5.0, jnp.float32)
+    sfa = jnp.full((n,), 0.3, jnp.float32)
+    v2, w2, rf2, sp = lif_sfa_step(PARAMS, v, z, z, i, z, sfa, block=n)
+    np.testing.assert_array_equal(np.asarray(sp), 1.0)
+    np.testing.assert_array_equal(np.asarray(v2), 0.0)
+    np.testing.assert_array_equal(np.asarray(rf2), 2.0)
+    np.testing.assert_allclose(np.asarray(w2), 0.3, rtol=1e-6)
+
+
+def test_sfa_accumulates_and_suppresses():
+    """Repeated firing grows w, which lowers the effective drive (fatigue)."""
+    n = 4
+    params = PARAMS
+    v = jnp.zeros((n,), jnp.float32)
+    w = jnp.zeros((n,), jnp.float32)
+    rf = jnp.zeros((n,), jnp.float32)
+    sfa = jnp.full((n,), 1.0, jnp.float32)
+    i = jnp.full((n,), 25.0, jnp.float32)
+    z = jnp.zeros((n,), jnp.float32)
+    w_hist = []
+    for _ in range(10):
+        v, w, rf, sp = lif_sfa_step(params, v, w, rf, i, z, sfa, block=n)
+        w_hist.append(float(w[0]))
+    # w decays slightly during refractory steps but ratchets up with every
+    # spike: the trajectory must trend strongly upward overall.
+    assert w_hist[-1] > w_hist[0]
+    assert w_hist[-1] > 2.0
+
+
+def test_inhibitory_neurons_have_no_sfa():
+    n = 8
+    v = jnp.full((n,), 25.0, jnp.float32)
+    z = jnp.zeros((n,), jnp.float32)
+    sfa = jnp.zeros((n,), jnp.float32)  # inhibitory: SFA off
+    v2, w2, rf2, sp = lif_sfa_step(PARAMS, v, z, z, z, z, sfa, block=n)
+    np.testing.assert_array_equal(np.asarray(sp), 1.0)
+    np.testing.assert_array_equal(np.asarray(w2), 0.0)
+
+
+def test_v_floor_clamps():
+    n = 8
+    v = jnp.zeros((n,), jnp.float32)
+    z = jnp.zeros((n,), jnp.float32)
+    i = jnp.full((n,), -500.0, jnp.float32)
+    v2, *_ = lif_sfa_step(PARAMS, v, z, z, i, z, z, block=n)
+    np.testing.assert_array_equal(np.asarray(v2), -40.0)
+
+
+def test_multi_step_trajectory_matches_ref():
+    n = 512
+    rng = np.random.default_rng(11)
+    v, w, rf, i_syn, i_ext, sfa = rand_state(n, 5)
+    state_k = (v, w, rf)
+    state_r = (v, w, rf, sfa)
+    inputs = [
+        (jnp.asarray(rng.normal(0, 8, n).astype(np.float32)),
+         jnp.asarray(rng.normal(1, 2, n).astype(np.float32)))
+        for _ in range(20)
+    ]
+    (_, _, _, _), rasters_ref = multi_step_ref(PARAMS, state_r, inputs)
+    vk, wk, rfk = state_k
+    for t, (a, b) in enumerate(inputs):
+        vk, wk, rfk, sp = lif_sfa_step(PARAMS, vk, wk, rfk, a, b, sfa, block=n)
+        np.testing.assert_array_equal(np.asarray(sp), np.asarray(rasters_ref[t]),
+                                      err_msg=f"step {t}")
+
+
+def test_params_vector_abi():
+    assert N_PARAMS == 8
+    p = make_params(0.9, 0.99, 20.0, 0.0, 2.0, -40.0)
+    assert p.shape == (N_PARAMS,)
+    assert p.dtype == jnp.float32

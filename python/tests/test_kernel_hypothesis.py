@@ -1,0 +1,73 @@
+"""Hypothesis sweeps: the Pallas kernel must match the pure-jnp oracle for
+arbitrary shapes, blocks, parameters and input regimes."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.lif_sfa import lif_sfa_step
+from compile.kernels.ref import lif_sfa_step_ref
+from compile.model import make_params
+
+finite_f32 = st.floats(
+    min_value=-1e3, max_value=1e3, allow_nan=False, allow_infinity=False, width=32
+)
+
+
+@st.composite
+def step_case(draw):
+    log2n = draw(st.integers(min_value=3, max_value=12))
+    n = 1 << log2n
+    block = 1 << draw(st.integers(min_value=3, max_value=log2n))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    v = rng.uniform(-40, 30, n).astype(np.float32)
+    w = rng.uniform(0, 10, n).astype(np.float32)
+    rf = rng.integers(0, 4, n).astype(np.float32)
+    i_syn = rng.normal(0, draw(st.floats(0.0, 50.0)), n).astype(np.float32)
+    i_ext = rng.normal(draw(st.floats(-5.0, 5.0)), 1.0, n).astype(np.float32)
+    sfa = np.where(rng.uniform(size=n) < 0.8, draw(st.floats(0.0, 2.0)), 0.0)
+    tau_m = draw(st.floats(5.0, 50.0))
+    tau_w = draw(st.floats(100.0, 1000.0))
+    params = make_params(
+        float(np.exp(-1.0 / tau_m)),
+        float(np.exp(-1.0 / tau_w)),
+        draw(st.floats(10.0, 30.0)),
+        draw(st.floats(-5.0, 5.0)),
+        float(draw(st.integers(0, 5))),
+        draw(st.floats(-80.0, -30.0)),
+    )
+    state = tuple(
+        jnp.asarray(a.astype(np.float32)) for a in (v, w, rf, i_syn, i_ext, sfa)
+    )
+    return params, state, block
+
+
+@settings(max_examples=40, deadline=None)
+@given(step_case())
+def test_kernel_matches_ref_fuzzed(case):
+    params, state, block = case
+    got = lif_sfa_step(params, *state, block=block)
+    want = lif_sfa_step_ref(params, *state)
+    for g, w_, name in zip(got, want, ["v", "w", "rf", "spiked"]):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w_), rtol=1e-6, atol=1e-5, err_msg=name
+        )
+
+
+@settings(max_examples=20, deadline=None)
+@given(step_case())
+def test_spiked_is_binary_and_consistent(case):
+    """Invariants: spiked ∈ {0,1}; spiking neurons sit at v_reset with the
+    refractory clock armed; no neuron above threshold remains unspiked
+    unless refractory."""
+    params, state, block = case
+    v2, w2, rf2, sp = (np.asarray(a) for a in lif_sfa_step(params, *state, block=block))
+    theta, v_reset, t_ref = float(params[2]), float(params[3]), float(params[4])
+    assert set(np.unique(sp)).issubset({0.0, 1.0})
+    fired = sp == 1.0
+    np.testing.assert_array_equal(v2[fired], v_reset)
+    np.testing.assert_array_equal(rf2[fired], t_ref)
+    # any neuron left >= theta must have been refractory on entry
+    was_refractory = np.asarray(state[2]) > 0
+    assert np.all(was_refractory[(v2 >= theta) & ~fired] | (v_reset >= theta))

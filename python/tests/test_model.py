@@ -1,0 +1,112 @@
+"""L2 model tests: block selection, packed ABI, lowering shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (
+    lower_population_step_packed,
+    make_params,
+    pick_block,
+    population_step,
+    population_step_packed,
+)
+from compile.kernels.ref import lif_sfa_step_ref
+
+PARAMS = make_params(0.95, 0.998, 20.0, 0.0, 2.0, -40.0)
+
+
+def rand_args(n, seed=0):
+    rng = np.random.default_rng(seed)
+    f = lambda scale: jnp.asarray(rng.normal(0, scale, n).astype(np.float32))
+    return f(10.0), f(3.0), jnp.zeros((n,), jnp.float32), f(5.0), f(2.0), jnp.full(
+        (n,), 0.3, jnp.float32
+    )
+
+
+class TestPickBlock:
+    def test_exact_power_of_two(self):
+        assert pick_block(8192) == 8192
+        assert pick_block(16384) == 8192
+
+    def test_non_divisible_sizes_fall_back(self):
+        # 20480 = 5 * 4096
+        assert pick_block(20480) == 4096
+        assert 20480 % pick_block(20480) == 0
+
+    def test_odd_sizes(self):
+        for n in [3, 7, 100, 12_345]:
+            b = pick_block(n)
+            assert n % b == 0, f"n={n} block={b}"
+
+    def test_small_sizes(self):
+        assert pick_block(1) == 1
+        assert pick_block(2) == 2
+
+
+@pytest.mark.parametrize("n", [64, 20480 // 8, 20480])
+def test_packed_equals_unpacked(n):
+    v, w, rf, i_syn, i_ext, sfa = rand_args(n, n)
+    plain = population_step(PARAMS, v, w, rf, i_syn, i_ext, sfa)
+    state = jnp.concatenate([v, w, rf])
+    packed = population_step_packed(PARAMS, state, i_syn, i_ext, sfa)
+    np.testing.assert_array_equal(
+        np.asarray(packed), np.concatenate([np.asarray(x) for x in plain])
+    )
+
+
+def test_packed_matches_ref_oracle():
+    n = 512
+    v, w, rf, i_syn, i_ext, sfa = rand_args(n, 3)
+    want = lif_sfa_step_ref(PARAMS, v, w, rf, i_syn, i_ext, sfa)
+    state = jnp.concatenate([v, w, rf])
+    got = population_step_packed(PARAMS, state, i_syn, i_ext, sfa)
+    for i, w_ in enumerate(want):
+        np.testing.assert_allclose(
+            np.asarray(got[i * n:(i + 1) * n]),
+            np.asarray(w_),
+            rtol=1e-6,
+            atol=1e-6,
+        )
+
+
+def test_lowered_abi_shapes():
+    n = 256
+    lowered = lower_population_step_packed(n)
+    text = lowered.as_text()  # StableHLO: tensor<NxF32> shapes
+    assert "tensor<8xf32>" in text           # params
+    assert f"tensor<{3 * n}xf32>" in text    # state
+    assert f"tensor<{4 * n}xf32>" in text    # packed output
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=3, max_value=11), st.integers(0, 2**31 - 1))
+def test_packed_abi_fuzz(log2n, seed):
+    n = 1 << log2n
+    v, w, rf, i_syn, i_ext, sfa = rand_args(n, seed)
+    state = jnp.concatenate([v, w, rf])
+    packed = population_step_packed(PARAMS, state, i_syn, i_ext, sfa)
+    assert packed.shape == (4 * n,)
+    sp = np.asarray(packed[3 * n:])
+    assert set(np.unique(sp)).issubset({0.0, 1.0})
+
+
+def test_multi_step_packed_trajectory():
+    """Iterating the packed step (as the rust runtime does) must follow
+    the oracle trajectory exactly."""
+    n = 256
+    v, w, rf, _, _, sfa = rand_args(n, 9)
+    rng = np.random.default_rng(4)
+    state = jnp.concatenate([v, w, rf])
+    vr, wr, rfr = v, w, rf
+    for t in range(10):
+        i_syn = jnp.asarray(rng.normal(0, 8, n).astype(np.float32))
+        i_ext = jnp.asarray(rng.normal(1, 2, n).astype(np.float32))
+        out = population_step_packed(PARAMS, state, i_syn, i_ext, sfa)
+        state = out[: 3 * n]
+        vr, wr, rfr, spr = lif_sfa_step_ref(PARAMS, vr, wr, rfr, i_syn, i_ext, sfa)
+        np.testing.assert_array_equal(np.asarray(out[3 * n:]), np.asarray(spr),
+                                      err_msg=f"step {t}")
+    np.testing.assert_array_equal(np.asarray(state[:n]), np.asarray(vr))

@@ -1,0 +1,88 @@
+//! AER (Address-Event Representation) wire format.
+//!
+//! The paper: "Spikes are delivered using the AER representation (spiking
+//! neuron ID, emission time); in our case 12 byte per spike are required."
+//! We encode exactly that: `u32` neuron id + `f64` emission time in ms,
+//! little-endian, 12 bytes per spike.
+
+use anyhow::{bail, Result};
+
+use crate::engine::spike::Spike;
+
+/// Bytes per spike on the wire (paper: 12).
+pub const SPIKE_WIRE_BYTES: usize = 12;
+
+/// Append the AER encoding of `spikes` to `buf`.
+pub fn encode_spikes(spikes: &[Spike], dt_ms: f64, buf: &mut Vec<u8>) {
+    buf.reserve(spikes.len() * SPIKE_WIRE_BYTES);
+    for s in spikes {
+        buf.extend_from_slice(&s.gid.to_le_bytes());
+        buf.extend_from_slice(&s.time_ms(dt_ms).to_le_bytes());
+    }
+}
+
+/// Decode an AER buffer back into spikes. `dt_ms` must match the encoder.
+pub fn decode_spikes(buf: &[u8], dt_ms: f64, out: &mut Vec<Spike>) -> Result<usize> {
+    if buf.len() % SPIKE_WIRE_BYTES != 0 {
+        bail!(
+            "AER buffer length {} is not a multiple of {SPIKE_WIRE_BYTES}",
+            buf.len()
+        );
+    }
+    let n = buf.len() / SPIKE_WIRE_BYTES;
+    out.reserve(n);
+    for chunk in buf.chunks_exact(SPIKE_WIRE_BYTES) {
+        let gid = u32::from_le_bytes(chunk[0..4].try_into().unwrap());
+        let time_ms = f64::from_le_bytes(chunk[4..12].try_into().unwrap());
+        let step = (time_ms / dt_ms).round() as u32;
+        out.push(Spike { gid, step });
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn twelve_bytes_per_spike() {
+        let mut buf = Vec::new();
+        encode_spikes(&[Spike::new(1, 2), Spike::new(3, 4)], 1.0, &mut buf);
+        assert_eq!(buf.len(), 24);
+    }
+
+    #[test]
+    fn round_trip() {
+        let spikes: Vec<Spike> = (0..100).map(|i| Spike::new(i * 7, i)).collect();
+        let mut buf = Vec::new();
+        encode_spikes(&spikes, 1.0, &mut buf);
+        let mut back = Vec::new();
+        let n = decode_spikes(&buf, 1.0, &mut back).unwrap();
+        assert_eq!(n, 100);
+        assert_eq!(spikes, back);
+    }
+
+    #[test]
+    fn bad_length_rejected() {
+        let mut out = Vec::new();
+        assert!(decode_spikes(&[0u8; 13], 1.0, &mut out).is_err());
+    }
+
+    #[test]
+    fn property_round_trip_any_dt() {
+        forall("aer round trip", 50, |rng| {
+            let dt = [0.1, 0.5, 1.0, 2.0][rng.next_below(4) as usize];
+            let n = rng.next_below(200) as usize;
+            let spikes: Vec<Spike> = (0..n)
+                .map(|_| Spike::new(rng.next_u64() as u32, rng.next_below(1_000_000)))
+                .collect();
+            let mut buf = Vec::new();
+            encode_spikes(&spikes, dt, &mut buf);
+            assert_eq!(buf.len(), n * SPIKE_WIRE_BYTES);
+            let mut back = Vec::new();
+            decode_spikes(&buf, dt, &mut back).unwrap();
+            assert_eq!(spikes, back);
+        });
+    }
+}

@@ -1,0 +1,90 @@
+//! A reusable sense-reversing barrier.
+//!
+//! `std::sync::Barrier` would suffice for correctness, but the profiler
+//! needs to attribute *time spent waiting* per rank, so this barrier is
+//! built on a Mutex+Condvar pair we control and instrument.
+
+use std::sync::{Condvar, Mutex};
+
+pub struct SenseBarrier {
+    n: u32,
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+}
+
+struct BarrierState {
+    arrived: u32,
+    generation: u64,
+}
+
+impl SenseBarrier {
+    pub fn new(n: u32) -> Self {
+        assert!(n >= 1);
+        Self {
+            n,
+            state: Mutex::new(BarrierState { arrived: 0, generation: 0 }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Block until all `n` participants have arrived.
+    pub fn wait(&self) {
+        let mut st = self.state.lock().unwrap();
+        let gen = st.generation;
+        st.arrived += 1;
+        if st.arrived == self.n {
+            st.arrived = 0;
+            st.generation += 1;
+            self.cv.notify_all();
+            return;
+        }
+        while st.generation == gen {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn ranks_cannot_overtake_a_phase() {
+        let n = 8u32;
+        let barrier = Arc::new(SenseBarrier::new(n));
+        let phase_count = Arc::new(AtomicU32::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..n {
+            let b = barrier.clone();
+            let c = phase_count.clone();
+            handles.push(std::thread::spawn(move || {
+                for phase in 0..50u32 {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    b.wait();
+                    // after the barrier, every rank must have bumped the counter
+                    let seen = c.load(Ordering::SeqCst);
+                    assert!(
+                        seen >= (phase + 1) * n,
+                        "phase {phase}: counter {seen} < {}",
+                        (phase + 1) * n
+                    );
+                    b.wait();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(phase_count.load(Ordering::SeqCst), 50 * n);
+    }
+
+    #[test]
+    fn single_rank_never_blocks() {
+        let b = SenseBarrier::new(1);
+        for _ in 0..100 {
+            b.wait();
+        }
+    }
+}

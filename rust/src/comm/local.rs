@@ -1,0 +1,130 @@
+//! In-process all-to-all transport: P rank threads exchange byte buffers
+//! through a shared P×P mailbox matrix with two barrier phases per
+//! exchange (post, then collect) — the synchronous-collective semantics
+//! of the paper's MPI setup, instrumented for profiling.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::barrier::SenseBarrier;
+use super::transport::{ExchangeStats, Transport};
+
+/// Shared state for one simulated cluster of `p` ranks.
+pub struct LocalCluster {
+    p: u32,
+    /// mailbox[src][dst]
+    mailboxes: Vec<Vec<Mutex<Vec<u8>>>>,
+    barrier: SenseBarrier,
+}
+
+impl LocalCluster {
+    pub fn new(p: u32) -> Arc<Self> {
+        assert!(p >= 1);
+        Arc::new(Self {
+            p,
+            mailboxes: (0..p)
+                .map(|_| (0..p).map(|_| Mutex::new(Vec::new())).collect())
+                .collect(),
+            barrier: SenseBarrier::new(p),
+        })
+    }
+}
+
+impl Transport for Arc<LocalCluster> {
+    fn n_ranks(&self) -> u32 {
+        self.p
+    }
+
+    fn alltoall(
+        &self,
+        rank: u32,
+        outgoing: &[Vec<u8>],
+    ) -> Result<(Vec<Vec<u8>>, ExchangeStats)> {
+        assert_eq!(outgoing.len() as u32, self.p, "need one buffer per rank");
+        let mut stats = ExchangeStats::default();
+        // Phase 1: post all outgoing buffers.
+        for (dst, payload) in outgoing.iter().enumerate() {
+            let mut slot = self.mailboxes[rank as usize][dst].lock().unwrap();
+            slot.clear();
+            slot.extend_from_slice(payload);
+            if dst as u32 != rank {
+                stats.bytes_sent += payload.len() as u64;
+                stats.messages += 1;
+            }
+        }
+        self.barrier.wait();
+        // Phase 2: collect the column addressed to this rank.
+        let mut incoming = Vec::with_capacity(self.p as usize);
+        for src in 0..self.p as usize {
+            let mut slot = self.mailboxes[src][rank as usize].lock().unwrap();
+            incoming.push(std::mem::take(&mut *slot));
+        }
+        // Phase 3: everyone must finish reading before the next post.
+        self.barrier.wait();
+        Ok((incoming, stats))
+    }
+
+    fn barrier(&self, _rank: u32) {
+        self.barrier.wait();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alltoall_routes_every_pair() {
+        let p = 6u32;
+        let cluster = LocalCluster::new(p);
+        let mut handles = Vec::new();
+        for rank in 0..p {
+            let t = cluster.clone();
+            handles.push(std::thread::spawn(move || {
+                for round in 0..20u32 {
+                    let outgoing: Vec<Vec<u8>> = (0..p)
+                        .map(|dst| format!("r{rank}->d{dst}@{round}").into_bytes())
+                        .collect();
+                    let (incoming, stats) = t.alltoall(rank, &outgoing).unwrap();
+                    assert_eq!(stats.messages, (p - 1) as u64);
+                    for (src, buf) in incoming.iter().enumerate() {
+                        let expect = format!("r{src}->d{rank}@{round}");
+                        assert_eq!(buf, expect.as_bytes(), "rank {rank} round {round}");
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn self_message_round_trips() {
+        let cluster = LocalCluster::new(1);
+        let (incoming, stats) = cluster.alltoall(0, &[b"self".to_vec()]).unwrap();
+        assert_eq!(incoming[0], b"self");
+        assert_eq!(stats.messages, 0, "self-delivery is not a network message");
+    }
+
+    #[test]
+    fn empty_payloads_still_synchronize() {
+        let p = 4u32;
+        let cluster = LocalCluster::new(p);
+        let mut handles = Vec::new();
+        for rank in 0..p {
+            let t = cluster.clone();
+            handles.push(std::thread::spawn(move || {
+                let outgoing = vec![Vec::new(); p as usize];
+                let (incoming, stats) = t.alltoall(rank, &outgoing).unwrap();
+                assert!(incoming.iter().all(|b| b.is_empty()));
+                assert_eq!(stats.bytes_sent, 0);
+                assert_eq!(stats.messages, (p - 1) as u64);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Inter-process communication: the AER wire format, message packing,
+//! the transport abstraction with the in-process all-to-all
+//! implementation, and the synchronization barrier.
+
+pub mod aer;
+pub mod transport;
+pub mod local;
+pub mod barrier;
+
+pub use aer::{decode_spikes, encode_spikes, SPIKE_WIRE_BYTES};
+pub use local::LocalCluster;
+pub use transport::{ExchangeStats, Transport};

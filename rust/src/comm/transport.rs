@@ -1,0 +1,37 @@
+//! The transport abstraction used by live runs.
+//!
+//! Models MPI's synchronous collective exchange: each rank contributes one
+//! outgoing buffer per destination; `alltoall` returns the buffers
+//! addressed to the calling rank. A conforming implementation must be a
+//! *barrier*: no rank's exchange completes until every rank has
+//! contributed (matching the paper's synchronous MPI collectives).
+
+use anyhow::Result;
+
+/// Per-call accounting used by the profiler and the workload recorder.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExchangeStats {
+    /// Bytes this rank sent (sum over destinations).
+    pub bytes_sent: u64,
+    /// Messages this rank sent (= P-1 for all-to-all, even when empty:
+    /// synchronous collectives always transmit envelopes).
+    pub messages: u64,
+}
+
+pub trait Transport: Send {
+    /// Number of ranks in the cluster.
+    fn n_ranks(&self) -> u32;
+
+    /// Synchronous all-to-all: `outgoing[p]` is this rank's payload for
+    /// rank `p` (`outgoing[self]` is returned to self unchanged, matching
+    /// MPI_Alltoall semantics). Returns the incoming buffers indexed by
+    /// source rank, plus accounting.
+    fn alltoall(
+        &self,
+        rank: u32,
+        outgoing: &[Vec<u8>],
+    ) -> Result<(Vec<Vec<u8>>, ExchangeStats)>;
+
+    /// Synchronization barrier across all ranks.
+    fn barrier(&self, rank: u32);
+}

@@ -1,0 +1,8 @@
+//! Run and network configuration: typed parameter structs, paper presets,
+//! and TOML loading built on [`crate::util::tomlmini`].
+
+pub mod network;
+pub mod run;
+
+pub use network::NetworkParams;
+pub use run::{Backend, Mode, RunConfig};

@@ -1,0 +1,237 @@
+//! Neural-network parameters: population sizes, connectivity, dynamics.
+//!
+//! Defaults reproduce the paper's benchmark network (§II): 80% excitatory
+//! LIF neurons with Spike-Frequency Adaptation and 20% inhibitory neurons
+//! without SFA; a homogeneously sparse synaptic matrix with a constant
+//! 1125 synapses projected per neuron; 400 external Poisson synapses per
+//! neuron at ~3 Hz; 1 ms network time step; asynchronous-irregular firing
+//! near 3.2 Hz after the initial transient.
+
+use anyhow::{ensure, Result};
+
+/// Synaptic weights are quantized to multiples of 2^-10 mV. With step
+/// sums bounded well below 2^13, f32 addition of such values is *exact*,
+/// which makes the accumulated synaptic current independent of delivery
+/// order — and therefore the whole simulation bitwise-identical no matter
+/// how many processes the network is partitioned over (DESIGN.md §7).
+pub const WEIGHT_QUANTUM: f32 = 1.0 / 1024.0;
+
+/// Snap a weight to the exact representable grid.
+pub fn quantize_weight(w: f64) -> f32 {
+    ((w / WEIGHT_QUANTUM as f64).round() as f32) * WEIGHT_QUANTUM
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkParams {
+    /// Total neurons in the network.
+    pub n_neurons: u32,
+    /// Excitatory fraction (paper: 0.8).
+    pub frac_exc: f64,
+    /// Synapses projected by each neuron (paper: 1125).
+    pub syn_per_neuron: u32,
+    /// Excitatory synaptic efficacy (mV, quantized).
+    pub j_exc: f32,
+    /// Inhibitory synaptic efficacy (mV, quantized, negative).
+    pub j_inh: f32,
+    /// Axonal delay range in whole time steps, inclusive.
+    pub delay_min_steps: u32,
+    pub delay_max_steps: u32,
+    /// External stimulus: Poisson synapses per neuron and their rate.
+    pub ext_syn_per_neuron: u32,
+    pub ext_rate_hz: f64,
+    /// External synapse efficacy (mV, quantized).
+    pub j_ext: f32,
+    /// Membrane time constant (ms).
+    pub tau_m_ms: f64,
+    /// SFA time constant (ms) and per-spike increment (mV) — excitatory only.
+    pub tau_w_ms: f64,
+    pub sfa_inc: f32,
+    /// Spiking threshold / reset (mV relative to rest = 0) and lower barrier.
+    pub theta: f32,
+    pub v_reset: f32,
+    pub v_floor: f32,
+    /// Absolute refractory period (ms).
+    pub t_ref_ms: f64,
+    /// Network synchronization step (ms); the paper uses 1 ms.
+    pub dt_ms: f64,
+}
+
+impl Default for NetworkParams {
+    fn default() -> Self {
+        Self::paper(20_480)
+    }
+}
+
+impl NetworkParams {
+    /// The paper's benchmark network scaled to `n` neurons.
+    ///
+    /// Dynamics constants are tuned (see `rust/tests/regime.rs`) so the
+    /// network settles into an asynchronous-irregular regime near the
+    /// paper's ~3.2 Hz mean rate under the 400-synapse 3 Hz external
+    /// Poisson bath.
+    pub fn paper(n: u32) -> Self {
+        Self {
+            n_neurons: n,
+            frac_exc: 0.8,
+            syn_per_neuron: 1125,
+            j_exc: quantize_weight(0.40),
+            j_inh: quantize_weight(-1.42),
+            delay_min_steps: 1,
+            delay_max_steps: 16,
+            ext_syn_per_neuron: 400,
+            ext_rate_hz: 3.0,
+            j_ext: quantize_weight(0.96),
+            tau_m_ms: 20.0,
+            tau_w_ms: 500.0,
+            sfa_inc: quantize_weight(0.12),
+            theta: 20.0,
+            v_reset: 0.0,
+            v_floor: -40.0,
+            t_ref_ms: 2.0,
+            dt_ms: 1.0,
+        }
+    }
+
+    /// Paper configurations: 20480N / 2.3E7 synapses.
+    pub fn paper_20480() -> Self {
+        Self::paper(20_480)
+    }
+
+    /// 320KN / 3.6E8 synapses (16x the base grid).
+    pub fn paper_320k() -> Self {
+        Self::paper(327_680)
+    }
+
+    /// 1280KN / 1.44E9 synapses (64x the base grid).
+    pub fn paper_1280k() -> Self {
+        Self::paper(1_310_720)
+    }
+
+    /// A small network for tests and quickstarts.
+    pub fn tiny(n: u32) -> Self {
+        let mut p = Self::paper(n);
+        // keep in-degree ~constant relative to network size for small n so
+        // the dynamics remain plausible: cap fan-out at n/4.
+        p.syn_per_neuron = p.syn_per_neuron.min(n / 4).max(1);
+        p
+    }
+
+    pub fn n_exc(&self) -> u32 {
+        (self.n_neurons as f64 * self.frac_exc).round() as u32
+    }
+
+    pub fn n_inh(&self) -> u32 {
+        self.n_neurons - self.n_exc()
+    }
+
+    /// First inhibitory global id; neurons [0, n_exc) are excitatory.
+    pub fn inh_start(&self) -> u32 {
+        self.n_exc()
+    }
+
+    pub fn is_exc(&self, gid: u32) -> bool {
+        gid < self.inh_start()
+    }
+
+    /// Total recurrent synapses (the paper's "Synapses" row).
+    pub fn total_synapses(&self) -> u64 {
+        self.n_neurons as u64 * self.syn_per_neuron as u64
+    }
+
+    /// Expected external events per neuron per step.
+    pub fn ext_lambda_per_step(&self) -> f64 {
+        self.ext_syn_per_neuron as f64 * self.ext_rate_hz * self.dt_ms * 1e-3
+    }
+
+    /// Steps to simulate `seconds` of activity.
+    pub fn steps_for_seconds(&self, seconds: f64) -> u32 {
+        (seconds * 1000.0 / self.dt_ms).round() as u32
+    }
+
+    /// Expected synaptic events per wall-second of activity at `rate_hz`
+    /// (the paper's cost unit: N * M * rate).
+    pub fn syn_events_per_sim_second(&self, rate_hz: f64) -> f64 {
+        self.n_neurons as f64 * self.syn_per_neuron as f64 * rate_hz
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.n_neurons >= 2, "need at least 2 neurons");
+        ensure!(
+            (0.0..=1.0).contains(&self.frac_exc),
+            "frac_exc out of range"
+        );
+        ensure!(
+            self.syn_per_neuron < self.n_neurons,
+            "fan-out {} must be < n_neurons {}",
+            self.syn_per_neuron,
+            self.n_neurons
+        );
+        ensure!(
+            self.delay_min_steps >= 1 && self.delay_min_steps <= self.delay_max_steps,
+            "bad delay range"
+        );
+        ensure!(self.dt_ms > 0.0, "dt must be positive");
+        ensure!(self.theta > self.v_reset, "theta must exceed v_reset");
+        ensure!(self.j_inh <= 0.0, "j_inh must be <= 0");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_sizes_match_table1() {
+        // Table I header: 20480N/2.30E7, 320KN/3.60E8, 1280KN/1.44E9.
+        assert_eq!(NetworkParams::paper_20480().total_synapses(), 23_040_000);
+        assert_eq!(NetworkParams::paper_320k().total_synapses(), 368_640_000);
+        assert_eq!(NetworkParams::paper_1280k().total_synapses(), 1_474_560_000);
+    }
+
+    #[test]
+    fn exc_inh_split() {
+        let p = NetworkParams::paper_20480();
+        assert_eq!(p.n_exc(), 16_384);
+        assert_eq!(p.n_inh(), 4_096);
+        assert!(p.is_exc(0) && p.is_exc(16_383));
+        assert!(!p.is_exc(16_384));
+    }
+
+    #[test]
+    fn weights_are_quantized() {
+        let p = NetworkParams::paper_20480();
+        for w in [p.j_exc, p.j_inh, p.j_ext, p.sfa_inc] {
+            let q = w / WEIGHT_QUANTUM;
+            assert_eq!(q.fract(), 0.0, "{w} not on the 2^-10 grid");
+        }
+    }
+
+    #[test]
+    fn ext_lambda() {
+        let p = NetworkParams::paper_20480();
+        // 400 synapses x 3 Hz x 1 ms = 1.2 expected events/step
+        assert!((p.ext_lambda_per_step() - 1.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_catches_bad_configs() {
+        let mut p = NetworkParams::tiny(64);
+        p.validate().unwrap();
+        p.syn_per_neuron = 64;
+        assert!(p.validate().is_err());
+        let mut p2 = NetworkParams::tiny(64);
+        p2.delay_min_steps = 0;
+        assert!(p2.validate().is_err());
+        let mut p3 = NetworkParams::tiny(64);
+        p3.j_inh = 0.5;
+        assert!(p3.validate().is_err());
+    }
+
+    #[test]
+    fn tiny_caps_fanout() {
+        let p = NetworkParams::tiny(100);
+        assert_eq!(p.syn_per_neuron, 25);
+        p.validate().unwrap();
+    }
+}

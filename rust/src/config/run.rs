@@ -1,0 +1,241 @@
+//! Run configuration: execution mode, backend, process count, platform,
+//! and TOML file loading.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::network::NetworkParams;
+use crate::util::tomlmini;
+
+/// Which neuron-dynamics implementation the engine uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-rust LIF+SFA update (always available; the baseline).
+    Native,
+    /// AOT-compiled JAX/Pallas artifact executed through PJRT.
+    Xla,
+}
+
+impl std::str::FromStr for Backend {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Ok(Backend::Native),
+            "xla" | "pjrt" => Ok(Backend::Xla),
+            other => bail!("unknown backend {other:?} (native|xla)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backend::Native => write!(f, "native"),
+            Backend::Xla => write!(f, "xla"),
+        }
+    }
+}
+
+/// How the run is executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Actually run P ranks as threads on this host and measure wall-clock.
+    Live,
+    /// Drive the calibrated platform timing/energy models with a workload
+    /// trace (recorded or analytic) — the substitution for the paper's
+    /// clusters and boards (DESIGN.md §2).
+    Modeled,
+}
+
+impl std::str::FromStr for Mode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "live" => Ok(Mode::Live),
+            "modeled" | "model" => Ok(Mode::Modeled),
+            other => bail!("unknown mode {other:?} (live|modeled)"),
+        }
+    }
+}
+
+/// Full description of one simulation run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub net: NetworkParams,
+    /// MPI-style process (rank) count.
+    pub procs: u32,
+    /// Simulated activity duration (the paper simulates 10 s).
+    pub sim_seconds: f64,
+    pub seed: u64,
+    pub backend: Backend,
+    pub mode: Mode,
+    /// Platform preset name for modeled runs (see `platform::presets`).
+    pub platform: String,
+    /// Interconnect preset for modeled runs ("ib", "eth1g", ...).
+    pub interconnect: String,
+    /// Directory holding AOT artifacts for the Xla backend.
+    pub artifacts_dir: String,
+    /// Print per-second progress during live runs.
+    pub progress: bool,
+    /// Record the per-step/per-rank workload trace (live runs) to this
+    /// path — replayable through the modeled platforms via `dpsnn replay`.
+    pub record_trace: Option<String>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            net: NetworkParams::default(),
+            procs: 1,
+            sim_seconds: 10.0,
+            seed: 0xD509_55E5, // "DSPNN" homage
+            backend: Backend::Native,
+            mode: Mode::Live,
+            platform: "xeon".to_string(),
+            interconnect: "ib".to_string(),
+            artifacts_dir: "artifacts".to_string(),
+            progress: false,
+            record_trace: None,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn steps(&self) -> u32 {
+        self.net.steps_for_seconds(self.sim_seconds)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.net.validate()?;
+        if self.procs == 0 {
+            bail!("procs must be >= 1");
+        }
+        if self.procs > self.net.n_neurons {
+            bail!(
+                "more processes ({}) than neurons ({})",
+                self.procs,
+                self.net.n_neurons
+            );
+        }
+        if self.sim_seconds <= 0.0 {
+            bail!("sim_seconds must be positive");
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML file; unspecified keys keep their defaults.
+    ///
+    /// ```toml
+    /// [network]
+    /// neurons = 20480
+    /// syn_per_neuron = 1125
+    /// [run]
+    /// procs = 8
+    /// sim_seconds = 10.0
+    /// backend = "native"
+    /// mode = "live"
+    /// platform = "xeon"
+    /// interconnect = "ib"
+    /// ```
+    pub fn from_toml_file(path: &Path) -> Result<Self> {
+        let doc = tomlmini::parse_file(path)?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        Self::from_doc(&tomlmini::parse(text)?)
+    }
+
+    fn from_doc(doc: &tomlmini::Doc) -> Result<Self> {
+        let mut cfg = RunConfig::default();
+        let n = doc.i64_or("network", "neurons", cfg.net.n_neurons as i64) as u32;
+        cfg.net = NetworkParams::paper(n);
+        let net = &mut cfg.net;
+        net.syn_per_neuron =
+            doc.i64_or("network", "syn_per_neuron", net.syn_per_neuron as i64) as u32;
+        net.frac_exc = doc.f64_or("network", "frac_exc", net.frac_exc);
+        net.ext_syn_per_neuron =
+            doc.i64_or("network", "ext_syn_per_neuron", net.ext_syn_per_neuron as i64) as u32;
+        net.ext_rate_hz = doc.f64_or("network", "ext_rate_hz", net.ext_rate_hz);
+        net.delay_min_steps =
+            doc.i64_or("network", "delay_min_steps", net.delay_min_steps as i64) as u32;
+        net.delay_max_steps =
+            doc.i64_or("network", "delay_max_steps", net.delay_max_steps as i64) as u32;
+        net.tau_m_ms = doc.f64_or("network", "tau_m_ms", net.tau_m_ms);
+        net.tau_w_ms = doc.f64_or("network", "tau_w_ms", net.tau_w_ms);
+        net.theta = doc.f64_or("network", "theta", net.theta as f64) as f32;
+        net.t_ref_ms = doc.f64_or("network", "t_ref_ms", net.t_ref_ms);
+        net.j_exc =
+            super::network::quantize_weight(doc.f64_or("network", "j_exc", net.j_exc as f64));
+        net.j_inh =
+            super::network::quantize_weight(doc.f64_or("network", "j_inh", net.j_inh as f64));
+        net.j_ext =
+            super::network::quantize_weight(doc.f64_or("network", "j_ext", net.j_ext as f64));
+        net.sfa_inc =
+            super::network::quantize_weight(doc.f64_or("network", "sfa_inc", net.sfa_inc as f64));
+
+        cfg.procs = doc.i64_or("run", "procs", cfg.procs as i64) as u32;
+        cfg.sim_seconds = doc.f64_or("run", "sim_seconds", cfg.sim_seconds);
+        cfg.seed = doc.i64_or("run", "seed", cfg.seed as i64) as u64;
+        cfg.backend = doc.str_or("run", "backend", &cfg.backend.to_string()).parse()?;
+        cfg.mode = doc
+            .str_or("run", "mode", if cfg.mode == Mode::Live { "live" } else { "modeled" })
+            .parse()?;
+        cfg.platform = doc.str_or("run", "platform", &cfg.platform);
+        cfg.interconnect = doc.str_or("run", "interconnect", &cfg.interconnect);
+        cfg.artifacts_dir = doc.str_or("run", "artifacts_dir", &cfg.artifacts_dir);
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_round_trip() {
+        let cfg = RunConfig::from_toml_str(
+            r#"
+            [network]
+            neurons = 4096
+            syn_per_neuron = 512
+            ext_rate_hz = 4.0
+            [run]
+            procs = 4
+            sim_seconds = 2.5
+            backend = "native"
+            mode = "modeled"
+            platform = "jetson"
+            interconnect = "eth1g"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.net.n_neurons, 4096);
+        assert_eq!(cfg.net.syn_per_neuron, 512);
+        assert_eq!(cfg.procs, 4);
+        assert_eq!(cfg.mode, Mode::Modeled);
+        assert_eq!(cfg.platform, "jetson");
+        assert_eq!(cfg.steps(), 2500);
+    }
+
+    #[test]
+    fn bad_backend_rejected() {
+        let r = RunConfig::from_toml_str("[run]\nbackend = \"cuda\"");
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn validation_procs_vs_neurons() {
+        let mut cfg = RunConfig::default();
+        cfg.net = NetworkParams::tiny(16);
+        cfg.procs = 32;
+        assert!(cfg.validate().is_err());
+    }
+}

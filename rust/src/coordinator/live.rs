@@ -1,0 +1,240 @@
+//! Live execution: P ranks as OS threads over the in-process all-to-all
+//! transport, with the paper's comp/comm/barrier profiling.
+//!
+//! Step protocol per rank (matching DPSNN's synchronous-collective
+//! scheme):
+//!
+//! 1. integrate local dynamics            -> Computation
+//! 2. AER-encode + all-to-all exchange    -> Communication
+//! 3. decode + deliver into delay rings   -> Computation
+//! 4. explicit barrier                    -> Barrier/synchronization
+//!
+//! Because connectivity, stimulus and initial state are pure functions of
+//! global neuron ids, and synaptic weights live on an exact f32 grid, the
+//! spike raster is **bitwise identical for every process count** — tested
+//! in `rust/tests/determinism.rs`.
+
+use anyhow::{Context, Result};
+
+use crate::comm::aer::{decode_spikes, encode_spikes};
+use crate::comm::local::LocalCluster;
+use crate::comm::transport::Transport;
+use crate::config::{Mode, RunConfig};
+use crate::engine::partition::Partition;
+use crate::engine::rank::RankEngine;
+use crate::engine::spike::Spike;
+use crate::model::population::PopulationState;
+use crate::profiling::components::Components;
+use crate::profiling::timer::Stopwatch;
+use crate::runtime::make_backend;
+
+use super::orchestrator::RunResult;
+
+/// What each rank thread reports back.
+struct RankReport {
+    components: Components,
+    totals: crate::engine::rank::StepOutcome,
+    /// Whole-population per-step spike counts (every rank sees all
+    /// spikes; only rank 0's copy is kept).
+    pop_counts: Option<Vec<u32>>,
+    /// Per-step per-rank spike counts (rank 0, when trace recording is on).
+    rank_counts: Option<Vec<Vec<u32>>>,
+}
+
+pub fn run_live(cfg: &RunConfig) -> Result<RunResult> {
+    let p = cfg.procs;
+    let steps = cfg.steps();
+    let part = Partition::even(cfg.net.n_neurons, p);
+    let cluster = LocalCluster::new(p);
+
+    let t0 = std::time::Instant::now();
+    let reports: Vec<RankReport> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for rank in 0..p {
+            let cluster = cluster.clone();
+            let cfg = cfg.clone();
+            let part = part.clone();
+            handles.push(scope.spawn(move || -> Result<RankReport> {
+                rank_main(rank, &cfg, &part, cluster, steps)
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("rank thread panicked"))
+            .collect::<Result<Vec<_>>>()
+    })?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let per_rank: Vec<Components> = reports.iter().map(|r| r.components).collect();
+    let mut mean = Components::merged(&per_rank);
+    mean.computation /= p as f64;
+    mean.communication /= p as f64;
+    mean.barrier /= p as f64;
+
+    let total_spikes: u64 = reports.iter().map(|r| r.totals.spikes).sum();
+    let total_syn: u64 = reports.iter().map(|r| r.totals.syn_events).sum();
+    let total_ext: u64 = reports.iter().map(|r| r.totals.ext_events).sum();
+    let mut pop_counts = Vec::new();
+    let mut trace = None;
+    for r in reports {
+        if let Some(c) = r.pop_counts {
+            pop_counts = c;
+        }
+        if let Some(rc) = r.rank_counts {
+            trace = Some(crate::trace::workload::WorkloadTrace {
+                n_neurons: cfg.net.n_neurons,
+                syn_per_neuron: cfg.net.syn_per_neuron,
+                ext_events_per_neuron_step: cfg.net.ext_lambda_per_step(),
+                dt_ms: cfg.net.dt_ms,
+                procs: p,
+                spikes: rc,
+            });
+        }
+    }
+    if let (Some(t), Some(path)) = (&trace, &cfg.record_trace) {
+        t.save(std::path::Path::new(path))?;
+    }
+
+    let sim_s = cfg.sim_seconds;
+    Ok(RunResult {
+        mode: Mode::Live,
+        procs: p,
+        wall_s,
+        sim_s,
+        components: mean,
+        per_rank,
+        total_spikes,
+        total_syn_events: total_syn,
+        total_ext_events: total_ext,
+        mean_rate_hz: total_spikes as f64 / cfg.net.n_neurons as f64 / sim_s,
+        pop_counts,
+        energy: None,
+        trace,
+        backend: match cfg.backend {
+            crate::config::Backend::Native => "native",
+            crate::config::Backend::Xla => "xla",
+        },
+        platform: "host-live".to_string(),
+    })
+}
+
+fn rank_main(
+    rank: u32,
+    cfg: &RunConfig,
+    part: &Partition,
+    cluster: std::sync::Arc<LocalCluster>,
+    steps: u32,
+) -> Result<RankReport> {
+    let (lo, hi) = part.range(rank);
+    let pop = PopulationState::init(&cfg.net, cfg.seed, lo, hi - lo);
+    let backend = make_backend(
+        cfg.backend,
+        &cfg.net,
+        pop,
+        std::path::Path::new(&cfg.artifacts_dir),
+    )
+    .with_context(|| format!("rank {rank} backend"))?;
+    let mut engine = RankEngine::new(&cfg.net, cfg.seed, rank, lo, hi, backend);
+
+    let mut comp = Components::default();
+    let mut sw = Stopwatch::new();
+    let mut my_spikes: Vec<Spike> = Vec::new();
+    let mut wire: Vec<u8> = Vec::new();
+    let mut all_spikes: Vec<Spike> = Vec::new();
+    let mut pop_counts: Option<Vec<u32>> =
+        (rank == 0).then(|| Vec::with_capacity(steps as usize));
+    let mut rank_counts: Option<Vec<Vec<u32>>> = (rank == 0
+        && cfg.record_trace.is_some())
+    .then(|| Vec::with_capacity(steps as usize));
+
+    for step in 0..steps {
+        // 1. computation: integrate
+        sw.reset();
+        engine.integrate(&mut my_spikes)?;
+        comp.add_computation(sw.lap());
+
+        // 2. communication: AER encode + synchronous all-to-all
+        wire.clear();
+        encode_spikes(&my_spikes, cfg.net.dt_ms, &mut wire);
+        let outgoing: Vec<Vec<u8>> = (0..cluster.n_ranks())
+            .map(|_| wire.clone())
+            .collect();
+        let (incoming, _stats) = cluster.alltoall(rank, &outgoing)?;
+        comp.add_communication(sw.lap());
+
+        // 3. computation: decode + deliver through delay rings
+        all_spikes.clear();
+        for buf in &incoming {
+            decode_spikes(buf, cfg.net.dt_ms, &mut all_spikes)?;
+        }
+        engine.deliver(&all_spikes);
+        engine.finish_step();
+        if let Some(c) = pop_counts.as_mut() {
+            c.push(all_spikes.len() as u32);
+        }
+        if let Some(rc) = rank_counts.as_mut() {
+            let mut row = vec![0u32; cluster.n_ranks() as usize];
+            for s in &all_spikes {
+                row[part.owner(s.gid) as usize] += 1;
+            }
+            rc.push(row);
+        }
+        comp.add_computation(sw.lap());
+
+        // 4. synchronization barrier
+        cluster.barrier(rank);
+        comp.add_barrier(sw.lap());
+
+        if cfg.progress && rank == 0 && (step + 1) % 1000 == 0 {
+            eprintln!(
+                "  [live] step {}/{} rate so far {:.2} Hz",
+                step + 1,
+                steps,
+                engine.mean_rate_hz(cfg.net.dt_ms)
+            );
+        }
+    }
+
+    Ok(RankReport {
+        components: comp,
+        totals: engine.totals,
+        pop_counts,
+        rank_counts,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetworkParams;
+
+    fn tiny_cfg(procs: u32) -> RunConfig {
+        let mut cfg = RunConfig::default();
+        cfg.net = NetworkParams::tiny(512);
+        cfg.procs = procs;
+        cfg.sim_seconds = 0.2;
+        cfg
+    }
+
+    #[test]
+    fn live_run_completes_and_profiles() {
+        let r = run_live(&tiny_cfg(4)).unwrap();
+        assert_eq!(r.procs, 4);
+        assert_eq!(r.per_rank.len(), 4);
+        assert_eq!(r.pop_counts.len(), 200);
+        assert!(r.wall_s > 0.0);
+        assert!(r.components.total() > 0.0);
+        assert!(r.total_spikes > 0, "network should be active");
+        // population counts must equal the rank-sum of spikes
+        let pop: u64 = r.pop_counts.iter().map(|&c| c as u64).sum();
+        assert_eq!(pop, r.total_spikes);
+    }
+
+    #[test]
+    fn single_rank_matches_multi_rank_spike_totals() {
+        let a = run_live(&tiny_cfg(1)).unwrap();
+        let b = run_live(&tiny_cfg(4)).unwrap();
+        assert_eq!(a.total_spikes, b.total_spikes, "partition independence");
+        assert_eq!(a.pop_counts, b.pop_counts);
+    }
+}

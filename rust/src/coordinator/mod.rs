@@ -1,0 +1,13 @@
+//! Run orchestration — the layer-3 coordination logic.
+//!
+//! * [`live`] — execute P ranks as OS threads against the in-process
+//!   all-to-all transport, with per-rank comp/comm/barrier profiling.
+//! * [`modeled`] — drive the calibrated platform/interconnect/power models
+//!   with a workload trace (the substitution for the paper's hardware).
+//! * [`orchestrator`] — config-driven dispatch and result reporting.
+
+pub mod live;
+pub mod modeled;
+pub mod orchestrator;
+
+pub use orchestrator::{run, EnergyReport, RunResult};

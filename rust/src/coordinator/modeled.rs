@@ -1,0 +1,172 @@
+//! Modeled execution: analytic workload → timing replay → power/energy,
+//! on a named platform + interconnect (the stand-in for the paper's
+//! clusters and boards).
+
+use anyhow::Result;
+
+use crate::config::{Mode, RunConfig};
+use crate::metrics::energy::joules_per_synaptic_event;
+use crate::metrics::synevents::SynapticEventCount;
+use crate::platform::hetero::HeteroCluster;
+use crate::platform::presets::platform_by_name;
+use crate::power::model::PowerModel;
+use crate::simnet::alltoall_model::AllToAllModel;
+use crate::simnet::presets::interconnect_by_name;
+use crate::timing::replay::{ModelRun, ModeledOutcome};
+use crate::trace::analytic::AnalyticWorkload;
+use crate::trace::workload::WorkloadTrace;
+
+use super::orchestrator::{EnergyReport, RunResult};
+
+/// Full modeled pipeline from a run config.
+pub fn run_modeled(cfg: &RunConfig) -> Result<RunResult> {
+    let workload = AnalyticWorkload::paper_regime(cfg.net.clone(), cfg.seed);
+    let trace = workload.generate(cfg.procs, cfg.sim_seconds);
+    run_modeled_trace(cfg, &trace)
+}
+
+/// Modeled pipeline over an existing trace (recorded or analytic).
+pub fn run_modeled_trace(cfg: &RunConfig, trace: &WorkloadTrace) -> Result<RunResult> {
+    let platform = platform_by_name(&cfg.platform)?;
+    let link = interconnect_by_name(&cfg.interconnect)?;
+    let rpn = platform.node.cores_per_node;
+    let cluster = HeteroCluster::homogeneous(platform.node.core, cfg.procs, rpn);
+    let run = ModelRun::new(cluster, AllToAllModel::new(link, rpn));
+    let outcome = run.replay(trace);
+
+    let ext_events = (trace.n_neurons as f64
+        * trace.ext_events_per_neuron_step
+        * trace.steps() as f64) as u64;
+    let power = PowerModel::new(platform.clone(), link);
+    let energy = energy_report(&power, &outcome, ext_events);
+
+    Ok(RunResult {
+        mode: Mode::Modeled,
+        procs: cfg.procs,
+        wall_s: outcome.wall_s,
+        sim_s: trace.sim_seconds(),
+        components: outcome.components,
+        per_rank: Vec::new(),
+        total_spikes: outcome.total_spikes,
+        total_syn_events: outcome.total_syn_events,
+        total_ext_events: (trace.n_neurons as f64
+            * trace.ext_events_per_neuron_step
+            * trace.steps() as f64) as u64,
+        mean_rate_hz: outcome.mean_rate_hz,
+        pop_counts: Vec::new(),
+        energy: Some(energy),
+        backend: "model",
+        platform: format!("{}+{}", platform.name, link.name),
+        trace: None,
+    })
+}
+
+/// Modeled pipeline over an explicit (possibly heterogeneous) cluster —
+/// used by the Trenz/Jetson harnesses, where the paper embeds the ARM
+/// partition in an Intel "bath" (MPI heterogeneous mode). Energy is not
+/// reported for mixed clusters (the paper meters each platform alone).
+pub fn run_modeled_cluster(
+    cfg: &RunConfig,
+    cluster: HeteroCluster,
+    ranks_per_node: u32,
+) -> Result<RunResult> {
+    let link = interconnect_by_name(&cfg.interconnect)?;
+    let workload = AnalyticWorkload::paper_regime(cfg.net.clone(), cfg.seed);
+    let trace = workload.generate(cluster.total_ranks(), cfg.sim_seconds);
+    let run = ModelRun::new(cluster, AllToAllModel::new(link, ranks_per_node));
+    let outcome = run.replay(&trace);
+    Ok(RunResult {
+        mode: Mode::Modeled,
+        procs: outcome.procs,
+        wall_s: outcome.wall_s,
+        sim_s: trace.sim_seconds(),
+        components: outcome.components,
+        per_rank: Vec::new(),
+        total_spikes: outcome.total_spikes,
+        total_syn_events: outcome.total_syn_events,
+        total_ext_events: (trace.n_neurons as f64
+            * trace.ext_events_per_neuron_step
+            * trace.steps() as f64) as u64,
+        mean_rate_hz: outcome.mean_rate_hz,
+        pop_counts: Vec::new(),
+        energy: None,
+        backend: "model",
+        platform: format!("hetero+{}", link.name),
+        trace: None,
+    })
+}
+
+/// Derive the paper's power/energy figures from a modeled outcome.
+pub fn energy_report(
+    power: &PowerModel,
+    outcome: &ModeledOutcome,
+    ext_events: u64,
+) -> EnergyReport {
+    let w = power.running_power_w(outcome.procs, outcome.utilization);
+    let e = w * outcome.wall_s;
+    let events = SynapticEventCount::measured(outcome.total_syn_events, ext_events);
+    EnergyReport {
+        power_w: w,
+        energy_j: e,
+        uj_per_syn_event: joules_per_synaptic_event(e, &events) * 1e6,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetworkParams;
+
+    fn cfg(platform: &str, interconnect: &str, procs: u32) -> RunConfig {
+        let mut cfg = RunConfig::default();
+        cfg.net = NetworkParams::paper_20480();
+        cfg.procs = procs;
+        cfg.sim_seconds = 10.0;
+        cfg.mode = Mode::Modeled;
+        cfg.platform = platform.to_string();
+        cfg.interconnect = interconnect.to_string();
+        cfg
+    }
+
+    #[test]
+    fn modeled_20480_reaches_realtime_at_32() {
+        let r = run_modeled(&cfg("xeon", "ib", 32)).unwrap();
+        assert!(
+            r.wall_s < 14.0,
+            "paper: 9.15 s at 32 procs; modeled {}",
+            r.wall_s
+        );
+        assert!(r.energy.is_some());
+    }
+
+    #[test]
+    fn modeled_energy_minimum_at_intermediate_p() {
+        // Table II: energy minimum at 8 cores on the Westmere platform.
+        let energies: Vec<(u32, f64)> = [1u32, 2, 4, 8, 16, 32, 64]
+            .iter()
+            .map(|&p| {
+                let r = run_modeled(&cfg("westmere", "ib", p)).unwrap();
+                (p, r.energy.unwrap().energy_j)
+            })
+            .collect();
+        let best = energies
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        assert!(
+            [4, 8, 16].contains(&best.0),
+            "energy minimum should be at intermediate parallelism: {energies:?}"
+        );
+    }
+
+    #[test]
+    fn jetson_slower_but_cheaper_than_intel() {
+        // Paper §V: ARM ~3x less energy, ~5x slower (4-core rows).
+        let arm = run_modeled(&cfg("jetson", "eth1g", 4)).unwrap();
+        let intel = run_modeled(&cfg("westmere", "ib", 4)).unwrap();
+        let slow = arm.wall_s / intel.wall_s;
+        let cheap = intel.energy.unwrap().energy_j / arm.energy.unwrap().energy_j;
+        assert!((3.5..7.0).contains(&slow), "slowdown {slow}");
+        assert!((1.8..6.0).contains(&cheap), "energy ratio {cheap}");
+    }
+}

@@ -1,0 +1,138 @@
+//! Config-driven run dispatch and the shared result type.
+
+use anyhow::Result;
+
+use crate::config::{Mode, RunConfig};
+use crate::profiling::components::Components;
+
+/// Energy figures attached to modeled runs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyReport {
+    /// Mean above-baseline draw while running (W).
+    pub power_w: f64,
+    /// Energy-to-solution above baseline (J).
+    pub energy_j: f64,
+    /// Paper Table IV metric (µJ / synaptic event).
+    pub uj_per_syn_event: f64,
+}
+
+/// Outcome of one simulation run, live or modeled.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub mode: Mode,
+    pub procs: u32,
+    /// Wall-clock (live: measured; modeled: predicted).
+    pub wall_s: f64,
+    /// Simulated biological time.
+    pub sim_s: f64,
+    /// Aggregate (rank-mean) execution components.
+    pub components: Components,
+    /// Per-rank components (live mode).
+    pub per_rank: Vec<Components>,
+    pub total_spikes: u64,
+    pub total_syn_events: u64,
+    pub total_ext_events: u64,
+    pub mean_rate_hz: f64,
+    /// Whole-population spike counts per step (live runs; used for
+    /// rasters/regime analysis).
+    pub pop_counts: Vec<u32>,
+    /// Modeled-mode energy report.
+    pub energy: Option<EnergyReport>,
+    pub backend: &'static str,
+    pub platform: String,
+    /// Recorded workload trace (live runs with `record_trace` set).
+    pub trace: Option<crate::trace::workload::WorkloadTrace>,
+}
+
+impl RunResult {
+    /// Soft real-time factor: simulated time / wall time (>= 1 is
+    /// real-time, the paper's red line).
+    pub fn realtime_factor(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.sim_s / self.wall_s
+    }
+
+    pub fn is_realtime(&self) -> bool {
+        self.realtime_factor() >= 1.0
+    }
+
+    /// One-paragraph human summary.
+    pub fn summary(&self) -> String {
+        let (comp, comm, bar) = self.components.fractions();
+        let energy = match &self.energy {
+            Some(e) => format!(
+                "  energy: {:.0} J above baseline ({:.0} W, {:.2} uJ/syn-event)\n",
+                e.energy_j,
+                e.power_w,
+                e.uj_per_syn_event
+            ),
+            None => String::new(),
+        };
+        format!(
+            "{} run [{}] on {}: {} procs\n\
+               wall {:.2} s for {:.1} s simulated (x{:.2} real-time{})\n\
+               rate {:.2} Hz | spikes {} | syn events {}\n\
+               comp {:.1}% | comm {:.1}% | barrier {:.1}%\n{}",
+            match self.mode {
+                Mode::Live => "live",
+                Mode::Modeled => "modeled",
+            },
+            self.backend,
+            self.platform,
+            self.procs,
+            self.wall_s,
+            self.sim_s,
+            self.realtime_factor(),
+            if self.is_realtime() { ", REAL-TIME" } else { "" },
+            self.mean_rate_hz,
+            self.total_spikes,
+            self.total_syn_events,
+            comp * 100.0,
+            comm * 100.0,
+            bar * 100.0,
+            energy
+        )
+    }
+}
+
+/// Run a configuration end to end.
+pub fn run(cfg: &RunConfig) -> Result<RunResult> {
+    cfg.validate()?;
+    match cfg.mode {
+        Mode::Live => super::live::run_live(cfg),
+        Mode::Modeled => super::modeled::run_modeled(cfg),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn realtime_factor() {
+        let mut r = RunResult {
+            mode: Mode::Live,
+            procs: 1,
+            wall_s: 5.0,
+            sim_s: 10.0,
+            components: Components::default(),
+            per_rank: vec![],
+            total_spikes: 0,
+            total_syn_events: 0,
+            total_ext_events: 0,
+            mean_rate_hz: 0.0,
+            pop_counts: vec![],
+            energy: None,
+            backend: "native",
+            platform: "host".into(),
+            trace: None,
+        };
+        assert!(r.is_realtime());
+        assert_eq!(r.realtime_factor(), 2.0);
+        r.wall_s = 20.0;
+        assert!(!r.is_realtime());
+        assert!(r.summary().contains("procs"));
+    }
+}

@@ -1,0 +1,217 @@
+//! Axonal delay ring: the time-delay queues of DPSNN.
+//!
+//! Because the paper's synapses inject *instantaneous* post-synaptic
+//! currents, delivering a spike along a synapse with delay `d` is exactly
+//! "add the synaptic weight to the target's input current at step t+d".
+//! The ring therefore holds one dense per-neuron accumulator per future
+//! step — allocation-free in steady state, and the accumulation order
+//! cannot change the result because weights live on the exact 2^-10 grid
+//! (see `config::network::WEIGHT_QUANTUM`).
+//!
+//! **Hot path** (EXPERIMENTS.md §Perf): storage is one flat
+//! `depth * n` array; [`DelayRing::deliver_row`] fuses the per-spike
+//! fan-out loop with branch-free slot arithmetic and unchecked indexing
+//! (safety: targets and delays are validated at construction by
+//! [`crate::model::connectivity::IncomingSynapses`]).
+
+/// Ring of `depth` future input-current accumulators over `n` local neurons.
+#[derive(Debug, Clone)]
+pub struct DelayRing {
+    /// slot-major flat storage: slots[s * n + j].
+    flat: Vec<f32>,
+    n: usize,
+    depth: usize,
+    /// Slot index holding "the step currently being integrated".
+    cur: usize,
+}
+
+impl DelayRing {
+    /// `max_delay` is the largest delay in steps the ring must hold;
+    /// slot for delay d = (cur + d) mod (max_delay + 1).
+    pub fn new(n: usize, max_delay: u32) -> Self {
+        let depth = max_delay as usize + 1;
+        Self { flat: vec![0.0; depth * n], n, depth, cur: 0 }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Accumulate `w` onto local neuron `tgt` to arrive `delay` steps from
+    /// the step currently being integrated. `delay` must be in
+    /// [1, max_delay].
+    #[inline(always)]
+    pub fn add(&mut self, delay: u8, tgt: u32, w: f32) {
+        debug_assert!(
+            (1..self.depth).contains(&(delay as usize)),
+            "delay {delay} out of range 1..={}",
+            self.depth - 1
+        );
+        debug_assert!((tgt as usize) < self.n);
+        let mut slot = self.cur + delay as usize;
+        if slot >= self.depth {
+            slot -= self.depth;
+        }
+        self.flat[slot * self.n + tgt as usize] += w;
+    }
+
+    /// Deliver one spike's whole fan-out: add `w` at `(delay, tgt)` for
+    /// every synapse in the row. The caller guarantees (and
+    /// `IncomingSynapses` construction enforces) `tgt < n` and
+    /// `1 <= delay <= max_delay`.
+    /// Rows are stored delay-major (see `IncomingSynapses::build`), so
+    /// the loop advances the slot base only on delay changes and all
+    /// writes of a run land in one slot's accumulator.
+    #[inline]
+    pub fn deliver_row(&mut self, tgts: &[u32], delays: &[u8], w: f32) {
+        debug_assert_eq!(tgts.len(), delays.len());
+        let n = self.n;
+        let depth = self.depth;
+        let cur = self.cur;
+        let flat = self.flat.as_mut_ptr();
+        let mut last_d = 0u8; // delays are >= 1, so this forces a recompute
+        let mut base = 0usize;
+        for (&t, &d) in tgts.iter().zip(delays) {
+            debug_assert!((t as usize) < n && (1..depth).contains(&(d as usize)));
+            if d != last_d {
+                let mut slot = cur + d as usize;
+                if slot >= depth {
+                    slot -= depth;
+                }
+                base = slot * n;
+                last_d = d;
+            }
+            // SAFETY: slot < depth and t < n (validated at build; see
+            // connectivity tests), so the index is within flat's length.
+            unsafe {
+                *flat.add(base + t as usize) += w;
+            }
+        }
+    }
+
+    /// Borrow the accumulator for the current step (the `i_syn` input of
+    /// the neuron update).
+    pub fn current(&self) -> &[f32] {
+        &self.flat[self.cur * self.n..(self.cur + 1) * self.n]
+    }
+
+    /// Finish the current step: zero its slot and advance the ring.
+    pub fn advance(&mut self) {
+        let a = self.cur * self.n;
+        self.flat[a..a + self.n].iter_mut().for_each(|x| *x = 0.0);
+        self.cur += 1;
+        if self.cur == self.depth {
+            self.cur = 0;
+        }
+    }
+
+    /// Sum of everything still queued (test/diagnostic invariant helper).
+    pub fn queued_total(&self) -> f64 {
+        self.flat.iter().map(|&x| x as f64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn delivers_at_the_right_step() {
+        let mut r = DelayRing::new(4, 3);
+        r.add(1, 0, 1.0);
+        r.add(2, 1, 2.0);
+        r.add(3, 2, 4.0);
+        assert_eq!(r.current(), &[0.0, 0.0, 0.0, 0.0]);
+        r.advance();
+        assert_eq!(r.current(), &[1.0, 0.0, 0.0, 0.0]);
+        r.advance();
+        assert_eq!(r.current(), &[0.0, 2.0, 0.0, 0.0]);
+        r.advance();
+        assert_eq!(r.current(), &[0.0, 0.0, 4.0, 0.0]);
+        r.advance();
+        assert_eq!(r.current(), &[0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn accumulates_multiple_arrivals() {
+        let mut r = DelayRing::new(2, 4);
+        r.add(2, 0, 0.5);
+        r.add(2, 0, 0.25);
+        r.advance();
+        r.advance();
+        assert_eq!(r.current()[0], 0.75);
+    }
+
+    #[test]
+    fn deliver_row_matches_add() {
+        let tgts = [0u32, 3, 3, 7, 1];
+        let delays = [1u8, 2, 2, 3, 4];
+        let mut a = DelayRing::new(8, 6);
+        let mut b = DelayRing::new(8, 6);
+        a.deliver_row(&tgts, &delays, 0.5);
+        for (&t, &d) in tgts.iter().zip(&delays) {
+            b.add(d, t, 0.5);
+        }
+        for _ in 0..7 {
+            assert_eq!(a.current(), b.current());
+            a.advance();
+            b.advance();
+        }
+    }
+
+    #[test]
+    fn slot_reuse_after_wrap() {
+        let mut r = DelayRing::new(1, 2);
+        for round in 0..10 {
+            r.add(1, 0, 1.0);
+            r.advance();
+            assert_eq!(r.current()[0], 1.0, "round {round}");
+            r.advance(); // consume without new adds
+        }
+    }
+
+    #[test]
+    fn max_delay_wraps_correctly() {
+        let mut r = DelayRing::new(1, 16);
+        r.add(16, 0, 3.0);
+        for _ in 0..16 {
+            assert_eq!(r.current()[0], 0.0);
+            r.advance();
+        }
+        assert_eq!(r.current()[0], 3.0);
+    }
+
+    #[test]
+    fn property_conservation() {
+        // Everything added is seen exactly once at current() across advances.
+        forall("delay ring conserves mass", 50, |rng| {
+            let n = 1 + rng.next_below(8) as usize;
+            let maxd = 1 + rng.next_below(16);
+            let mut ring = DelayRing::new(n, maxd);
+            let mut injected = 0.0f64;
+            let mut seen = 0.0f64;
+            for _ in 0..50 {
+                let adds = rng.next_below(5);
+                for _ in 0..adds {
+                    let d = 1 + rng.next_below(maxd) as u8;
+                    let t = rng.next_below(n as u32);
+                    let w = (rng.next_below(8) as f32) / 8.0;
+                    ring.add(d, t, w);
+                    injected += w as f64;
+                }
+                seen += ring.current().iter().map(|&x| x as f64).sum::<f64>();
+                ring.advance();
+            }
+            seen += ring.queued_total(); // drain what's still in flight
+            assert!(
+                (injected - seen).abs() < 1e-9,
+                "injected {injected} != seen {seen}"
+            );
+        });
+    }
+}

@@ -1,0 +1,12 @@
+//! The per-rank simulation engine: spikes, delay rings, partitioning and
+//! the hybrid event/time-driven 1 ms step.
+
+pub mod spike;
+pub mod delay_queue;
+pub mod partition;
+pub mod rank;
+
+pub use delay_queue::DelayRing;
+pub use partition::Partition;
+pub use rank::{RankEngine, StepOutcome};
+pub use spike::Spike;

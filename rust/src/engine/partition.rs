@@ -1,0 +1,146 @@
+//! Neuron-to-process partitioning.
+//!
+//! The paper distributes neurons evenly among processes; the heterogeneous
+//! Intel+ARM runs additionally weight the shares by per-core speed
+//! (`weighted`), mirroring DPSNN's MPI "heterogeneous mode" partitioning.
+
+/// Contiguous block partition of `n` neurons over `p` ranks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Partition {
+    /// Block boundaries: rank r owns [bounds[r], bounds[r+1]).
+    bounds: Vec<u32>,
+}
+
+impl Partition {
+    /// Even split (remainder spread over the first ranks).
+    pub fn even(n: u32, p: u32) -> Self {
+        assert!(p >= 1 && n >= p, "cannot split {n} neurons over {p} ranks");
+        let bounds = (0..=p)
+            .map(|r| ((r as u64 * n as u64) / p as u64) as u32)
+            .collect();
+        Self { bounds }
+    }
+
+    /// Split proportional to `weights` (e.g. relative core speeds), each
+    /// rank receiving at least one neuron.
+    pub fn weighted(n: u32, weights: &[f64]) -> Self {
+        let p = weights.len() as u32;
+        assert!(p >= 1 && n >= p);
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weights must sum to a positive value");
+        let mut bounds = Vec::with_capacity(p as usize + 1);
+        bounds.push(0u32);
+        let mut acc = 0.0;
+        for (r, w) in weights.iter().enumerate() {
+            acc += w;
+            let mut b = ((acc / total) * n as f64).round() as u32;
+            let prev = *bounds.last().unwrap();
+            // keep at least 1 neuron per rank and leave room for the rest
+            let remaining_ranks = (p as usize - r - 1) as u32;
+            b = b.max(prev + 1).min(n - remaining_ranks);
+            bounds.push(b);
+        }
+        *bounds.last_mut().unwrap() = n;
+        Self { bounds }
+    }
+
+    pub fn n_ranks(&self) -> u32 {
+        (self.bounds.len() - 1) as u32
+    }
+
+    pub fn n_total(&self) -> u32 {
+        *self.bounds.last().unwrap()
+    }
+
+    /// Global id range owned by rank `r`.
+    pub fn range(&self, r: u32) -> (u32, u32) {
+        (self.bounds[r as usize], self.bounds[r as usize + 1])
+    }
+
+    pub fn size(&self, r: u32) -> u32 {
+        let (lo, hi) = self.range(r);
+        hi - lo
+    }
+
+    /// Which rank owns neuron `gid` (binary search).
+    pub fn owner(&self, gid: u32) -> u32 {
+        debug_assert!(gid < self.n_total());
+        match self.bounds.binary_search(&gid) {
+            Ok(i) => {
+                // gid is exactly a boundary: it belongs to the block starting here,
+                // unless this is the terminal bound.
+                (i as u32).min(self.n_ranks() - 1)
+            }
+            Err(i) => (i - 1) as u32,
+        }
+    }
+
+    pub fn sizes(&self) -> Vec<u32> {
+        (0..self.n_ranks()).map(|r| self.size(r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn even_split_covers_everything() {
+        let p = Partition::even(100, 7);
+        assert_eq!(p.n_ranks(), 7);
+        let total: u32 = p.sizes().iter().sum();
+        assert_eq!(total, 100);
+        // sizes differ by at most one
+        let sizes = p.sizes();
+        let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(mx - mn <= 1);
+    }
+
+    #[test]
+    fn owner_is_consistent_with_range() {
+        let p = Partition::even(97, 5);
+        for gid in 0..97 {
+            let r = p.owner(gid);
+            let (lo, hi) = p.range(r);
+            assert!(gid >= lo && gid < hi, "gid {gid} rank {r} range {lo}..{hi}");
+        }
+    }
+
+    #[test]
+    fn weighted_respects_ratios() {
+        // Intel ~10x faster than Trenz ARM: 2 intel + 2 arm ranks
+        let p = Partition::weighted(2200, &[10.0, 10.0, 1.0, 1.0]);
+        let s = p.sizes();
+        assert_eq!(s.iter().sum::<u32>(), 2200);
+        assert!(s[0] > 900 && s[0] < 1100, "{s:?}");
+        assert!(s[2] > 50 && s[2] < 150, "{s:?}");
+    }
+
+    #[test]
+    fn weighted_always_gives_everyone_at_least_one() {
+        let p = Partition::weighted(10, &[1000.0, 0.001, 0.001, 1000.0]);
+        assert!(p.sizes().iter().all(|&s| s >= 1), "{:?}", p.sizes());
+        assert_eq!(p.sizes().iter().sum::<u32>(), 10);
+    }
+
+    #[test]
+    fn property_even_and_weighted_cover_exactly() {
+        forall("partition covers", 100, |rng| {
+            let p = 1 + rng.next_below(16);
+            let n = p + rng.next_below(1000);
+            let part = Partition::even(n, p);
+            assert_eq!(part.sizes().iter().sum::<u32>(), n);
+            for gid in (0..n).step_by(7) {
+                let r = part.owner(gid);
+                let (lo, hi) = part.range(r);
+                assert!(gid >= lo && gid < hi);
+            }
+            let weights: Vec<f64> =
+                (0..p).map(|_| 0.1 + rng.next_f64() * 10.0).collect();
+            let wp = Partition::weighted(n, &weights);
+            assert_eq!(wp.sizes().iter().sum::<u32>(), n);
+            assert!(wp.sizes().iter().all(|&s| s >= 1));
+        });
+    }
+}

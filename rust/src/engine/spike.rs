@@ -1,0 +1,33 @@
+//! Spike events in AER (Address-Event Representation).
+
+/// One spike: the emitting neuron's global id and its emission step.
+/// On the wire this is the paper's 12-byte AER payload
+/// (see [`crate::comm::aer`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Spike {
+    pub gid: u32,
+    pub step: u32,
+}
+
+impl Spike {
+    pub fn new(gid: u32, step: u32) -> Self {
+        Self { gid, step }
+    }
+
+    /// Emission time in milliseconds given the network step size.
+    pub fn time_ms(&self, dt_ms: f64) -> f64 {
+        self.step as f64 * dt_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_conversion() {
+        let s = Spike::new(7, 250);
+        assert_eq!(s.time_ms(1.0), 250.0);
+        assert_eq!(s.time_ms(0.5), 125.0);
+    }
+}

@@ -1,0 +1,78 @@
+//! Shared harness plumbing: standard workloads, run helpers, output paths.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::config::{Mode, NetworkParams, RunConfig};
+use crate::coordinator::{run, RunResult};
+
+/// Where harness CSVs land.
+pub fn results_dir() -> PathBuf {
+    std::env::var("DPSNN_RESULTS_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("results"))
+}
+
+/// The three paper network sizes (Fig 2 / Table I).
+pub fn paper_networks() -> Vec<(&'static str, NetworkParams)> {
+    vec![
+        ("20480N", NetworkParams::paper_20480()),
+        ("320KN", NetworkParams::paper_320k()),
+        ("1280KN", NetworkParams::paper_1280k()),
+    ]
+}
+
+/// A modeled run of `net` on `platform`+`interconnect` with `procs` ranks.
+pub fn modeled(
+    net: NetworkParams,
+    platform: &str,
+    interconnect: &str,
+    procs: u32,
+    sim_seconds: f64,
+) -> Result<RunResult> {
+    let mut cfg = RunConfig::default();
+    cfg.net = net;
+    cfg.procs = procs;
+    cfg.sim_seconds = sim_seconds;
+    cfg.mode = Mode::Modeled;
+    cfg.platform = platform.to_string();
+    cfg.interconnect = interconnect.to_string();
+    run(&cfg)
+}
+
+/// Standard process sweeps.
+pub fn pow2_procs(max: u32) -> Vec<u32> {
+    let mut v = vec![1u32];
+    while *v.last().unwrap() < max {
+        v.push(v.last().unwrap() * 2);
+    }
+    v
+}
+
+/// `--fast` support: harnesses shorten the simulated time when set.
+pub fn sim_seconds(fast: bool) -> f64 {
+    if fast {
+        1.0
+    } else {
+        10.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_sweep() {
+        assert_eq!(pow2_procs(8), vec![1, 2, 4, 8]);
+        assert_eq!(pow2_procs(1), vec![1]);
+    }
+
+    #[test]
+    fn networks_have_paper_sizes() {
+        let nets = paper_networks();
+        assert_eq!(nets[0].1.n_neurons, 20_480);
+        assert_eq!(nets[2].1.total_synapses(), 1_474_560_000);
+    }
+}

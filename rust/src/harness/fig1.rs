@@ -1,0 +1,114 @@
+//! Fig 1 — "Strong scaling up to 1024 processes of large neural networks
+//! on an IB-equipped Intel-based cluster."
+//!
+//! These are the WaveScalES-class networks (thousands of synapses per
+//! neuron, *spatially mapped* so the process-adjacency matrix is sparse —
+//! the reduction demonstrated in the paper's ref. [9]). Far from
+//! real-time, computation-dominated, and therefore scaling well past the
+//! latency wall that kills the small real-time nets of Fig 2.
+
+use anyhow::Result;
+
+use crate::config::NetworkParams;
+use crate::platform::hetero::HeteroCluster;
+use crate::platform::presets::XEON_E5_2630V2;
+use crate::simnet::alltoall_model::AllToAllModel;
+use crate::simnet::presets::IB;
+use crate::timing::replay::ModelRun;
+use crate::trace::analytic::AnalyticWorkload;
+use crate::util::table::{ascii_chart, Table};
+
+use super::common::results_dir;
+
+/// Neighbor ranks each process exchanges spikes with (spatial mapping).
+const PEERS: u32 = 40;
+
+fn large_net(n: u32) -> NetworkParams {
+    let mut p = NetworkParams::paper(n);
+    // WaveScalES-class columnar nets: realistic fan-out
+    p.syn_per_neuron = 5000;
+    p
+}
+
+pub fn run(fast: bool) -> Result<String> {
+    let sim_s = if fast { 0.5 } else { 2.0 };
+    // grid sizes in the multi-billion-synapse class (scaled per sim_s —
+    // the *shape* is P-dependence, not absolute seconds)
+    let nets: Vec<(String, NetworkParams)> = [524_288u32, 2_097_152, 8_388_608]
+        .iter()
+        .map(|&n| {
+            let net = large_net(n);
+            (
+                format!("{:.1}G syn", net.total_synapses() as f64 / 1e9),
+                net,
+            )
+        })
+        .collect();
+    let procs: Vec<u32> = [32u32, 64, 128, 256, 512, 1024].to_vec();
+
+    let mut table = Table::new(
+        "Fig 1 — strong scaling, large nets, Intel+IB (modeled, s per 10 s sim)",
+        &["procs", &nets[0].0, &nets[1].0, &nets[2].0],
+    );
+    let mut series: Vec<(&str, Vec<(f64, f64)>)> = Vec::new();
+    let mut cols: Vec<Vec<(f64, f64)>> = vec![Vec::new(); nets.len()];
+
+    for &p in &procs {
+        let mut row = vec![p.to_string()];
+        for (i, (_, net)) in nets.iter().enumerate() {
+            let trace =
+                AnalyticWorkload::paper_regime(net.clone(), 0x0F16).generate(p, sim_s);
+            let run = ModelRun::new(
+                HeteroCluster::homogeneous(XEON_E5_2630V2, p, 12),
+                AllToAllModel::new(IB, 12),
+            )
+            .with_peers(PEERS);
+            let o = run.replay(&trace);
+            let wall_10s = o.wall_s * 10.0 / sim_s;
+            row.push(format!("{wall_10s:.1}"));
+            cols[i].push((p as f64, wall_10s));
+        }
+        table.row(row);
+    }
+    for (i, (name, _)) in nets.iter().enumerate() {
+        series.push((name, cols[i].clone()));
+    }
+
+    let mut out = table.render();
+    out.push_str(&ascii_chart(
+        "wall-clock vs procs (log-log; down-and-right = good scaling)",
+        &series,
+        true,
+        true,
+        60,
+        14,
+    ));
+    table.write_csv(&results_dir().join("fig1.csv"))?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn large_nets_scale_monotonically() {
+        // the figure's message: these nets keep accelerating to 1024 procs
+        let net = large_net(2_097_152);
+        let wall = |p: u32| {
+            let tr = AnalyticWorkload::paper_regime(net.clone(), 1).generate(p, 0.2);
+            ModelRun::new(
+                HeteroCluster::homogeneous(XEON_E5_2630V2, p, 12),
+                AllToAllModel::new(IB, 12),
+            )
+            .with_peers(PEERS)
+            .replay(&tr)
+            .wall_s
+        };
+        let w32 = wall(32);
+        let w256 = wall(256);
+        let w1024 = wall(1024);
+        assert!(w256 < w32 / 4.0, "w32={w32} w256={w256}");
+        assert!(w1024 < w256, "w256={w256} w1024={w1024}");
+    }
+}

@@ -1,0 +1,74 @@
+//! Fig 2 — "Strong scaling of different problem sizes on an IB-equipped
+//! Intel-based platform. The red line is the threshold to be reached for
+//! soft real-time execution."
+//!
+//! Three network sizes (20480N / 320KN / 1280KN), wall-clock for 10 s of
+//! simulated activity vs process count. The 20480N curve must dip under
+//! the 10 s real-time line near 32 processes and then *rise* — the
+//! latency wall.
+
+use anyhow::Result;
+
+use crate::util::table::{ascii_chart, Table};
+
+use super::common::{modeled, paper_networks, results_dir, sim_seconds};
+
+pub fn run(fast: bool) -> Result<String> {
+    let sim_s = sim_seconds(fast);
+    let procs = [1u32, 2, 4, 8, 16, 32, 64, 128, 256];
+    let nets = paper_networks();
+
+    let mut table = Table::new(
+        "Fig 2 — strong scaling vs real-time, Intel+IB (modeled, s per 10 s sim)",
+        &["procs", "20480N", "320KN", "1280KN", "real-time"],
+    );
+    let mut cols: Vec<Vec<(f64, f64)>> = vec![Vec::new(); nets.len()];
+    for &p in &procs {
+        let mut row = vec![p.to_string()];
+        for (i, (_, net)) in nets.iter().enumerate() {
+            let r = modeled(net.clone(), "xeon", "ib", p, sim_s)?;
+            let wall10 = r.wall_s * 10.0 / sim_s;
+            row.push(format!("{wall10:.1}"));
+            cols[i].push((p as f64, wall10));
+        }
+        row.push("10.0".to_string());
+        table.row(row);
+    }
+
+    let series: Vec<(&str, Vec<(f64, f64)>)> = vec![
+        ("20480N", cols[0].clone()),
+        ("320KN", cols[1].clone()),
+        ("1280KN", cols[2].clone()),
+        (
+            "real-time",
+            procs.iter().map(|&p| (p as f64, 10.0)).collect(),
+        ),
+    ];
+    let mut out = table.render();
+    out.push_str(&ascii_chart(
+        "wall-clock vs procs (log-log); paper: 20480N bottoms at 32 procs, 9.15 s",
+        &series,
+        true,
+        true,
+        60,
+        16,
+    ));
+    table.write_csv(&results_dir().join("fig2.csv"))?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn n20k_dips_under_realtime_then_rises() {
+        let net = paper_networks()[0].1.clone();
+        let w32 = modeled(net.clone(), "xeon", "ib", 32, 2.0).unwrap();
+        let w256 = modeled(net, "xeon", "ib", 256, 2.0).unwrap();
+        let wall32_10s = w32.wall_s * 5.0;
+        let wall256_10s = w256.wall_s * 5.0;
+        assert!(wall32_10s < 14.0, "near real-time at 32: {wall32_10s}");
+        assert!(wall256_10s > 3.0 * wall32_10s, "latency wall at 256");
+    }
+}

@@ -1,0 +1,69 @@
+//! Fig 3 — "DPSNN analysis of the Intel-based platform": the
+//! computation / communication / barrier percentage decomposition vs
+//! process count for the 20480N network.
+
+use anyhow::Result;
+
+use crate::util::table::{ascii_chart, Table};
+
+use super::common::{modeled, paper_networks, results_dir, sim_seconds};
+
+pub fn run(fast: bool) -> Result<String> {
+    let sim_s = sim_seconds(fast);
+    let net = paper_networks()[0].1.clone();
+    let procs = [1u32, 2, 4, 8, 16, 32, 64, 128, 256];
+
+    let mut table = Table::new(
+        "Fig 3 — execution components on Intel+IB, 20480N (modeled)",
+        &["procs", "wall (s/10s)", "comp %", "comm %", "barrier %"],
+    );
+    let mut comp_series = Vec::new();
+    let mut comm_series = Vec::new();
+    let mut barr_series = Vec::new();
+    for &p in &procs {
+        let r = modeled(net.clone(), "xeon", "ib", p, sim_s)?;
+        let (comp, comm, barrier) = r.components.fractions();
+        table.row(vec![
+            p.to_string(),
+            format!("{:.1}", r.wall_s * 10.0 / sim_s),
+            format!("{:.1}", comp * 100.0),
+            format!("{:.1}", comm * 100.0),
+            format!("{:.1}", barrier * 100.0),
+        ]);
+        comp_series.push((p as f64, comp * 100.0));
+        comm_series.push((p as f64, comm * 100.0));
+        barr_series.push((p as f64, barrier * 100.0));
+    }
+
+    let mut out = table.render();
+    out.push_str(&ascii_chart(
+        "component share vs procs (x log): comm overtakes comp past ~32",
+        &[
+            ("comp%", comp_series),
+            ("comm%", comm_series),
+            ("barrier%", barr_series),
+        ],
+        true,
+        false,
+        60,
+        14,
+    ));
+    table.write_csv(&results_dir().join("fig3.csv"))?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crossover_exists() {
+        let net = paper_networks()[0].1.clone();
+        let lo = modeled(net.clone(), "xeon", "ib", 4, 1.0).unwrap();
+        let hi = modeled(net, "xeon", "ib", 256, 1.0).unwrap();
+        let (c4, m4, _) = lo.components.fractions();
+        let (c256, m256, _) = hi.components.fractions();
+        assert!(c4 > m4, "computation dominates at 4 procs");
+        assert!(m256 > c256, "communication dominates at 256 procs");
+    }
+}

@@ -1,0 +1,107 @@
+//! Fig 4 — "Strong scaling of a grid simulated on the Trenz platform
+//! equipped with GbE interconnect."
+//!
+//! The ExaNeSt prototype has 4 Trenz boards × 4 Cortex-A53 cores = 16 ARM
+//! cores; the paper pushes the sweep to 64 processes with MPI
+//! heterogeneous mode, embedding the ARM partition in an Intel "bath"
+//! whose faster cores take proportionally more neurons and do not slow
+//! the ARM ranks (speed-weighted partitioning, `platform::hetero`).
+
+use anyhow::Result;
+
+use crate::config::{Mode, NetworkParams, RunConfig};
+use crate::coordinator::modeled::run_modeled_cluster;
+use crate::coordinator::RunResult;
+use crate::platform::hetero::{HeteroCluster, RankGroup};
+use crate::platform::presets::{TRENZ_A53, XEON_E5_2630V2};
+use crate::util::table::{ascii_chart, Table};
+
+use super::common::{results_dir, sim_seconds};
+
+pub const ARM_CORES: u32 = 16;
+
+/// The Trenz sweep cluster at `p` processes (ARM first, Intel bath after).
+pub fn trenz_cluster(p: u32) -> HeteroCluster {
+    if p <= ARM_CORES {
+        HeteroCluster::homogeneous(TRENZ_A53, p, 4)
+    } else {
+        HeteroCluster::new(vec![
+            RankGroup { core: TRENZ_A53, ranks: ARM_CORES, ranks_per_node: 4 },
+            RankGroup { core: XEON_E5_2630V2, ranks: p - ARM_CORES, ranks_per_node: 12 },
+        ])
+    }
+}
+
+pub fn run_point(net: NetworkParams, p: u32, sim_s: f64) -> Result<RunResult> {
+    let mut cfg = RunConfig::default();
+    cfg.net = net;
+    cfg.procs = p;
+    cfg.sim_seconds = sim_s;
+    cfg.mode = Mode::Modeled;
+    cfg.interconnect = "eth1g".into();
+    run_modeled_cluster(&cfg, trenz_cluster(p), 4)
+}
+
+pub fn run(fast: bool) -> Result<String> {
+    let sim_s = sim_seconds(fast);
+    let net = NetworkParams::paper_20480();
+    let procs = [1u32, 2, 4, 8, 16, 32, 64];
+
+    let mut table = Table::new(
+        "Fig 4 — strong scaling on Trenz (4xA53/board, GbE; >16 procs = Intel bath)",
+        &["procs", "wall (s/10s)", "speedup vs 1"],
+    );
+    let mut series = Vec::new();
+    let mut w1 = 0.0;
+    for &p in &procs {
+        let r = run_point(net.clone(), p, sim_s)?;
+        let wall10 = r.wall_s * 10.0 / sim_s;
+        if p == 1 {
+            w1 = wall10;
+        }
+        table.row(vec![
+            p.to_string(),
+            format!("{wall10:.1}"),
+            format!("{:.2}", w1 / wall10),
+        ]);
+        series.push((p as f64, wall10));
+    }
+    let mut out = table.render();
+    out.push_str(&ascii_chart(
+        "wall vs procs (log-log); paper: scaling flattens as GbE latency bites",
+        &[("20480N", series)],
+        true,
+        true,
+        60,
+        12,
+    ));
+    table.write_csv(&results_dir().join("fig4.csv"))?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arm_scales_then_flattens_on_gbe() {
+        let net = NetworkParams::paper_20480();
+        let w = |p: u32| run_point(net.clone(), p, 1.0).unwrap().wall_s;
+        let w1 = w(1);
+        let w16 = w(16);
+        assert!(w16 < w1 / 6.0, "useful scaling to 16: {w1} -> {w16}");
+        // GbE all-to-all latency keeps 64 procs from another 4x
+        let w64 = w(64);
+        assert!(w64 > w16 / 3.0, "GbE flattens the curve: w16={w16} w64={w64}");
+    }
+
+    #[test]
+    fn hetero_bath_does_not_slow_arm() {
+        // 17th rank is Intel: adding it must not increase wall by more
+        // than the extra comm cost of one more rank
+        let net = NetworkParams::paper_20480();
+        let w16 = run_point(net.clone(), 16, 1.0).unwrap().wall_s;
+        let w24 = run_point(net, 24, 1.0).unwrap().wall_s;
+        assert!(w24 < w16 * 1.5, "w16={w16} w24={w24}");
+    }
+}

@@ -1,0 +1,67 @@
+//! Fig 5 — "DPSNN analysis of the Trenz platform": comp/comm/barrier
+//! decomposition vs process count on the ExaNeSt prototype.
+
+use anyhow::Result;
+
+use crate::config::NetworkParams;
+use crate::util::table::{ascii_chart, Table};
+
+use super::common::{results_dir, sim_seconds};
+use super::fig4::run_point;
+
+pub fn run(fast: bool) -> Result<String> {
+    let sim_s = sim_seconds(fast);
+    let net = NetworkParams::paper_20480();
+    let procs = [1u32, 2, 4, 8, 16, 32, 64];
+
+    let mut table = Table::new(
+        "Fig 5 — execution components on Trenz+GbE, 20480N (modeled)",
+        &["procs", "wall (s/10s)", "comp %", "comm %", "barrier %"],
+    );
+    let mut comp_s = Vec::new();
+    let mut comm_s = Vec::new();
+    let mut barr_s = Vec::new();
+    for &p in &procs {
+        let r = run_point(net.clone(), p, sim_s)?;
+        let (comp, comm, barrier) = r.components.fractions();
+        table.row(vec![
+            p.to_string(),
+            format!("{:.1}", r.wall_s * 10.0 / sim_s),
+            format!("{:.1}", comp * 100.0),
+            format!("{:.1}", comm * 100.0),
+            format!("{:.1}", barrier * 100.0),
+        ]);
+        comp_s.push((p as f64, comp * 100.0));
+        comm_s.push((p as f64, comm * 100.0));
+        barr_s.push((p as f64, barrier * 100.0));
+    }
+    let mut out = table.render();
+    out.push_str(&ascii_chart(
+        "GbE: communication overtakes computation earlier than on IB",
+        &[("comp%", comp_s), ("comm%", comm_s), ("barrier%", barr_s)],
+        true,
+        false,
+        60,
+        12,
+    ));
+    table.write_csv(&results_dir().join("fig5.csv"))?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gbe_comm_share_explodes_past_one_board() {
+        let net = NetworkParams::paper_20480();
+        let (c4, m4, _) = run_point(net.clone(), 4, 1.0)
+            .unwrap()
+            .components
+            .fractions();
+        let (_, m64, _) = run_point(net, 64, 1.0).unwrap().components.fractions();
+        assert!(c4 > 0.9, "one board is compute-bound: comp={c4}");
+        assert!(m4 < 0.05);
+        assert!(m64 > 0.5, "GbE all-to-all dominates at 64: comm={m64}");
+    }
+}

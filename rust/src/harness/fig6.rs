@@ -1,0 +1,102 @@
+//! Fig 6 — "DPSNN analysis of the NVIDIA SoC platform": comp/comm/barrier
+//! decomposition on two Jetson TX1 boards (4 used cores each) behind a
+//! 1 GbE switch, extended with the Intel bath beyond 8 processes.
+
+use anyhow::Result;
+
+use crate::config::{Mode, NetworkParams, RunConfig};
+use crate::coordinator::modeled::run_modeled_cluster;
+use crate::coordinator::RunResult;
+use crate::platform::hetero::{HeteroCluster, RankGroup};
+use crate::platform::presets::{JETSON_A57, XEON_E5_2630V2};
+use crate::util::table::{ascii_chart, Table};
+
+use super::common::{results_dir, sim_seconds};
+
+pub const ARM_CORES: u32 = 8; // 2 boards x 4 driven cores
+
+pub fn jetson_cluster(p: u32) -> HeteroCluster {
+    if p <= ARM_CORES {
+        HeteroCluster::homogeneous(JETSON_A57, p, 4)
+    } else {
+        HeteroCluster::new(vec![
+            RankGroup { core: JETSON_A57, ranks: ARM_CORES, ranks_per_node: 4 },
+            RankGroup { core: XEON_E5_2630V2, ranks: p - ARM_CORES, ranks_per_node: 12 },
+        ])
+    }
+}
+
+pub fn run_point(net: NetworkParams, p: u32, sim_s: f64) -> Result<RunResult> {
+    let mut cfg = RunConfig::default();
+    cfg.net = net;
+    cfg.procs = p;
+    cfg.sim_seconds = sim_s;
+    cfg.mode = Mode::Modeled;
+    cfg.interconnect = "eth1g".into();
+    run_modeled_cluster(&cfg, jetson_cluster(p), 4)
+}
+
+pub fn run(fast: bool) -> Result<String> {
+    let sim_s = sim_seconds(fast);
+    let net = NetworkParams::paper_20480();
+    let procs = [1u32, 2, 4, 8, 16, 32];
+
+    let mut table = Table::new(
+        "Fig 6 — execution components on Jetson TX1+GbE, 20480N (modeled)",
+        &["procs", "wall (s/10s)", "comp %", "comm %", "barrier %"],
+    );
+    let mut comp_s = Vec::new();
+    let mut comm_s = Vec::new();
+    let mut barr_s = Vec::new();
+    for &p in &procs {
+        let r = run_point(net.clone(), p, sim_s)?;
+        let (comp, comm, barrier) = r.components.fractions();
+        table.row(vec![
+            p.to_string(),
+            format!("{:.1}", r.wall_s * 10.0 / sim_s),
+            format!("{:.1}", comp * 100.0),
+            format!("{:.1}", comm * 100.0),
+            format!("{:.1}", barrier * 100.0),
+        ]);
+        comp_s.push((p as f64, comp * 100.0));
+        comm_s.push((p as f64, comm * 100.0));
+        barr_s.push((p as f64, barrier * 100.0));
+    }
+    let mut out = table.render();
+    out.push_str(&ascii_chart(
+        "Jetson: A57 cores ~2x Trenz A53, same GbE wall",
+        &[("comp%", comp_s), ("comm%", comm_s), ("barrier%", barr_s)],
+        true,
+        false,
+        60,
+        12,
+    ));
+    table.write_csv(&results_dir().join("fig6.csv"))?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::fig4;
+
+    #[test]
+    fn jetson_faster_than_trenz_same_p() {
+        // A57@2GHz ~ 2x A53@1.5GHz in the paper's speed statements
+        let net = NetworkParams::paper_20480();
+        let j = run_point(net.clone(), 4, 1.0).unwrap().wall_s;
+        let t = fig4::run_point(net, 4, 1.0).unwrap().wall_s;
+        let ratio = t / j;
+        assert!((1.5..3.0).contains(&ratio), "trenz/jetson = {ratio}");
+    }
+
+    #[test]
+    fn single_board_is_compute_dominated() {
+        let net = NetworkParams::paper_20480();
+        let (comp, comm, _) = run_point(net, 4, 1.0)
+            .unwrap()
+            .components
+            .fractions();
+        assert!(comp > 0.9 && comm < 0.05, "comp={comp} comm={comm}");
+    }
+}

@@ -1,0 +1,127 @@
+//! Fig 7 — "Scaling of the total power consumption on x86": simulated
+//! multimeter traces of the same workload on 1..64 cores. Each trace has
+//! the paper's texture: 5 s idle plateau (the baseline), a steep knee at
+//! simulation start, the run plateau, and the final drop.
+
+use anyhow::Result;
+
+use crate::platform::presets::platform_by_name;
+use crate::power::meter::{MeterMode, Multimeter};
+use crate::power::model::PowerModel;
+use crate::simnet::presets::interconnect_by_name;
+use crate::util::table::{ascii_chart, Table};
+
+use super::common::{results_dir, sim_seconds};
+use super::table2::model_row;
+
+/// The paper's pre-run artificial pause.
+pub const IDLE_PREAMBLE_S: f64 = 5.0;
+
+pub fn run(fast: bool) -> Result<String> {
+    let sim_s = sim_seconds(fast);
+    let scale = 10.0 / sim_s;
+    let platform = platform_by_name("westmere")?;
+    let meter = Multimeter::new(MeterMode::Ac, 4.0, 0xF16_7);
+
+    let cases: Vec<(String, u32, &str)> = vec![
+        ("1".into(), 1, "ib"),
+        ("2".into(), 2, "ib"),
+        ("4".into(), 4, "ib"),
+        ("8".into(), 8, "ib"),
+        ("16".into(), 16, "ib"),
+        ("32 IB".into(), 32, "ib"),
+        ("32 ETH".into(), 32, "eth1g"),
+        ("64 IB".into(), 64, "ib"),
+        ("64 ETH".into(), 64, "eth1g"),
+    ];
+
+    let mut table = Table::new(
+        "Fig 7 — x86 power traces (simulated GDM-8351, AC at the strip)",
+        &["cores", "baseline (W)", "plateau (W)", "run (s)", "energy (J)"],
+    );
+    let mut chart_series = Vec::new();
+    let mut csv_all = String::from("series,t_s,watts\n");
+    for (label, procs, ic) in &cases {
+        let r = model_row(*procs, ic, sim_s)?;
+        let link = interconnect_by_name(ic)?;
+        let pm = PowerModel::new(platform.clone(), link);
+        let wall = r.wall_s * scale;
+        let running = pm.absolute_running_power_w(
+            *procs,
+            r.components.fractions().0,
+        );
+        let trace = meter.sample(&[
+            (IDLE_PREAMBLE_S, platform.baseline_w),
+            (wall, running),
+            (3.0, platform.baseline_w),
+        ]);
+        let baseline = trace.infer_baseline_w(IDLE_PREAMBLE_S);
+        let energy = trace.energy_above_j(baseline);
+        table.row(vec![
+            label.clone(),
+            format!("{baseline:.0}"),
+            format!("{running:.0}"),
+            format!("{wall:.1}"),
+            format!("{energy:.0}"),
+        ]);
+        for (&t, &w) in trace.t_s.iter().zip(&trace.w) {
+            csv_all.push_str(&format!("{label},{t:.2},{w:.1}\n"));
+        }
+        if matches!(label.as_str(), "1" | "8" | "32 ETH" | "64 ETH") {
+            chart_series.push((
+                label.clone(),
+                trace
+                    .t_s
+                    .iter()
+                    .zip(&trace.w)
+                    .map(|(&t, &w)| (t.max(0.2), w))
+                    .collect::<Vec<_>>(),
+            ));
+        }
+    }
+
+    let mut out = table.render();
+    let named: Vec<(&str, Vec<(f64, f64)>)> = chart_series
+        .iter()
+        .map(|(n, s)| (n.as_str(), s.clone()))
+        .collect();
+    out.push_str(&ascii_chart(
+        "power vs time (t log, as in the paper): knee at start, drop at end",
+        &named,
+        true,
+        false,
+        64,
+        14,
+    ));
+    table.write_csv(&results_dir().join("fig7_summary.csv"))?;
+    std::fs::create_dir_all(results_dir())?;
+    std::fs::write(results_dir().join("fig7_traces.csv"), csv_all)?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_energy_consistent_with_table2_model() {
+        // integrating the simulated meter trace must land near P*t
+        let platform = platform_by_name("westmere").unwrap();
+        let meter = Multimeter::new(MeterMode::Ac, 4.0, 3);
+        let r = model_row(8, "ib", 1.0).unwrap();
+        let wall = r.wall_s * 10.0;
+        let power = r.energy.unwrap().power_w;
+        let trace = meter.sample(&[
+            (IDLE_PREAMBLE_S, platform.baseline_w),
+            (wall, platform.baseline_w + power),
+            (3.0, platform.baseline_w),
+        ]);
+        let baseline = trace.infer_baseline_w(IDLE_PREAMBLE_S);
+        let e = trace.energy_above_j(baseline);
+        let expect = power * wall;
+        assert!(
+            (e - expect).abs() / expect < 0.1,
+            "trace {e:.0} vs model {expect:.0}"
+        );
+    }
+}

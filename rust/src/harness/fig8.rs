@@ -1,0 +1,99 @@
+//! Fig 8 — "Power consumption on ARM": simulated meter traces on the
+//! Jetson platform. The paper splits the plot: 1–4 cores measured DC at a
+//! single board's supply (clean, low baseline), 8 cores measured AC
+//! upstream of both boards' transformers (noisy, 49.2 W baseline).
+
+use anyhow::Result;
+
+use crate::platform::presets::platform_by_name;
+use crate::power::meter::{MeterMode, Multimeter};
+use crate::util::table::{ascii_chart, Table};
+
+use super::common::{results_dir, sim_seconds};
+use super::fig7::IDLE_PREAMBLE_S;
+use super::table3::model_row;
+
+/// Single-board idle draw seen by the DC probe (not in the paper's
+/// tables; a Jetson TX1 board idles at a few watts).
+pub const DC_BOARD_IDLE_W: f64 = 4.0;
+
+pub fn run(fast: bool) -> Result<String> {
+    let sim_s = sim_seconds(fast);
+    let scale = 10.0 / sim_s;
+    let platform = platform_by_name("jetson")?;
+
+    let mut table = Table::new(
+        "Fig 8 — ARM power traces (DC at one board for 1-4 cores, AC for 8)",
+        &["cores", "meter", "baseline (W)", "plateau (W)", "run (s)", "energy (J)"],
+    );
+    let mut chart = Vec::new();
+    let mut csv_all = String::from("series,t_s,watts\n");
+    for &procs in &[1u32, 2, 4, 8] {
+        let (mode, baseline) = if procs <= 4 {
+            (MeterMode::Dc, DC_BOARD_IDLE_W)
+        } else {
+            (MeterMode::Ac, platform.baseline_w)
+        };
+        let meter = Multimeter::new(mode, 4.0, 0xF18 + procs as u64);
+        let r = model_row(procs, sim_s)?;
+        let wall = r.wall_s * scale;
+        let running = baseline + r.energy.unwrap().power_w;
+        let trace = meter.sample(&[
+            (IDLE_PREAMBLE_S, baseline),
+            (wall, running),
+            (3.0, baseline),
+        ]);
+        let inferred = trace.infer_baseline_w(IDLE_PREAMBLE_S);
+        table.row(vec![
+            procs.to_string(),
+            format!("{mode:?}"),
+            format!("{inferred:.1}"),
+            format!("{running:.1}"),
+            format!("{wall:.1}"),
+            format!("{:.0}", trace.energy_above_j(inferred)),
+        ]);
+        let label = format!("{procs} cores");
+        for (&t, &w) in trace.t_s.iter().zip(&trace.w) {
+            csv_all.push_str(&format!("{label},{t:.2},{w:.2}\n"));
+        }
+        chart.push((
+            label,
+            trace
+                .t_s
+                .iter()
+                .zip(&trace.w)
+                .map(|(&t, &w)| (t.max(0.2), w))
+                .collect::<Vec<_>>(),
+        ));
+    }
+
+    let mut out = table.render();
+    let named: Vec<(&str, Vec<(f64, f64)>)> =
+        chart.iter().map(|(n, s)| (n.as_str(), s.clone())).collect();
+    out.push_str(&ascii_chart(
+        "ARM power vs time (t log): AC 8-core branch is noisier + higher base",
+        &named,
+        true,
+        false,
+        64,
+        14,
+    ));
+    table.write_csv(&results_dir().join("fig8_summary.csv"))?;
+    std::fs::create_dir_all(results_dir())?;
+    std::fs::write(results_dir().join("fig8_traces.csv"), csv_all)?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arm_draw_is_single_digit_watts() {
+        for procs in [1u32, 2, 4] {
+            let r = model_row(procs, 1.0).unwrap();
+            let p = r.energy.unwrap().power_w;
+            assert!(p < 10.0, "{procs} cores draw {p} W above idle");
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! Reproduction harnesses: one module per figure/table of the paper's
+//! evaluation (experiment index in DESIGN.md §5). Each harness prints the
+//! paper's rows/series next to the modeled/measured values and writes a
+//! CSV under `results/`.
+
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+
+use anyhow::{bail, Result};
+
+/// All harness ids in paper order.
+pub const ALL: &[&str] = &[
+    "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
+    "table1", "table2", "table3", "table4",
+];
+
+/// Run one harness by id.
+pub fn run_one(id: &str, fast: bool) -> Result<String> {
+    Ok(match id {
+        "fig1" => fig1::run(fast)?,
+        "fig2" => fig2::run(fast)?,
+        "fig3" => fig3::run(fast)?,
+        "fig4" => fig4::run(fast)?,
+        "fig5" => fig5::run(fast)?,
+        "fig6" => fig6::run(fast)?,
+        "fig7" => fig7::run(fast)?,
+        "fig8" => fig8::run(fast)?,
+        "table1" => table1::run(fast)?,
+        "table2" => table2::run(fast)?,
+        "table3" => table3::run(fast)?,
+        "table4" => table4::run(fast)?,
+        other => bail!("unknown experiment {other:?}; known: {}", ALL.join(", ")),
+    })
+}

@@ -1,0 +1,76 @@
+//! Table I — "Profiling of execution components for different network
+//! sizes": wall-clock and comp/comm/barrier percentages for the
+//! (network, procs) matrix the paper reports, side by side with the
+//! paper's own measurements.
+
+use anyhow::Result;
+
+use crate::util::table::Table;
+
+use super::common::{modeled, paper_networks, results_dir, sim_seconds};
+
+/// (net index, procs, paper wall s, paper comp %, comm %, barrier %)
+pub const PAPER_ROWS: &[(usize, u32, f64, f64, f64, f64)] = &[
+    (0, 4, 31.5, 97.6, 0.6, 1.3),
+    (0, 32, 9.15, 69.7, 22.7, 7.5),
+    (0, 256, 237.0, 6.6, 91.7, 1.6),
+    (1, 4, 893.0, 98.1, 0.1, 1.8),
+    (1, 256, 441.0, 21.7, 79.9, 1.1),
+    (2, 4, 4341.0, 99.4, 0.1, 0.5),
+    (2, 256, 561.0, 50.0, 48.1, 1.9),
+];
+
+pub fn run(fast: bool) -> Result<String> {
+    let sim_s = sim_seconds(fast);
+    let nets = paper_networks();
+    let mut table = Table::new(
+        "Table I — execution-component profile (modeled vs paper)",
+        &[
+            "net", "procs", "wall (s)", "paper", "comp %", "paper", "comm %", "paper",
+            "barrier %", "paper",
+        ],
+    );
+    for &(ni, p, pw, pc, pm, pb) in PAPER_ROWS {
+        let (name, net) = &nets[ni];
+        let r = modeled(net.clone(), "xeon", "ib", p, sim_s)?;
+        let (comp, comm, barrier) = r.components.fractions();
+        table.row(vec![
+            name.to_string(),
+            p.to_string(),
+            format!("{:.1}", r.wall_s * 10.0 / sim_s),
+            format!("{pw:.1}"),
+            format!("{:.1}", comp * 100.0),
+            format!("{pc:.1}"),
+            format!("{:.1}", comm * 100.0),
+            format!("{pm:.1}"),
+            format!("{:.1}", barrier * 100.0),
+            format!("{pb:.1}"),
+        ]);
+    }
+    let out = table.render();
+    table.write_csv(&results_dir().join("table1.csv"))?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominant_component_matches_paper_in_every_cell() {
+        let nets = paper_networks();
+        for &(ni, p, _, pc, pm, _) in PAPER_ROWS {
+            let r = modeled(nets[ni].1.clone(), "xeon", "ib", p, 1.0).unwrap();
+            let (comp, comm, _) = r.components.fractions();
+            let paper_comp_dominant = pc > pm;
+            let model_comp_dominant = comp > comm;
+            // 1280K@256 is ~50/50 in the paper; accept either side there
+            if (pc - pm).abs() > 10.0 {
+                assert_eq!(
+                    paper_comp_dominant, model_comp_dominant,
+                    "net {ni} procs {p}: paper {pc}/{pm}, model {comp:.2}/{comm:.2}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Table II — "DPSNN time, power and energy to solution on x86": the
+//! Westmere power platform, 1–64 cores, with the 2-HyperThread corner
+//! case and the ETH-vs-IB branches at 32/64 cores.
+
+use anyhow::Result;
+
+use crate::coordinator::RunResult;
+use crate::util::table::Table;
+
+use super::common::{modeled, paper_networks, results_dir, sim_seconds};
+
+/// Paper rows: (label, procs, interconnect, wall s, power W, energy J).
+pub const PAPER_ROWS: &[(&str, u32, &str, f64, f64, f64)] = &[
+    ("1", 1, "ib", 150.9, 48.0, 7243.2),
+    ("2 HT", 0, "ib", 121.8, 53.0, 6455.4), // procs=0 -> HT special case
+    ("2", 2, "ib", 80.7, 62.0, 5003.4),
+    ("4", 4, "ib", 37.4, 92.0, 3440.8),
+    ("8", 8, "ib", 25.3, 124.0, 3137.2),
+    ("16", 16, "ib", 26.1, 166.0, 4332.6),
+    ("32 plus ETH", 32, "eth1g", 30.0, 342.0, 10260.0),
+    ("32 plus IB", 32, "ib", 19.7, 318.0, 6264.6),
+    ("64 plus ETH", 64, "eth1g", 69.3, 531.0, 36798.3),
+    ("64 plus IB", 64, "ib", 32.1, 501.0, 16082.1),
+];
+
+/// HyperThreading: two MPI ranks on one physical core. The paper measures
+/// a 0.81x wall-clock gain and a ~10% power bump over one core; we model
+/// the row with those published factors (no HT microarchitecture model).
+const HT_WALL_FACTOR: f64 = 0.81;
+const HT_POWER_FACTOR: f64 = 1.10;
+
+pub fn model_row(procs: u32, interconnect: &str, sim_s: f64) -> Result<RunResult> {
+    let net = paper_networks()[0].1.clone();
+    modeled(net, "westmere", interconnect, procs, sim_s)
+}
+
+pub fn run(fast: bool) -> Result<String> {
+    let sim_s = sim_seconds(fast);
+    let scale = 10.0 / sim_s;
+    let mut table = Table::new(
+        "Table II — x86 time/power/energy (modeled vs paper, 20480N, 10 s sim)",
+        &[
+            "x86 cores", "time (s)", "paper", "power (W)", "paper",
+            "energy (J)", "paper",
+        ],
+    );
+    for &(label, procs, ic, pt, pp, pe) in PAPER_ROWS {
+        let (wall, power) = if procs == 0 {
+            let one = model_row(1, ic, sim_s)?;
+            (
+                one.wall_s * scale * HT_WALL_FACTOR,
+                one.energy.unwrap().power_w * HT_POWER_FACTOR,
+            )
+        } else {
+            let r = model_row(procs, ic, sim_s)?;
+            (r.wall_s * scale, r.energy.unwrap().power_w)
+        };
+        let energy = wall * power;
+        table.row(vec![
+            label.to_string(),
+            format!("{wall:.1}"),
+            format!("{pt:.1}"),
+            format!("{power:.0}"),
+            format!("{pp:.0}"),
+            format!("{energy:.0}"),
+            format!("{pe:.1}"),
+        ]);
+    }
+    let out = table.render();
+    table.write_csv(&results_dir().join("table2.csv"))?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_energy_minimum_at_8_and_ib_beats_eth() {
+        let sim_s = 1.0;
+        let e = |p: u32, ic: &str| {
+            let r = model_row(p, ic, sim_s).unwrap();
+            r.wall_s * 10.0 * r.energy.unwrap().power_w
+        };
+        let e4 = e(4, "ib");
+        let e8 = e(8, "ib");
+        let e64ib = e(64, "ib");
+        let e64eth = e(64, "eth1g");
+        let e32ib = e(32, "ib");
+        let e32eth = e(32, "eth1g");
+        // minimum in the 4-16 region, far below the 64-core rows
+        assert!(e8 < e64ib && e8 < e32eth, "e8={e8} e64ib={e64ib}");
+        assert!(e8 < 1.5 * e4, "e8={e8} e4={e4}");
+        // IB beats ETH in energy at both multi-node points
+        assert!(e32ib < e32eth, "32: ib {e32ib} vs eth {e32eth}");
+        assert!(e64ib < e64eth, "64: ib {e64ib} vs eth {e64eth}");
+    }
+
+    #[test]
+    fn ht_row_between_one_and_two_cores() {
+        let sim_s = 1.0;
+        let w1 = model_row(1, "ib", sim_s).unwrap().wall_s;
+        let w2 = model_row(2, "ib", sim_s).unwrap().wall_s;
+        let ht = w1 * HT_WALL_FACTOR;
+        assert!(ht < w1 && ht > w2, "w2={w2} ht={ht} w1={w1}");
+    }
+}

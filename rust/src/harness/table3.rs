@@ -1,0 +1,85 @@
+//! Table III — "DPSNN time, power and energy to solution on ARM":
+//! Jetson TX1 boards, 1–8 cores (8 = two boards over the GbE switch).
+
+use anyhow::Result;
+
+use crate::coordinator::RunResult;
+use crate::util::table::Table;
+
+use super::common::{modeled, paper_networks, results_dir, sim_seconds};
+
+/// Paper rows: (cores, wall s, power W, energy J).
+pub const PAPER_ROWS: &[(u32, f64, f64, f64)] = &[
+    (1, 636.8, 2.2, 1273.6),
+    (2, 334.1, 3.4, 1135.9),
+    (4, 185.0, 6.0, 1110.0),
+    (8, 133.8, 10.0, 1338.0),
+];
+
+pub fn model_row(procs: u32, sim_s: f64) -> Result<RunResult> {
+    let net = paper_networks()[0].1.clone();
+    modeled(net, "jetson", "eth1g", procs, sim_s)
+}
+
+pub fn run(fast: bool) -> Result<String> {
+    let sim_s = sim_seconds(fast);
+    let scale = 10.0 / sim_s;
+    let mut table = Table::new(
+        "Table III — ARM (Jetson TX1) time/power/energy (modeled vs paper)",
+        &[
+            "ARM cores", "time (s)", "paper", "power (W)", "paper",
+            "energy (J)", "paper",
+        ],
+    );
+    for &(procs, pt, pp, pe) in PAPER_ROWS {
+        let r = model_row(procs, sim_s)?;
+        let wall = r.wall_s * scale;
+        let power = r.energy.unwrap().power_w;
+        table.row(vec![
+            procs.to_string(),
+            format!("{wall:.1}"),
+            format!("{pt:.1}"),
+            format!("{power:.1}"),
+            format!("{pp:.1}"),
+            format!("{:.0}", wall * power),
+            format!("{pe:.1}"),
+        ]);
+    }
+    let out = table.render();
+    table.write_csv(&results_dir().join("table3.csv"))?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arm_rows_match_paper_within_factor() {
+        for &(procs, pt, pp, _) in PAPER_ROWS {
+            let r = model_row(procs, 1.0).unwrap();
+            let wall = r.wall_s * 10.0;
+            let power = r.energy.unwrap().power_w;
+            assert!(
+                (0.5..2.0).contains(&(wall / pt)),
+                "cores {procs}: wall {wall:.0} vs paper {pt}"
+            );
+            assert!(
+                (0.5..2.0).contains(&(power / pp)),
+                "cores {procs}: power {power:.1} vs paper {pp}"
+            );
+        }
+    }
+
+    #[test]
+    fn energy_flat_while_time_drops() {
+        // Table III: 1 -> 4 cores cuts time ~3.4x while energy barely moves
+        let r1 = model_row(1, 1.0).unwrap();
+        let r4 = model_row(4, 1.0).unwrap();
+        let t_ratio = r1.wall_s / r4.wall_s;
+        let e1 = r1.wall_s * r1.energy.unwrap().power_w;
+        let e4 = r4.wall_s * r4.energy.unwrap().power_w;
+        assert!(t_ratio > 2.5, "time ratio {t_ratio}");
+        assert!((0.6..1.6).contains(&(e4 / e1)), "energy ratio {}", e4 / e1);
+    }
+}

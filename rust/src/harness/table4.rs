@@ -1,0 +1,91 @@
+//! Table IV — "Comparison of energetic efficiencies": µJ per synaptic
+//! event for DPSNN on ARM and Intel (each at its energy-optimal point)
+//! against the published Compass/TrueNorth simulator figure.
+
+use anyhow::Result;
+
+use crate::metrics::energy::{joules_per_synaptic_event, COMPASS_TRUENORTH_UJ};
+use crate::metrics::synevents::SynapticEventCount;
+use crate::util::table::Table;
+
+use super::common::{results_dir, sim_seconds};
+use super::{table2, table3};
+
+/// Paper values (µJ / synaptic event).
+pub const PAPER_ARM_UJ: f64 = 1.1;
+pub const PAPER_INTEL_UJ: f64 = 3.4;
+
+/// Best (minimum-energy) modeled point on a platform over a core sweep.
+fn best_uj<F>(cores: &[u32], sim_s: f64, model: F) -> Result<(u32, f64)>
+where
+    F: Fn(u32, f64) -> Result<crate::coordinator::RunResult>,
+{
+    let mut best: Option<(u32, f64)> = None;
+    for &p in cores {
+        let r = model(p, sim_s)?;
+        let wall10 = r.wall_s * 10.0 / sim_s;
+        let e = wall10 * r.energy.unwrap().power_w;
+        let events = SynapticEventCount::measured(
+            (r.total_syn_events as f64 * 10.0 / sim_s) as u64,
+            (r.total_ext_events as f64 * 10.0 / sim_s) as u64,
+        );
+        let uj = joules_per_synaptic_event(e, &events) * 1e6;
+        if best.map_or(true, |(_, b)| uj < b) {
+            best = Some((p, uj));
+        }
+    }
+    Ok(best.unwrap())
+}
+
+pub fn run(fast: bool) -> Result<String> {
+    let sim_s = sim_seconds(fast);
+    let (arm_p, arm_uj) = best_uj(&[1, 2, 4, 8], sim_s, table3::model_row)?;
+    let (intel_p, intel_uj) = best_uj(&[1, 2, 4, 8, 16], sim_s, |p, s| {
+        table2::model_row(p, "ib", s)
+    })?;
+
+    let mut table = Table::new(
+        "Table IV — energetic efficiency (uJ / synaptic event)",
+        &["system", "modeled", "paper", "at cores"],
+    );
+    table.row(vec![
+        "DPSNN on ARM (Jetson)".into(),
+        format!("{arm_uj:.1}"),
+        format!("{PAPER_ARM_UJ}"),
+        arm_p.to_string(),
+    ]);
+    table.row(vec![
+        "DPSNN on Intel".into(),
+        format!("{intel_uj:.1}"),
+        format!("{PAPER_INTEL_UJ}"),
+        intel_p.to_string(),
+    ]);
+    table.row(vec![
+        "Compass/TrueNorth sim. (published)".into(),
+        "-".into(),
+        format!("{COMPASS_TRUENORTH_UJ}"),
+        "4 (i7 950)".into(),
+    ]);
+    let out = table.render();
+    table.write_csv(&results_dir().join("table4.csv"))?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_arm_intel_compass() {
+        let (_, arm) = best_uj(&[1, 2, 4, 8], 1.0, table3::model_row).unwrap();
+        let (_, intel) =
+            best_uj(&[1, 2, 4, 8, 16], 1.0, |p, s| table2::model_row(p, "ib", s)).unwrap();
+        assert!(
+            arm < intel && intel < COMPASS_TRUENORTH_UJ,
+            "arm {arm:.2} < intel {intel:.2} < compass {COMPASS_TRUENORTH_UJ}"
+        );
+        // magnitudes within ~2x of the paper's 1.1 / 3.4
+        assert!((0.5..2.2).contains(&(arm / PAPER_ARM_UJ)), "arm {arm}");
+        assert!((0.5..2.0).contains(&(intel / PAPER_INTEL_UJ)), "intel {intel}");
+    }
+}

@@ -1,0 +1,44 @@
+//! # dpsnn — Distributed Plastic Spiking Neural Network, real-time study
+//!
+//! A Rust + JAX + Pallas reproduction of *"Real-time cortical simulations:
+//! energy and interconnect scaling on distributed systems"* (Simula et al.,
+//! EMPDP 2019, DOI 10.1109/EMPDP.2019.8671627).
+//!
+//! The crate rebuilds the paper's DPSNN mini-application benchmark and the
+//! measurement substrate around it:
+//!
+//! * [`model`] — LIF neurons with Spike-Frequency Adaptation, seeded
+//!   partition-independent connectivity, Poisson external stimulus.
+//! * [`engine`] — the per-rank simulation engine: delay rings, the 1 ms
+//!   hybrid event/time-driven step.
+//! * [`comm`] — AER spike wire format (12 B/spike), message packing, the
+//!   all-to-all transport and barrier used by live runs.
+//! * [`simnet`] — interconnect models (InfiniBand, Ethernet, GbE) used by
+//!   the modeled/timing mode.
+//! * [`platform`] — CPU/node models of the paper's three testbeds
+//!   (Intel Xeon, Trenz/ExaNeSt A53, Jetson TX1).
+//! * [`power`] — power model + simulated multimeter, energy-to-solution.
+//! * [`timing`] — discrete-event replay producing wall-clock and
+//!   comp/comm/barrier decompositions on modeled platforms.
+//! * [`runtime`] — PJRT runtime loading AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`); Python never runs at simulation time.
+//! * [`coordinator`] — run orchestration: live multi-threaded runs and
+//!   modeled platform replays.
+//! * [`harness`] — one reproduction harness per paper figure/table.
+
+pub mod config;
+pub mod util;
+pub mod model;
+pub mod engine;
+pub mod comm;
+pub mod simnet;
+pub mod platform;
+pub mod power;
+pub mod profiling;
+pub mod timing;
+pub mod trace;
+pub mod runtime;
+pub mod coordinator;
+pub mod harness;
+pub mod metrics;
+pub mod stats;

@@ -1,0 +1,236 @@
+//! `dpsnn` — command-line entry point.
+//!
+//! ```text
+//! dpsnn run [config.toml] [--neurons N] [--procs P] [--seconds S]
+//!           [--backend native|xla] [--mode live|modeled]
+//!           [--platform NAME] [--interconnect NAME] [--seed X] [--progress]
+//! dpsnn repro <fig1..fig8|table1..table4|all> [--fast]
+//! dpsnn list-platforms
+//! dpsnn raster [--neurons N] [--seconds S] [--bin MS]   # regime demo
+//! ```
+
+use anyhow::{bail, Result};
+
+use dpsnn::config::{NetworkParams, RunConfig};
+use dpsnn::coordinator;
+use dpsnn::harness;
+use dpsnn::stats::rates::RateMonitor;
+use dpsnn::stats::regime::classify_regime;
+use dpsnn::util::cli::Args;
+
+const USAGE: &str = "\
+dpsnn — DPSNN real-time cortical simulation study (EMPDP 2019 reproduction)
+
+USAGE:
+  dpsnn run [config.toml] [options]     run one simulation
+  dpsnn repro <id|all> [--fast]         regenerate a paper figure/table
+  dpsnn replay <trace.csv> [options]    replay a recorded trace on a
+                                        modeled platform (see --record-trace)
+  dpsnn list-platforms                  show modeled platform presets
+  dpsnn raster [options]                live run + population-rate raster
+
+RUN OPTIONS:
+  --neurons N        network size (default 20480)
+  --procs P          MPI-style rank count (default 1)
+  --seconds S        simulated seconds (default 10)
+  --backend B        native | xla (default native)
+  --mode M           live | modeled (default live)
+  --platform NAME    modeled platform preset (default xeon)
+  --interconnect IC  ib | eth1g | shm | exanest (default ib)
+  --artifacts DIR    AOT artifact directory (default artifacts)
+  --seed X           RNG seed
+  --progress         print per-second progress
+  --record-trace F   write the per-step workload trace to F (live runs)
+
+REPRO IDS:
+  fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 table1 table2 table3 table4 all
+";
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand() {
+        Some("run") => cmd_run(&args),
+        Some("repro") => cmd_repro(&args),
+        Some("replay") => cmd_replay(&args),
+        Some("list-platforms") => cmd_list_platforms(),
+        Some("raster") => cmd_raster(&args),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn build_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.positional.get(1) {
+        Some(path) if path.ends_with(".toml") => {
+            RunConfig::from_toml_file(std::path::Path::new(path))?
+        }
+        _ => RunConfig::default(),
+    };
+    if let Some(n) = args.get("neurons") {
+        cfg.net = NetworkParams::paper(n.parse()?);
+    }
+    cfg.procs = args.get_or("procs", cfg.procs)?;
+    cfg.sim_seconds = args.get_or("seconds", cfg.sim_seconds)?;
+    cfg.seed = args.get_or("seed", cfg.seed)?;
+    if let Some(b) = args.get("backend") {
+        cfg.backend = b.parse()?;
+    }
+    if let Some(m) = args.get("mode") {
+        cfg.mode = m.parse()?;
+    }
+    if let Some(p) = args.get("platform") {
+        cfg.platform = p.to_string();
+    }
+    if let Some(ic) = args.get("interconnect") {
+        cfg.interconnect = ic.to_string();
+    }
+    if let Some(d) = args.get("artifacts") {
+        cfg.artifacts_dir = d.to_string();
+    }
+    cfg.progress = args.has_flag("progress");
+    cfg.record_trace = args.get("record-trace").map(String::from);
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    eprintln!(
+        "running {} neurons / {} synapses on {} procs ({:?}, {} backend)...",
+        cfg.net.n_neurons,
+        cfg.net.total_synapses(),
+        cfg.procs,
+        cfg.mode,
+        cfg.backend
+    );
+    let result = coordinator::run(&cfg)?;
+    println!("{}", result.summary());
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let fast = args.has_flag("fast");
+    let ids: Vec<&str> = if id == "all" {
+        harness::ALL.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        eprintln!("== {id} ==");
+        let report = harness::run_one(id, fast)?;
+        println!("{report}");
+    }
+    println!(
+        "CSV outputs in {}",
+        harness::common::results_dir().display()
+    );
+    Ok(())
+}
+
+/// Replay a recorded live trace through the modeled platform pipeline:
+/// `dpsnn replay trace.csv --platform westmere --interconnect ib [--procs P]`
+fn cmd_replay(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: dpsnn replay <trace.csv> [options]"))?;
+    let trace = dpsnn::trace::workload::WorkloadTrace::load(std::path::Path::new(path))?;
+    let mut cfg = RunConfig::default();
+    cfg.net = NetworkParams::paper(trace.n_neurons);
+    cfg.net.syn_per_neuron = trace.syn_per_neuron;
+    cfg.mode = dpsnn::config::Mode::Modeled;
+    cfg.platform = args.get_or("platform", "xeon".to_string())?;
+    cfg.interconnect = args.get_or("interconnect", "ib".to_string())?;
+    cfg.procs = args.get_or("procs", trace.procs)?;
+    let trace = if cfg.procs != trace.procs {
+        trace.rebin(cfg.procs)?
+    } else {
+        trace
+    };
+    cfg.sim_seconds = trace.sim_seconds();
+    eprintln!(
+        "replaying {} steps x {} ranks ({} spikes, {:.2} Hz) on {}+{}...",
+        trace.steps(),
+        trace.procs,
+        trace.total_spikes(),
+        trace.mean_rate_hz(),
+        cfg.platform,
+        cfg.interconnect
+    );
+    let r = dpsnn::coordinator::modeled::run_modeled_trace(&cfg, &trace)?;
+    println!("{}", r.summary());
+    Ok(())
+}
+
+fn cmd_list_platforms() -> Result<()> {
+    println!("modeled platforms (DESIGN.md §2 hardware substitutions):");
+    for name in dpsnn::platform::presets::all_names() {
+        let p = dpsnn::platform::presets::platform_by_name(name)?;
+        println!(
+            "  {:<14} {:<16} {:>2} cores/node  baseline {:>5.1} W  default {}",
+            name,
+            p.node.core.name,
+            p.node.cores_per_node,
+            p.baseline_w,
+            p.default_interconnect,
+        );
+    }
+    println!("interconnects:");
+    for l in dpsnn::simnet::presets::all() {
+        println!(
+            "  {:<9} alpha {:>6.1} us  beta {:>6.2} Gb/s  nic {:>4.1} W",
+            l.name,
+            l.alpha_s * 1e6,
+            l.beta_bps * 8.0 / 1e9,
+            l.nic_active_w,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_raster(args: &Args) -> Result<()> {
+    let mut cfg = build_config(args)?;
+    if args.get("neurons").is_none() {
+        cfg.net = NetworkParams::tiny(2048);
+    }
+    if args.get("seconds").is_none() {
+        cfg.sim_seconds = 3.0;
+    }
+    let bin: usize = args.get_or("bin", 25usize)?;
+    let r = coordinator::run(&cfg)?;
+    let mut monitor = RateMonitor::new(cfg.net.n_neurons, cfg.net.dt_ms);
+    for &c in &r.pop_counts {
+        monitor.record(c);
+    }
+    let series = monitor.rate_series_hz(bin);
+    println!(
+        "population rate ({} ms bins), mean {:.2} Hz:",
+        bin,
+        monitor.mean_rate_hz()
+    );
+    let peak = series.iter().cloned().fold(1e-9, f64::max);
+    for (i, &rate) in series.iter().enumerate() {
+        let bar = "#".repeat(((rate / peak) * 60.0) as usize);
+        println!("{:>6} ms |{bar} {rate:.1}", i * bin);
+    }
+    println!(
+        "regime: {:?}",
+        classify_regime(&monitor, 50, monitor.steps() / 5)
+    );
+    Ok(())
+}

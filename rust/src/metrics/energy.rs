@@ -1,0 +1,43 @@
+//! Energy-efficiency metrics.
+
+use super::synevents::SynapticEventCount;
+
+/// The paper's Table IV metric: energy-to-solution divided by total
+/// synaptic events, in microjoules per synaptic event.
+pub fn joules_per_synaptic_event(energy_j: f64, events: &SynapticEventCount) -> f64 {
+    energy_j / events.total()
+}
+
+/// Pretty µJ/event formatting used by the Table IV harness.
+pub fn fmt_uj_per_event(energy_j: f64, events: &SynapticEventCount) -> String {
+    format!("{:.1}", joules_per_synaptic_event(energy_j, events) * 1e6)
+}
+
+/// Published Compass/TrueNorth reference point (paper §V): 5.7 µJ per
+/// synaptic event on a Core i7 950, baseline excluded.
+pub const COMPASS_TRUENORTH_UJ: f64 = 5.7;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetworkParams;
+
+    #[test]
+    fn arm_minimum_is_about_1p1_uj() {
+        // Table III minimum 1110 J over 7.37e8 + ... events -> ~1.5 µJ;
+        // the paper's 1.1 µJ divides by recurrent+external-ish counts.
+        // Assert our formula on their numbers lands in the right decade.
+        let net = NetworkParams::paper_20480();
+        let ev = SynapticEventCount::expected(&net, 3.2, 10.0);
+        let uj = joules_per_synaptic_event(1110.0, &ev) * 1e6;
+        assert!((0.9..1.4).contains(&uj), "uj={uj}");
+    }
+
+    #[test]
+    fn formatting() {
+        let net = NetworkParams::paper_20480();
+        let ev = SynapticEventCount::expected(&net, 3.2, 10.0);
+        let s = fmt_uj_per_event(2500.0, &ev);
+        assert!(s.parse::<f64>().is_ok());
+    }
+}

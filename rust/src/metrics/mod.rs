@@ -1,0 +1,8 @@
+//! Derived metrics: synaptic-event counts and the paper's headline
+//! efficiency unit, joules per synaptic event.
+
+pub mod synevents;
+pub mod energy;
+
+pub use energy::joules_per_synaptic_event;
+pub use synevents::SynapticEventCount;

@@ -1,0 +1,51 @@
+//! Synaptic-event accounting.
+//!
+//! Paper §V: "The total number of synaptic events is the product of the
+//! number of neurons, the number of synapses per neuron, the average
+//! firing rate and the total simulation time."
+
+use crate::config::NetworkParams;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SynapticEventCount {
+    pub recurrent: f64,
+    pub external: f64,
+}
+
+impl SynapticEventCount {
+    /// Expected counts for a run at the given mean firing rate.
+    pub fn expected(net: &NetworkParams, rate_hz: f64, sim_seconds: f64) -> Self {
+        let n = net.n_neurons as f64;
+        Self {
+            recurrent: n * net.syn_per_neuron as f64 * rate_hz * sim_seconds,
+            external: n * net.ext_syn_per_neuron as f64 * net.ext_rate_hz * sim_seconds,
+        }
+    }
+
+    /// From measured engine counters.
+    pub fn measured(recurrent: u64, external: u64) -> Self {
+        Self { recurrent: recurrent as f64, external: external as f64 }
+    }
+
+    /// The Table IV denominator: recurrent + external synaptic events
+    /// (this is the division that lands the paper's own numbers on
+    /// 1.1 / 3.4 uJ per synaptic event).
+    pub fn total(&self) -> f64 {
+        self.recurrent + self.external
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expected_matches_paper_arithmetic() {
+        // 20480 x 1125 x 3.2 Hz x 10 s = 7.37e8
+        let net = NetworkParams::paper_20480();
+        let c = SynapticEventCount::expected(&net, 3.2, 10.0);
+        assert!((c.recurrent - 7.3728e8).abs() / 7.3728e8 < 1e-12);
+        // external: 20480 x 400 x 3 Hz x 10 s = 2.4576e8
+        assert!((c.external - 2.4576e8).abs() / 2.4576e8 < 1e-12);
+    }
+}

@@ -1,0 +1,260 @@
+//! Partition-independent connectivity generation.
+//!
+//! The paper's benchmark network uses a *homogeneously sparse* synaptic
+//! adjacency matrix with a constant number of synapses projected per
+//! neuron (M = 1125). We generate it with a stateless counter-based RNG:
+//! synapse `k` of source neuron `s` is a pure function of
+//! `(seed, s, k)` — so every rank can regenerate exactly the synapses
+//! whose *targets* it owns, with no communication, and the network is
+//! identical regardless of the process count. This is what makes the
+//! strong-scaling experiments simulate the *same* network at every P and
+//! enables the bitwise partition-determinism tests.
+
+use crate::config::NetworkParams;
+use crate::util::rng::keyed;
+
+/// Immutable description of the random connectome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConnectivityParams {
+    pub seed: u64,
+    /// Total neurons.
+    pub n: u32,
+    /// Synapses projected per neuron (out-degree).
+    pub m: u32,
+    /// Axonal delay range in steps, inclusive.
+    pub dmin: u32,
+    pub dmax: u32,
+}
+
+impl ConnectivityParams {
+    pub fn from_network(p: &NetworkParams, seed: u64) -> Self {
+        Self {
+            seed,
+            n: p.n_neurons,
+            m: p.syn_per_neuron,
+            dmin: p.delay_min_steps,
+            dmax: p.delay_max_steps,
+        }
+    }
+
+    /// Synapse `k` (0..m) of source `s`: returns (target gid, delay steps).
+    ///
+    /// Self-connections are excluded by drawing from [0, n-1) and shifting
+    /// past `s`. Stateless: any rank computes the same answer.
+    #[inline]
+    pub fn synapse(&self, s: u32, k: u32) -> (u32, u8) {
+        let mut r = keyed(self.seed, 0x5CA8, s as u64, k as u64);
+        let mut tgt = r.next_below(self.n - 1);
+        if tgt >= s {
+            tgt += 1;
+        }
+        let delay = r.next_range(self.dmin, self.dmax) as u8;
+        (tgt, delay)
+    }
+
+    /// All targets of one source (test/diagnostic helper).
+    pub fn targets_of(&self, s: u32) -> Vec<(u32, u8)> {
+        (0..self.m).map(|k| self.synapse(s, k)).collect()
+    }
+}
+
+/// CSR list of the synapses *incoming to one rank*, grouped by source
+/// neuron: for each of the N possible sources, the local targets this
+/// rank owns. This is DPSNN's distribution scheme ("a set of neighbouring
+/// neurons and incoming synapses is assigned to each process").
+#[derive(Debug, Clone)]
+pub struct IncomingSynapses {
+    /// Local gid range [lo, hi).
+    pub lo: u32,
+    pub hi: u32,
+    /// Row offsets per source gid: len n+1.
+    row_ptr: Vec<u32>,
+    /// Target *local* indices (gid - lo).
+    tgt_local: Vec<u32>,
+    /// Per-synapse delay in steps.
+    delay: Vec<u8>,
+}
+
+impl IncomingSynapses {
+    /// Generate the incoming synapses for the rank owning [lo, hi).
+    ///
+    /// Cost: iterates all n*m synapses of the network (each rank does the
+    /// full sweep — the price of zero-communication construction; ~50 M
+    /// draws/s, amortized once per run).
+    pub fn build(cp: &ConnectivityParams, lo: u32, hi: u32) -> Self {
+        assert!(lo < hi && hi <= cp.n, "bad range [{lo},{hi}) for n={}", cp.n);
+        let mut row_ptr = Vec::with_capacity(cp.n as usize + 1);
+        let mut tgt_local = Vec::new();
+        let mut delay = Vec::new();
+        let mut scratch: Vec<(u8, u32)> = Vec::with_capacity(cp.m as usize);
+        row_ptr.push(0u32);
+        for s in 0..cp.n {
+            scratch.clear();
+            for k in 0..cp.m {
+                let (t, d) = cp.synapse(s, k);
+                if t >= lo && t < hi {
+                    scratch.push((d, t - lo));
+                }
+            }
+            // Delay-major row order: delivery then writes each delay
+            // slot's accumulator in one contiguous burst (hot-path
+            // locality, EXPERIMENTS.md §Perf). Accumulation order is
+            // irrelevant to the result (exact-grid weights).
+            scratch.sort_unstable();
+            for &(d, t) in &scratch {
+                tgt_local.push(t);
+                delay.push(d);
+            }
+            let len: u32 = tgt_local
+                .len()
+                .try_into()
+                .expect("more than u32::MAX local synapses");
+            row_ptr.push(len);
+        }
+        Self {
+            lo,
+            hi,
+            row_ptr,
+            tgt_local,
+            delay,
+        }
+    }
+
+    /// The synapses from source gid `s` onto this rank's neurons.
+    #[inline(always)]
+    pub fn row(&self, s: u32) -> (&[u32], &[u8]) {
+        let a = self.row_ptr[s as usize] as usize;
+        let b = self.row_ptr[s as usize + 1] as usize;
+        (&self.tgt_local[a..b], &self.delay[a..b])
+    }
+
+    /// Total synapses stored on this rank.
+    pub fn n_synapses(&self) -> usize {
+        self.tgt_local.len()
+    }
+
+    /// Approximate resident bytes (capacity planning / DESIGN §Perf).
+    pub fn resident_bytes(&self) -> usize {
+        self.row_ptr.len() * 4 + self.tgt_local.len() * 5
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn cp(n: u32, m: u32) -> ConnectivityParams {
+        ConnectivityParams { seed: 99, n, m, dmin: 1, dmax: 16 }
+    }
+
+    #[test]
+    fn synapse_is_deterministic_and_in_range() {
+        let c = cp(1000, 100);
+        for s in [0u32, 1, 500, 999] {
+            for k in [0u32, 1, 50, 99] {
+                let (t1, d1) = c.synapse(s, k);
+                let (t2, d2) = c.synapse(s, k);
+                assert_eq!((t1, d1), (t2, d2));
+                assert!(t1 < 1000);
+                assert_ne!(t1, s, "self-connection at s={s} k={k}");
+                assert!((1..=16).contains(&(d1 as u32)));
+            }
+        }
+    }
+
+    #[test]
+    fn out_degree_is_exact() {
+        let c = cp(200, 50);
+        for s in 0..200 {
+            assert_eq!(c.targets_of(s).len(), 50);
+        }
+    }
+
+    #[test]
+    fn partition_union_equals_whole() {
+        // The synapses seen by P ranks must exactly tile the full list.
+        let c = cp(128, 32);
+        let whole = IncomingSynapses::build(&c, 0, 128);
+        for p in [2u32, 4, 8] {
+            let mut total = 0usize;
+            for r in 0..p {
+                let lo = r * 128 / p;
+                let hi = (r + 1) * 128 / p;
+                let part = IncomingSynapses::build(&c, lo, hi);
+                total += part.n_synapses();
+                // every row of the part must be a sub-multiset of the whole row
+                for s in 0..128 {
+                    let (wt, _) = whole.row(s);
+                    let (pt, _) = part.row(s);
+                    for &t in pt {
+                        assert!(wt.contains(&(t + lo)));
+                    }
+                }
+            }
+            assert_eq!(total, whole.n_synapses());
+        }
+    }
+
+    #[test]
+    fn rows_match_targets_of_as_multiset_and_are_delay_sorted() {
+        let c = cp(64, 16);
+        let inc = IncomingSynapses::build(&c, 0, 64);
+        for s in 0..64u32 {
+            let (tgts, dels) = inc.row(s);
+            assert_eq!(tgts.len(), 16);
+            // delay-major storage order (delivery locality)
+            assert!(dels.windows(2).all(|w| w[0] <= w[1]), "row not sorted");
+            // same multiset as the stateless generator
+            let mut got: Vec<(u8, u32)> =
+                dels.iter().zip(tgts).map(|(&d, &t)| (d, t)).collect();
+            let mut expect: Vec<(u8, u32)> =
+                c.targets_of(s).into_iter().map(|(t, d)| (d, t)).collect();
+            got.sort_unstable();
+            expect.sort_unstable();
+            assert_eq!(got, expect);
+        }
+    }
+
+    #[test]
+    fn target_distribution_is_roughly_uniform() {
+        let c = cp(100, 99);
+        let mut hits = vec![0u32; 100];
+        for s in 0..100 {
+            for (t, _) in c.targets_of(s) {
+                hits[t as usize] += 1;
+            }
+        }
+        let total: u32 = hits.iter().sum();
+        assert_eq!(total, 9900);
+        let mean = total as f64 / 100.0;
+        for (i, &h) in hits.iter().enumerate() {
+            assert!(
+                (h as f64) > mean * 0.5 && (h as f64) < mean * 1.5,
+                "target {i} hit {h} times (mean {mean})"
+            );
+        }
+    }
+
+    #[test]
+    fn property_partition_tiling_random_shapes() {
+        forall("partition tiling", 25, |rng| {
+            let n = 16 + rng.next_below(100);
+            let m = 1 + rng.next_below(n - 2);
+            let p = 1 + rng.next_below(7);
+            let c = ConnectivityParams { seed: rng.next_u64(), n, m, dmin: 1, dmax: 4 };
+            let whole = IncomingSynapses::build(&c, 0, n);
+            let mut total = 0;
+            for r in 0..p {
+                let lo = (r as u64 * n as u64 / p as u64) as u32;
+                let hi = ((r + 1) as u64 * n as u64 / p as u64) as u32;
+                if lo == hi {
+                    continue;
+                }
+                total += IncomingSynapses::build(&c, lo, hi).n_synapses();
+            }
+            assert_eq!(total, whole.n_synapses());
+            assert_eq!(whole.n_synapses(), (n * m) as usize);
+        });
+    }
+}

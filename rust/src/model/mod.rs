@@ -1,0 +1,11 @@
+//! The neural model: LIF+SFA dynamics, partition-independent connectivity,
+//! and the external Poisson stimulus.
+
+pub mod neuron;
+pub mod population;
+pub mod connectivity;
+pub mod poisson;
+
+pub use connectivity::{ConnectivityParams, IncomingSynapses};
+pub use neuron::{step_native, StepParams};
+pub use population::PopulationState;

@@ -1,0 +1,91 @@
+//! Per-rank population state (structure-of-arrays) and initialization.
+
+use crate::config::NetworkParams;
+use crate::util::rng::keyed;
+
+/// The dynamic state of the neurons owned by one rank, in SoA layout
+/// matching the kernel ABI: v, w, rf plus the static sfa_inc vector.
+#[derive(Debug, Clone)]
+pub struct PopulationState {
+    /// Global id of the first local neuron.
+    pub gid0: u32,
+    pub v: Vec<f32>,
+    pub w: Vec<f32>,
+    pub rf: Vec<f32>,
+    /// Per-neuron SFA increment: `sfa_inc` for excitatory, 0 for inhibitory.
+    pub sfa_inc: Vec<f32>,
+}
+
+impl PopulationState {
+    /// Initialize neurons [gid0, gid0+n) of the network described by `p`.
+    ///
+    /// Membrane potentials start at a seeded uniform value in
+    /// [v_floor/4, theta*0.8) — keyed by *global* id, so initial state is
+    /// partition-independent (the same neuron gets the same v whichever
+    /// rank owns it).
+    pub fn init(p: &NetworkParams, seed: u64, gid0: u32, n: u32) -> Self {
+        let mut v = Vec::with_capacity(n as usize);
+        for gid in gid0..gid0 + n {
+            let mut r = keyed(seed, 0x11F0, gid as u64, 0);
+            let span = p.theta * 0.8 - p.v_floor * 0.25;
+            v.push(p.v_floor * 0.25 + r.next_f64() as f32 * span);
+        }
+        let sfa_inc = (gid0..gid0 + n)
+            .map(|gid| if p.is_exc(gid) { p.sfa_inc } else { 0.0 })
+            .collect();
+        Self {
+            gid0,
+            v,
+            w: vec![0.0; n as usize],
+            rf: vec![0.0; n as usize],
+            sfa_inc,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.v.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.v.is_empty()
+    }
+
+    /// Local index -> global neuron id.
+    pub fn gid(&self, local: u32) -> u32 {
+        self.gid0 + local
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_partition_independent() {
+        let p = NetworkParams::tiny(256);
+        let whole = PopulationState::init(&p, 42, 0, 256);
+        let lo = PopulationState::init(&p, 42, 0, 128);
+        let hi = PopulationState::init(&p, 42, 128, 128);
+        assert_eq!(&whole.v[..128], &lo.v[..]);
+        assert_eq!(&whole.v[128..], &hi.v[..]);
+        assert_eq!(&whole.sfa_inc[..128], &lo.sfa_inc[..]);
+        assert_eq!(&whole.sfa_inc[128..], &hi.sfa_inc[..]);
+    }
+
+    #[test]
+    fn sfa_follows_exc_inh_split() {
+        let p = NetworkParams::tiny(100); // 80 exc / 20 inh
+        let s = PopulationState::init(&p, 1, 0, 100);
+        assert!(s.sfa_inc[..80].iter().all(|&x| x > 0.0));
+        assert!(s.sfa_inc[80..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn initial_v_below_threshold() {
+        let p = NetworkParams::tiny(512);
+        let s = PopulationState::init(&p, 7, 0, 512);
+        assert!(s.v.iter().all(|&v| v < p.theta && v >= p.v_floor));
+        // and not all identical
+        assert!(s.v.windows(2).any(|w| w[0] != w[1]));
+    }
+}

@@ -1,0 +1,90 @@
+//! Per-core compute-rate model.
+//!
+//! DPSNN's computation phase is dominated by three memory-bound loops
+//! (paper §II): neuron state updates, recurrent synaptic-event delivery
+//! (delay queues + synapse lists) and external-stimulus events. Each core
+//! class is characterized by sustained event rates for the three, scaled
+//! from the Westmere anchor (150.9 s for 10 s of the 20480N network on
+//! one core — Table II row 1).
+
+/// Sustained per-core processing rates (events/second).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoreModel {
+    pub name: &'static str,
+    /// Neuron state updates per second.
+    pub r_nrn: f64,
+    /// Recurrent synaptic events per second.
+    pub r_syn: f64,
+    /// External (Poisson) events per second.
+    pub r_ext: f64,
+}
+
+/// Anchor: Intel Xeon X5660/E5620 (Westmere, 32 nm) single core.
+/// 10 s of 20480N = 2.048e8 neuron updates + 7.37e8 synaptic events
+/// + 2.46e8 external events in 150.9 s.
+pub const WESTMERE: CoreModel = CoreModel {
+    name: "westmere",
+    r_nrn: 4.0e6,
+    r_syn: 10.0e6,
+    r_ext: 8.0e6,
+};
+
+impl CoreModel {
+    /// A core `factor`× the speed of this one.
+    pub const fn scaled(self, name: &'static str, factor: f64) -> CoreModel {
+        CoreModel {
+            name,
+            r_nrn: self.r_nrn * factor,
+            r_syn: self.r_syn * factor,
+            r_ext: self.r_ext * factor,
+        }
+    }
+
+    /// Seconds to process the given event counts.
+    #[inline]
+    pub fn comp_time(&self, nrn_updates: f64, syn_events: f64, ext_events: f64) -> f64 {
+        nrn_updates / self.r_nrn + syn_events / self.r_syn + ext_events / self.r_ext
+    }
+
+    /// Overall speed factor vs the Westmere anchor (geometric mean of
+    /// the three rates).
+    pub fn speed_vs_westmere(&self) -> f64 {
+        let g = |a: f64, b: f64| a / b;
+        (g(self.r_nrn, WESTMERE.r_nrn)
+            * g(self.r_syn, WESTMERE.r_syn)
+            * g(self.r_ext, WESTMERE.r_ext))
+        .cbrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The calibration workload: 10 s of the paper's 20480N network.
+    fn n20k_10s() -> (f64, f64, f64) {
+        let n = 20480.0;
+        let steps = 10_000.0;
+        let rate = 3.2;
+        let syn = n * 1125.0 * rate * 10.0;
+        let ext = n * 400.0 * 3.0 * 10.0;
+        (n * steps, syn, ext)
+    }
+
+    #[test]
+    fn westmere_anchor_reproduces_table2_row1() {
+        let (nrn, syn, ext) = n20k_10s();
+        let t = WESTMERE.comp_time(nrn, syn, ext);
+        // Table II, 1 core: 150.9 s. Within 10%.
+        assert!((t - 150.9).abs() / 150.9 < 0.10, "t={t}");
+    }
+
+    #[test]
+    fn scaling_factor_applies() {
+        let fast = WESTMERE.scaled("fast", 2.0);
+        let (nrn, syn, ext) = n20k_10s();
+        let ratio = WESTMERE.comp_time(nrn, syn, ext) / fast.comp_time(nrn, syn, ext);
+        assert!((ratio - 2.0).abs() < 1e-9);
+        assert!((fast.speed_vs_westmere() - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,130 @@
+//! Heterogeneous partitions: the paper's MPI "heterogeneous mode".
+//!
+//! The Trenz and Jetson scaling tests embed the ARM partition in a "bath"
+//! of Intel processes: one MPI job, distinct executables per architecture,
+//! neurons distributed so the (faster) Intel ranks do not slow the ARM
+//! ranks down. We model this as a weighted partition: each rank's share of
+//! neurons is proportional to its core speed, which equalizes per-step
+//! computation time across architectures.
+
+use crate::engine::partition::Partition;
+
+use super::cpu::CoreModel;
+
+/// One architecture group in a heterogeneous job.
+#[derive(Debug, Clone)]
+pub struct RankGroup {
+    pub core: CoreModel,
+    pub ranks: u32,
+    /// Ranks per node for this group's boards/servers.
+    pub ranks_per_node: u32,
+}
+
+/// A heterogeneous cluster: ordered groups; ranks are numbered group by
+/// group.
+#[derive(Debug, Clone)]
+pub struct HeteroCluster {
+    pub groups: Vec<RankGroup>,
+}
+
+impl HeteroCluster {
+    pub fn new(groups: Vec<RankGroup>) -> Self {
+        assert!(!groups.is_empty());
+        Self { groups }
+    }
+
+    /// Homogeneous helper.
+    pub fn homogeneous(core: CoreModel, ranks: u32, ranks_per_node: u32) -> Self {
+        Self::new(vec![RankGroup { core, ranks, ranks_per_node }])
+    }
+
+    pub fn total_ranks(&self) -> u32 {
+        self.groups.iter().map(|g| g.ranks).sum()
+    }
+
+    /// Speed weight of every rank, in rank order.
+    pub fn weights(&self) -> Vec<f64> {
+        let mut w = Vec::with_capacity(self.total_ranks() as usize);
+        for g in &self.groups {
+            let s = g.core.speed_vs_westmere();
+            w.extend(std::iter::repeat(s).take(g.ranks as usize));
+        }
+        w
+    }
+
+    /// Speed-weighted neuron partition over all ranks.
+    pub fn partition(&self, n_neurons: u32) -> Partition {
+        Partition::weighted(n_neurons, &self.weights())
+    }
+
+    /// The core model of rank `r`.
+    pub fn core_of(&self, mut r: u32) -> &CoreModel {
+        for g in &self.groups {
+            if r < g.ranks {
+                return &g.core;
+            }
+            r -= g.ranks;
+        }
+        panic!("rank out of range");
+    }
+
+    /// Per-step computation time of rank `r` given its share of the
+    /// network workload (events already scaled to the rank's neurons).
+    pub fn rank_comp_time(
+        &self,
+        r: u32,
+        nrn_updates: f64,
+        syn_events: f64,
+        ext_events: f64,
+    ) -> f64 {
+        self.core_of(r).comp_time(nrn_updates, syn_events, ext_events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::presets::{JETSON_A57, TRENZ_A53, XEON_E5_2630V2};
+
+    #[test]
+    fn weighted_partition_equalizes_comp_time() {
+        // 4 ARM + 4 Intel ranks over 22k neurons: Intel ranks get ~10x
+        // the neurons, so per-rank comp time is ~equal.
+        let hc = HeteroCluster::new(vec![
+            RankGroup { core: TRENZ_A53, ranks: 4, ranks_per_node: 4 },
+            RankGroup { core: XEON_E5_2630V2, ranks: 4, ranks_per_node: 16 },
+        ]);
+        let part = hc.partition(22_000);
+        let sizes = part.sizes();
+        let arm_mean: f64 = sizes[..4].iter().map(|&s| s as f64).sum::<f64>() / 4.0;
+        let intel_mean: f64 = sizes[4..].iter().map(|&s| s as f64).sum::<f64>() / 4.0;
+        assert!(
+            (intel_mean / arm_mean - 10.0).abs() < 1.0,
+            "arm {arm_mean} intel {intel_mean}"
+        );
+        // comp time per rank within 25% of each other
+        let t = |r: u32| {
+            let share = part.size(r) as f64;
+            hc.rank_comp_time(r, share, share * 1125.0 * 0.0032, share * 1.2)
+        };
+        let t_arm = t(0);
+        let t_intel = t(4);
+        assert!(
+            (t_arm / t_intel - 1.0).abs() < 0.25,
+            "arm {t_arm} intel {t_intel}"
+        );
+    }
+
+    #[test]
+    fn core_of_maps_groups() {
+        let hc = HeteroCluster::new(vec![
+            RankGroup { core: JETSON_A57, ranks: 2, ranks_per_node: 4 },
+            RankGroup { core: XEON_E5_2630V2, ranks: 3, ranks_per_node: 16 },
+        ]);
+        assert_eq!(hc.core_of(0).name, "jetson-a57");
+        assert_eq!(hc.core_of(1).name, "jetson-a57");
+        assert_eq!(hc.core_of(2).name, "xeon-e5-2630v2");
+        assert_eq!(hc.core_of(4).name, "xeon-e5-2630v2");
+        assert_eq!(hc.total_ranks(), 5);
+    }
+}

@@ -1,0 +1,18 @@
+//! Platform models: per-core compute rates and per-node power curves for
+//! the paper's three testbeds (Intel Xeon servers, Trenz/ExaNeSt A53
+//! boards, NVIDIA Jetson TX1) — the substitution for hardware we do not
+//! have (DESIGN.md §2).
+//!
+//! Calibration uses only *anchor* measurements from the paper (per-core
+//! speed ratios from the computation-dominated 1–4-process runs; the
+//! power-vs-active-cores curve of Tables II/III); every figure and table
+//! is then regenerated from the models.
+
+pub mod cpu;
+pub mod node;
+pub mod presets;
+pub mod hetero;
+
+pub use cpu::CoreModel;
+pub use node::NodeModel;
+pub use presets::{platform_by_name, PlatformModel};

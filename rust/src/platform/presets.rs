@@ -1,0 +1,170 @@
+//! Named platform presets for the paper's testbeds.
+
+use anyhow::{bail, Result};
+
+pub use super::cpu::WESTMERE;
+use super::cpu::CoreModel;
+use super::node::NodeModel;
+
+/// A complete modeled platform: node type + whole-setup power baseline.
+#[derive(Debug, Clone)]
+pub struct PlatformModel {
+    pub name: &'static str,
+    pub node: NodeModel,
+    /// The measured idle plateau the paper subtracts (564 W server rack,
+    /// 49.2 W two-Jetson AC setup, ...).
+    pub baseline_w: f64,
+    /// Default interconnect preset name for this platform.
+    pub default_interconnect: &'static str,
+    /// Scale on the interconnect's active NIC power: server-class NIC
+    /// cards draw their full figure; the SoC boards' on-chip GbE MACs
+    /// draw a small fraction of it.
+    pub nic_power_scale: f64,
+}
+
+/// Xeon E5-2630 v2 (Ivy Bridge, 2.6 GHz) — the scaling cluster of
+/// Figs 1–3 / Table I. Per-core ~1.25× the Westmere anchor
+/// (Table I 4-proc computation share vs Table II 4-core row).
+pub const XEON_E5_2630V2: CoreModel = WESTMERE.scaled("xeon-e5-2630v2", 1.25);
+
+/// Cortex-A53 @ 1.5 GHz on the Trenz TE0808 (ExaNeSt prototype):
+/// "Intel cores are about ten times faster than the ARMs on the Trenz".
+pub const TRENZ_A53: CoreModel = XEON_E5_2630V2.scaled("trenz-a53", 0.1);
+
+/// Cortex-A57 @ 2 GHz on the Jetson TX1: "about 5 times faster".
+pub const JETSON_A57: CoreModel = XEON_E5_2630V2.scaled("jetson-a57", 0.2);
+
+pub fn xeon_node() -> NodeModel {
+    NodeModel {
+        name: "xeon-e5",
+        core: XEON_E5_2630V2,
+        // dual-socket hexa-core E5-2630 v2
+        cores_per_node: 12,
+        // same server class as the Westmere power testbed
+        power_anchors_w: westmere_anchors(),
+        idle_draw_frac: 0.8,
+    }
+}
+
+/// The power-measurement servers (SuperMicro X8DTG-D, X5660+E5620).
+pub fn westmere_node() -> NodeModel {
+    NodeModel {
+        name: "westmere",
+        core: WESTMERE,
+        cores_per_node: 16,
+        power_anchors_w: westmere_anchors(),
+        idle_draw_frac: 0.8,
+    }
+}
+
+fn westmere_anchors() -> Vec<(u32, f64)> {
+    // Table II above-baseline readings, computation-dominated rows.
+    vec![(1, 48.0), (2, 62.0), (4, 92.0), (8, 124.0), (16, 166.0)]
+}
+
+pub fn trenz_node() -> NodeModel {
+    NodeModel {
+        name: "trenz",
+        core: TRENZ_A53,
+        cores_per_node: 4,
+        // Zynq US+ board: no per-core table in the paper; scaled from the
+        // Jetson curve to the Zynq's ~5 W active envelope.
+        power_anchors_w: vec![(1, 1.6), (2, 2.6), (4, 4.5)],
+        idle_draw_frac: 0.6,
+    }
+}
+
+pub fn jetson_node() -> NodeModel {
+    NodeModel {
+        name: "jetson",
+        core: JETSON_A57,
+        // the paper drives 4 cores per board (8 cores = 2 boards)
+        cores_per_node: 4,
+        power_anchors_w: vec![(1, 2.2), (2, 3.4), (4, 6.0)],
+        idle_draw_frac: 0.6,
+    }
+}
+
+pub fn platform_by_name(name: &str) -> Result<PlatformModel> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "xeon" | "intel" | "xeon-ib" => PlatformModel {
+            name: "xeon",
+            node: xeon_node(),
+            baseline_w: 564.0,
+            default_interconnect: "ib",
+            nic_power_scale: 1.0,
+        },
+        "xeon-eth" => PlatformModel {
+            name: "xeon-eth",
+            node: xeon_node(),
+            baseline_w: 564.0,
+            default_interconnect: "eth1g",
+            nic_power_scale: 1.0,
+        },
+        "westmere" => PlatformModel {
+            name: "westmere",
+            node: westmere_node(),
+            baseline_w: 564.0,
+            default_interconnect: "ib",
+            nic_power_scale: 1.0,
+        },
+        "westmere-eth" => PlatformModel {
+            name: "westmere-eth",
+            node: westmere_node(),
+            baseline_w: 564.0,
+            default_interconnect: "eth1g",
+            nic_power_scale: 1.0,
+        },
+        "trenz" | "exanest" => PlatformModel {
+            name: "trenz",
+            node: trenz_node(),
+            baseline_w: 20.0,
+            default_interconnect: "eth1g",
+            nic_power_scale: 0.06,
+        },
+        "jetson" | "arm" => PlatformModel {
+            name: "jetson",
+            node: jetson_node(),
+            baseline_w: 49.2,
+            default_interconnect: "eth1g",
+            nic_power_scale: 0.06,
+        },
+        other => bail!(
+            "unknown platform {other:?} \
+             (xeon|xeon-eth|westmere|westmere-eth|trenz|jetson)"
+        ),
+    })
+}
+
+pub fn all_names() -> &'static [&'static str] {
+    &["xeon", "xeon-eth", "westmere", "westmere-eth", "trenz", "jetson"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speed_ratios_match_paper_statements() {
+        // Intel ~10x Trenz, ~5x Jetson (paper §III)
+        let intel = XEON_E5_2630V2.speed_vs_westmere();
+        let trenz = TRENZ_A53.speed_vs_westmere();
+        let jetson = JETSON_A57.speed_vs_westmere();
+        assert!((intel / trenz - 10.0).abs() < 0.5);
+        assert!((intel / jetson - 5.0).abs() < 0.25);
+    }
+
+    #[test]
+    fn lookup_all_names() {
+        for n in all_names() {
+            platform_by_name(n).unwrap();
+        }
+        assert!(platform_by_name("sparc").is_err());
+    }
+
+    #[test]
+    fn baselines_match_paper() {
+        assert_eq!(platform_by_name("westmere").unwrap().baseline_w, 564.0);
+        assert_eq!(platform_by_name("jetson").unwrap().baseline_w, 49.2);
+    }
+}

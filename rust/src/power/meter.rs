@@ -1,0 +1,111 @@
+//! Simulated digital multimeter (GW Instek GDM-8351 stand-in).
+//!
+//! The paper samples AC/DC current with one meter: DC downstream a single
+//! board's 19 V supply (clean), AC at the mains strip for multi-board and
+//! server measurements (noisier, transformer draw inflates the baseline).
+//! This module reproduces those measurement conditions so the fig7/fig8
+//! harnesses generate traces with the same texture: a 5 s idle plateau, a
+//! steep knee at simulation start, the run plateau, and the final drop.
+
+use crate::util::rng::SplitMix64;
+
+use super::trace::PowerTrace;
+
+/// AC (mains, noisy) vs DC (supply output, clean) sampling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MeterMode {
+    Ac,
+    Dc,
+}
+
+#[derive(Debug, Clone)]
+pub struct Multimeter {
+    pub mode: MeterMode,
+    /// Samples per second (the GDM-8351 over USB logs a few Hz).
+    pub sample_hz: f64,
+    seed: u64,
+}
+
+impl Multimeter {
+    pub fn new(mode: MeterMode, sample_hz: f64, seed: u64) -> Self {
+        assert!(sample_hz > 0.0);
+        Self { mode, sample_hz, seed }
+    }
+
+    /// Gaussian reading noise (1σ) in watts for a given true draw.
+    fn noise_sigma_w(&self, true_w: f64) -> f64 {
+        match self.mode {
+            // AC at the strip: transformer ripple + PF wander, ~1.5% + 1.5 W
+            MeterMode::Ac => 0.015 * true_w + 1.5,
+            // DC at the supply output: tight, ~0.3% + 0.05 W
+            MeterMode::Dc => 0.003 * true_w + 0.05,
+        }
+    }
+
+    /// Sample a run profile into a trace.
+    ///
+    /// `phases` is a list of (duration_s, true_power_w) segments, e.g.
+    /// `[(5.0, baseline), (wall, baseline+run), (3.0, baseline)]`.
+    pub fn sample(&self, phases: &[(f64, f64)]) -> PowerTrace {
+        let mut rng = SplitMix64::new(self.seed);
+        let mut trace = PowerTrace::default();
+        let dt = 1.0 / self.sample_hz;
+        let mut t = 0.0;
+        for &(dur, w) in phases {
+            let end = t + dur;
+            while t < end {
+                let sigma = self.noise_sigma_w(w);
+                let reading = w + sigma * rng.next_normal();
+                trace.push(t, reading.max(0.0));
+                t += dt;
+            }
+        }
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn phases() -> Vec<(f64, f64)> {
+        vec![(5.0, 564.0), (20.0, 564.0 + 166.0), (3.0, 564.0)]
+    }
+
+    #[test]
+    fn trace_has_knee_and_drop() {
+        let m = Multimeter::new(MeterMode::Ac, 4.0, 1);
+        let tr = m.sample(&phases());
+        let base = tr.infer_baseline_w(5.0);
+        assert!((base - 564.0).abs() < 8.0, "baseline {base}");
+        // run plateau clearly above baseline
+        let mid: f64 = tr
+            .w
+            .iter()
+            .zip(&tr.t_s)
+            .filter(|(_, &t)| t > 8.0 && t < 22.0)
+            .map(|(&w, _)| w)
+            .sum::<f64>()
+            / tr.t_s.iter().filter(|&&t| t > 8.0 && t < 22.0).count() as f64;
+        assert!((mid - 730.0).abs() < 10.0, "plateau {mid}");
+    }
+
+    #[test]
+    fn energy_integrates_to_power_times_time() {
+        let m = Multimeter::new(MeterMode::Dc, 10.0, 2);
+        let tr = m.sample(&phases());
+        let e = tr.energy_above_j(564.0);
+        assert!((e - 166.0 * 20.0).abs() < 120.0, "e={e}");
+    }
+
+    #[test]
+    fn ac_noisier_than_dc() {
+        let sig = |mode| {
+            let m = Multimeter::new(mode, 50.0, 3);
+            let tr = m.sample(&[(10.0, 600.0)]);
+            let mean = tr.w.iter().sum::<f64>() / tr.len() as f64;
+            (tr.w.iter().map(|w| (w - mean).powi(2)).sum::<f64>() / tr.len() as f64).sqrt()
+        };
+        assert!(sig(MeterMode::Ac) > 3.0 * sig(MeterMode::Dc));
+    }
+}

@@ -1,0 +1,11 @@
+//! Power and energy substrate: the whole-setup power model, the simulated
+//! digital multimeter (the paper's GW Instek GDM-8351), and power-trace
+//! handling with baseline subtraction and energy integration.
+
+pub mod model;
+pub mod meter;
+pub mod trace;
+
+pub use meter::{Multimeter, MeterMode};
+pub use model::PowerModel;
+pub use trace::PowerTrace;

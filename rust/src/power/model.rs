@@ -1,0 +1,112 @@
+//! Whole-setup instantaneous power model.
+//!
+//! `P(t) = baseline + Σ_nodes node_power(active cores, utilization)
+//!        + Σ_nics nic_active`
+//!
+//! where `utilization` is the computation fraction of wall-clock from the
+//! timing model — the coupling that reproduces the paper's observation
+//! that 64-process runs draw *less* than 2× the 32-process runs (cores
+//! blocked on the interconnect draw less than busy cores).
+
+use crate::platform::presets::PlatformModel;
+use crate::simnet::link::LinkModel;
+
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    pub platform: PlatformModel,
+    pub interconnect: LinkModel,
+}
+
+impl PowerModel {
+    pub fn new(platform: PlatformModel, interconnect: LinkModel) -> Self {
+        Self { platform, interconnect }
+    }
+
+    /// Nodes engaged by `p` ranks.
+    pub fn nodes(&self, p: u32) -> u32 {
+        self.platform.node.nodes_for(p)
+    }
+
+    /// Above-baseline draw while *running* with `p` ranks at computation
+    /// fraction `u` (0..=1).
+    pub fn running_power_w(&self, p: u32, u: f64) -> f64 {
+        let node_w = self.platform.node.cluster_power_w(p, u);
+        // NICs are engaged only when the job spans nodes.
+        let nic_w = if self.nodes(p) > 1 {
+            self.nodes(p) as f64
+                * self.interconnect.nic_active_w
+                * self.platform.nic_power_scale
+        } else {
+            0.0
+        };
+        node_w + nic_w
+    }
+
+    /// Absolute draw (what the multimeter reads) while running.
+    pub fn absolute_running_power_w(&self, p: u32, u: f64) -> f64 {
+        self.platform.baseline_w + self.running_power_w(p, u)
+    }
+
+    /// Energy-to-solution above baseline (J) for a run of `wall_s`
+    /// seconds — the paper's metric ("the meter reading subtracted from a
+    /// baseline").
+    pub fn energy_to_solution_j(&self, p: u32, u: f64, wall_s: f64) -> f64 {
+        self.running_power_w(p, u) * wall_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::presets::platform_by_name;
+    use crate::simnet::presets::{ETH1G, IB};
+
+    fn westmere_ib() -> PowerModel {
+        PowerModel::new(platform_by_name("westmere").unwrap(), IB)
+    }
+
+    #[test]
+    fn single_node_has_no_nic_power() {
+        let m = westmere_ib();
+        assert_eq!(m.running_power_w(16, 1.0), m.platform.node.busy_power_w(16));
+    }
+
+    #[test]
+    fn table2_busy_anchors_reproduced() {
+        let m = westmere_ib();
+        for (p, w) in [(1u32, 48.0), (2, 62.0), (4, 92.0), (8, 124.0), (16, 166.0)] {
+            let got = m.running_power_w(p, 1.0);
+            assert!((got - w).abs() < 1.0, "p={p}: {got} vs {w}");
+        }
+    }
+
+    #[test]
+    fn ib_draws_less_than_eth_multi_node() {
+        let ib = westmere_ib();
+        let eth = PowerModel::new(platform_by_name("westmere").unwrap(), ETH1G);
+        for p in [32u32, 64] {
+            let d = eth.running_power_w(p, 0.3) - ib.running_power_w(p, 0.3);
+            assert!(d > 10.0, "p={p}: ETH should draw >10 W more, got {d}");
+        }
+    }
+
+    #[test]
+    fn blocked_cores_reduce_draw() {
+        let m = westmere_ib();
+        // 64 ranks mostly blocked on comm: well under 2x the 32-rank busy draw
+        let p64_blocked = m.running_power_w(64, 0.08);
+        let p32_busy = m.running_power_w(32, 0.8);
+        assert!(
+            p64_blocked < 1.8 * p32_busy,
+            "64p blocked {p64_blocked} vs 32p busy {p32_busy}"
+        );
+    }
+
+    #[test]
+    fn energy_scales_with_time() {
+        let m = westmere_ib();
+        let e = m.energy_to_solution_j(8, 1.0, 25.3);
+        // Table II, 8 cores: 124 W x 25.3 s = 3137 J
+        assert!((e - 3137.2).abs() < 20.0, "e={e}");
+    }
+}

@@ -1,0 +1,89 @@
+//! The comp/comm/barrier decomposition.
+
+use std::time::Duration;
+
+/// Accumulated wall-clock per execution component (seconds).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Components {
+    pub computation: f64,
+    pub communication: f64,
+    pub barrier: f64,
+}
+
+impl Components {
+    pub fn total(&self) -> f64 {
+        self.computation + self.communication + self.barrier
+    }
+
+    /// Fractions (comp, comm, barrier); zeros if nothing was recorded.
+    pub fn fractions(&self) -> (f64, f64, f64) {
+        let t = self.total();
+        if t <= 0.0 {
+            return (0.0, 0.0, 0.0);
+        }
+        (
+            self.computation / t,
+            self.communication / t,
+            self.barrier / t,
+        )
+    }
+
+    pub fn add_computation(&mut self, d: Duration) {
+        self.computation += d.as_secs_f64();
+    }
+
+    pub fn add_communication(&mut self, d: Duration) {
+        self.communication += d.as_secs_f64();
+    }
+
+    pub fn add_barrier(&mut self, d: Duration) {
+        self.barrier += d.as_secs_f64();
+    }
+
+    /// Element-wise sum (aggregate over ranks).
+    pub fn merged(items: &[Components]) -> Components {
+        let mut out = Components::default();
+        for c in items {
+            out.computation += c.computation;
+            out.communication += c.communication;
+            out.barrier += c.barrier;
+        }
+        out
+    }
+
+    /// Paper-style row: "97.6% / 0.6% / 1.3%".
+    pub fn percent_row(&self) -> (String, String, String) {
+        let (a, b, c) = self.fractions();
+        (
+            crate::util::units::fmt_pct(a),
+            crate::util::units::fmt_pct(b),
+            crate::util::units::fmt_pct(c),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let c = Components { computation: 3.0, communication: 1.0, barrier: 1.0 };
+        let (a, b, d) = c.fractions();
+        assert!((a + b + d - 1.0).abs() < 1e-12);
+        assert!((a - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        assert_eq!(Components::default().fractions(), (0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn merge_adds() {
+        let a = Components { computation: 1.0, communication: 2.0, barrier: 3.0 };
+        let m = Components::merged(&[a, a]);
+        assert_eq!(m.computation, 2.0);
+        assert_eq!(m.barrier, 6.0);
+    }
+}

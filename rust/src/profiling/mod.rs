@@ -1,0 +1,9 @@
+//! Execution profiling: the paper's three-way decomposition of wall-clock
+//! time into **Computation**, **Communication** and **Barrier**
+//! (synchronization), per rank (Table I, Figs 3/5/6).
+
+pub mod components;
+pub mod timer;
+
+pub use components::Components;
+pub use timer::Stopwatch;

@@ -1,0 +1,52 @@
+//! A tiny stopwatch for attributing wall-clock to components.
+
+use std::time::{Duration, Instant};
+
+/// Measures consecutive phases: `lap()` returns the time since the last
+/// lap (or construction), so a step loop can do
+/// `integrate(); comp += sw.lap(); exchange(); comm += sw.lap();`.
+#[derive(Debug)]
+pub struct Stopwatch {
+    last: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self { last: Instant::now() }
+    }
+
+    #[inline]
+    pub fn lap(&mut self) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last;
+        self.last = now;
+        d
+    }
+
+    /// Discard time accumulated since the last lap.
+    #[inline]
+    pub fn reset(&mut self) {
+        self.last = Instant::now();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_are_disjoint() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(5));
+        let a = sw.lap();
+        let b = sw.lap();
+        assert!(a >= Duration::from_millis(4), "{a:?}");
+        assert!(b < a, "second lap {b:?} should be ~0");
+    }
+}

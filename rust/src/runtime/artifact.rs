@@ -1,0 +1,132 @@
+//! Artifact discovery: the AOT size ladder emitted by `python/compile/aot.py`.
+//!
+//! `make artifacts` writes `artifacts/lif_sfa_<n>.hlo.txt` for a ladder of
+//! population sizes; a rank population of size `n` runs on the smallest
+//! rung >= n, padded with inert neurons (zero input, v at rest — they can
+//! never cross threshold, see the padding tests in `runtime::backend`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone)]
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    /// Sorted ascending rung sizes.
+    sizes: Vec<u32>,
+}
+
+impl ArtifactRegistry {
+    /// Scan `dir` for `lif_sfa_<n>.hlo.txt` files.
+    pub fn scan(dir: &Path) -> Result<Self> {
+        let mut sizes = Vec::new();
+        let entries = std::fs::read_dir(dir)
+            .with_context(|| format!("artifacts dir {} (run `make artifacts`)", dir.display()))?;
+        for e in entries {
+            let name = e?.file_name();
+            let name = name.to_string_lossy();
+            if let Some(num) = name
+                .strip_prefix("lif_sfa_")
+                .and_then(|s| s.strip_suffix(".hlo.txt"))
+            {
+                if let Ok(n) = num.parse::<u32>() {
+                    sizes.push(n);
+                }
+            }
+        }
+        if sizes.is_empty() {
+            bail!(
+                "no lif_sfa_*.hlo.txt artifacts in {} — run `make artifacts`",
+                dir.display()
+            );
+        }
+        sizes.sort_unstable();
+        Ok(Self { dir: dir.to_path_buf(), sizes })
+    }
+
+    pub fn sizes(&self) -> &[u32] {
+        &self.sizes
+    }
+
+    /// Smallest rung that fits a population of `n`.
+    pub fn rung_for(&self, n: u32) -> Result<u32> {
+        match self.sizes.iter().find(|&&s| s >= n) {
+            Some(&s) => Ok(s),
+            None => bail!(
+                "population {n} exceeds the largest artifact rung {} — \
+                 re-run aot.py with a larger --sizes ladder",
+                self.sizes.last().unwrap()
+            ),
+        }
+    }
+
+    pub fn path_for_rung(&self, rung: u32) -> PathBuf {
+        self.dir.join(format!("lif_sfa_{rung}.hlo.txt"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_registry(sizes: &[u32]) -> (tempdir::TempDir, ArtifactRegistry) {
+        let td = tempdir::TempDir::new();
+        for s in sizes {
+            std::fs::write(td.path().join(format!("lif_sfa_{s}.hlo.txt")), "x").unwrap();
+        }
+        // decoys that must be ignored
+        std::fs::write(td.path().join("manifest.json"), "{}").unwrap();
+        std::fs::write(td.path().join("lif_sfa_bad.hlo.txt"), "x").unwrap();
+        let r = ArtifactRegistry::scan(td.path()).unwrap();
+        (td, r)
+    }
+
+    #[test]
+    fn scans_and_sorts() {
+        let (_td, r) = fake_registry(&[2048, 256, 8192]);
+        assert_eq!(r.sizes(), &[256, 2048, 8192]);
+    }
+
+    #[test]
+    fn rung_selection() {
+        let (_td, r) = fake_registry(&[256, 2048, 8192]);
+        assert_eq!(r.rung_for(1).unwrap(), 256);
+        assert_eq!(r.rung_for(256).unwrap(), 256);
+        assert_eq!(r.rung_for(257).unwrap(), 2048);
+        assert_eq!(r.rung_for(8192).unwrap(), 8192);
+        assert!(r.rung_for(8193).is_err());
+    }
+
+    #[test]
+    fn empty_dir_errors() {
+        let td = tempdir::TempDir::new();
+        assert!(ArtifactRegistry::scan(td.path()).is_err());
+    }
+
+    /// Minimal tempdir (std-only; the tempfile crate is unavailable).
+    mod tempdir {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+        pub struct TempDir(std::path::PathBuf);
+        impl TempDir {
+            pub fn new() -> Self {
+                let p = std::env::temp_dir().join(format!(
+                    "dpsnn-test-{}-{}",
+                    std::process::id(),
+                    COUNTER.fetch_add(1, Ordering::Relaxed)
+                ));
+                std::fs::create_dir_all(&p).unwrap();
+                Self(p)
+            }
+            pub fn path(&self) -> &std::path::Path {
+                &self.0
+            }
+        }
+        impl Drop for TempDir {
+            fn drop(&mut self) {
+                let _ = std::fs::remove_dir_all(&self.0);
+            }
+        }
+    }
+}

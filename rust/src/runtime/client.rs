@@ -1,0 +1,110 @@
+//! The PJRT CPU runtime: compile HLO-text artifacts once, execute them on
+//! the hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format (xla_extension 0.5.1 rejects
+//! jax>=0.5 serialized protos with 64-bit instruction ids).
+//!
+//! `PjRtClient` holds an `Rc` internally and is not `Send`; a live run
+//! with the Xla backend therefore constructs one `XlaRuntime` *per rank
+//! thread* (see `coordinator::live`).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::artifact::ArtifactRegistry;
+
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    registry: ArtifactRegistry,
+    /// Compiled executables keyed by rung size.
+    cache: HashMap<u32, Rc<xla::PjRtLoadedExecutable>>,
+}
+
+impl XlaRuntime {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let registry = ArtifactRegistry::scan(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, registry, cache: HashMap::new() })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    /// Compile (or fetch from cache) the executable for a population of
+    /// `n` neurons. Returns (rung size, executable).
+    pub fn executable_for(
+        &mut self,
+        n: u32,
+    ) -> Result<(u32, Rc<xla::PjRtLoadedExecutable>)> {
+        let rung = self.registry.rung_for(n)?;
+        if let Some(exe) = self.cache.get(&rung) {
+            return Ok((rung, exe.clone()));
+        }
+        let path = self.registry.path_for_rung(rung);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact rung {rung}"))?;
+        let exe = Rc::new(exe);
+        self.cache.insert(rung, exe.clone());
+        Ok((rung, exe))
+    }
+
+    /// Upload a host vector as a device buffer (f32, rank 1).
+    pub fn upload(&self, data: &[f32]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, &[data.len()], None)
+            .context("uploading buffer")
+    }
+
+    /// One population step through the packed-ABI artifact
+    /// (`aot.py` manifest v2, EXPERIMENTS.md §Perf):
+    ///
+    /// inputs  `params[8], state[3r] = v|w|rf, i_syn[r], i_ext[r], sfa[r]`
+    /// output  `packed[4r] = v|w|rf|spiked`, read with a single raw copy.
+    pub fn run_step_packed(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        params: &xla::PjRtBuffer,
+        state: &[f32],
+        i_syn: &[f32],
+        i_ext: &[f32],
+        sfa_inc: &xla::PjRtBuffer,
+        out: &mut [f32],
+    ) -> Result<()> {
+        debug_assert_eq!(state.len() * 4, out.len() * 3);
+        let bstate = self.upload(state)?;
+        let bisyn = self.upload(i_syn)?;
+        let biext = self.upload(i_ext)?;
+        let inputs: [&xla::PjRtBuffer; 5] = [params, &bstate, &bisyn, &biext, sfa_inc];
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&inputs)?;
+        // CopyRawToHost is unimplemented on the TFRT CPU client, so the
+        // packed array comes back through one literal (still a single
+        // copy and no tuple unwrapping).
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("reading packed step output")?;
+        let vals = lit.to_vec::<f32>()?;
+        anyhow::ensure!(
+            vals.len() == out.len(),
+            "packed output length {} != expected {}",
+            vals.len(),
+            out.len()
+        );
+        out.copy_from_slice(&vals);
+        Ok(())
+    }
+}

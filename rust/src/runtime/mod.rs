@@ -1,0 +1,14 @@
+//! PJRT runtime: load AOT-compiled JAX/Pallas artifacts (HLO text) and run
+//! them from the rust hot path, plus the pluggable neuron-dynamics backend
+//! abstraction (native rust vs XLA executable).
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! *only* consumer of its output.
+
+pub mod artifact;
+pub mod backend;
+pub mod client;
+
+pub use artifact::ArtifactRegistry;
+pub use backend::{make_backend, NativeBackend, NeuronBackend};
+pub use client::XlaRuntime;

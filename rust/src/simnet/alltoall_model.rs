@@ -1,0 +1,209 @@
+//! Timing model of the synchronous all-to-all spike exchange.
+//!
+//! Two additive regimes (calibration walk-through in DESIGN.md §8):
+//!
+//! * **per-rank software term** — each rank posts P-1 point-to-point
+//!   messages, intra-node pairs over the shared-memory transport,
+//!   inter-node pairs over the network: `Σ (α + cpu + bytes/β)`.
+//! * **fabric term** — all inter-node messages of the step cross the
+//!   switch/arbitration fabric: `n_msgs · fabric_msg_cost + bytes/bisection`.
+//!   This is the quadratic-in-P component that produces the paper's
+//!   latency wall (Fig 2's upturn past 32 processes, Table I's 91.7%
+//!   communication share at 256 processes).
+//!
+//! The model is deliberately homogeneous-workload: with the paper's
+//! homogeneous connection probability every rank sends the same payload
+//! to every other rank.
+
+use super::link::LinkModel;
+use super::presets::SHM;
+
+#[derive(Debug, Clone, Copy)]
+pub struct AllToAllModel {
+    /// Inter-node link (IB / ETH / ExaNeSt).
+    pub net: LinkModel,
+    /// Intra-node transport.
+    pub shm: LinkModel,
+    /// Ranks packed per node (paper Intel nodes: 16; Trenz: 4; Jetson: 8).
+    pub ranks_per_node: u32,
+}
+
+/// Per-step communication decomposition (seconds).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CommBreakdown {
+    /// Slowest rank's software send/receive time.
+    pub software: f64,
+    /// Fabric occupancy of the whole exchange.
+    pub fabric: f64,
+}
+
+impl CommBreakdown {
+    pub fn total(&self) -> f64 {
+        self.software + self.fabric
+    }
+}
+
+impl AllToAllModel {
+    pub fn new(net: LinkModel, ranks_per_node: u32) -> Self {
+        assert!(ranks_per_node >= 1);
+        Self { net, shm: SHM, ranks_per_node }
+    }
+
+    /// Number of nodes hosting `p` ranks.
+    pub fn nodes(&self, p: u32) -> u32 {
+        p.div_ceil(self.ranks_per_node)
+    }
+
+    /// Remote/local peer counts for one rank in a `p`-rank job.
+    fn peers(&self, p: u32) -> (u32, u32) {
+        let local = (self.ranks_per_node.min(p)) - 1;
+        let remote = p - 1 - local;
+        (remote, local)
+    }
+
+    /// Time for one all-to-all exchange where each rank sends
+    /// `bytes_per_msg` to each of the other p-1 ranks.
+    pub fn exchange_time(&self, p: u32, bytes_per_msg: u64) -> CommBreakdown {
+        if p <= 1 {
+            return CommBreakdown::default();
+        }
+        let (remote, local) = self.peers(p);
+        let software = remote as f64 * self.net.message_time(bytes_per_msg)
+            + local as f64 * self.shm.message_time(bytes_per_msg);
+        let internode_msgs = (p as u64) * (remote as u64);
+        let internode_bytes = internode_msgs * bytes_per_msg;
+        // bisection: half the node NICs' aggregate bandwidth
+        let bisection_bps = self.net.beta_bps * (self.nodes(p) as f64 / 2.0).max(1.0);
+        let fabric = internode_msgs as f64 * self.net.fabric_msg_cost_s
+            + internode_bytes as f64 / bisection_bps;
+        CommBreakdown { software, fabric }
+    }
+
+    /// Exchange limited to `peers` neighbor ranks (spatially-mapped
+    /// networks: the reduced process-adjacency matrix of the paper's
+    /// Fig 1 / [9]). Traffic stays neighbor-local, so the global fabric
+    /// term collapses to per-NIC serialization.
+    pub fn exchange_time_neighbors(
+        &self,
+        p: u32,
+        bytes_per_msg: u64,
+        peers: u32,
+    ) -> CommBreakdown {
+        if p <= 1 {
+            return CommBreakdown::default();
+        }
+        let peers = peers.min(p - 1);
+        let (remote_all, local_all) = self.peers(p);
+        let local = peers.min(local_all);
+        let remote = (peers - local).min(remote_all);
+        let software = remote as f64 * self.net.message_time(bytes_per_msg)
+            + local as f64 * self.shm.message_time(bytes_per_msg);
+        // per-NIC serialization: each node's port carries its ranks' msgs
+        let nic_msgs = (self.ranks_per_node.min(p) as u64) * remote as u64;
+        let fabric = nic_msgs as f64 * self.net.fabric_msg_cost_s
+            + (nic_msgs * bytes_per_msg) as f64 / self.net.beta_bps;
+        CommBreakdown { software, fabric }
+    }
+
+    /// Barrier cost: dissemination barrier over the slowest link class in
+    /// the job (log2 P rounds).
+    pub fn barrier_time(&self, p: u32) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let rounds = (p as f64).log2().ceil();
+        let link = if p <= self.ranks_per_node { &self.shm } else { &self.net };
+        rounds * (link.alpha_s + link.cpu_overhead_s)
+    }
+
+    /// Total messages per exchange (the paper: "increases with the square
+    /// of the number of processes").
+    pub fn total_messages(&self, p: u32) -> u64 {
+        p as u64 * (p as u64 - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::presets::{ETH1G, IB};
+
+    #[test]
+    fn single_rank_is_free() {
+        let m = AllToAllModel::new(IB, 16);
+        assert_eq!(m.exchange_time(1, 100).total(), 0.0);
+        assert_eq!(m.barrier_time(1), 0.0);
+    }
+
+    #[test]
+    fn message_count_is_quadratic() {
+        let m = AllToAllModel::new(IB, 16);
+        assert_eq!(m.total_messages(4), 12);
+        assert_eq!(m.total_messages(256), 256 * 255);
+    }
+
+    #[test]
+    fn latency_wall_grows_superlinearly() {
+        // Doubling P beyond one node must more than double comm time:
+        // the paper's latency wall.
+        let m = AllToAllModel::new(IB, 16);
+        let b = 25; // ~2 spikes/rank/step at the real-time point
+        let t32 = m.exchange_time(32, b).total();
+        let t64 = m.exchange_time(64, b).total();
+        let t256 = m.exchange_time(256, b).total();
+        assert!(t64 > 2.0 * t32, "t32={t32} t64={t64}");
+        assert!(t256 > 10.0 * t32, "t32={t32} t256={t256}");
+    }
+
+    #[test]
+    fn intra_node_jobs_avoid_the_fabric() {
+        let m = AllToAllModel::new(ETH1G, 16);
+        let t = m.exchange_time(8, 100);
+        assert_eq!(t.fabric, 0.0);
+        assert!(t.software > 0.0);
+    }
+
+    #[test]
+    fn eth_slower_than_ib_at_scale() {
+        let ib = AllToAllModel::new(IB, 16);
+        let eth = AllToAllModel::new(ETH1G, 16);
+        for p in [32u32, 64] {
+            assert!(
+                eth.exchange_time(p, 25).total() > 2.0 * ib.exchange_time(p, 25).total(),
+                "p={p}"
+            );
+        }
+    }
+
+    #[test]
+    fn paper_anchor_magnitudes() {
+        // DESIGN.md §8 sanity anchors, N20K@3.2 Hz (~2 spikes -> 25 B msgs):
+        // IB 32p ≈ 0.2-0.4 ms/step; IB 256p ≈ 15-30 ms/step.
+        let m = AllToAllModel::new(IB, 16);
+        let t32 = m.exchange_time(32, 25).total();
+        let t256 = m.exchange_time(256, 25).total();
+        assert!((1.5e-4..6e-4).contains(&t32), "t32={t32}");
+        assert!((1.0e-2..4.0e-2).contains(&t256), "t256={t256}");
+    }
+
+    #[test]
+    fn neighbor_exchange_scales_far_better() {
+        // the paper's point: spatial mapping removes the latency wall
+        let m = AllToAllModel::new(IB, 16);
+        let all = m.exchange_time(1024, 200).total();
+        let nbr = m.exchange_time_neighbors(1024, 200, 40).total();
+        assert!(nbr < all / 20.0, "all={all} nbr={nbr}");
+        // degenerate cases
+        assert_eq!(m.exchange_time_neighbors(1, 100, 8).total(), 0.0);
+        let small = m.exchange_time_neighbors(4, 100, 64);
+        assert!(small.total() > 0.0);
+    }
+
+    #[test]
+    fn barrier_is_logarithmic() {
+        let m = AllToAllModel::new(IB, 16);
+        // within the network regime (p > ranks_per_node) growth is log2
+        assert!(m.barrier_time(256) < 2.0 * m.barrier_time(32));
+        assert!(m.barrier_time(2) > 0.0);
+    }
+}

@@ -1,0 +1,76 @@
+//! Point-to-point link cost model (LogGP-flavoured).
+
+/// Cost parameters of one transport class.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    pub name: &'static str,
+    /// One-way small-message latency, seconds (the paper's bottleneck).
+    pub alpha_s: f64,
+    /// Asymptotic bandwidth, bytes/second.
+    pub beta_bps: f64,
+    /// Per-message CPU overhead on the sender (stack traversal), seconds.
+    pub cpu_overhead_s: f64,
+    /// Fabric-wide cost per in-flight message (switch/arbiter occupancy):
+    /// the term that makes P² small-message all-to-all collapse — the
+    /// paper's latency wall.
+    pub fabric_msg_cost_s: f64,
+    /// Active power drawn by one NIC/port while communicating, watts
+    /// (Table II: IB draws ~30 W less than ETH across a 2-node run).
+    pub nic_active_w: f64,
+}
+
+impl LinkModel {
+    /// Time for one message of `bytes` on this link.
+    #[inline]
+    pub fn message_time(&self, bytes: u64) -> f64 {
+        self.alpha_s + self.cpu_overhead_s + bytes as f64 / self.beta_bps
+    }
+
+    /// Latency-dominated regime check: is a message of `bytes` spending
+    /// most of its time in α rather than serialization?
+    pub fn latency_dominated(&self, bytes: u64) -> bool {
+        self.alpha_s > bytes as f64 / self.beta_bps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ib() -> LinkModel {
+        crate::simnet::presets::IB
+    }
+    fn eth() -> LinkModel {
+        crate::simnet::presets::ETH1G
+    }
+
+    #[test]
+    fn message_time_monotone_in_size() {
+        let l = ib();
+        assert!(l.message_time(10) < l.message_time(10_000));
+        assert!(l.message_time(0) >= l.alpha_s);
+    }
+
+    #[test]
+    fn spike_packets_are_latency_dominated() {
+        // the paper's 12-byte AER payloads x a few hundred spikes
+        for l in [ib(), eth()] {
+            assert!(
+                l.latency_dominated(12 * 200),
+                "{}: small spike packets must be latency-bound",
+                l.name
+            );
+        }
+    }
+
+    #[test]
+    fn eth_latency_dwarfs_ib() {
+        assert!(eth().alpha_s > 5.0 * ib().alpha_s);
+    }
+
+    #[test]
+    fn large_transfers_become_bandwidth_bound() {
+        let l = ib();
+        assert!(!l.latency_dominated(100 * 1024 * 1024));
+    }
+}

@@ -1,0 +1,16 @@
+//! Interconnect models — the substitution for the paper's physical
+//! fabrics (InfiniBand ConnectX, 1 Gb Ethernet; DESIGN.md §2).
+//!
+//! The paper's central observation is that spike exchange is
+//! *latency-dominated*: every rank sends P-1 small messages (12 B/spike)
+//! every simulated millisecond, so message count grows as P² while
+//! payloads shrink. A LogGP-style per-message cost `α + bytes/β` with
+//! per-NIC serialization reproduces exactly that wall.
+
+pub mod link;
+pub mod alltoall_model;
+pub mod presets;
+
+pub use alltoall_model::AllToAllModel;
+pub use link::LinkModel;
+pub use presets::interconnect_by_name;

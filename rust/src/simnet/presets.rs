@@ -1,0 +1,93 @@
+//! Named interconnect presets.
+//!
+//! α/β anchors are textbook values for the hardware classes the paper
+//! used; they are *not* fitted to the paper's tables — the tables are
+//! regenerated from these and the platform models (EXPERIMENTS.md
+//! records the residuals).
+
+use anyhow::{bail, Result};
+
+use super::link::LinkModel;
+
+/// InfiniBand ConnectX-class: RDMA small-message latency ~1.6 us,
+/// ~32 Gb/s effective, light CPU involvement.
+pub const IB: LinkModel = LinkModel {
+    name: "ib",
+    alpha_s: 3.2e-6,
+    beta_bps: 4.0e9,
+    cpu_overhead_s: 0.3e-6,
+    fabric_msg_cost_s: 0.4e-6,
+    nic_active_w: 4.0,
+};
+
+/// 1 Gb Ethernet through the kernel TCP stack (the clusters' "ETH" and
+/// the Trenz/Jetson GbE): tens of microseconds per small message.
+pub const ETH1G: LinkModel = LinkModel {
+    name: "eth1g",
+    alpha_s: 28.0e-6,
+    beta_bps: 0.117e9, // ~940 Mb/s effective
+    cpu_overhead_s: 4.0e-6,
+    fabric_msg_cost_s: 1.8e-6,
+    nic_active_w: 16.0,
+};
+
+/// Intra-node shared-memory transport (MPI shm BTL class).
+pub const SHM: LinkModel = LinkModel {
+    name: "shm",
+    alpha_s: 0.4e-6,
+    beta_bps: 8.0e9,
+    cpu_overhead_s: 0.1e-6,
+    fabric_msg_cost_s: 0.0,
+    nic_active_w: 0.0,
+};
+
+/// The ExaNeSt custom low-latency interconnect target (used by the
+/// what-if ablation in `examples/`): IB-class latency on an embedded
+/// fabric.
+pub const EXANEST: LinkModel = LinkModel {
+    name: "exanest",
+    alpha_s: 1.0e-6,
+    beta_bps: 1.25e9,
+    cpu_overhead_s: 0.3e-6,
+    fabric_msg_cost_s: 0.25e-6,
+    nic_active_w: 1.5,
+};
+
+pub fn interconnect_by_name(name: &str) -> Result<LinkModel> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "ib" | "infiniband" => IB,
+        "eth" | "eth1g" | "gbe" | "ethernet" => ETH1G,
+        "shm" => SHM,
+        "exanest" => EXANEST,
+        other => bail!("unknown interconnect {other:?} (ib|eth1g|shm|exanest)"),
+    })
+}
+
+pub fn all() -> Vec<LinkModel> {
+    vec![IB, ETH1G, SHM, EXANEST]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_alias() {
+        assert_eq!(interconnect_by_name("IB").unwrap().name, "ib");
+        assert_eq!(interconnect_by_name("gbe").unwrap().name, "eth1g");
+        assert!(interconnect_by_name("myrinet").is_err());
+    }
+
+    #[test]
+    fn ib_vs_eth_power_ordering() {
+        // Table II: IB draws measurably less power in operation than ETH.
+        assert!(IB.nic_active_w < ETH1G.nic_active_w);
+    }
+
+    #[test]
+    fn shm_is_fastest() {
+        for l in all() {
+            assert!(SHM.alpha_s <= l.alpha_s);
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Activity statistics: firing rates and brain-state regime detection
+//! (asynchronous awake-like vs slow-wave-activity-like dynamics).
+
+pub mod rates;
+pub mod regime;
+
+pub use rates::RateMonitor;
+pub use regime::{classify_regime, Regime};

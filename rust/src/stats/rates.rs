@@ -1,0 +1,121 @@
+//! Population firing-rate monitoring.
+
+/// Accumulates per-step population spike counts and derives rates.
+#[derive(Debug, Clone, Default)]
+pub struct RateMonitor {
+    pub n_neurons: u32,
+    pub dt_ms: f64,
+    /// Spikes per step, whole population.
+    pub counts: Vec<u32>,
+}
+
+impl RateMonitor {
+    pub fn new(n_neurons: u32, dt_ms: f64) -> Self {
+        Self { n_neurons, dt_ms, counts: Vec::new() }
+    }
+
+    pub fn record(&mut self, spikes_this_step: u32) {
+        self.counts.push(spikes_this_step);
+    }
+
+    pub fn steps(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Mean rate over [from, to) steps, Hz.
+    pub fn mean_rate_hz_in(&self, from: usize, to: usize) -> f64 {
+        let to = to.min(self.counts.len());
+        if from >= to || self.n_neurons == 0 {
+            return 0.0;
+        }
+        let spikes: u64 = self.counts[from..to].iter().map(|&c| c as u64).sum();
+        let secs = (to - from) as f64 * self.dt_ms * 1e-3;
+        spikes as f64 / self.n_neurons as f64 / secs
+    }
+
+    /// Whole-run mean rate, Hz.
+    pub fn mean_rate_hz(&self) -> f64 {
+        self.mean_rate_hz_in(0, self.counts.len())
+    }
+
+    /// Rate after discarding an initial transient, Hz.
+    pub fn steady_rate_hz(&self, skip_steps: usize) -> f64 {
+        self.mean_rate_hz_in(skip_steps, self.counts.len())
+    }
+
+    /// Instantaneous population rate series (Hz), binned at `bin` steps.
+    pub fn rate_series_hz(&self, bin: usize) -> Vec<f64> {
+        assert!(bin >= 1);
+        self.counts
+            .chunks(bin)
+            .map(|c| {
+                let spikes: u64 = c.iter().map(|&x| x as u64).sum();
+                let secs = c.len() as f64 * self.dt_ms * 1e-3;
+                spikes as f64 / self.n_neurons as f64 / secs
+            })
+            .collect()
+    }
+
+    /// Coefficient of variation of the binned rate series — low for
+    /// asynchronous regimes, high for slow oscillations.
+    pub fn rate_cv(&self, bin: usize, skip_steps: usize) -> f64 {
+        let series: Vec<f64> = self
+            .counts
+            .iter()
+            .skip(skip_steps)
+            .copied()
+            .collect::<Vec<u32>>()
+            .chunks(bin)
+            .map(|c| c.iter().map(|&x| x as f64).sum::<f64>() / c.len() as f64)
+            .collect();
+        if series.len() < 2 {
+            return 0.0;
+        }
+        let mean = series.iter().sum::<f64>() / series.len() as f64;
+        if mean <= 0.0 {
+            return 0.0;
+        }
+        let var = series.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / series.len() as f64;
+        var.sqrt() / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_rate() {
+        let mut m = RateMonitor::new(1000, 1.0);
+        for _ in 0..1000 {
+            m.record(5); // 5 spikes/ms over 1000 neurons = 5 Hz
+        }
+        assert!((m.mean_rate_hz() - 5.0).abs() < 1e-9);
+        assert!((m.steady_rate_hz(500) - 5.0).abs() < 1e-9);
+        assert!(m.rate_cv(50, 0) < 1e-9);
+    }
+
+    #[test]
+    fn oscillating_rate_has_high_cv() {
+        let mut m = RateMonitor::new(1000, 1.0);
+        for t in 0..2000usize {
+            // up/down states: 250 ms at 12 Hz, 250 ms near-silent
+            let up = (t / 250) % 2 == 0;
+            m.record(if up { 12 } else { 0 });
+        }
+        assert!(m.rate_cv(50, 0) > 0.8);
+        assert!((m.mean_rate_hz() - 6.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn binned_series() {
+        let mut m = RateMonitor::new(100, 1.0);
+        for _ in 0..100 {
+            m.record(1);
+        }
+        let s = m.rate_series_hz(10);
+        assert_eq!(s.len(), 10);
+        assert!((s[0] - 10.0).abs() < 1e-9); // 1 spike/ms over 100 = 10 Hz
+    }
+}

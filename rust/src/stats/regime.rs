@@ -1,0 +1,71 @@
+//! Brain-state regime classification.
+//!
+//! The paper's network "is able to enter both an asynchronous awake-like
+//! regime and a deep-sleep-like slow wave activity, by tuning the values
+//! of SFA and stimulation". We classify a run from its binned population
+//! rate: slow-wave activity alternates high-rate Up states with
+//! near-silent Down states (strongly bimodal, high CV), the awake
+//! asynchronous-irregular regime holds a steady rate (low CV).
+
+use super::rates::RateMonitor;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Regime {
+    /// Asynchronous awake-like: steady irregular firing.
+    AsynchronousAwake,
+    /// Slow-wave-activity-like: Up/Down state alternation.
+    SlowWave,
+    /// Not enough activity to classify.
+    Quiescent,
+}
+
+/// Classify from the rate monitor, discarding `skip_steps` of transient.
+/// `bin` should be ~25–50 ms to resolve Up/Down states.
+pub fn classify_regime(m: &RateMonitor, bin: usize, skip_steps: usize) -> Regime {
+    let rate = m.steady_rate_hz(skip_steps);
+    if rate < 0.2 {
+        return Regime::Quiescent;
+    }
+    let cv = m.rate_cv(bin, skip_steps);
+    // Down states push whole bins near zero => CV well above Poisson noise.
+    if cv > 0.75 {
+        Regime::SlowWave
+    } else {
+        Regime::AsynchronousAwake
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classifies_steady_as_awake() {
+        let mut m = RateMonitor::new(1000, 1.0);
+        let mut r = crate::util::rng::SplitMix64::new(1);
+        for _ in 0..3000 {
+            m.record(r.next_poisson(3.2)); // ~3.2 Hz steady
+        }
+        assert_eq!(classify_regime(&m, 50, 500), Regime::AsynchronousAwake);
+    }
+
+    #[test]
+    fn classifies_updown_as_slow_wave() {
+        let mut m = RateMonitor::new(1000, 1.0);
+        let mut r = crate::util::rng::SplitMix64::new(2);
+        for t in 0..3000usize {
+            let up = (t / 300) % 2 == 0;
+            m.record(if up { r.next_poisson(10.0) } else { r.next_poisson(0.1) });
+        }
+        assert_eq!(classify_regime(&m, 50, 500), Regime::SlowWave);
+    }
+
+    #[test]
+    fn classifies_silence_as_quiescent() {
+        let mut m = RateMonitor::new(1000, 1.0);
+        for _ in 0..1000 {
+            m.record(0);
+        }
+        assert_eq!(classify_regime(&m, 50, 0), Regime::Quiescent);
+    }
+}

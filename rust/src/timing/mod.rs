@@ -1,0 +1,7 @@
+//! Discrete-event timing replay: workload trace × platform × interconnect
+//! → wall-clock and the comp/comm/barrier decomposition (the modeled-mode
+//! substitution for running on the paper's clusters).
+
+pub mod replay;
+
+pub use replay::{ModelRun, ModeledOutcome};

@@ -1,0 +1,279 @@
+//! The timing replay engine (cost equations in DESIGN.md §8).
+//!
+//! Per 1 ms network step, for each rank:
+//!
+//! ```text
+//! T_comp(r) = [ C_nrn·N_r  +  ws·cont·C_syn·SynEv_r  +  cont·C_ext·ExtEv_r
+//!               + C_spk·Spikes_step ] / speed(r)
+//! T_comm    = all-to-all software + fabric terms (simnet)
+//! T_barrier = dissemination + skew (fractions of comp and comm)
+//! T_step    = T_comp + T_comm + T_barrier
+//! ```
+//!
+//! Three second-order effects are required to reproduce the paper's own
+//! numbers and are calibrated against them (residuals in EXPERIMENTS.md):
+//!
+//! * **memory contention** (`cont`): ranks sharing a node compete for
+//!   memory bandwidth on the random-access synapse walks; visible in
+//!   Table II where 16 cores run *slower* than 8 on one node.
+//! * **working-set factor** (`ws`): when a rank's synapse lists exceed
+//!   the LLC, every synaptic event is a DRAM miss; this is why the 1280K
+//!   network runs ~3.5× slower per event than the 20480N one (Table I,
+//!   4-process column).
+//! * **per-spike overhead** (`C_spk`): every rank touches every network
+//!   spike (AER decode + source-row lookup) regardless of P — the
+//!   non-scaling component that keeps large-network computation shares
+//!   high at 256 processes (Table I: 1280KN still 50% computation).
+
+use crate::platform::hetero::HeteroCluster;
+use crate::profiling::components::Components;
+use crate::simnet::alltoall_model::AllToAllModel;
+use crate::trace::workload::WorkloadTrace;
+
+/// Per-spike fixed overhead (decode + row lookup) at Westmere speed, s.
+const SPIKE_OVERHEAD_S: f64 = 3.0e-6;
+/// Cache level the per-rank target accumulator must fit in for the
+/// calibrated synaptic-event rate to hold (bytes, ~L2).
+const TARGET_CACHE_BYTES: f64 = 131_072.0;
+
+/// A modeled execution: cluster (possibly heterogeneous) + interconnect.
+#[derive(Debug, Clone)]
+pub struct ModelRun {
+    pub cluster: HeteroCluster,
+    pub comm: AllToAllModel,
+    /// When set, spikes travel only to this many neighbor ranks
+    /// (spatially-mapped connectivity, Fig 1); None = all-to-all.
+    pub peers: Option<u32>,
+}
+
+/// Replay result.
+#[derive(Debug, Clone)]
+pub struct ModeledOutcome {
+    pub wall_s: f64,
+    pub components: Components,
+    /// Computation fraction of wall-clock (drives the power model).
+    pub utilization: f64,
+    pub procs: u32,
+    pub total_spikes: u64,
+    pub total_syn_events: u64,
+    pub mean_rate_hz: f64,
+}
+
+impl ModelRun {
+    pub fn new(cluster: HeteroCluster, comm: AllToAllModel) -> Self {
+        Self { cluster, comm, peers: None }
+    }
+
+    /// Neighbor-limited variant (spatially-mapped networks).
+    pub fn with_peers(mut self, peers: u32) -> Self {
+        self.peers = Some(peers);
+        self
+    }
+
+    /// Memory-contention multiplier for `k` ranks sharing a node.
+    /// Calibrated on Table II, where 16 cores on one node run *slower*
+    /// than 8 (25.3 s -> 26.1 s): quadratic beyond the 4 cores a socket's
+    /// memory channels feed comfortably.
+    fn contention(&self, p: u32) -> f64 {
+        let k = p.min(self.comm.ranks_per_node);
+        1.0 + 0.012 * (k.saturating_sub(4) as f64).powi(2)
+    }
+
+    /// Working-set multiplier: the synaptic-delivery loop random-writes a
+    /// per-rank target accumulator of 4*N_r bytes; once it spills the L2
+    /// every event is a cache miss. Calibrated on Table I's 4-process
+    /// column (event cost grows ~2.2x from 20480N to 320KN and again to
+    /// 1280KN).
+    fn working_set(&self, n_local: f64) -> f64 {
+        let bytes = n_local * 4.0;
+        1.0 + 0.9 * (bytes / TARGET_CACHE_BYTES).max(1.0).log2()
+    }
+
+    /// Replay a workload trace through the cost model.
+    pub fn replay(&self, trace: &WorkloadTrace) -> ModeledOutcome {
+        let p = trace.procs;
+        assert_eq!(
+            p,
+            self.cluster.total_ranks(),
+            "trace procs must match cluster ranks"
+        );
+        let weights = self.cluster.weights();
+        let wsum: f64 = weights.iter().sum();
+        let n = trace.n_neurons as f64;
+
+        let cont = self.contention(p);
+        let mut comp_s = 0.0;
+        let mut comm_s = 0.0;
+        let mut barrier_s = 0.0;
+        let mut total_syn_events = 0u64;
+
+        for step in 0..trace.steps() {
+            let step_syn_events = trace.syn_events(step) as f64;
+            total_syn_events += trace.syn_events(step);
+            // With neighbor-limited traffic a rank only sees the spikes
+            // of its peer group.
+            let recv_frac = match self.peers {
+                Some(k) if p > 1 => (k.min(p - 1) as f64) / (p - 1) as f64,
+                _ => 1.0,
+            };
+            let step_spikes: f64 =
+                trace.mean_rank_spikes(step) * p as f64 * recv_frac;
+
+            // Slowest rank's computation this step (weighted shares
+            // equalize the scalable part in hetero jobs; the per-spike
+            // overhead is identical on every rank).
+            let mut comp_max = 0.0f64;
+            for (r, w) in weights.iter().enumerate() {
+                let share = w / wsum;
+                let ws = self.working_set(n * share);
+                let core = self.cluster.core_of(r as u32);
+                let speed = core.speed_vs_westmere();
+                let t = core.comp_time(
+                    n * share,
+                    step_syn_events * share * ws * cont,
+                    n * trace.ext_events_per_neuron_step * share * cont,
+                ) + step_spikes * SPIKE_OVERHEAD_S / speed;
+                comp_max = comp_max.max(t);
+            }
+
+            // Communication: mean per-message payload this step.
+            let bytes = (trace.mean_rank_spikes(step)
+                * crate::comm::aer::SPIKE_WIRE_BYTES as f64)
+                .round() as u64;
+            let exch = match self.peers {
+                Some(k) => self.comm.exchange_time_neighbors(p, bytes, k),
+                None => self.comm.exchange_time(p, bytes),
+            };
+            let comm = exch.total();
+
+            comp_s += comp_max;
+            comm_s += comm;
+            // Barrier: dissemination rounds + arrival skew (OS jitter on
+            // computation, software skew on the collective).
+            barrier_s += self.comm.barrier_time(p) + 0.01 * comp_max + 0.05 * comm;
+        }
+
+        let wall_s = comp_s + comm_s + barrier_s;
+        let components = Components {
+            computation: comp_s,
+            communication: comm_s,
+            barrier: barrier_s,
+        };
+        ModeledOutcome {
+            wall_s,
+            components,
+            utilization: if wall_s > 0.0 { comp_s / wall_s } else { 0.0 },
+            procs: p,
+            total_spikes: trace.total_spikes(),
+            total_syn_events,
+            mean_rate_hz: trace.mean_rate_hz(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetworkParams;
+    use crate::platform::presets::{WESTMERE, XEON_E5_2630V2};
+    use crate::simnet::presets::IB;
+    use crate::trace::analytic::AnalyticWorkload;
+
+    fn outcome(
+        net: NetworkParams,
+        core: crate::platform::CoreModel,
+        p: u32,
+    ) -> ModeledOutcome {
+        let w = AnalyticWorkload::paper_regime(net, 5);
+        let trace = w.generate(p, 10.0);
+        let run = ModelRun::new(
+            HeteroCluster::homogeneous(core, p, 16),
+            AllToAllModel::new(IB, 16),
+        );
+        run.replay(&trace)
+    }
+
+    #[test]
+    fn one_westmere_core_near_table2_row1() {
+        let o = outcome(NetworkParams::paper_20480(), WESTMERE, 1);
+        assert!(
+            (o.wall_s - 150.9).abs() / 150.9 < 0.20,
+            "wall {}, Table II says 150.9",
+            o.wall_s
+        );
+        let (comp, _, _) = o.components.fractions();
+        assert!(comp > 0.97, "single rank is computation-only, comp={comp}");
+    }
+
+    #[test]
+    fn fig2_shape_minimum_near_32_procs() {
+        // 20480N on the Xeon cluster: fastest at ~32 procs, slower at 256.
+        let net = NetworkParams::paper_20480;
+        let walls: Vec<(u32, f64)> = [1u32, 4, 8, 16, 32, 64, 128, 256]
+            .iter()
+            .map(|&p| (p, outcome(net(), XEON_E5_2630V2, p).wall_s))
+            .collect();
+        let best = walls
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        assert!(
+            [16, 32, 64].contains(&best.0),
+            "minimum at P={} ({walls:?})",
+            best.0
+        );
+        let w32 = walls.iter().find(|x| x.0 == 32).unwrap().1;
+        let w256 = walls.iter().find(|x| x.0 == 256).unwrap().1;
+        // real-time-ish at 32 (paper: 9.15 s), blown up at 256 (paper: 237 s)
+        assert!(w32 < 15.0, "w32={w32}");
+        assert!(w256 > 5.0 * w32, "w256={w256} w32={w32}");
+    }
+
+    #[test]
+    fn table1_walls_within_2x_of_paper() {
+        // Wall-clock anchors from Table I (xeon cluster, IB).
+        let cases: &[(fn() -> NetworkParams, u32, f64)] = &[
+            (NetworkParams::paper_20480, 4, 31.5),
+            (NetworkParams::paper_20480, 32, 9.15),
+            (NetworkParams::paper_20480, 256, 237.0),
+            (NetworkParams::paper_320k, 4, 893.0),
+            (NetworkParams::paper_320k, 256, 441.0),
+            (NetworkParams::paper_1280k, 4, 4341.0),
+            (NetworkParams::paper_1280k, 256, 561.0),
+        ];
+        for (net, p, paper_wall) in cases {
+            let o = outcome(net(), XEON_E5_2630V2, *p);
+            let ratio = o.wall_s / paper_wall;
+            assert!(
+                (0.4..2.5).contains(&ratio),
+                "net {} procs {p}: modeled {:.1}s vs paper {paper_wall}s",
+                net().n_neurons,
+                o.wall_s
+            );
+        }
+    }
+
+    #[test]
+    fn comm_share_rises_with_p() {
+        let net = NetworkParams::paper_20480;
+        let c4 = outcome(net(), XEON_E5_2630V2, 4).components.fractions();
+        let c256 = outcome(net(), XEON_E5_2630V2, 256).components.fractions();
+        assert!(c4.0 > 0.9, "4 procs computation-dominated: {c4:?}");
+        assert!(c256.1 > 0.7, "256 procs communication-dominated: {c256:?}");
+    }
+
+    #[test]
+    fn big_networks_keep_scaling_longer() {
+        // Table I shape: at 256 procs the computation share grows with
+        // network size (6.6% / 21.7% / 50% in the paper).
+        let f = |net: NetworkParams| outcome(net, XEON_E5_2630V2, 256).components.fractions().0;
+        let c20k = f(NetworkParams::paper_20480());
+        let c320k = f(NetworkParams::paper_320k());
+        let c1280k = f(NetworkParams::paper_1280k());
+        assert!(
+            c20k < c320k && c320k < c1280k,
+            "comp shares must rise with size: {c20k:.3} {c320k:.3} {c1280k:.3}"
+        );
+        assert!(c1280k > 0.25, "1280K@256 comp share {c1280k}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Workload traces: per-step spike/byte statistics that drive the modeled
+//! timing and power replay. Traces come from two sources:
+//!
+//! * **recorded** — a live run writes its actual per-step spike counts;
+//! * **analytic** — for configurations too big to run live (the paper's
+//!   320K/1280K networks, 256-process jobs, Fig 1's billions of
+//!   synapses), generated from the network's statistical description.
+
+pub mod workload;
+pub mod analytic;
+
+pub use analytic::AnalyticWorkload;
+pub use workload::WorkloadTrace;

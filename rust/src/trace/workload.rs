@@ -1,0 +1,242 @@
+//! The workload trace format.
+//!
+//! With the paper's homogeneous connectivity, one number per (step, rank)
+//! — the spike count — determines the whole communication matrix of that
+//! step (every rank broadcasts its spikes to all others at 12 B each),
+//! and with the per-neuron statistics it determines the computation load.
+
+use anyhow::{bail, Result};
+
+use crate::comm::aer::SPIKE_WIRE_BYTES;
+
+/// Per-step, per-rank spike counts plus run-level metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadTrace {
+    pub n_neurons: u32,
+    pub syn_per_neuron: u32,
+    pub ext_events_per_neuron_step: f64,
+    pub dt_ms: f64,
+    pub procs: u32,
+    /// spikes[step][rank]
+    pub spikes: Vec<Vec<u32>>,
+}
+
+impl WorkloadTrace {
+    pub fn steps(&self) -> u32 {
+        self.spikes.len() as u32
+    }
+
+    pub fn sim_seconds(&self) -> f64 {
+        self.steps() as f64 * self.dt_ms * 1e-3
+    }
+
+    pub fn total_spikes(&self) -> u64 {
+        self.spikes
+            .iter()
+            .map(|row| row.iter().map(|&s| s as u64).sum::<u64>())
+            .sum()
+    }
+
+    /// Mean firing rate over the run (Hz).
+    pub fn mean_rate_hz(&self) -> f64 {
+        if self.steps() == 0 {
+            return 0.0;
+        }
+        self.total_spikes() as f64 / self.n_neurons as f64 / self.sim_seconds()
+    }
+
+    /// Spikes of the busiest rank at `step` (drives the comp-imbalance
+    /// barrier term).
+    pub fn max_rank_spikes(&self, step: u32) -> u32 {
+        *self.spikes[step as usize].iter().max().unwrap_or(&0)
+    }
+
+    /// Mean per-rank spikes at `step`.
+    pub fn mean_rank_spikes(&self, step: u32) -> f64 {
+        let row = &self.spikes[step as usize];
+        if row.is_empty() {
+            return 0.0;
+        }
+        row.iter().map(|&s| s as f64).sum::<f64>() / row.len() as f64
+    }
+
+    /// Wire bytes rank `r` sends to each other rank at `step`.
+    pub fn bytes_per_msg(&self, step: u32, r: u32) -> u64 {
+        self.spikes[step as usize][r as usize] as u64 * SPIKE_WIRE_BYTES as u64
+    }
+
+    /// Total recurrent synaptic events triggered by step `step`
+    /// (every spike fans out to syn_per_neuron targets network-wide).
+    pub fn syn_events(&self, step: u32) -> u64 {
+        self.spikes[step as usize]
+            .iter()
+            .map(|&s| s as u64 * self.syn_per_neuron as u64)
+            .sum()
+    }
+
+    /// Serialize to a simple CSV: one metadata header line, then one line
+    /// per step with per-rank spike counts.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        let mut s = format!(
+            "# dpsnn-trace v1 neurons={} syn_per_neuron={} ext={} dt_ms={} procs={}\n",
+            self.n_neurons,
+            self.syn_per_neuron,
+            self.ext_events_per_neuron_step,
+            self.dt_ms,
+            self.procs
+        );
+        for row in &self.spikes {
+            let line: Vec<String> = row.iter().map(|c| c.to_string()).collect();
+            s.push_str(&line.join(","));
+            s.push('\n');
+        }
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, s)?;
+        Ok(())
+    }
+
+    /// Load a trace written by [`WorkloadTrace::save`].
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let mut lines = text.lines();
+        let header = lines.next().ok_or_else(|| anyhow::anyhow!("empty trace"))?;
+        if !header.starts_with("# dpsnn-trace v1") {
+            bail!("not a dpsnn trace file: {header:?}");
+        }
+        let field = |name: &str| -> Result<f64> {
+            header
+                .split_whitespace()
+                .find_map(|tok| tok.strip_prefix(&format!("{name}=")))
+                .ok_or_else(|| anyhow::anyhow!("missing {name} in trace header"))?
+                .parse::<f64>()
+                .map_err(Into::into)
+        };
+        let mut trace = WorkloadTrace {
+            n_neurons: field("neurons")? as u32,
+            syn_per_neuron: field("syn_per_neuron")? as u32,
+            ext_events_per_neuron_step: field("ext")?,
+            dt_ms: field("dt_ms")?,
+            procs: field("procs")? as u32,
+            spikes: Vec::new(),
+        };
+        for (i, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let row: Result<Vec<u32>, _> =
+                line.split(',').map(|c| c.trim().parse::<u32>()).collect();
+            let row = row.map_err(|e| anyhow::anyhow!("trace line {}: {e}", i + 2))?;
+            if row.len() != trace.procs as usize {
+                bail!("trace line {}: {} cells, expected {}", i + 2, row.len(), trace.procs);
+            }
+            trace.spikes.push(row);
+        }
+        Ok(trace)
+    }
+
+    /// Re-bin a trace onto a different process count, preserving per-step
+    /// totals (used to replay a recorded trace at other P, exploiting the
+    /// partition-independence of the network itself).
+    pub fn rebin(&self, procs: u32) -> Result<WorkloadTrace> {
+        if procs == 0 || procs > self.n_neurons {
+            bail!("cannot rebin onto {procs} ranks");
+        }
+        let mut out = WorkloadTrace {
+            n_neurons: self.n_neurons,
+            syn_per_neuron: self.syn_per_neuron,
+            ext_events_per_neuron_step: self.ext_events_per_neuron_step,
+            dt_ms: self.dt_ms,
+            procs,
+            spikes: Vec::with_capacity(self.spikes.len()),
+        };
+        for row in &self.spikes {
+            let total: u64 = row.iter().map(|&s| s as u64).sum();
+            // spread evenly (the network is homogeneous); remainder to
+            // the first ranks
+            let base = (total / procs as u64) as u32;
+            let rem = (total % procs as u64) as u32;
+            let mut new_row = vec![base; procs as usize];
+            for slot in new_row.iter_mut().take(rem as usize) {
+                *slot += 1;
+            }
+            out.spikes.push(new_row);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace() -> WorkloadTrace {
+        WorkloadTrace {
+            n_neurons: 1000,
+            syn_per_neuron: 100,
+            ext_events_per_neuron_step: 1.2,
+            dt_ms: 1.0,
+            procs: 4,
+            spikes: vec![vec![1, 2, 3, 4], vec![0, 0, 0, 0], vec![5, 5, 5, 5]],
+        }
+    }
+
+    #[test]
+    fn totals_and_rate() {
+        let t = trace();
+        assert_eq!(t.total_spikes(), 30);
+        assert_eq!(t.steps(), 3);
+        // 30 spikes / 1000 neurons / 0.003 s = 10 Hz
+        assert!((t.mean_rate_hz() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_step_views() {
+        let t = trace();
+        assert_eq!(t.max_rank_spikes(0), 4);
+        assert_eq!(t.mean_rank_spikes(2), 5.0);
+        assert_eq!(t.bytes_per_msg(0, 3), 48);
+        assert_eq!(t.syn_events(0), 1000);
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let t = trace();
+        let path = std::env::temp_dir().join(format!(
+            "dpsnn-trace-test-{}.csv",
+            std::process::id()
+        ));
+        t.save(&path).unwrap();
+        let back = WorkloadTrace::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = std::env::temp_dir().join(format!(
+            "dpsnn-trace-bad-{}.csv",
+            std::process::id()
+        ));
+        std::fs::write(&path, "not a trace\n1,2\n").unwrap();
+        assert!(WorkloadTrace::load(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rebin_preserves_totals() {
+        let t = trace();
+        for p in [1u32, 2, 8, 40] {
+            let r = t.rebin(p).unwrap();
+            assert_eq!(r.procs, p);
+            for s in 0..t.steps() {
+                let a: u64 = t.spikes[s as usize].iter().map(|&x| x as u64).sum();
+                let b: u64 = r.spikes[s as usize].iter().map(|&x| x as u64).sum();
+                assert_eq!(a, b, "step {s} p {p}");
+            }
+        }
+        assert!(t.rebin(0).is_err());
+        assert!(t.rebin(2000).is_err());
+    }
+}

@@ -1,0 +1,154 @@
+//! Criterion-style micro-benchmark harness (criterion is unavailable
+//! offline). Provides warmup, calibrated iteration counts, and robust
+//! statistics; used by the `benches/` targets (`harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Result statistics for one benchmark case (all values in seconds/iter).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: u64,
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub p95: f64,
+    pub stddev: f64,
+    /// Optional throughput denominator (elements processed per iteration).
+    pub elements: Option<f64>,
+}
+
+impl Stats {
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements.map(|e| e / self.mean)
+    }
+
+    pub fn report_line(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e9 => format!("  {:8.2} Gelem/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("  {:8.2} Melem/s", t / 1e6),
+            Some(t) => format!("  {:8.2} elem/s", t),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12}/iter  (median {}, min {}, p95 {}, sd {:.1}%, n={}){}",
+            self.name,
+            crate::util::units::fmt_seconds(self.mean),
+            crate::util::units::fmt_seconds(self.median),
+            crate::util::units::fmt_seconds(self.min),
+            crate::util::units::fmt_seconds(self.p95),
+            if self.mean > 0.0 { 100.0 * self.stddev / self.mean } else { 0.0 },
+            self.iters,
+            tp
+        )
+    }
+}
+
+/// A benchmark runner with a fixed time budget per case.
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_samples: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_millis(1500),
+            max_samples: 2000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn fast() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            max_samples: 200,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run `f` repeatedly; `f` should perform one logical iteration and
+    /// return a value that is consumed with `black_box`.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &Stats {
+        self.bench_with_elements(name, None, &mut f)
+    }
+
+    /// Same, reporting throughput as `elements / iter_time`.
+    pub fn bench_elems<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        elements: f64,
+        mut f: F,
+    ) -> &Stats {
+        self.bench_with_elements(name, Some(elements), &mut f)
+    }
+
+    fn bench_with_elements<T>(
+        &mut self,
+        name: &str,
+        elements: Option<f64>,
+        f: &mut dyn FnMut() -> T,
+    ) -> &Stats {
+        // Warmup + estimate per-iter cost.
+        let wstart = Instant::now();
+        let mut wcount = 0u64;
+        while wstart.elapsed() < self.warmup || wcount == 0 {
+            black_box(f());
+            wcount += 1;
+        }
+        let per_iter = wstart.elapsed().as_secs_f64() / wcount as f64;
+
+        // Batch iterations so each timed sample is >= ~50us.
+        let batch = (5e-5 / per_iter.max(1e-12)).ceil().max(1.0) as u64;
+        let mut samples: Vec<f64> = Vec::new();
+        let mstart = Instant::now();
+        while mstart.elapsed() < self.measure && samples.len() < self.max_samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            samples.push(t0.elapsed().as_secs_f64() / batch as f64);
+        }
+
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let median = samples[n / 2];
+        let min = samples[0];
+        let p95 = samples[((n as f64 * 0.95) as usize).min(n - 1)];
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+        let stats = Stats {
+            name: name.to_string(),
+            iters: n as u64 * batch,
+            mean,
+            median,
+            min,
+            p95,
+            stddev: var.sqrt(),
+            elements,
+        };
+        println!("{}", stats.report_line());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline(always)]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

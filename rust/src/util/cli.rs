@@ -1,0 +1,147 @@
+//! Minimal command-line parser (clap is unavailable offline).
+//!
+//! Grammar: `prog <subcommand> [positional...] [--key value | --flag]`.
+//! Values may also be attached as `--key=value`.
+
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed option with default.
+    pub fn get_or<T: FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow!("invalid value for --{key}: {v:?} ({e})")),
+        }
+    }
+
+    /// Typed required option.
+    pub fn require<T: FromStr>(&self, key: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let v = self
+            .options
+            .get(key)
+            .with_context(|| format!("missing required option --{key}"))?;
+        v.parse::<T>()
+            .map_err(|e| anyhow!("invalid value for --{key}: {v:?} ({e})"))
+    }
+
+    /// Reject unknown options/flags (catch typos early).
+    pub fn check_known(&self, known_opts: &[&str], known_flags: &[&str]) -> Result<()> {
+        for k in self.options.keys() {
+            if !known_opts.contains(&k.as_str()) {
+                bail!("unknown option --{k} (known: {})", known_opts.join(", "));
+            }
+        }
+        for f in &self.flags {
+            if !known_flags.contains(&f.as_str()) {
+                bail!("unknown flag --{f} (known: {})", known_flags.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("run net.toml --procs 8 --backend native --verbose");
+        assert_eq!(a.subcommand(), Some("run"));
+        assert_eq!(a.positional, vec!["run", "net.toml"]);
+        assert_eq!(a.get("procs"), Some("8"));
+        assert_eq!(a.get("backend"), Some("native"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("repro fig2 --procs=32");
+        assert_eq!(a.get_or("procs", 0u32).unwrap(), 32);
+    }
+
+    #[test]
+    fn typed_defaults_and_errors() {
+        let a = parse("x --n 10");
+        assert_eq!(a.get_or("n", 5u32).unwrap(), 10);
+        assert_eq!(a.get_or("m", 5u32).unwrap(), 5);
+        assert!(a.require::<u32>("missing").is_err());
+        let b = parse("x --n ten");
+        assert!(b.get_or("n", 5u32).is_err());
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_value() {
+        let a = parse("x --fast --n 3");
+        assert!(a.has_flag("fast"));
+        assert_eq!(a.get_or("n", 0u32).unwrap(), 3);
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        let a = parse("x --typo 1");
+        assert!(a.check_known(&["n"], &[]).is_err());
+        assert!(a.check_known(&["typo"], &[]).is_ok());
+    }
+}

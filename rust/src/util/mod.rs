@@ -1,0 +1,14 @@
+//! Self-contained utilities.
+//!
+//! The build environment is offline and only the `xla` crate's dependency
+//! closure is available, so the pieces a crate would normally pull from
+//! crates.io (CLI parsing, config parsing, RNG, bench/property harnesses)
+//! are implemented here.
+
+pub mod rng;
+pub mod units;
+pub mod cli;
+pub mod tomlmini;
+pub mod bench;
+pub mod prop;
+pub mod table;

@@ -1,0 +1,76 @@
+//! Tiny property-based testing harness (proptest is unavailable offline).
+//!
+//! A property is a closure over a seeded [`SplitMix64`]; the harness runs
+//! it for many seeds and, on failure, reports the offending seed so the
+//! case can be replayed deterministically:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't get the xla rpath in this image)
+//! use dpsnn::util::prop::forall;
+//! forall("sum is commutative", 200, |rng| {
+//!     let a = rng.next_below(1000) as u64;
+//!     let b = rng.next_below(1000) as u64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::SplitMix64;
+
+/// Run `prop` for `cases` seeded cases; panic with the failing seed.
+pub fn forall<F: Fn(&mut SplitMix64) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: u64,
+    prop: F,
+) {
+    // Honour DPSNN_PROP_SEED to replay a single failing case.
+    if let Ok(seed) = std::env::var("DPSNN_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("DPSNN_PROP_SEED must be u64");
+        let mut rng = SplitMix64::new(seed);
+        prop(&mut rng);
+        return;
+    }
+    for case in 0..cases {
+        let seed = crate::util::rng::mix64(0xDEADBEEF ^ case);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = SplitMix64::new(seed);
+            prop(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property {name:?} failed at case {case} \
+                 (replay with DPSNN_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        forall("true", 50, |rng| {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn reports_seed_on_failure() {
+        let r = std::panic::catch_unwind(|| {
+            forall("always false", 3, |_| panic!("boom"));
+        });
+        let msg = match r {
+            Err(p) => p.downcast_ref::<String>().unwrap().clone(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("DPSNN_PROP_SEED="), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+}

@@ -1,0 +1,233 @@
+//! Deterministic RNG: a SplitMix64 stream generator plus a *counter-based*
+//! (stateless) generator used for partition-independent network and
+//! stimulus construction.
+//!
+//! Counter-based draws are keyed by `(seed, a, b, k)` tuples, so any rank
+//! can regenerate exactly the draw for, e.g., synapse `k` of neuron `a`
+//! without coordination — this is what makes connectivity and Poisson
+//! stimulus identical regardless of how many processes the network is
+//! partitioned over (see DESIGN.md §7 and the determinism tests).
+
+/// SplitMix64 finalizer: a high-quality 64-bit mix function.
+#[inline(always)]
+pub fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Stateless counter-based draw keyed by up to four values.
+#[inline(always)]
+pub fn hash4(seed: u64, a: u64, b: u64, k: u64) -> u64 {
+    // Feed each key through the mixer so nearby keys decorrelate.
+    let mut h = mix64(seed ^ 0xD6E8FEB86659FD93);
+    h = mix64(h ^ a.wrapping_mul(0xA24BAED4963EE407));
+    h = mix64(h ^ b.wrapping_mul(0x9FB21C651E98DF25));
+    mix64(h ^ k)
+}
+
+/// Faster two-round keyed hash for per-(cell, step) draws on the hot
+/// path (EXPERIMENTS.md §Perf): each round is a full-avalanche mix64, and
+/// both keys enter through distinct odd multipliers, so consecutive
+/// gids/steps decorrelate. Not a drop-in for [`hash4`] — different stream.
+#[inline(always)]
+pub fn hash2_fast(seed: u64, a: u64, b: u64) -> u64 {
+    mix64(
+        mix64(seed ^ a.wrapping_mul(0xA24BAED4963EE407))
+            ^ b.wrapping_mul(0x9FB21C651E98DF25),
+    )
+}
+
+/// A small, fast, seedable sequential RNG (SplitMix64).
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Derive an independent stream for a labelled purpose.
+    pub fn derive(&self, label: u64) -> Self {
+        Self { state: mix64(self.state ^ mix64(label)) }
+    }
+
+    #[inline(always)]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline(always)]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, bound) without modulo bias (Lemire).
+    #[inline(always)]
+    pub fn next_below(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        let mut m = (self.next_u64() as u32 as u64).wrapping_mul(bound as u64);
+        let mut lo = m as u32;
+        if lo < bound {
+            let t = bound.wrapping_neg() % bound;
+            while lo < t {
+                m = (self.next_u64() as u32 as u64).wrapping_mul(bound as u64);
+                lo = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    #[inline(always)]
+    pub fn next_range(&mut self, lo: u32, hi: u32) -> u32 {
+        lo + self.next_below(hi - lo + 1)
+    }
+
+    /// Standard normal via Box-Muller (one value per call; simple > fast).
+    pub fn next_normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 <= f64::EPSILON {
+                continue;
+            }
+            let u2 = self.next_f64();
+            return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        }
+    }
+
+    /// Poisson sample, Knuth's method for small lambda, normal
+    /// approximation above 30 (adequate for stimulus modelling).
+    pub fn next_poisson(&mut self, lambda: f64) -> u32 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda > 30.0 {
+            let x = lambda + lambda.sqrt() * self.next_normal();
+            return x.max(0.0).round() as u32;
+        }
+        let l = (-lambda).exp();
+        let mut k = 0u32;
+        let mut p = 1.0;
+        loop {
+            p *= self.next_f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+}
+
+/// Counter-based RNG view: a tiny SplitMix64 seeded from a key tuple,
+/// for when a few correlated draws are needed per key.
+#[inline(always)]
+pub fn keyed(seed: u64, a: u64, b: u64, k: u64) -> SplitMix64 {
+    SplitMix64::new(hash4(seed, a, b, k))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix64_is_bijective_sample() {
+        // distinct inputs -> distinct outputs on a sample
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..10_000u64 {
+            assert!(seen.insert(mix64(i)));
+        }
+    }
+
+    #[test]
+    fn hash2_fast_uniformity_and_sensitivity() {
+        // consecutive keys (the hot-path access pattern) must produce
+        // uniform-looking outputs: check bit balance over a gid sweep
+        let mut ones = [0u32; 64];
+        let n = 20_000u64;
+        for gid in 0..n {
+            let h = hash2_fast(7, gid, 1234);
+            for (bit, slot) in ones.iter_mut().enumerate() {
+                *slot += ((h >> bit) & 1) as u32;
+            }
+        }
+        for (bit, &c) in ones.iter().enumerate() {
+            let frac = c as f64 / n as f64;
+            assert!((frac - 0.5).abs() < 0.02, "bit {bit}: {frac}");
+        }
+        assert_ne!(hash2_fast(1, 2, 3), hash2_fast(2, 2, 3));
+        assert_ne!(hash2_fast(1, 2, 3), hash2_fast(1, 3, 3));
+        assert_ne!(hash2_fast(1, 2, 3), hash2_fast(1, 2, 4));
+    }
+
+    #[test]
+    fn hash4_sensitive_to_each_key() {
+        let h = hash4(1, 2, 3, 4);
+        assert_ne!(h, hash4(2, 2, 3, 4));
+        assert_ne!(h, hash4(1, 3, 3, 4));
+        assert_ne!(h, hash4(1, 2, 4, 4));
+        assert_ne!(h, hash4(1, 2, 3, 5));
+    }
+
+    #[test]
+    fn uniform_mean_is_half() {
+        let mut r = SplitMix64::new(42);
+        let n = 100_000;
+        let s: f64 = (0..n).map(|_| r.next_f64()).sum();
+        let mean = s / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn next_below_in_range_and_covers() {
+        let mut r = SplitMix64::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.next_below(10);
+            assert!(v < 10);
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn poisson_mean_and_variance() {
+        let mut r = SplitMix64::new(3);
+        for &lambda in &[0.5, 1.2, 4.0, 50.0] {
+            let n = 50_000;
+            let xs: Vec<f64> = (0..n).map(|_| r.next_poisson(lambda) as f64).collect();
+            let mean = xs.iter().sum::<f64>() / n as f64;
+            let var =
+                xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+            assert!((mean - lambda).abs() < 0.05 * lambda.max(1.0), "mean {mean} vs {lambda}");
+            assert!((var - lambda).abs() < 0.1 * lambda.max(1.0), "var {var} vs {lambda}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = SplitMix64::new(9);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn derive_gives_independent_streams() {
+        let base = SplitMix64::new(5);
+        let mut a = base.derive(1);
+        let mut b = base.derive(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

@@ -1,0 +1,236 @@
+//! Minimal TOML-subset parser for run configuration files.
+//!
+//! Supported: `[table.subtable]` headers, `key = value` with string,
+//! integer, float, boolean and flat arrays of those; `#` comments.
+//! This covers every config file shipped in `configs/` — it is not a
+//! general TOML implementation.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: dotted table path -> key -> value.
+#[derive(Debug, Default, Clone)]
+pub struct Doc {
+    pub tables: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    pub fn get(&self, table: &str, key: &str) -> Option<&Value> {
+        self.tables.get(table).and_then(|t| t.get(key))
+    }
+
+    pub fn str_or(&self, table: &str, key: &str, default: &str) -> String {
+        self.get(table, key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn f64_or(&self, table: &str, key: &str, default: f64) -> f64 {
+        self.get(table, key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn i64_or(&self, table: &str, key: &str, default: i64) -> i64 {
+        self.get(table, key).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, table: &str, key: &str, default: bool) -> bool {
+        self.get(table, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+}
+
+fn parse_scalar(tok: &str) -> Result<Value> {
+    let t = tok.trim();
+    if t.starts_with('"') {
+        let inner = t
+            .strip_prefix('"')
+            .and_then(|s| s.strip_suffix('"'))
+            .ok_or_else(|| anyhow!("unterminated string: {t}"))?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    match t {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let clean = t.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value: {t:?}")
+}
+
+fn parse_value(tok: &str) -> Result<Value> {
+    let t = tok.trim();
+    if let Some(body) = t.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array: {t}"))?;
+        let mut items = Vec::new();
+        if !body.trim().is_empty() {
+            // split on commas not inside strings
+            let mut depth_str = false;
+            let mut cur = String::new();
+            for c in body.chars() {
+                match c {
+                    '"' => {
+                        depth_str = !depth_str;
+                        cur.push(c);
+                    }
+                    ',' if !depth_str => {
+                        items.push(parse_scalar(&cur)?);
+                        cur.clear();
+                    }
+                    _ => cur.push(c),
+                }
+            }
+            if !cur.trim().is_empty() {
+                items.push(parse_scalar(&cur)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    parse_scalar(t)
+}
+
+/// Strip a `#` comment that is not inside a string literal.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc = Doc::default();
+    let mut table = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(h) = line.strip_prefix('[') {
+            let name = h
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("line {}: bad table header {raw:?}", lineno + 1))?;
+            table = name.trim().to_string();
+            doc.tables.entry(table.clone()).or_default();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value, got {raw:?}", lineno + 1))?;
+        let value = parse_value(v)
+            .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+        doc.tables
+            .entry(table.clone())
+            .or_default()
+            .insert(k.trim().to_string(), value);
+    }
+    Ok(doc)
+}
+
+pub fn parse_file(path: &std::path::Path) -> Result<Doc> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+    parse(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_document() {
+        let doc = parse(
+            r#"
+            # run config
+            title = "demo"
+            [network]
+            neurons = 20_480
+            rate_hz = 3.2          # target
+            exc = true
+            sizes = [1, 2, 3]
+            [run.platform]
+            name = "xeon-ib"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("", "title", ""), "demo");
+        assert_eq!(doc.i64_or("network", "neurons", 0), 20480);
+        assert!((doc.f64_or("network", "rate_hz", 0.0) - 3.2).abs() < 1e-12);
+        assert!(doc.bool_or("network", "exc", false));
+        assert_eq!(doc.str_or("run.platform", "name", ""), "xeon-ib");
+        match doc.get("network", "sizes").unwrap() {
+            Value::Array(a) => assert_eq!(a.len(), 3),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn strings_with_hash_and_escapes() {
+        let doc = parse("s = \"a # not comment \\\" q\"").unwrap();
+        assert_eq!(doc.str_or("", "s", ""), "a # not comment \" q");
+    }
+
+    #[test]
+    fn errors_are_reported_with_line() {
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("x = @?").is_err());
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = parse("a = 3\nb = 3.5").unwrap();
+        assert_eq!(doc.get("", "a"), Some(&Value::Int(3)));
+        assert_eq!(doc.get("", "b"), Some(&Value::Float(3.5)));
+        assert_eq!(doc.f64_or("", "a", 0.0), 3.0);
+    }
+}

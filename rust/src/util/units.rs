@@ -1,0 +1,69 @@
+//! Small unit helpers: durations, byte counts, engineering formatting.
+
+/// Seconds -> human string ("1.23 ms", "4.5 s").
+pub fn fmt_seconds(s: f64) -> String {
+    if s < 0.0 {
+        return format!("-{}", fmt_seconds(-s));
+    }
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.2} s", s)
+    } else {
+        format!("{:.1} min", s / 60.0)
+    }
+}
+
+/// Bytes -> human string.
+pub fn fmt_bytes(b: f64) -> String {
+    const K: f64 = 1024.0;
+    if b < K {
+        format!("{b:.0} B")
+    } else if b < K * K {
+        format!("{:.1} KiB", b / K)
+    } else if b < K * K * K {
+        format!("{:.1} MiB", b / (K * K))
+    } else {
+        format!("{:.2} GiB", b / (K * K * K))
+    }
+}
+
+/// Count -> engineering notation ("2.30e+07" like the paper's tables).
+pub fn fmt_sci(x: f64) -> String {
+    format!("{x:.2E}")
+}
+
+/// Percentage with one decimal, paper-table style.
+pub fn fmt_pct(frac: f64) -> String {
+    format!("{:.1}%", frac * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seconds_ranges() {
+        assert_eq!(fmt_seconds(2e-9), "2.0 ns");
+        assert_eq!(fmt_seconds(3.5e-5), "35.00 us");
+        assert_eq!(fmt_seconds(0.012), "12.00 ms");
+        assert_eq!(fmt_seconds(9.15), "9.15 s");
+        assert_eq!(fmt_seconds(600.0), "10.0 min");
+    }
+
+    #[test]
+    fn bytes_ranges() {
+        assert_eq!(fmt_bytes(12.0), "12 B");
+        assert_eq!(fmt_bytes(2048.0), "2.0 KiB");
+        assert_eq!(fmt_bytes(3.0 * 1024.0 * 1024.0), "3.0 MiB");
+    }
+
+    #[test]
+    fn sci_matches_paper_style() {
+        assert_eq!(fmt_sci(2.30e7), "2.30E7");
+    }
+}

@@ -1,0 +1,65 @@
+//! Native-vs-XLA backend parity: the AOT-compiled JAX/Pallas artifact and
+//! the pure-rust implementation must advance the same network to the same
+//! spike raster.
+//!
+//! Requires `make artifacts` (the Makefile `test` target guarantees it).
+
+use std::path::Path;
+
+use dpsnn::config::{Backend, Mode, NetworkParams, RunConfig};
+use dpsnn::coordinator;
+
+fn artifacts_available() -> bool {
+    Path::new("artifacts").exists()
+        && std::fs::read_dir("artifacts")
+            .map(|mut d| d.any(|e| e.unwrap().file_name().to_string_lossy().ends_with(".hlo.txt")))
+            .unwrap_or(false)
+}
+
+fn cfg(backend: Backend, procs: u32) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.net = NetworkParams::tiny(1024);
+    cfg.procs = procs;
+    cfg.sim_seconds = 0.3;
+    cfg.backend = backend;
+    cfg.mode = Mode::Live;
+    cfg
+}
+
+#[test]
+fn xla_and_native_rasters_agree() {
+    assert!(
+        artifacts_available(),
+        "artifacts/ missing — run `make artifacts` before `cargo test`"
+    );
+    let native = coordinator::run(&cfg(Backend::Native, 1)).unwrap();
+    let xla = coordinator::run(&cfg(Backend::Xla, 1)).unwrap();
+    assert!(native.total_spikes > 0);
+    assert_eq!(
+        native.pop_counts, xla.pop_counts,
+        "XLA artifact and native rust diverged"
+    );
+    assert_eq!(native.total_syn_events, xla.total_syn_events);
+}
+
+#[test]
+fn xla_backend_multi_rank() {
+    assert!(artifacts_available(), "run `make artifacts` first");
+    // each rank thread builds its own PJRT client (the client is not Send)
+    let native = coordinator::run(&cfg(Backend::Native, 2)).unwrap();
+    let xla = coordinator::run(&cfg(Backend::Xla, 2)).unwrap();
+    assert_eq!(native.pop_counts, xla.pop_counts);
+}
+
+#[test]
+fn xla_pads_population_to_artifact_rung() {
+    assert!(artifacts_available(), "run `make artifacts` first");
+    // 1000 is not an artifact rung: forces padding to 1024
+    let mut c = cfg(Backend::Xla, 1);
+    c.net = NetworkParams::tiny(1000);
+    let r = coordinator::run(&c).unwrap();
+    let mut cn = cfg(Backend::Native, 1);
+    cn.net = NetworkParams::tiny(1000);
+    let n = coordinator::run(&cn).unwrap();
+    assert_eq!(r.pop_counts, n.pop_counts, "padding must be inert");
+}

@@ -1,0 +1,61 @@
+//! Partition-determinism integration tests: the simulation must be
+//! *bitwise identical* for any process count (connectivity, stimulus and
+//! initial state are pure functions of global ids; synaptic weights live
+//! on an exact f32 grid so accumulation order cannot matter).
+//!
+//! This is what makes the paper's strong-scaling sweeps simulate the same
+//! network at every P.
+
+use dpsnn::config::{Mode, NetworkParams, RunConfig};
+use dpsnn::coordinator;
+
+fn cfg(n: u32, procs: u32, seconds: f64, seed: u64) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.net = NetworkParams::tiny(n);
+    cfg.procs = procs;
+    cfg.sim_seconds = seconds;
+    cfg.seed = seed;
+    cfg.mode = Mode::Live;
+    cfg
+}
+
+#[test]
+fn raster_identical_across_partitionings() {
+    let reference = coordinator::run(&cfg(1024, 1, 0.5, 42)).unwrap();
+    assert!(reference.total_spikes > 0, "network must be active");
+    for procs in [2u32, 3, 4, 8] {
+        let r = coordinator::run(&cfg(1024, procs, 0.5, 42)).unwrap();
+        assert_eq!(
+            r.pop_counts, reference.pop_counts,
+            "per-step population raster diverged at P={procs}"
+        );
+        assert_eq!(r.total_spikes, reference.total_spikes);
+        assert_eq!(r.total_syn_events, reference.total_syn_events);
+        assert_eq!(r.total_ext_events, reference.total_ext_events);
+    }
+}
+
+#[test]
+fn different_seeds_give_different_rasters() {
+    let a = coordinator::run(&cfg(512, 2, 0.3, 1)).unwrap();
+    let b = coordinator::run(&cfg(512, 2, 0.3, 2)).unwrap();
+    assert_ne!(a.pop_counts, b.pop_counts);
+}
+
+#[test]
+fn same_seed_reproduces_exactly() {
+    let a = coordinator::run(&cfg(512, 4, 0.3, 7)).unwrap();
+    let b = coordinator::run(&cfg(512, 4, 0.3, 7)).unwrap();
+    assert_eq!(a.pop_counts, b.pop_counts);
+    assert_eq!(a.total_spikes, b.total_spikes);
+}
+
+#[test]
+fn uneven_partitions_also_deterministic() {
+    // 5 ranks over 1000 neurons: ranks own 200 each; 7 ranks: 142/143.
+    let reference = coordinator::run(&cfg(1000, 1, 0.3, 99)).unwrap();
+    for procs in [5u32, 7] {
+        let r = coordinator::run(&cfg(1000, procs, 0.3, 99)).unwrap();
+        assert_eq!(r.pop_counts, reference.pop_counts, "P={procs}");
+    }
+}

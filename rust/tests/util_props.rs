@@ -1,0 +1,130 @@
+//! Property/fuzz tests over the in-tree utility substrate (the pieces
+//! that replace unavailable crates.io dependencies).
+
+use dpsnn::util::cli::Args;
+use dpsnn::util::prop::forall;
+use dpsnn::util::rng::SplitMix64;
+use dpsnn::util::table::Table;
+use dpsnn::util::tomlmini;
+
+#[test]
+fn tomlmini_round_trips_generated_documents() {
+    forall("toml round trip", 60, |rng| {
+        // generate a doc, render it, parse it back, compare
+        let n_tables = 1 + rng.next_below(4);
+        let mut text = String::new();
+        let mut expect: Vec<(String, String, String)> = Vec::new();
+        for t in 0..n_tables {
+            let tname = format!("t{t}");
+            text.push_str(&format!("[{tname}]\n"));
+            for k in 0..1 + rng.next_below(5) {
+                let key = format!("k{k}");
+                match rng.next_below(4) {
+                    0 => {
+                        let v = rng.next_u64() as i64 % 100_000;
+                        text.push_str(&format!("{key} = {v}\n"));
+                        expect.push((tname.clone(), key, format!("i{v}")));
+                    }
+                    1 => {
+                        let v = (rng.next_f64() * 100.0 * 8.0).round() / 8.0;
+                        text.push_str(&format!("{key} = {v:?}\n"));
+                        expect.push((tname.clone(), key, format!("f{v}")));
+                    }
+                    2 => {
+                        let v = rng.next_below(2) == 1;
+                        text.push_str(&format!("{key} = {v}\n"));
+                        expect.push((tname.clone(), key, format!("b{v}")));
+                    }
+                    _ => {
+                        let v = format!("s-{}", rng.next_below(1000));
+                        text.push_str(&format!("{key} = \"{v}\"  # comment\n"));
+                        expect.push((tname.clone(), key, format!("s{v}")));
+                    }
+                }
+            }
+        }
+        let doc = tomlmini::parse(&text).unwrap();
+        for (t, k, tagged) in expect {
+            let v = doc.get(&t, &k).unwrap();
+            match tagged.split_at(1) {
+                ("i", rest) => assert_eq!(v.as_i64().unwrap().to_string(), rest),
+                ("f", rest) => {
+                    assert!((v.as_f64().unwrap() - rest.parse::<f64>().unwrap()).abs() < 1e-12)
+                }
+                ("b", rest) => assert_eq!(v.as_bool().unwrap().to_string(), rest),
+                ("s", rest) => assert_eq!(v.as_str().unwrap(), rest),
+                _ => unreachable!(),
+            }
+        }
+    });
+}
+
+#[test]
+fn tomlmini_never_panics_on_garbage() {
+    forall("toml no panic", 200, |rng| {
+        let len = rng.next_below(120) as usize;
+        let bytes: Vec<u8> = (0..len)
+            .map(|_| b" [=]#\"\\abc0.5\n_x,".to_vec()[rng.next_below(17) as usize])
+            .collect();
+        let text = String::from_utf8_lossy(&bytes).to_string();
+        let _ = tomlmini::parse(&text); // Ok or Err, never panic
+    });
+}
+
+#[test]
+fn cli_parser_never_panics_and_is_total() {
+    forall("cli fuzz", 200, |rng| {
+        let n = rng.next_below(10) as usize;
+        let toks: Vec<String> = (0..n)
+            .map(|_| {
+                match rng.next_below(5) {
+                    0 => format!("--k{}", rng.next_below(5)),
+                    1 => format!("--k{}=v{}", rng.next_below(5), rng.next_below(5)),
+                    2 => "--".to_string(),
+                    3 => format!("pos{}", rng.next_below(5)),
+                    _ => format!("{}", rng.next_below(100)),
+                }
+            })
+            .collect();
+        if let Ok(a) = Args::parse(toks.clone()) {
+            // no token materializes more than one parsed item (an
+            // `--k v` option consumes two tokens, `--k=v` one)
+            let items = a.positional.len() + a.flags.len() + a.options.len();
+            assert!(items <= toks.len(), "{toks:?} -> {a:?}");
+        }
+    });
+}
+
+#[test]
+fn table_renders_any_content_without_panicking() {
+    forall("table fuzz", 100, |rng| {
+        let cols = 1 + rng.next_below(5) as usize;
+        let header: Vec<String> = (0..cols).map(|c| format!("h{c}")).collect();
+        let refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new("fuzz", &refs);
+        for _ in 0..rng.next_below(10) {
+            t.row((0..cols)
+                .map(|_| {
+                    let l = rng.next_below(12) as usize;
+                    "x,\"#|".chars().cycle().take(l).collect::<String>()
+                })
+                .collect());
+        }
+        let rendered = t.render();
+        assert!(rendered.contains("h0"));
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), t.rows.len() + 1);
+    });
+}
+
+#[test]
+fn splitmix_streams_do_not_collide_short_term() {
+    let mut seen = std::collections::HashSet::new();
+    for seed in 0..50u64 {
+        let mut r = SplitMix64::new(seed);
+        for _ in 0..100 {
+            seen.insert(r.next_u64());
+        }
+    }
+    assert_eq!(seen.len(), 5000, "output collision across streams");
+}
