@@ -42,12 +42,16 @@ impl Transport for Arc<LocalCluster> {
         outgoing: &[Vec<u8>],
     ) -> Result<(Vec<Vec<u8>>, ExchangeStats)> {
         assert_eq!(outgoing.len() as u32, self.p, "need one buffer per rank");
-        let mut stats = ExchangeStats::default();
+        let mut stats = ExchangeStats {
+            per_dst_bytes: vec![0u64; self.p as usize],
+            ..ExchangeStats::default()
+        };
         // Phase 1: post all outgoing buffers.
         for (dst, payload) in outgoing.iter().enumerate() {
             let mut slot = self.mailboxes[rank as usize][dst].lock().unwrap();
             slot.clear();
             slot.extend_from_slice(payload);
+            stats.per_dst_bytes[dst] = payload.len() as u64;
             if dst as u32 != rank {
                 stats.bytes_sent += payload.len() as u64;
                 stats.messages += 1;
@@ -60,6 +64,7 @@ impl Transport for Arc<LocalCluster> {
             let mut slot = self.mailboxes[src][rank as usize].lock().unwrap();
             incoming.push(std::mem::take(&mut *slot));
         }
+        stats.bytes_recv = incoming.iter().map(|b| b.len() as u64).sum();
         // Phase 3: everyone must finish reading before the next post.
         self.barrier.wait();
         Ok((incoming, stats))
@@ -106,6 +111,9 @@ mod tests {
         let (incoming, stats) = cluster.alltoall(0, &[b"self".to_vec()]).unwrap();
         assert_eq!(incoming[0], b"self");
         assert_eq!(stats.messages, 0, "self-delivery is not a network message");
+        assert_eq!(stats.bytes_sent, 0);
+        assert_eq!(stats.bytes_recv, 4, "loopback block is counted on receive");
+        assert_eq!(stats.per_dst_bytes, vec![4]);
     }
 
     #[test]
@@ -120,6 +128,8 @@ mod tests {
                 let (incoming, stats) = t.alltoall(rank, &outgoing).unwrap();
                 assert!(incoming.iter().all(|b| b.is_empty()));
                 assert_eq!(stats.bytes_sent, 0);
+                assert_eq!(stats.bytes_recv, 0);
+                assert_eq!(stats.per_dst_bytes, vec![0u64; p as usize]);
                 assert_eq!(stats.messages, (p - 1) as u64);
             }));
         }

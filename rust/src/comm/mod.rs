@@ -1,12 +1,30 @@
 //! Inter-process communication: the AER wire format, message packing,
 //! the transport abstraction with the in-process all-to-all
-//! implementation, and the synchronization barrier.
+//! implementation, the synchronization barrier, and destination-filtered
+//! spike routing.
+//!
+//! Two exchange protocols ride on the same synchronous transport:
+//!
+//! * **broadcast** — every rank sends its full AER buffer to every other
+//!   rank (the paper's baseline); per-rank receive volume is O(total
+//!   spikes) regardless of P.
+//! * **filtered** ([`routing`]) — each rank precomputes, from the
+//!   partition-independent connectivity, which destination ranks each
+//!   local neuron actually projects to, and AER-encodes a per-destination
+//!   buffer so a rank receives only spikes with at least one local
+//!   postsynaptic target. With dense connectivity and small P
+//!   (`M >> P`) the pair filter degenerates to broadcast, but local
+//!   spikes are still delivered directly instead of looping back through
+//!   the transport; at large P or sparse connectivity whole source→rank
+//!   pairs disappear from the traffic matrix.
 
 pub mod aer;
 pub mod transport;
 pub mod local;
 pub mod barrier;
+pub mod routing;
 
 pub use aer::{decode_spikes, encode_spikes, SPIKE_WIRE_BYTES};
 pub use local::LocalCluster;
+pub use routing::RoutingTable;
 pub use transport::{ExchangeStats, Transport};

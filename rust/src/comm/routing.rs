@@ -1,0 +1,253 @@
+//! Destination-filtered spike routing.
+//!
+//! The broadcast all-to-all sends every spike to every rank, so per-rank
+//! receive volume is O(total spikes) regardless of P — the worst point in
+//! the paper's design space (Table I: 91.7% communication share at 256
+//! processes). But the connectivity is partition-independent: synapse `k`
+//! of source `s` is a pure function of `(seed, s, k)`
+//! ([`ConnectivityParams::synapse`]), so every rank can precompute, with
+//! no communication, the exact set of *destination ranks* each of its
+//! local neurons projects to. A spike then travels only to ranks that own
+//! at least one of its postsynaptic targets (the target-aware routing of
+//! Kurth et al. 2021 that keeps communication sub-linear in P).
+//!
+//! The table is a compact per-source-neuron rank bitmap:
+//! `ceil(P/64) * 8` bytes per local neuron. With the paper's homogeneous
+//! connectivity (M = 1125 targets drawn uniformly) the filter
+//! *degenerates to broadcast* whenever `M >> P` — the probability that a
+//! source misses all neurons of a rank is `(1 - 1/P)^M ~ e^(-M/P)` — and
+//! only starts dropping pairs once P approaches M. It always removes the
+//! transport loopback (local spikes are delivered directly, not copied
+//! through the self mailbox), and at large P or sparse connectivity it
+//! removes whole source→rank pairs.
+
+use crate::engine::partition::Partition;
+use crate::model::connectivity::ConnectivityParams;
+
+/// Per-rank routing table: for each *local* source neuron, the bitmap of
+/// destination ranks owning at least one of its postsynaptic targets.
+#[derive(Debug, Clone)]
+pub struct RoutingTable {
+    n_ranks: u32,
+    n_local: u32,
+    /// Bitmap words per source row.
+    words_per_src: usize,
+    /// `bits[local * words_per_src + w]`, bit `r % 64` of word `r / 64`
+    /// set iff the source projects to rank `r`.
+    bits: Vec<u64>,
+}
+
+impl RoutingTable {
+    /// Build the table for the local sources of `rank` (range from
+    /// `part`). Cost: at most `n_local * M` stateless synapse draws, with
+    /// an early exit once a source is known to cover every rank — for
+    /// dense connectivity the sweep stops after ~P ln P draws per source.
+    pub fn build(cp: &ConnectivityParams, part: &Partition, rank: u32) -> Self {
+        let (lo, hi) = part.range(rank);
+        let p = part.n_ranks();
+        let words_per_src = (p as usize).div_ceil(64);
+        let n_local = hi - lo;
+        let mut bits = vec![0u64; n_local as usize * words_per_src];
+        for s in lo..hi {
+            let base = (s - lo) as usize * words_per_src;
+            let row = &mut bits[base..base + words_per_src];
+            let mut covered = 0u32;
+            for k in 0..cp.m {
+                let (tgt, _) = cp.synapse(s, k);
+                let dst = part.owner(tgt) as usize;
+                let mask = 1u64 << (dst % 64);
+                if row[dst / 64] & mask == 0 {
+                    row[dst / 64] |= mask;
+                    covered += 1;
+                    if covered == p {
+                        break;
+                    }
+                }
+            }
+        }
+        Self { n_ranks: p, n_local, words_per_src, bits }
+    }
+
+    pub fn n_ranks(&self) -> u32 {
+        self.n_ranks
+    }
+
+    pub fn n_local(&self) -> u32 {
+        self.n_local
+    }
+
+    fn row(&self, local: u32) -> &[u64] {
+        debug_assert!(local < self.n_local, "local {local} >= {}", self.n_local);
+        let base = local as usize * self.words_per_src;
+        &self.bits[base..base + self.words_per_src]
+    }
+
+    /// Does local source `local` project to any neuron owned by `dst`?
+    pub fn sends_to(&self, local: u32, dst: u32) -> bool {
+        debug_assert!(dst < self.n_ranks);
+        self.row(local)[dst as usize / 64] & (1u64 << (dst % 64)) != 0
+    }
+
+    /// Iterate the destination ranks of local source `local`, ascending.
+    pub fn dest_ranks(&self, local: u32) -> DestRanks<'_> {
+        DestRanks { words: self.row(local), word_idx: 0, current: 0 }
+    }
+
+    /// Number of destination ranks of local source `local`.
+    pub fn rank_fanout(&self, local: u32) -> u32 {
+        self.row(local).iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// True when every local source projects to every rank — the dense
+    /// regime where per-destination filtering cannot drop anything and
+    /// the sender can fall back to one shared encode (minus loopback).
+    pub fn degenerates_to_broadcast(&self) -> bool {
+        let set: u64 = self.bits.iter().map(|w| w.count_ones() as u64).sum();
+        set == self.n_local as u64 * self.n_ranks as u64
+    }
+
+    /// Mean destination-rank fan-out over the local sources — P means
+    /// the filter has degenerated to broadcast.
+    pub fn mean_rank_fanout(&self) -> f64 {
+        if self.n_local == 0 {
+            return 0.0;
+        }
+        let set: u64 = self.bits.iter().map(|w| w.count_ones() as u64).sum();
+        set as f64 / self.n_local as f64
+    }
+
+    /// Resident bytes of the bitmap (capacity planning).
+    pub fn resident_bytes(&self) -> usize {
+        self.bits.len() * 8
+    }
+}
+
+/// Ascending iterator over the set destination ranks of one source row.
+pub struct DestRanks<'a> {
+    words: &'a [u64],
+    /// Index of the *next* word to load; the word being drained is
+    /// `word_idx - 1`.
+    word_idx: usize,
+    current: u64,
+}
+
+impl Iterator for DestRanks<'_> {
+    type Item = u32;
+
+    fn next(&mut self) -> Option<u32> {
+        loop {
+            if self.current != 0 {
+                let bit = self.current.trailing_zeros();
+                self.current &= self.current - 1;
+                return Some((self.word_idx as u32 - 1) * 64 + bit);
+            }
+            if self.word_idx == self.words.len() {
+                return None;
+            }
+            self.current = self.words[self.word_idx];
+            self.word_idx += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::connectivity::IncomingSynapses;
+
+    fn cp(n: u32, m: u32, seed: u64) -> ConnectivityParams {
+        ConnectivityParams { seed, n, m, dmin: 1, dmax: 8 }
+    }
+
+    #[test]
+    fn matches_incoming_synapse_rows_exactly() {
+        // sends_to(s, d) must equal "rank d's incoming row for s is
+        // non-empty" — the two views are built from the same generator.
+        let c = cp(96, 3, 1234);
+        for p in [2u32, 4, 7] {
+            let part = Partition::even(96, p);
+            let incoming: Vec<IncomingSynapses> = (0..p)
+                .map(|r| {
+                    let (lo, hi) = part.range(r);
+                    IncomingSynapses::build(&c, lo, hi)
+                })
+                .collect();
+            for rank in 0..p {
+                let table = RoutingTable::build(&c, &part, rank);
+                let (lo, hi) = part.range(rank);
+                assert_eq!(table.n_local(), hi - lo);
+                for s in lo..hi {
+                    for dst in 0..p {
+                        let has_targets = !incoming[dst as usize].row(s).0.is_empty();
+                        assert_eq!(
+                            table.sends_to(s - lo, dst),
+                            has_targets,
+                            "p={p} rank={rank} s={s} dst={dst}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_connectivity_degenerates_to_broadcast() {
+        // M >> P: every source covers every rank.
+        let c = cp(64, 32, 7);
+        let part = Partition::even(64, 4);
+        let table = RoutingTable::build(&c, &part, 0);
+        assert!(table.degenerates_to_broadcast());
+        assert_eq!(table.mean_rank_fanout(), 4.0);
+        for local in 0..table.n_local() {
+            assert_eq!(table.rank_fanout(local), 4);
+            let dsts: Vec<u32> = table.dest_ranks(local).collect();
+            assert_eq!(dsts, vec![0, 1, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn sparse_connectivity_filters() {
+        // M = 1 target: exactly one destination rank per source.
+        let c = cp(256, 1, 99);
+        let part = Partition::even(256, 8);
+        for rank in 0..8 {
+            let table = RoutingTable::build(&c, &part, rank);
+            for local in 0..table.n_local() {
+                assert_eq!(table.rank_fanout(local), 1);
+                let dsts: Vec<u32> = table.dest_ranks(local).collect();
+                assert_eq!(dsts.len(), 1);
+                let (lo, _) = part.range(rank);
+                let (tgt, _) = c.synapse(lo + local, 0);
+                assert_eq!(dsts[0], part.owner(tgt));
+            }
+            assert!((table.mean_rank_fanout() - 1.0).abs() < 1e-12);
+            assert!(!table.degenerates_to_broadcast());
+        }
+    }
+
+    #[test]
+    fn iterator_agrees_with_sends_to_across_word_boundaries() {
+        // 70 ranks forces a two-word bitmap row.
+        let c = cp(140, 5, 5);
+        let part = Partition::even(140, 70);
+        let table = RoutingTable::build(&c, &part, 3);
+        assert_eq!(table.n_ranks(), 70);
+        for local in 0..table.n_local() {
+            let dsts: Vec<u32> = table.dest_ranks(local).collect();
+            assert!(dsts.windows(2).all(|w| w[0] < w[1]), "ascending");
+            for dst in 0..70 {
+                assert_eq!(table.sends_to(local, dst), dsts.contains(&dst));
+            }
+            assert_eq!(dsts.len() as u32, table.rank_fanout(local));
+        }
+    }
+
+    #[test]
+    fn resident_bytes_is_compact() {
+        let c = cp(1024, 16, 2);
+        let part = Partition::even(1024, 8);
+        let table = RoutingTable::build(&c, &part, 0);
+        // 128 local sources x 1 word x 8 bytes
+        assert_eq!(table.resident_bytes(), 128 * 8);
+    }
+}

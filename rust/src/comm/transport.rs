@@ -9,13 +9,29 @@
 use anyhow::Result;
 
 /// Per-call accounting used by the profiler and the workload recorder.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+///
+/// Byte counts are *payload* bytes moved through the transport. Sent
+/// bytes exclude the self slot (posting to yourself is not a network
+/// send), while received bytes include the loopback block when one was
+/// posted: `MPI_Alltoall` copies the self block through the exchange
+/// like any other, and the destination-filtered protocol
+/// ([`crate::comm::routing`]) saves exactly that copy by delivering
+/// local spikes directly.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct ExchangeStats {
-    /// Bytes this rank sent (sum over destinations).
+    /// Bytes this rank sent (sum over destinations, self excluded).
     pub bytes_sent: u64,
+    /// Bytes delivered to this rank, loopback block included.
+    pub bytes_recv: u64,
     /// Messages this rank sent (= P-1 for all-to-all, even when empty:
     /// synchronous collectives always transmit envelopes).
     pub messages: u64,
+    /// Payload bytes posted per destination rank (`per_dst_bytes[d]`,
+    /// length P; index `self` is the loopback block). This is the
+    /// rank's row of the step's traffic matrix — the quantity the
+    /// interconnect model prices pair-by-pair
+    /// (`simnet::alltoall_model::AllToAllModel::exchange_time_matrix`).
+    pub per_dst_bytes: Vec<u64>,
 }
 
 pub trait Transport: Send {

@@ -37,6 +37,38 @@ impl std::fmt::Display for Backend {
     }
 }
 
+/// How spikes travel between ranks (see [`crate::comm`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Routing {
+    /// Every rank sends every spike to every rank (the paper's baseline).
+    Broadcast,
+    /// Destination-filtered AER routing: spikes travel only to ranks
+    /// owning at least one postsynaptic target, local spikes never loop
+    /// back through the transport. Bitwise-identical rasters, strictly
+    /// fewer received bytes.
+    Filtered,
+}
+
+impl std::str::FromStr for Routing {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "broadcast" | "bcast" => Ok(Routing::Broadcast),
+            "filtered" | "filter" => Ok(Routing::Filtered),
+            other => bail!("unknown routing {other:?} (broadcast|filtered)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Routing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Routing::Broadcast => write!(f, "broadcast"),
+            Routing::Filtered => write!(f, "filtered"),
+        }
+    }
+}
+
 /// How the run is executed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
@@ -70,6 +102,9 @@ pub struct RunConfig {
     pub seed: u64,
     pub backend: Backend,
     pub mode: Mode,
+    /// Spike exchange protocol (live: actual wire traffic; modeled: how
+    /// the interconnect model prices the traffic matrix).
+    pub routing: Routing,
     /// Platform preset name for modeled runs (see `platform::presets`).
     pub platform: String,
     /// Interconnect preset for modeled runs ("ib", "eth1g", ...).
@@ -92,6 +127,7 @@ impl Default for RunConfig {
             seed: 0xD509_55E5, // "DSPNN" homage
             backend: Backend::Native,
             mode: Mode::Live,
+            routing: Routing::Filtered,
             platform: "xeon".to_string(),
             interconnect: "ib".to_string(),
             artifacts_dir: "artifacts".to_string(),
@@ -182,6 +218,9 @@ impl RunConfig {
         cfg.mode = doc
             .str_or("run", "mode", if cfg.mode == Mode::Live { "live" } else { "modeled" })
             .parse()?;
+        cfg.routing = doc
+            .str_or("run", "routing", &cfg.routing.to_string())
+            .parse()?;
         cfg.platform = doc.str_or("run", "platform", &cfg.platform);
         cfg.interconnect = doc.str_or("run", "interconnect", &cfg.interconnect);
         cfg.artifacts_dir = doc.str_or("run", "artifacts_dir", &cfg.artifacts_dir);
@@ -223,6 +262,16 @@ mod tests {
         assert_eq!(cfg.mode, Mode::Modeled);
         assert_eq!(cfg.platform, "jetson");
         assert_eq!(cfg.steps(), 2500);
+    }
+
+    #[test]
+    fn routing_parses_and_defaults_to_filtered() {
+        assert_eq!(RunConfig::default().routing, Routing::Filtered);
+        let cfg =
+            RunConfig::from_toml_str("[run]\nrouting = \"broadcast\"").unwrap();
+        assert_eq!(cfg.routing, Routing::Broadcast);
+        assert!("filtered".parse::<Routing>().is_ok());
+        assert!("carrier-pigeon".parse::<Routing>().is_err());
     }
 
     #[test]

@@ -9,20 +9,35 @@
 //! 3. decode + deliver into delay rings   -> Computation
 //! 4. explicit barrier                    -> Barrier/synchronization
 //!
+//! Phase 2 runs one of two protocols (selected by
+//! [`RunConfig::routing`](crate::config::RunConfig)):
+//!
+//! * **broadcast** — each rank clones its full AER buffer to every rank
+//!   (the paper's baseline; every rank sees all spikes).
+//! * **filtered** — each rank routes a spike only to destination ranks
+//!   that own at least one of its postsynaptic targets, using the
+//!   precomputed [`RoutingTable`]; its own spikes are delivered directly
+//!   and never loop back through the transport.
+//!
 //! Because connectivity, stimulus and initial state are pure functions of
 //! global neuron ids, and synaptic weights live on an exact f32 grid, the
-//! spike raster is **bitwise identical for every process count** — tested
-//! in `rust/tests/determinism.rs`.
+//! spike raster is **bitwise identical for every process count and both
+//! routing protocols** — a spike dropped by the filter would have met an
+//! empty synapse row at the destination anyway. Tested in
+//! `rust/tests/determinism.rs` and `rust/tests/routing_props.rs`.
 
 use anyhow::{Context, Result};
 
 use crate::comm::aer::{decode_spikes, encode_spikes};
 use crate::comm::local::LocalCluster;
+use crate::comm::routing::RoutingTable;
 use crate::comm::transport::Transport;
-use crate::config::{Mode, RunConfig};
+use crate::config::{Mode, Routing, RunConfig};
 use crate::engine::partition::Partition;
 use crate::engine::rank::RankEngine;
 use crate::engine::spike::Spike;
+use crate::metrics::comm_volume::CommVolume;
+use crate::model::connectivity::ConnectivityParams;
 use crate::model::population::PopulationState;
 use crate::profiling::components::Components;
 use crate::profiling::timer::Stopwatch;
@@ -34,11 +49,12 @@ use super::orchestrator::RunResult;
 struct RankReport {
     components: Components,
     totals: crate::engine::rank::StepOutcome,
-    /// Whole-population per-step spike counts (every rank sees all
-    /// spikes; only rank 0's copy is kept).
-    pop_counts: Option<Vec<u32>>,
-    /// Per-step per-rank spike counts (rank 0, when trace recording is on).
-    rank_counts: Option<Vec<Vec<u32>>>,
+    /// Spikes this rank emitted at each step. Summed across ranks these
+    /// reconstruct the whole-population raster without requiring any
+    /// rank to *receive* every spike (filtered routing drops the rest).
+    step_spikes: Vec<u32>,
+    /// Transport bytes/messages this rank moved over the run.
+    comm: CommVolume,
 }
 
 pub fn run_live(cfg: &RunConfig) -> Result<RunResult> {
@@ -74,23 +90,28 @@ pub fn run_live(cfg: &RunConfig) -> Result<RunResult> {
     let total_spikes: u64 = reports.iter().map(|r| r.totals.spikes).sum();
     let total_syn: u64 = reports.iter().map(|r| r.totals.syn_events).sum();
     let total_ext: u64 = reports.iter().map(|r| r.totals.ext_events).sum();
-    let mut pop_counts = Vec::new();
-    let mut trace = None;
-    for r in reports {
-        if let Some(c) = r.pop_counts {
-            pop_counts = c;
-        }
-        if let Some(rc) = r.rank_counts {
-            trace = Some(crate::trace::workload::WorkloadTrace {
-                n_neurons: cfg.net.n_neurons,
-                syn_per_neuron: cfg.net.syn_per_neuron,
-                ext_events_per_neuron_step: cfg.net.ext_lambda_per_step(),
-                dt_ms: cfg.net.dt_ms,
-                procs: p,
-                spikes: rc,
-            });
+
+    // Whole-population per-step raster: sum of per-rank emission counts.
+    let mut pop_counts = vec![0u32; steps as usize];
+    for r in &reports {
+        for (t, &c) in r.step_spikes.iter().enumerate() {
+            pop_counts[t] += c;
         }
     }
+    let comm_volume: Vec<CommVolume> = reports.iter().map(|r| r.comm.clone()).collect();
+
+    let trace = cfg.record_trace.as_ref().map(|_| {
+        crate::trace::workload::WorkloadTrace {
+            n_neurons: cfg.net.n_neurons,
+            syn_per_neuron: cfg.net.syn_per_neuron,
+            ext_events_per_neuron_step: cfg.net.ext_lambda_per_step(),
+            dt_ms: cfg.net.dt_ms,
+            procs: p,
+            spikes: (0..steps as usize)
+                .map(|t| reports.iter().map(|r| r.step_spikes[t]).collect())
+                .collect(),
+        }
+    });
     if let (Some(t), Some(path)) = (&trace, &cfg.record_trace) {
         t.save(std::path::Path::new(path))?;
     }
@@ -110,6 +131,8 @@ pub fn run_live(cfg: &RunConfig) -> Result<RunResult> {
         pop_counts,
         energy: None,
         trace,
+        comm_volume,
+        routing: cfg.routing,
         backend: match cfg.backend {
             crate::config::Backend::Native => "native",
             crate::config::Backend::Xla => "xla",
@@ -136,49 +159,96 @@ fn rank_main(
     .with_context(|| format!("rank {rank} backend"))?;
     let mut engine = RankEngine::new(&cfg.net, cfg.seed, rank, lo, hi, backend);
 
+    // Setup (outside the profiled loop, like the synapse build): the
+    // destination-rank bitmap for this rank's sources.
+    let routing = match cfg.routing {
+        Routing::Filtered => Some(RoutingTable::build(
+            &ConnectivityParams::from_network(&cfg.net, cfg.seed),
+            part,
+            rank,
+        )),
+        Routing::Broadcast => None,
+    };
+    // Dense degeneration fast path: when every local source covers every
+    // rank the per-destination buffers would all equal `my_spikes`, so
+    // encode once and byte-copy (still skipping the loopback slot)
+    // instead of doing P-1 redundant encodes in the profiled comm lap.
+    let full_fanout = routing
+        .as_ref()
+        .is_some_and(|t| t.degenerates_to_broadcast());
+
+    let p = cluster.n_ranks() as usize;
     let mut comp = Components::default();
+    let mut comm_vol = CommVolume::default();
     let mut sw = Stopwatch::new();
     let mut my_spikes: Vec<Spike> = Vec::new();
     let mut wire: Vec<u8> = Vec::new();
+    let mut out_bufs: Vec<Vec<u8>> = vec![Vec::new(); p];
+    let mut per_dst: Vec<Vec<Spike>> = vec![Vec::new(); p];
     let mut all_spikes: Vec<Spike> = Vec::new();
-    let mut pop_counts: Option<Vec<u32>> =
-        (rank == 0).then(|| Vec::with_capacity(steps as usize));
-    let mut rank_counts: Option<Vec<Vec<u32>>> = (rank == 0
-        && cfg.record_trace.is_some())
-    .then(|| Vec::with_capacity(steps as usize));
+    let mut step_spikes: Vec<u32> = Vec::with_capacity(steps as usize);
 
     for step in 0..steps {
         // 1. computation: integrate
         sw.reset();
         engine.integrate(&mut my_spikes)?;
+        step_spikes.push(my_spikes.len() as u32);
         comp.add_computation(sw.lap());
 
         // 2. communication: AER encode + synchronous all-to-all
-        wire.clear();
-        encode_spikes(&my_spikes, cfg.net.dt_ms, &mut wire);
-        let outgoing: Vec<Vec<u8>> = (0..cluster.n_ranks())
-            .map(|_| wire.clone())
-            .collect();
-        let (incoming, _stats) = cluster.alltoall(rank, &outgoing)?;
+        for buf in out_bufs.iter_mut() {
+            buf.clear();
+        }
+        match &routing {
+            Some(_) if full_fanout => {
+                wire.clear();
+                encode_spikes(&my_spikes, cfg.net.dt_ms, &mut wire);
+                for (dst, buf) in out_bufs.iter_mut().enumerate() {
+                    if dst as u32 != rank {
+                        buf.extend_from_slice(&wire);
+                    }
+                }
+            }
+            Some(table) => {
+                for list in per_dst.iter_mut() {
+                    list.clear();
+                }
+                for s in &my_spikes {
+                    for dst in table.dest_ranks(s.gid - lo) {
+                        if dst != rank {
+                            per_dst[dst as usize].push(*s);
+                        }
+                    }
+                }
+                for (dst, list) in per_dst.iter().enumerate() {
+                    encode_spikes(list, cfg.net.dt_ms, &mut out_bufs[dst]);
+                }
+            }
+            None => {
+                wire.clear();
+                encode_spikes(&my_spikes, cfg.net.dt_ms, &mut wire);
+                for buf in out_bufs.iter_mut() {
+                    buf.extend_from_slice(&wire);
+                }
+            }
+        }
+        let (incoming, stats) = cluster.alltoall(rank, &out_bufs)?;
+        comm_vol.observe(&stats);
         comp.add_communication(sw.lap());
 
-        // 3. computation: decode + deliver through delay rings
+        // 3. computation: decode + deliver through delay rings. Source
+        // order is preserved (src 0..P, own spikes in their slot), so the
+        // delivered event stream matches broadcast exactly.
         all_spikes.clear();
-        for buf in &incoming {
-            decode_spikes(buf, cfg.net.dt_ms, &mut all_spikes)?;
+        for (src, buf) in incoming.iter().enumerate() {
+            if routing.is_some() && src as u32 == rank {
+                all_spikes.extend_from_slice(&my_spikes);
+            } else {
+                decode_spikes(buf, cfg.net.dt_ms, &mut all_spikes)?;
+            }
         }
         engine.deliver(&all_spikes);
         engine.finish_step();
-        if let Some(c) = pop_counts.as_mut() {
-            c.push(all_spikes.len() as u32);
-        }
-        if let Some(rc) = rank_counts.as_mut() {
-            let mut row = vec![0u32; cluster.n_ranks() as usize];
-            for s in &all_spikes {
-                row[part.owner(s.gid) as usize] += 1;
-            }
-            rc.push(row);
-        }
         comp.add_computation(sw.lap());
 
         // 4. synchronization barrier
@@ -198,8 +268,8 @@ fn rank_main(
     Ok(RankReport {
         components: comp,
         totals: engine.totals,
-        pop_counts,
-        rank_counts,
+        step_spikes,
+        comm: comm_vol,
     })
 }
 
@@ -228,6 +298,9 @@ mod tests {
         // population counts must equal the rank-sum of spikes
         let pop: u64 = r.pop_counts.iter().map(|&c| c as u64).sum();
         assert_eq!(pop, r.total_spikes);
+        // filtered routing reports per-rank transport volume
+        assert_eq!(r.comm_volume.len(), 4);
+        assert!(r.comm_volume.iter().any(|c| c.bytes_sent > 0));
     }
 
     #[test]
@@ -236,5 +309,26 @@ mod tests {
         let b = run_live(&tiny_cfg(4)).unwrap();
         assert_eq!(a.total_spikes, b.total_spikes, "partition independence");
         assert_eq!(a.pop_counts, b.pop_counts);
+    }
+
+    #[test]
+    fn broadcast_and_filtered_agree_bitwise() {
+        let mut bcast = tiny_cfg(4);
+        bcast.routing = Routing::Broadcast;
+        let a = run_live(&bcast).unwrap();
+        let b = run_live(&tiny_cfg(4)).unwrap();
+        assert_eq!(a.pop_counts, b.pop_counts, "rasters must be identical");
+        assert_eq!(a.total_syn_events, b.total_syn_events);
+        // tiny(512) is dense (M = 128 >> P = 4): the pair filter
+        // degenerates to broadcast on the network but still removes the
+        // loopback copy on the receive side.
+        let recv = |r: &RunResult| -> u64 {
+            r.comm_volume.iter().map(|c| c.bytes_recv).sum()
+        };
+        assert!(recv(&b) < recv(&a), "filtered must receive fewer bytes");
+        let sent = |r: &RunResult| -> u64 {
+            r.comm_volume.iter().map(|c| c.bytes_sent).sum()
+        };
+        assert!(sent(&b) <= sent(&a));
     }
 }

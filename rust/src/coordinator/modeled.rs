@@ -4,7 +4,8 @@
 
 use anyhow::Result;
 
-use crate::config::{Mode, RunConfig};
+use crate::config::{Mode, Routing, RunConfig};
+use crate::metrics::comm_volume::mean_pair_coverage;
 use crate::metrics::energy::joules_per_synaptic_event;
 use crate::metrics::synevents::SynapticEventCount;
 use crate::platform::hetero::HeteroCluster;
@@ -31,7 +32,18 @@ pub fn run_modeled_trace(cfg: &RunConfig, trace: &WorkloadTrace) -> Result<RunRe
     let link = interconnect_by_name(&cfg.interconnect)?;
     let rpn = platform.node.cores_per_node;
     let cluster = HeteroCluster::homogeneous(platform.node.core, cfg.procs, rpn);
-    let run = ModelRun::new(cluster, AllToAllModel::new(link, rpn));
+    let mut run = ModelRun::new(cluster, AllToAllModel::new(link, rpn));
+    if cfg.routing == Routing::Filtered {
+        // Price the destination-filtered traffic matrix: only the
+        // covered (source, rank) pairs put bytes on the wire. With the
+        // paper's dense connectivity coverage is ~1 (broadcast
+        // degeneration), so the paper reproductions are unaffected.
+        run = run.with_filter_coverage(mean_pair_coverage(
+            trace.n_neurons,
+            trace.syn_per_neuron,
+            cfg.procs,
+        ));
+    }
     let outcome = run.replay(trace);
 
     let ext_events = (trace.n_neurons as f64
@@ -55,6 +67,8 @@ pub fn run_modeled_trace(cfg: &RunConfig, trace: &WorkloadTrace) -> Result<RunRe
         mean_rate_hz: outcome.mean_rate_hz,
         pop_counts: Vec::new(),
         energy: Some(energy),
+        comm_volume: Vec::new(),
+        routing: cfg.routing,
         backend: "model",
         platform: format!("{}+{}", platform.name, link.name),
         trace: None,
@@ -90,6 +104,9 @@ pub fn run_modeled_cluster(
         mean_rate_hz: outcome.mean_rate_hz,
         pop_counts: Vec::new(),
         energy: None,
+        comm_volume: Vec::new(),
+        // Hetero replays keep the paper's baseline exchange.
+        routing: Routing::Broadcast,
         backend: "model",
         platform: format!("hetero+{}", link.name),
         trace: None,

@@ -2,7 +2,8 @@
 
 use anyhow::Result;
 
-use crate::config::{Mode, RunConfig};
+use crate::config::{Mode, Routing, RunConfig};
+use crate::metrics::comm_volume::CommVolume;
 use crate::profiling::components::Components;
 
 /// Energy figures attached to modeled runs.
@@ -38,6 +39,10 @@ pub struct RunResult {
     pub pop_counts: Vec<u32>,
     /// Modeled-mode energy report.
     pub energy: Option<EnergyReport>,
+    /// Per-rank transport volume (live runs; empty for modeled runs).
+    pub comm_volume: Vec<CommVolume>,
+    /// Spike exchange protocol the run used (live) or priced (modeled).
+    pub routing: Routing,
     pub backend: &'static str,
     pub platform: String,
     /// Recorded workload trace (live runs with `record_trace` set).
@@ -58,6 +63,24 @@ impl RunResult {
         self.realtime_factor() >= 1.0
     }
 
+    /// Mean payload bytes received per rank (live runs; 0 if untracked).
+    pub fn mean_recv_bytes_per_rank(&self) -> f64 {
+        if self.comm_volume.is_empty() {
+            return 0.0;
+        }
+        let total: u64 = self.comm_volume.iter().map(|c| c.bytes_recv).sum();
+        total as f64 / self.comm_volume.len() as f64
+    }
+
+    /// Mean payload bytes sent per rank (live runs; 0 if untracked).
+    pub fn mean_sent_bytes_per_rank(&self) -> f64 {
+        if self.comm_volume.is_empty() {
+            return 0.0;
+        }
+        let total: u64 = self.comm_volume.iter().map(|c| c.bytes_sent).sum();
+        total as f64 / self.comm_volume.len() as f64
+    }
+
     /// One-paragraph human summary.
     pub fn summary(&self) -> String {
         let (comp, comm, bar) = self.components.fractions();
@@ -70,11 +93,21 @@ impl RunResult {
             ),
             None => String::new(),
         };
+        let volume = if self.comm_volume.is_empty() {
+            String::new()
+        } else {
+            format!(
+                "  transport [{}]: recv {:.2} MB/rank, sent {:.2} MB/rank\n",
+                self.routing,
+                self.mean_recv_bytes_per_rank() / 1e6,
+                self.mean_sent_bytes_per_rank() / 1e6,
+            )
+        };
         format!(
             "{} run [{}] on {}: {} procs\n\
                wall {:.2} s for {:.1} s simulated (x{:.2} real-time{})\n\
                rate {:.2} Hz | spikes {} | syn events {}\n\
-               comp {:.1}% | comm {:.1}% | barrier {:.1}%\n{}",
+               comp {:.1}% | comm {:.1}% | barrier {:.1}%\n{}{}",
             match self.mode {
                 Mode::Live => "live",
                 Mode::Modeled => "modeled",
@@ -92,7 +125,8 @@ impl RunResult {
             comp * 100.0,
             comm * 100.0,
             bar * 100.0,
-            energy
+            energy,
+            volume
         )
     }
 }
@@ -125,6 +159,8 @@ mod tests {
             mean_rate_hz: 0.0,
             pop_counts: vec![],
             energy: None,
+            comm_volume: vec![],
+            routing: Routing::Filtered,
             backend: "native",
             platform: "host".into(),
             trace: None,

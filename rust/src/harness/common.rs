@@ -4,7 +4,7 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 
-use crate::config::{Mode, NetworkParams, RunConfig};
+use crate::config::{Mode, NetworkParams, Routing, RunConfig};
 use crate::coordinator::{run, RunResult};
 
 /// Where harness CSVs land.
@@ -36,6 +36,9 @@ pub fn modeled(
     cfg.procs = procs;
     cfg.sim_seconds = sim_seconds;
     cfg.mode = Mode::Modeled;
+    // The harnesses reproduce the paper, whose runs broadcast every
+    // spike to every rank; filtered pricing is opt-in via --routing.
+    cfg.routing = Routing::Broadcast;
     cfg.platform = platform.to_string();
     cfg.interconnect = interconnect.to_string();
     run(&cfg)

@@ -9,6 +9,7 @@
 
 use anyhow::Result;
 
+use crate::metrics::comm_volume::expected_recv_bytes_per_rank;
 use crate::util::table::{ascii_chart, Table};
 
 use super::common::{modeled, paper_networks, results_dir, sim_seconds};
@@ -19,19 +20,35 @@ pub fn run(fast: bool) -> Result<String> {
     let nets = paper_networks();
 
     let mut table = Table::new(
-        "Fig 2 — strong scaling vs real-time, Intel+IB (modeled, s per 10 s sim)",
-        &["procs", "20480N", "320KN", "1280KN", "real-time"],
+        "Fig 2 — strong scaling vs real-time, Intel+IB (modeled, s per 10 s sim; \
+         recv columns: 20480N AER bytes/rank, filtered vs broadcast routing)",
+        &["procs", "20480N", "320KN", "1280KN", "real-time", "recv MB/rk", "bcast MB/rk"],
     );
     let mut cols: Vec<Vec<(f64, f64)>> = vec![Vec::new(); nets.len()];
     for &p in &procs {
         let mut row = vec![p.to_string()];
+        let mut spikes_20480_10s = 0u64;
         for (i, (_, net)) in nets.iter().enumerate() {
             let r = modeled(net.clone(), "xeon", "ib", p, sim_s)?;
+            if i == 0 {
+                spikes_20480_10s = (r.total_spikes as f64 * 10.0 / sim_s) as u64;
+            }
             let wall10 = r.wall_s * 10.0 / sim_s;
             row.push(format!("{wall10:.1}"));
             cols[i].push((p as f64, wall10));
         }
         row.push("10.0".to_string());
+        let n20 = &nets[0].1;
+        for filtered in [true, false] {
+            let bytes = expected_recv_bytes_per_rank(
+                n20.n_neurons,
+                n20.syn_per_neuron,
+                p,
+                spikes_20480_10s,
+                filtered,
+            );
+            row.push(format!("{:.1}", bytes / 1e6));
+        }
         table.row(row);
     }
 

@@ -5,6 +5,7 @@
 
 use anyhow::Result;
 
+use crate::metrics::comm_volume::expected_recv_bytes_per_rank;
 use crate::util::table::Table;
 
 use super::common::{modeled, paper_networks, results_dir, sim_seconds};
@@ -24,16 +25,25 @@ pub fn run(fast: bool) -> Result<String> {
     let sim_s = sim_seconds(fast);
     let nets = paper_networks();
     let mut table = Table::new(
-        "Table I — execution-component profile (modeled vs paper)",
+        "Table I — execution-component profile (modeled vs paper; recv MB/r = \
+         AER bytes each rank receives per 10 s sim under filtered routing)",
         &[
             "net", "procs", "wall (s)", "paper", "comp %", "paper", "comm %", "paper",
-            "barrier %", "paper",
+            "barrier %", "paper", "recv MB/r",
         ],
     );
     for &(ni, p, pw, pc, pm, pb) in PAPER_ROWS {
         let (name, net) = &nets[ni];
         let r = modeled(net.clone(), "xeon", "ib", p, sim_s)?;
         let (comp, comm, barrier) = r.components.fractions();
+        let spikes_10s = (r.total_spikes as f64 * 10.0 / sim_s) as u64;
+        let recv = expected_recv_bytes_per_rank(
+            net.n_neurons,
+            net.syn_per_neuron,
+            p,
+            spikes_10s,
+            true,
+        );
         table.row(vec![
             name.to_string(),
             p.to_string(),
@@ -45,6 +55,7 @@ pub fn run(fast: bool) -> Result<String> {
             format!("{pm:.1}"),
             format!("{:.1}", barrier * 100.0),
             format!("{pb:.1}"),
+            format!("{:.1}", recv / 1e6),
         ]);
     }
     let out = table.render();

@@ -12,7 +12,16 @@
 //! * [`engine`] — the per-rank simulation engine: delay rings, the 1 ms
 //!   hybrid event/time-driven step.
 //! * [`comm`] — AER spike wire format (12 B/spike), message packing, the
-//!   all-to-all transport and barrier used by live runs.
+//!   all-to-all transport and barrier used by live runs, and
+//!   destination-filtered spike routing: because connectivity is a pure
+//!   function of `(seed, source, k)`, each rank precomputes which
+//!   destination ranks its neurons project to and sends a spike only
+//!   where a postsynaptic target lives. The filter degenerates to
+//!   broadcast under dense connectivity at small P (`M >> P` puts a
+//!   target on every rank) but always removes the transport loopback,
+//!   and at large P or sparse connectivity it removes whole rank pairs
+//!   — while keeping the spike raster bitwise identical for every
+//!   process count.
 //! * [`simnet`] — interconnect models (InfiniBand, Ethernet, GbE) used by
 //!   the modeled/timing mode.
 //! * [`platform`] — CPU/node models of the paper's three testbeds

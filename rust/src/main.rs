@@ -3,8 +3,10 @@
 //! ```text
 //! dpsnn run [config.toml] [--neurons N] [--procs P] [--seconds S]
 //!           [--backend native|xla] [--mode live|modeled]
+//!           [--routing filtered|broadcast]
 //!           [--platform NAME] [--interconnect NAME] [--seed X] [--progress]
 //! dpsnn repro <fig1..fig8|table1..table4|all> [--fast]
+//! dpsnn bench-smoke [--neurons N] [--procs P] [--seconds S] [--out F]
 //! dpsnn list-platforms
 //! dpsnn raster [--neurons N] [--seconds S] [--bin MS]   # regime demo
 //! ```
@@ -26,6 +28,8 @@ USAGE:
   dpsnn repro <id|all> [--fast]         regenerate a paper figure/table
   dpsnn replay <trace.csv> [options]    replay a recorded trace on a
                                         modeled platform (see --record-trace)
+  dpsnn bench-smoke [options]           tiny live run, filtered vs broadcast
+                                        routing, JSON perf record (CI)
   dpsnn list-platforms                  show modeled platform presets
   dpsnn raster [options]                live run + population-rate raster
 
@@ -35,12 +39,18 @@ RUN OPTIONS:
   --seconds S        simulated seconds (default 10)
   --backend B        native | xla (default native)
   --mode M           live | modeled (default live)
+  --routing R        filtered | broadcast spike exchange (default filtered)
   --platform NAME    modeled platform preset (default xeon)
   --interconnect IC  ib | eth1g | shm | exanest (default ib)
   --artifacts DIR    AOT artifact directory (default artifacts)
   --seed X           RNG seed
   --progress         print per-second progress
   --record-trace F   write the per-step workload trace to F (live runs)
+
+BENCH-SMOKE OPTIONS:
+  --neurons N / --procs P / --seconds S   workload (default 2048 / 4 / 1)
+  --out F            JSON output path (default BENCH_routing.json)
+  --platform NAME    power-model platform preset (default xeon)
 
 REPRO IDS:
   fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 table1 table2 table3 table4 all
@@ -59,6 +69,7 @@ fn real_main() -> Result<()> {
         Some("run") => cmd_run(&args),
         Some("repro") => cmd_repro(&args),
         Some("replay") => cmd_replay(&args),
+        Some("bench-smoke") => cmd_bench_smoke(&args),
         Some("list-platforms") => cmd_list_platforms(),
         Some("raster") => cmd_raster(&args),
         Some("help") | None => {
@@ -87,6 +98,9 @@ fn build_config(args: &Args) -> Result<RunConfig> {
     }
     if let Some(m) = args.get("mode") {
         cfg.mode = m.parse()?;
+    }
+    if let Some(r) = args.get("routing") {
+        cfg.routing = r.parse()?;
     }
     if let Some(p) = args.get("platform") {
         cfg.platform = p.to_string();
@@ -154,6 +168,9 @@ fn cmd_replay(args: &Args) -> Result<()> {
     cfg.net = NetworkParams::paper(trace.n_neurons);
     cfg.net.syn_per_neuron = trace.syn_per_neuron;
     cfg.mode = dpsnn::config::Mode::Modeled;
+    // Recorded traces came from the paper-style exchange; price broadcast
+    // unless the user asks for the filtered matrix.
+    cfg.routing = args.get_or("routing", dpsnn::config::Routing::Broadcast)?;
     cfg.platform = args.get_or("platform", "xeon".to_string())?;
     cfg.interconnect = args.get_or("interconnect", "ib".to_string())?;
     cfg.procs = args.get_or("procs", trace.procs)?;
@@ -174,6 +191,142 @@ fn cmd_replay(args: &Args) -> Result<()> {
     );
     let r = dpsnn::coordinator::modeled::run_modeled_trace(&cfg, &trace)?;
     println!("{}", r.summary());
+    Ok(())
+}
+
+/// CI perf smoke: run a tiny live simulation under both spike-routing
+/// protocols and emit a machine-readable `BENCH_routing.json` with
+/// wall-clock, per-rank transport bytes and the power model's
+/// J/synaptic-event, so successive PRs accumulate a perf trajectory.
+fn cmd_bench_smoke(args: &Args) -> Result<()> {
+    use dpsnn::config::Routing;
+    use dpsnn::coordinator::RunResult;
+
+    let neurons: u32 = args.get_or("neurons", 2048u32)?;
+    let procs: u32 = args.get_or("procs", 4u32)?;
+    let seconds: f64 = args.get_or("seconds", 1.0)?;
+    let out = args.get_or("out", "BENCH_routing.json".to_string())?;
+    let platform_name = args.get_or("platform", "xeon".to_string())?;
+
+    let platform = dpsnn::platform::presets::platform_by_name(&platform_name)?;
+    let link = dpsnn::simnet::presets::interconnect_by_name(platform.default_interconnect)?;
+    let ranks_per_node = platform.node.cores_per_node;
+    let comm_model = dpsnn::simnet::AllToAllModel::new(link, ranks_per_node);
+    let power = dpsnn::power::PowerModel::new(platform, link);
+
+    let run_one = |routing: Routing| -> Result<RunResult> {
+        let mut cfg = RunConfig::default();
+        cfg.net = NetworkParams::tiny(neurons);
+        cfg.procs = procs;
+        cfg.sim_seconds = seconds;
+        cfg.routing = routing;
+        cfg.validate()?;
+        eprintln!("[bench-smoke] live run, {routing} routing...");
+        coordinator::run(&cfg)
+    };
+
+    let section = |r: &RunResult| -> String {
+        let utilization = r.components.fractions().0;
+        let energy_j = power.energy_to_solution_j(r.procs, utilization, r.wall_s);
+        let events = dpsnn::metrics::SynapticEventCount::measured(
+            r.total_syn_events,
+            r.total_ext_events,
+        );
+        let uj = dpsnn::metrics::joules_per_synaptic_event(energy_j, &events) * 1e6;
+        // Price the measured traffic matrix (mean bytes per pair per
+        // step) on the modeled interconnect: the per-pair path that
+        // distinguishes filtered from broadcast exchanges. Ceiling
+        // division keeps sporadic pairs alive (>= 1 B/step) — a pair
+        // with any run traffic must still pay its per-step envelope,
+        // only statically dead pairs price as zero.
+        let steps = r.pop_counts.len().max(1) as u64;
+        let matrix: Vec<Vec<u64>> = r
+            .comm_volume
+            .iter()
+            .map(|c| c.per_dst_bytes.iter().map(|&b| b.div_ceil(steps)).collect())
+            .collect();
+        let exchange_s = comm_model.exchange_time_matrix(&matrix).total();
+        let u64s = |f: fn(&dpsnn::metrics::CommVolume) -> u64| -> String {
+            let cells: Vec<String> =
+                r.comm_volume.iter().map(|c| f(c).to_string()).collect();
+            format!("[{}]", cells.join(","))
+        };
+        format!(
+            concat!(
+                "{{\n",
+                "      \"wall_s\": {:.6},\n",
+                "      \"realtime_factor\": {:.4},\n",
+                "      \"total_spikes\": {},\n",
+                "      \"total_syn_events\": {},\n",
+                "      \"bytes_sent_per_rank\": {},\n",
+                "      \"bytes_recv_per_rank\": {},\n",
+                "      \"messages_per_rank\": {},\n",
+                "      \"modeled_exchange_s_per_step\": {:.9},\n",
+                "      \"energy_j_modeled\": {:.3},\n",
+                "      \"uj_per_syn_event\": {:.4}\n",
+                "    }}"
+            ),
+            r.wall_s,
+            r.realtime_factor(),
+            r.total_spikes,
+            r.total_syn_events,
+            u64s(|c| c.bytes_sent),
+            u64s(|c| c.bytes_recv),
+            u64s(|c| c.messages),
+            exchange_s,
+            energy_j,
+            uj,
+        )
+    };
+
+    let filtered = run_one(Routing::Filtered)?;
+    let broadcast = run_one(Routing::Broadcast)?;
+    let recv = |r: &RunResult| -> u64 {
+        r.comm_volume.iter().map(|c| c.bytes_recv).sum()
+    };
+    let (recv_f, recv_b) = (recv(&filtered), recv(&broadcast));
+    anyhow::ensure!(
+        filtered.pop_counts == broadcast.pop_counts,
+        "routing protocols must produce identical rasters"
+    );
+    anyhow::ensure!(
+        recv_f < recv_b,
+        "filtered routing must receive fewer bytes ({recv_f} vs {recv_b})"
+    );
+    let reduction = 1.0 - recv_f as f64 / recv_b as f64;
+
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"benchmark\": \"spike_routing_smoke\",\n",
+            "  \"neurons\": {},\n",
+            "  \"syn_per_neuron\": {},\n",
+            "  \"procs\": {},\n",
+            "  \"sim_seconds\": {},\n",
+            "  \"power_platform\": \"{}\",\n",
+            "  \"routing\": {{\n",
+            "    \"filtered\": {},\n",
+            "    \"broadcast\": {}\n",
+            "  }},\n",
+            "  \"recv_bytes_reduction_frac\": {:.6}\n",
+            "}}\n"
+        ),
+        neurons,
+        NetworkParams::tiny(neurons).syn_per_neuron,
+        procs,
+        seconds,
+        platform_name,
+        section(&filtered),
+        section(&broadcast),
+        reduction,
+    );
+    std::fs::write(&out, &json)?;
+    println!("{}", filtered.summary());
+    println!(
+        "bench-smoke: recv bytes/run {recv_f} (filtered) vs {recv_b} (broadcast), \
+         -{:.1}%; wrote {out}",
+        reduction * 100.0
+    );
     Ok(())
 }
 

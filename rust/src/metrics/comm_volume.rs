@@ -1,0 +1,141 @@
+//! Per-rank communication-volume accounting and the analytic traffic
+//! expectations used by the harnesses.
+//!
+//! Live runs accumulate one [`CommVolume`] per rank from the transport's
+//! [`ExchangeStats`]; modeled runs and the fig2/table1 harnesses use the
+//! closed-form expectations below to compare broadcast with
+//! destination-filtered routing without running the network.
+
+use crate::comm::aer::SPIKE_WIRE_BYTES;
+use crate::comm::transport::ExchangeStats;
+
+/// Bytes/messages a rank moved through the transport over a whole run.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CommVolume {
+    /// Payload bytes sent to other ranks (self excluded).
+    pub bytes_sent: u64,
+    /// Payload bytes delivered to this rank, loopback block included
+    /// (see [`ExchangeStats`]).
+    pub bytes_recv: u64,
+    /// Network messages sent (envelopes included).
+    pub messages: u64,
+    /// Cumulative payload bytes posted per destination rank — this
+    /// rank's row of the run-total traffic matrix.
+    pub per_dst_bytes: Vec<u64>,
+}
+
+impl CommVolume {
+    /// Fold one exchange's accounting into the run totals.
+    pub fn observe(&mut self, stats: &ExchangeStats) {
+        self.bytes_sent += stats.bytes_sent;
+        self.bytes_recv += stats.bytes_recv;
+        self.messages += stats.messages;
+        if self.per_dst_bytes.len() < stats.per_dst_bytes.len() {
+            self.per_dst_bytes.resize(stats.per_dst_bytes.len(), 0);
+        }
+        for (acc, &b) in self.per_dst_bytes.iter_mut().zip(&stats.per_dst_bytes) {
+            *acc += b;
+        }
+    }
+}
+
+/// Probability that a source neuron projects to at least one neuron of a
+/// `block_size`-neuron rank, with `m` targets drawn uniformly from the
+/// other `n - 1` neurons: `1 - (1 - block/(n-1))^m`.
+///
+/// This is the expected fraction of (source neuron, destination rank)
+/// pairs the destination filter keeps. It is ~1 for `m >> p` (dense
+/// connectivity degenerates to broadcast) and drops toward `m / p` once
+/// the rank count passes the fan-out.
+pub fn pair_coverage(n: u32, m: u32, block_size: f64) -> f64 {
+    if n <= 1 {
+        return 1.0;
+    }
+    let q = (block_size / (n as f64 - 1.0)).clamp(0.0, 1.0);
+    1.0 - (1.0 - q).powf(m as f64)
+}
+
+/// Mean pair coverage over an even `procs`-way partition of `n` neurons.
+pub fn mean_pair_coverage(n: u32, m: u32, procs: u32) -> f64 {
+    if procs <= 1 {
+        return 1.0;
+    }
+    pair_coverage(n, m, n as f64 / procs as f64)
+}
+
+/// Expected payload bytes one rank receives from the *other* ranks over
+/// a run emitting `total_spikes`, under broadcast or filtered routing
+/// (uniform emission across ranks; loopback excluded so the two
+/// protocols are compared on network traffic alone).
+pub fn expected_recv_bytes_per_rank(
+    n: u32,
+    m: u32,
+    procs: u32,
+    total_spikes: u64,
+    filtered: bool,
+) -> f64 {
+    if procs <= 1 {
+        return 0.0;
+    }
+    let from_others =
+        total_spikes as f64 * (procs as f64 - 1.0) / procs as f64 * SPIKE_WIRE_BYTES as f64;
+    if filtered {
+        from_others * mean_pair_coverage(n, m, procs)
+    } else {
+        from_others
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_accumulates() {
+        let mut v = CommVolume::default();
+        v.observe(&ExchangeStats {
+            bytes_sent: 10,
+            bytes_recv: 14,
+            messages: 3,
+            per_dst_bytes: vec![4, 0, 6, 4],
+        });
+        v.observe(&ExchangeStats {
+            bytes_sent: 2,
+            bytes_recv: 2,
+            messages: 3,
+            per_dst_bytes: vec![0, 2, 0, 0],
+        });
+        assert_eq!(v.bytes_sent, 12);
+        assert_eq!(v.bytes_recv, 16);
+        assert_eq!(v.messages, 6);
+        assert_eq!(v.per_dst_bytes, vec![4, 2, 6, 4]);
+    }
+
+    #[test]
+    fn coverage_limits() {
+        // dense: M >> P -> ~1 (broadcast degeneration)
+        assert!(mean_pair_coverage(20_480, 1125, 8) > 0.999_999);
+        // sparse: one target, P ranks -> ~1/P
+        let c = mean_pair_coverage(1024, 1, 8);
+        assert!((c - 1.0 / 8.0).abs() < 0.01, "c={c}");
+        // single rank sees everything
+        assert_eq!(mean_pair_coverage(1024, 16, 1), 1.0);
+        // coverage shrinks as P grows past the fan-out
+        let c64 = mean_pair_coverage(20_480, 32, 64);
+        let c512 = mean_pair_coverage(20_480, 32, 512);
+        assert!(c512 < c64 && c64 < 1.0, "c64={c64} c512={c512}");
+    }
+
+    #[test]
+    fn expected_bytes_filtered_never_exceeds_broadcast() {
+        for p in [2u32, 8, 64, 256] {
+            let b = expected_recv_bytes_per_rank(20_480, 1125, p, 1_000_000, false);
+            let f = expected_recv_bytes_per_rank(20_480, 1125, p, 1_000_000, true);
+            assert!(f <= b, "p={p}: filtered {f} > broadcast {b}");
+            assert!(b > 0.0);
+        }
+        let sparse_b = expected_recv_bytes_per_rank(1024, 4, 16, 1000, false);
+        let sparse_f = expected_recv_bytes_per_rank(1024, 4, 16, 1000, true);
+        assert!(sparse_f < 0.5 * sparse_b, "sparse nets filter hard");
+    }
+}

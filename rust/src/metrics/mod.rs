@@ -1,8 +1,11 @@
-//! Derived metrics: synaptic-event counts and the paper's headline
-//! efficiency unit, joules per synaptic event.
+//! Derived metrics: synaptic-event counts, the paper's headline
+//! efficiency unit (joules per synaptic event), and per-rank
+//! communication-volume accounting for the spike-routing study.
 
 pub mod synevents;
 pub mod energy;
+pub mod comm_volume;
 
+pub use comm_volume::CommVolume;
 pub use energy::joules_per_synaptic_event;
 pub use synevents::SynapticEventCount;

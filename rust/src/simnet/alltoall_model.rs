@@ -79,6 +79,75 @@ impl AllToAllModel {
         CommBreakdown { software, fabric }
     }
 
+    /// Exchange where each (src, dst) pair is active with probability
+    /// `coverage` — the destination-filtered routing of
+    /// [`crate::comm::routing`], where a pair only puts bytes on the
+    /// wire when the source rank hosts a neuron projecting into the
+    /// destination. `coverage = 1` reproduces [`Self::exchange_time`]
+    /// (dense connectivity degenerates to broadcast); lower coverage
+    /// thins both the per-rank software term and the fabric's message
+    /// and byte load.
+    pub fn exchange_time_filtered(
+        &self,
+        p: u32,
+        bytes_per_msg: u64,
+        coverage: f64,
+    ) -> CommBreakdown {
+        if p <= 1 {
+            return CommBreakdown::default();
+        }
+        let coverage = coverage.clamp(0.0, 1.0);
+        let (remote, local) = self.peers(p);
+        let software = coverage
+            * (remote as f64 * self.net.message_time(bytes_per_msg)
+                + local as f64 * self.shm.message_time(bytes_per_msg));
+        let internode_msgs = coverage * (p as u64 * remote as u64) as f64;
+        let internode_bytes = internode_msgs * bytes_per_msg as f64;
+        let bisection_bps = self.net.beta_bps * (self.nodes(p) as f64 / 2.0).max(1.0);
+        let fabric = internode_msgs * self.net.fabric_msg_cost_s
+            + internode_bytes / bisection_bps;
+        CommBreakdown { software, fabric }
+    }
+
+    /// Price an explicit per-pair traffic matrix `bytes[src][dst]` (the
+    /// run-total or per-step matrix accumulated by
+    /// [`crate::comm::transport::ExchangeStats::per_dst_bytes`]). Ranks
+    /// are packed onto nodes in index order, `ranks_per_node` at a time.
+    /// A pair with zero bytes is treated as statically dead (the filter
+    /// proved no synapse crosses it) and sends no envelope; the self
+    /// slot is never priced.
+    pub fn exchange_time_matrix(&self, bytes: &[Vec<u64>]) -> CommBreakdown {
+        let p = bytes.len() as u32;
+        if p <= 1 {
+            return CommBreakdown::default();
+        }
+        let node_of = |r: u32| r / self.ranks_per_node;
+        let mut software = 0.0f64;
+        let mut internode_msgs = 0u64;
+        let mut internode_bytes = 0u64;
+        for (src, row) in bytes.iter().enumerate() {
+            assert_eq!(row.len() as u32, p, "traffic matrix must be square");
+            let mut t = 0.0;
+            for (dst, &b) in row.iter().enumerate() {
+                if dst == src || b == 0 {
+                    continue;
+                }
+                if node_of(src as u32) == node_of(dst as u32) {
+                    t += self.shm.message_time(b);
+                } else {
+                    t += self.net.message_time(b);
+                    internode_msgs += 1;
+                    internode_bytes += b;
+                }
+            }
+            software = software.max(t);
+        }
+        let bisection_bps = self.net.beta_bps * (self.nodes(p) as f64 / 2.0).max(1.0);
+        let fabric = internode_msgs as f64 * self.net.fabric_msg_cost_s
+            + internode_bytes as f64 / bisection_bps;
+        CommBreakdown { software, fabric }
+    }
+
     /// Exchange limited to `peers` neighbor ranks (spatially-mapped
     /// networks: the reduced process-adjacency matrix of the paper's
     /// Fig 1 / [9]). Traffic stays neighbor-local, so the global fabric
@@ -197,6 +266,68 @@ mod tests {
         assert_eq!(m.exchange_time_neighbors(1, 100, 8).total(), 0.0);
         let small = m.exchange_time_neighbors(4, 100, 64);
         assert!(small.total() > 0.0);
+    }
+
+    #[test]
+    fn filtered_full_coverage_matches_homogeneous() {
+        let m = AllToAllModel::new(IB, 16);
+        for p in [4u32, 32, 256] {
+            let a = m.exchange_time(p, 25);
+            let b = m.exchange_time_filtered(p, 25, 1.0);
+            assert!((a.total() - b.total()).abs() < 1e-12 * a.total().max(1e-30));
+        }
+        assert_eq!(m.exchange_time_filtered(1, 25, 0.5).total(), 0.0);
+    }
+
+    #[test]
+    fn filtered_coverage_scales_cost_down() {
+        let m = AllToAllModel::new(IB, 16);
+        let full = m.exchange_time(64, 25).total();
+        let half = m.exchange_time_filtered(64, 25, 0.5).total();
+        let tenth = m.exchange_time_filtered(64, 25, 0.1).total();
+        assert!(half < full && tenth < half, "{full} {half} {tenth}");
+        // both terms thin with coverage, so cost is ~linear in it
+        assert!((half / full - 0.5).abs() < 0.05, "half/full={}", half / full);
+    }
+
+    #[test]
+    fn matrix_pricing_matches_homogeneous_exchange() {
+        let m = AllToAllModel::new(IB, 16);
+        let p = 32usize;
+        let b = 25u64;
+        let matrix: Vec<Vec<u64>> = (0..p)
+            .map(|src| (0..p).map(|dst| if src == dst { 0 } else { b }).collect())
+            .collect();
+        let got = m.exchange_time_matrix(&matrix);
+        let want = m.exchange_time(p as u32, b);
+        assert!(
+            (got.software - want.software).abs() < 1e-9 * want.software,
+            "software {} vs {}",
+            got.software,
+            want.software
+        );
+        assert!(
+            (got.fabric - want.fabric).abs() < 1e-9 * want.fabric,
+            "fabric {} vs {}",
+            got.fabric,
+            want.fabric
+        );
+    }
+
+    #[test]
+    fn matrix_pricing_skips_dead_pairs() {
+        let m = AllToAllModel::new(IB, 4);
+        // 8 ranks on 2 nodes; only rank 0 -> rank 7 carries traffic.
+        let mut matrix = vec![vec![0u64; 8]; 8];
+        matrix[0][7] = 1000;
+        let t = m.exchange_time_matrix(&matrix);
+        assert!(t.software > 0.0 && t.fabric > 0.0);
+        let full: Vec<Vec<u64>> = (0..8)
+            .map(|src| (0..8).map(|dst| if src == dst { 0 } else { 1000 }).collect())
+            .collect();
+        assert!(t.total() < m.exchange_time_matrix(&full).total() / 4.0);
+        // degenerate: single rank
+        assert_eq!(m.exchange_time_matrix(&[vec![0]]).total(), 0.0);
     }
 
     #[test]

@@ -44,6 +44,12 @@ pub struct ModelRun {
     /// When set, spikes travel only to this many neighbor ranks
     /// (spatially-mapped connectivity, Fig 1); None = all-to-all.
     pub peers: Option<u32>,
+    /// When set, each (src, dst) rank pair is active with this
+    /// probability — the destination-filtered routing's expected pair
+    /// coverage (`metrics::comm_volume::mean_pair_coverage`). None =
+    /// broadcast. Ignored when `peers` is set (the neighbor model
+    /// already restricts the traffic matrix).
+    pub filter_coverage: Option<f64>,
 }
 
 /// Replay result.
@@ -61,12 +67,19 @@ pub struct ModeledOutcome {
 
 impl ModelRun {
     pub fn new(cluster: HeteroCluster, comm: AllToAllModel) -> Self {
-        Self { cluster, comm, peers: None }
+        Self { cluster, comm, peers: None, filter_coverage: None }
     }
 
     /// Neighbor-limited variant (spatially-mapped networks).
     pub fn with_peers(mut self, peers: u32) -> Self {
         self.peers = Some(peers);
+        self
+    }
+
+    /// Destination-filtered variant: price only the covered fraction of
+    /// the (src, dst) pair matrix.
+    pub fn with_filter_coverage(mut self, coverage: f64) -> Self {
+        self.filter_coverage = Some(coverage.clamp(0.0, 1.0));
         self
     }
 
@@ -112,8 +125,9 @@ impl ModelRun {
             total_syn_events += trace.syn_events(step);
             // With neighbor-limited traffic a rank only sees the spikes
             // of its peer group.
-            let recv_frac = match self.peers {
-                Some(k) if p > 1 => (k.min(p - 1) as f64) / (p - 1) as f64,
+            let recv_frac = match (self.peers, self.filter_coverage) {
+                (Some(k), _) if p > 1 => (k.min(p - 1) as f64) / (p - 1) as f64,
+                (None, Some(q)) if p > 1 => q,
                 _ => 1.0,
             };
             let step_spikes: f64 =
@@ -140,9 +154,10 @@ impl ModelRun {
             let bytes = (trace.mean_rank_spikes(step)
                 * crate::comm::aer::SPIKE_WIRE_BYTES as f64)
                 .round() as u64;
-            let exch = match self.peers {
-                Some(k) => self.comm.exchange_time_neighbors(p, bytes, k),
-                None => self.comm.exchange_time(p, bytes),
+            let exch = match (self.peers, self.filter_coverage) {
+                (Some(k), _) => self.comm.exchange_time_neighbors(p, bytes, k),
+                (None, Some(q)) => self.comm.exchange_time_filtered(p, bytes, q),
+                (None, None) => self.comm.exchange_time(p, bytes),
             };
             let comm = exch.total();
 
@@ -251,6 +266,31 @@ mod tests {
                 o.wall_s
             );
         }
+    }
+
+    #[test]
+    fn filter_coverage_thins_communication() {
+        let w = AnalyticWorkload::paper_regime(NetworkParams::paper_20480(), 5);
+        let trace = w.generate(64, 2.0);
+        let base = ModelRun::new(
+            HeteroCluster::homogeneous(XEON_E5_2630V2, 64, 16),
+            AllToAllModel::new(IB, 16),
+        );
+        let broadcast = base.replay(&trace);
+        let full = base.clone().with_filter_coverage(1.0).replay(&trace);
+        let sparse = base.with_filter_coverage(0.2).replay(&trace);
+        // full coverage == broadcast (dense degeneration)
+        assert!(
+            (full.components.communication - broadcast.components.communication).abs()
+                < 1e-9 * broadcast.components.communication,
+        );
+        // 20% coverage must cut the communication term hard
+        assert!(
+            sparse.components.communication < 0.4 * broadcast.components.communication,
+            "sparse {} vs broadcast {}",
+            sparse.components.communication,
+            broadcast.components.communication
+        );
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! This is what makes the paper's strong-scaling sweeps simulate the same
 //! network at every P.
 
-use dpsnn::config::{Mode, NetworkParams, RunConfig};
+use dpsnn::config::{Mode, NetworkParams, Routing, RunConfig};
 use dpsnn::coordinator;
 
 fn cfg(n: u32, procs: u32, seconds: f64, seed: u64) -> RunConfig {
@@ -17,6 +17,16 @@ fn cfg(n: u32, procs: u32, seconds: f64, seed: u64) -> RunConfig {
     cfg.seed = seed;
     cfg.mode = Mode::Live;
     cfg
+}
+
+/// A sparse variant (fan-out 8 instead of n/4) where destination
+/// filtering drops whole source→rank pairs rather than degenerating to
+/// broadcast.
+fn sparse_cfg(procs: u32, routing: Routing) -> RunConfig {
+    let mut c = cfg(512, procs, 0.3, 42);
+    c.net.syn_per_neuron = 8;
+    c.routing = routing;
+    c
 }
 
 #[test]
@@ -48,6 +58,48 @@ fn same_seed_reproduces_exactly() {
     let b = coordinator::run(&cfg(512, 4, 0.3, 7)).unwrap();
     assert_eq!(a.pop_counts, b.pop_counts);
     assert_eq!(a.total_spikes, b.total_spikes);
+}
+
+#[test]
+fn filtered_routing_deterministic_across_process_counts() {
+    // The raster with destination filtering on must be bitwise identical
+    // for P in {1, 2, 4, 8} *and* identical to the broadcast raster, on
+    // a sparse network where the filter really drops traffic.
+    let reference = coordinator::run(&sparse_cfg(1, Routing::Broadcast)).unwrap();
+    assert!(reference.total_spikes > 0, "sparse network must be active");
+    for procs in [1u32, 2, 4, 8] {
+        let r = coordinator::run(&sparse_cfg(procs, Routing::Filtered)).unwrap();
+        assert_eq!(
+            r.pop_counts, reference.pop_counts,
+            "filtered raster diverged at P={procs}"
+        );
+        assert_eq!(r.total_spikes, reference.total_spikes);
+        assert_eq!(r.total_syn_events, reference.total_syn_events);
+        assert_eq!(r.total_ext_events, reference.total_ext_events);
+    }
+}
+
+#[test]
+fn filtered_routing_moves_fewer_bytes_on_sparse_networks() {
+    // 512 neurons, fan-out 8, P=8: a source reaches ~1-(1-1/8)^8 ~ 66%
+    // of ranks, so pair filtering (not just loopback elision) must cut
+    // the network send volume.
+    let filtered = coordinator::run(&sparse_cfg(8, Routing::Filtered)).unwrap();
+    let broadcast = coordinator::run(&sparse_cfg(8, Routing::Broadcast)).unwrap();
+    assert_eq!(filtered.pop_counts, broadcast.pop_counts);
+    let sent = |r: &coordinator::RunResult| -> u64 {
+        r.comm_volume.iter().map(|c| c.bytes_sent).sum()
+    };
+    let recv = |r: &coordinator::RunResult| -> u64 {
+        r.comm_volume.iter().map(|c| c.bytes_recv).sum()
+    };
+    assert!(
+        (sent(&filtered) as f64) < 0.9 * sent(&broadcast) as f64,
+        "pair filtering should cut sends: {} vs {}",
+        sent(&filtered),
+        sent(&broadcast)
+    );
+    assert!(recv(&filtered) < recv(&broadcast));
 }
 
 #[test]

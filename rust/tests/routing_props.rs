@@ -1,0 +1,86 @@
+//! Properties of the destination-filtered routing table
+//! (`comm::routing`): the per-destination send buffers must carry
+//! exactly the broadcast spike set restricted to ranks with local
+//! postsynaptic targets, for any partitioning and connectivity shape.
+
+use dpsnn::comm::routing::RoutingTable;
+use dpsnn::engine::partition::Partition;
+use dpsnn::model::connectivity::{ConnectivityParams, IncomingSynapses};
+use dpsnn::util::prop::forall;
+
+/// Union-of-buffers property: for every rank pair (src_rank, dst), the
+/// set of sources the filter forwards equals the set of sources whose
+/// incoming-synapse row at `dst` is non-empty (what broadcast would have
+/// delivered to a non-trivial row).
+#[test]
+fn filtered_buffers_equal_broadcast_restricted_to_target_ranks() {
+    forall("routing filter = restricted broadcast", 25, |rng| {
+        let n = 16 + rng.next_below(100);
+        let m = 1 + rng.next_below(12.min(n - 2));
+        let p = 1 + rng.next_below(7);
+        let cp = ConnectivityParams {
+            seed: rng.next_u64(),
+            n,
+            m,
+            dmin: 1,
+            dmax: 4,
+        };
+        let part = Partition::even(n, p);
+        let incoming: Vec<IncomingSynapses> = (0..p)
+            .map(|r| {
+                let (lo, hi) = part.range(r);
+                IncomingSynapses::build(&cp, lo, hi)
+            })
+            .collect();
+        for src_rank in 0..p {
+            let table = RoutingTable::build(&cp, &part, src_rank);
+            let (lo, hi) = part.range(src_rank);
+            for dst in 0..p {
+                // filtered: sources the table forwards to dst
+                let sent: Vec<u32> = (lo..hi)
+                    .filter(|&s| table.sends_to(s - lo, dst))
+                    .collect();
+                // broadcast restricted: sources with targets on dst
+                let needed: Vec<u32> = (lo..hi)
+                    .filter(|&s| !incoming[dst as usize].row(s).0.is_empty())
+                    .collect();
+                assert_eq!(
+                    sent, needed,
+                    "n={n} m={m} p={p} src_rank={src_rank} dst={dst}"
+                );
+            }
+            // every source has m >= 1 targets, so it must reach >= 1 rank
+            for s in lo..hi {
+                assert!(table.rank_fanout(s - lo) >= 1, "source {s} routes nowhere");
+            }
+        }
+    });
+}
+
+/// The rank-bitmap fan-out can never exceed the synapse fan-out (each
+/// target adds at most one rank) nor the rank count.
+#[test]
+fn rank_fanout_is_bounded() {
+    forall("routing fanout bounds", 25, |rng| {
+        let n = 32 + rng.next_below(200);
+        let m = 1 + rng.next_below(n / 2);
+        let p = 1 + rng.next_below(15);
+        let cp = ConnectivityParams {
+            seed: rng.next_u64(),
+            n,
+            m,
+            dmin: 1,
+            dmax: 8,
+        };
+        let part = Partition::even(n, p);
+        let rank = rng.next_below(p);
+        let table = RoutingTable::build(&cp, &part, rank);
+        for local in 0..table.n_local() {
+            let fanout = table.rank_fanout(local);
+            assert!(fanout >= 1 && fanout <= m.min(p));
+            assert_eq!(fanout as usize, table.dest_ranks(local).count());
+        }
+        let mean = table.mean_rank_fanout();
+        assert!(mean >= 1.0 && mean <= p as f64);
+    });
+}
