@@ -4,6 +4,20 @@
 //! neuron ID, emission time); in our case 12 byte per spike are required."
 //! We encode exactly that: `u32` neuron id + `f64` emission time in ms,
 //! little-endian, 12 bytes per spike.
+//!
+//! Two framings ride on the same 12-byte record:
+//!
+//! * **flat** ([`encode_spikes`] / [`decode_spikes`]) — the paper's wire
+//!   format: a bare record sequence, one exchange per network step. The
+//!   fidelity harnesses stay on this format.
+//! * **epoch-batched** ([`encode_spikes_epoch`] / [`decode_spikes_epoch`])
+//!   — per-step run headers (`step: u32`, `count: u32`) over the same
+//!   records, so a single exchange carries a whole min-delay window of
+//!   steps (see [`crate::config::ExchangeCadence`]). The records alone
+//!   would suffice (each carries its emission time); the headers make
+//!   run boundaries explicit and give the decoder an integrity
+//!   cross-check — every record must agree with its run header — while
+//!   leaving the paper's flat format untouched for per-step fidelity.
 
 use anyhow::{bail, Result};
 
@@ -11,6 +25,24 @@ use crate::engine::spike::Spike;
 
 /// Bytes per spike on the wire (paper: 12).
 pub const SPIKE_WIRE_BYTES: usize = 12;
+
+/// Bytes of one epoch run header: emission step (`u32`) + record count
+/// (`u32`), little-endian.
+pub const EPOCH_HEADER_BYTES: usize = 8;
+
+/// Wire overhead of epoch framing for a window of `steps_in_window`
+/// steps under a `cadence_steps`-step cadence: one run header per step
+/// when framing is on (`cadence_steps > 1`), none on the flat per-step
+/// format. Shared by the interconnect model and the timing replay so
+/// the framing rule lives in one place. (Upper bound: the encoder only
+/// emits headers for steps that actually spiked.)
+pub fn epoch_framing_bytes(cadence_steps: u32, steps_in_window: u32) -> u64 {
+    if cadence_steps > 1 {
+        steps_in_window as u64 * EPOCH_HEADER_BYTES as u64
+    } else {
+        0
+    }
+}
 
 /// Append the AER encoding of `spikes` to `buf`.
 pub fn encode_spikes(spikes: &[Spike], dt_ms: f64, buf: &mut Vec<u8>) {
@@ -22,6 +54,10 @@ pub fn encode_spikes(spikes: &[Spike], dt_ms: f64, buf: &mut Vec<u8>) {
 }
 
 /// Decode an AER buffer back into spikes. `dt_ms` must match the encoder.
+///
+/// Rejects corrupt records — non-finite or negative emission times, and
+/// times whose step index overflows `u32` — instead of letting an
+/// `as u32` cast silently saturate them onto a valid-looking step.
 pub fn decode_spikes(buf: &[u8], dt_ms: f64, out: &mut Vec<Spike>) -> Result<usize> {
     if buf.len() % SPIKE_WIRE_BYTES != 0 {
         bail!(
@@ -34,10 +70,85 @@ pub fn decode_spikes(buf: &[u8], dt_ms: f64, out: &mut Vec<Spike>) -> Result<usi
     for chunk in buf.chunks_exact(SPIKE_WIRE_BYTES) {
         let gid = u32::from_le_bytes(chunk[0..4].try_into().unwrap());
         let time_ms = f64::from_le_bytes(chunk[4..12].try_into().unwrap());
-        let step = (time_ms / dt_ms).round() as u32;
+        if !time_ms.is_finite() || time_ms < 0.0 {
+            bail!("corrupt AER record: time {time_ms} ms (neuron {gid})");
+        }
+        let step_f = (time_ms / dt_ms).round();
+        if step_f > u32::MAX as f64 {
+            bail!(
+                "corrupt AER record: emission time {time_ms} ms for neuron {gid} \
+                 overflows the step counter"
+            );
+        }
+        let step = step_f as u32;
         out.push(Spike { gid, step });
     }
     Ok(n)
+}
+
+/// Append the epoch-batched encoding of `spikes` to `buf`: one
+/// `(step, count)` run header per emitting step followed by that step's
+/// 12-byte records. Steps without spikes occupy no bytes. `spikes` must
+/// be grouped by emission step in non-decreasing order — exactly what a
+/// sequence of [`crate::engine::rank::RankEngine::integrate`] calls
+/// produces when their outputs are concatenated.
+pub fn encode_spikes_epoch(spikes: &[Spike], dt_ms: f64, buf: &mut Vec<u8>) {
+    let mut i = 0usize;
+    while i < spikes.len() {
+        let step = spikes[i].step;
+        let mut j = i + 1;
+        while j < spikes.len() && spikes[j].step == step {
+            j += 1;
+        }
+        debug_assert!(
+            j == spikes.len() || spikes[j].step > step,
+            "epoch spikes must be sorted by emission step"
+        );
+        buf.extend_from_slice(&step.to_le_bytes());
+        buf.extend_from_slice(&((j - i) as u32).to_le_bytes());
+        encode_spikes(&spikes[i..j], dt_ms, buf);
+        i = j;
+    }
+}
+
+/// Decode an epoch-batched buffer produced by [`encode_spikes_epoch`].
+/// Validates the framing: run headers must tile the buffer exactly and
+/// every record's emission time must agree with its run header.
+pub fn decode_spikes_epoch(buf: &[u8], dt_ms: f64, out: &mut Vec<Spike>) -> Result<usize> {
+    let mut off = 0usize;
+    let mut total = 0usize;
+    while off < buf.len() {
+        if buf.len() - off < EPOCH_HEADER_BYTES {
+            bail!("truncated epoch run header at byte {off}");
+        }
+        let step = u32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
+        let count = u32::from_le_bytes(buf[off + 4..off + 8].try_into().unwrap()) as usize;
+        off += EPOCH_HEADER_BYTES;
+        let payload = count.checked_mul(SPIKE_WIRE_BYTES).ok_or_else(|| {
+            anyhow::anyhow!("epoch run at step {step}: impossible count {count}")
+        })?;
+        if buf.len() - off < payload {
+            bail!(
+                "epoch run at step {step} claims {count} spikes but only {} bytes remain",
+                buf.len() - off
+            );
+        }
+        let before = out.len();
+        decode_spikes(&buf[off..off + payload], dt_ms, out)?;
+        for sp in &out[before..] {
+            if sp.step != step {
+                bail!(
+                    "epoch run header says step {step} but the record for neuron {} \
+                     decodes to step {}",
+                    sp.gid,
+                    sp.step
+                );
+            }
+        }
+        off += payload;
+        total += count;
+    }
+    Ok(total)
 }
 
 #[cfg(test)]
@@ -67,6 +178,109 @@ mod tests {
     fn bad_length_rejected() {
         let mut out = Vec::new();
         assert!(decode_spikes(&[0u8; 13], 1.0, &mut out).is_err());
+    }
+
+    fn raw_record(gid: u32, time_ms: f64) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&gid.to_le_bytes());
+        b.extend_from_slice(&time_ms.to_le_bytes());
+        b
+    }
+
+    #[test]
+    fn corrupt_emission_times_rejected() {
+        let mut out = Vec::new();
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -1.0, -1e300] {
+            let buf = raw_record(7, bad);
+            assert!(
+                decode_spikes(&buf, 1.0, &mut out).is_err(),
+                "time {bad} must be rejected"
+            );
+        }
+        // a step index past u32::MAX must not silently truncate
+        let buf = raw_record(7, 1e18);
+        assert!(decode_spikes(&buf, 1.0, &mut out).is_err());
+        assert!(out.is_empty());
+        // the largest representable step still round-trips
+        let buf = raw_record(7, u32::MAX as f64);
+        decode_spikes(&buf, 1.0, &mut out).unwrap();
+        assert_eq!(out, vec![Spike::new(7, u32::MAX)]);
+    }
+
+    #[test]
+    fn epoch_round_trip() {
+        // three steps' worth of spikes, one step empty
+        let spikes: Vec<Spike> = [(3u32, 10u32), (9, 10), (1, 11), (4, 13), (5, 13)]
+            .iter()
+            .map(|&(gid, step)| Spike::new(gid, step))
+            .collect();
+        let mut buf = Vec::new();
+        encode_spikes_epoch(&spikes, 1.0, &mut buf);
+        // 3 run headers + 5 records
+        assert_eq!(buf.len(), 3 * EPOCH_HEADER_BYTES + 5 * SPIKE_WIRE_BYTES);
+        let mut back = Vec::new();
+        let n = decode_spikes_epoch(&buf, 1.0, &mut back).unwrap();
+        assert_eq!(n, 5);
+        assert_eq!(back, spikes);
+        // the shared framing-overhead rule the cost models price
+        assert_eq!(epoch_framing_bytes(1, 1), 0, "flat format has no headers");
+        assert_eq!(epoch_framing_bytes(16, 3), 3 * EPOCH_HEADER_BYTES as u64);
+    }
+
+    #[test]
+    fn epoch_empty_and_single_step() {
+        let mut buf = Vec::new();
+        encode_spikes_epoch(&[], 1.0, &mut buf);
+        assert!(buf.is_empty());
+        let mut out = Vec::new();
+        assert_eq!(decode_spikes_epoch(&buf, 1.0, &mut out).unwrap(), 0);
+
+        let spikes = vec![Spike::new(0, 42), Spike::new(8, 42)];
+        encode_spikes_epoch(&spikes, 0.5, &mut buf);
+        assert_eq!(buf.len(), EPOCH_HEADER_BYTES + 2 * SPIKE_WIRE_BYTES);
+        decode_spikes_epoch(&buf, 0.5, &mut out).unwrap();
+        assert_eq!(out, spikes);
+    }
+
+    #[test]
+    fn epoch_framing_violations_rejected() {
+        let mut out = Vec::new();
+        // truncated header
+        assert!(decode_spikes_epoch(&[1, 2, 3], 1.0, &mut out).is_err());
+        // header claims more records than the buffer holds
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&5u32.to_le_bytes()); // step
+        buf.extend_from_slice(&2u32.to_le_bytes()); // count = 2
+        buf.extend_from_slice(&raw_record(1, 5.0)); // ... but only 1 record
+        assert!(decode_spikes_epoch(&buf, 1.0, &mut out).is_err());
+        // record's emission time disagrees with its run header
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&5u32.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&raw_record(1, 9.0)); // step 9 != header 5
+        assert!(decode_spikes_epoch(&buf, 1.0, &mut out).is_err());
+    }
+
+    #[test]
+    fn property_epoch_round_trip() {
+        forall("aer epoch round trip", 50, |rng| {
+            let dt = [0.1, 0.5, 1.0, 2.0][rng.next_below(4) as usize];
+            let n_steps = 1 + rng.next_below(8);
+            let first = rng.next_below(10_000);
+            let mut spikes = Vec::new();
+            for s in 0..n_steps {
+                let count = rng.next_below(20) as usize;
+                for _ in 0..count {
+                    spikes.push(Spike::new(rng.next_below(4096), first + s));
+                }
+            }
+            let mut buf = Vec::new();
+            encode_spikes_epoch(&spikes, dt, &mut buf);
+            let mut back = Vec::new();
+            let n = decode_spikes_epoch(&buf, dt, &mut back).unwrap();
+            assert_eq!(n, spikes.len());
+            assert_eq!(back, spikes);
+        });
     }
 
     #[test]

@@ -17,6 +17,12 @@
 //!   spikes are still delivered directly instead of looping back through
 //!   the transport; at large P or sparse connectivity whole source→rank
 //!   pairs disappear from the traffic matrix.
+//!
+//! Orthogonally to *where* spikes travel, [`crate::config::ExchangeCadence`]
+//! controls *how often*: per step (the paper's protocol, flat 12-byte
+//! AER stream) or once per min-delay epoch ([`aer::encode_spikes_epoch`]
+//! run-header framing), amortizing the per-message latency over
+//! `delay_min_steps` network steps with a bitwise-identical raster.
 
 pub mod aer;
 pub mod transport;
@@ -24,7 +30,10 @@ pub mod local;
 pub mod barrier;
 pub mod routing;
 
-pub use aer::{decode_spikes, encode_spikes, SPIKE_WIRE_BYTES};
+pub use aer::{
+    decode_spikes, decode_spikes_epoch, encode_spikes, encode_spikes_epoch,
+    EPOCH_HEADER_BYTES, SPIKE_WIRE_BYTES,
+};
 pub use local::LocalCluster;
 pub use routing::RoutingTable;
 pub use transport::{ExchangeStats, Transport};

@@ -69,6 +69,69 @@ impl std::fmt::Display for Routing {
     }
 }
 
+/// How often ranks exchange spikes and synchronize (the live step
+/// protocol in [`crate::coordinator`]; modeled runs price the same
+/// choice analytically).
+///
+/// A spike emitted at step `t` cannot be integrated anywhere before
+/// `t + delay_min_steps` (every synapse carries at least the minimum
+/// axonal delay), so any cadence up to one exchange per
+/// `delay_min_steps`-step window preserves the spike raster bitwise
+/// while dividing the number of latency-bound collectives — the
+/// Kurth/Rhodes min-delay batching the paper's latency wall calls for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExchangeCadence {
+    /// Exchange + barrier every network step (the paper's protocol and
+    /// the fidelity baseline the repro harnesses pin).
+    Step,
+    /// Exchange + barrier once per `delay_min_steps` window — the widest
+    /// causally-safe epoch the network allows.
+    MinDelay,
+    /// Exchange + barrier every `n` steps. `n` must not exceed
+    /// `delay_min_steps` (enforced by [`RunConfig::validate`]).
+    Every(u32),
+}
+
+impl ExchangeCadence {
+    /// Epoch length in steps for a network with the given minimum delay.
+    pub fn epoch_steps(&self, delay_min_steps: u32) -> u32 {
+        match self {
+            ExchangeCadence::Step => 1,
+            ExchangeCadence::MinDelay => delay_min_steps.max(1),
+            ExchangeCadence::Every(n) => (*n).max(1),
+        }
+    }
+}
+
+impl std::str::FromStr for ExchangeCadence {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "step" | "per-step" => Ok(ExchangeCadence::Step),
+            "min-delay" | "mindelay" => Ok(ExchangeCadence::MinDelay),
+            other => {
+                let n: u32 = other.parse().map_err(|_| {
+                    anyhow::anyhow!("unknown exchange cadence {other:?} (step|min-delay|N)")
+                })?;
+                if n == 0 {
+                    bail!("exchange cadence must be at least 1 step");
+                }
+                Ok(ExchangeCadence::Every(n))
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for ExchangeCadence {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExchangeCadence::Step => write!(f, "step"),
+            ExchangeCadence::MinDelay => write!(f, "min-delay"),
+            ExchangeCadence::Every(n) => write!(f, "{n}"),
+        }
+    }
+}
+
 /// How the run is executed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
@@ -105,6 +168,11 @@ pub struct RunConfig {
     /// Spike exchange protocol (live: actual wire traffic; modeled: how
     /// the interconnect model prices the traffic matrix).
     pub routing: Routing,
+    /// Spike exchange cadence: every step (the paper's protocol) or
+    /// batched over up to `delay_min_steps`-step epochs. Rasters are
+    /// bitwise identical either way; only the number of collectives
+    /// (and their per-message latency bill) changes.
+    pub exchange_every: ExchangeCadence,
     /// Platform preset name for modeled runs (see `platform::presets`).
     pub platform: String,
     /// Interconnect preset for modeled runs ("ib", "eth1g", ...).
@@ -128,6 +196,7 @@ impl Default for RunConfig {
             backend: Backend::Native,
             mode: Mode::Live,
             routing: Routing::Filtered,
+            exchange_every: ExchangeCadence::Step,
             platform: "xeon".to_string(),
             interconnect: "ib".to_string(),
             artifacts_dir: "artifacts".to_string(),
@@ -156,6 +225,18 @@ impl RunConfig {
         }
         if self.sim_seconds <= 0.0 {
             bail!("sim_seconds must be positive");
+        }
+        if let ExchangeCadence::Every(n) = self.exchange_every {
+            if n == 0 {
+                bail!("exchange_every must be at least 1 step");
+            }
+            if n > self.net.delay_min_steps {
+                bail!(
+                    "exchange_every = {n} exceeds delay_min_steps = {}: spikes \
+                     would arrive after the first step they can influence",
+                    self.net.delay_min_steps
+                );
+            }
         }
         Ok(())
     }
@@ -221,6 +302,9 @@ impl RunConfig {
         cfg.routing = doc
             .str_or("run", "routing", &cfg.routing.to_string())
             .parse()?;
+        cfg.exchange_every = doc
+            .str_or("run", "exchange_every", &cfg.exchange_every.to_string())
+            .parse()?;
         cfg.platform = doc.str_or("run", "platform", &cfg.platform);
         cfg.interconnect = doc.str_or("run", "interconnect", &cfg.interconnect);
         cfg.artifacts_dir = doc.str_or("run", "artifacts_dir", &cfg.artifacts_dir);
@@ -272,6 +356,55 @@ mod tests {
         assert_eq!(cfg.routing, Routing::Broadcast);
         assert!("filtered".parse::<Routing>().is_ok());
         assert!("carrier-pigeon".parse::<Routing>().is_err());
+    }
+
+    #[test]
+    fn exchange_cadence_parses_and_validates() {
+        let parse = |s: &str| s.parse::<ExchangeCadence>();
+        assert_eq!(RunConfig::default().exchange_every, ExchangeCadence::Step);
+        assert_eq!(parse("step").unwrap(), ExchangeCadence::Step);
+        assert_eq!(parse("min-delay").unwrap(), ExchangeCadence::MinDelay);
+        assert_eq!(parse("4").unwrap(), ExchangeCadence::Every(4));
+        assert!(parse("0").is_err());
+        assert!(parse("sometimes").is_err());
+        // display round-trips through FromStr
+        for s in ["step", "min-delay", "7"] {
+            assert_eq!(parse(s).unwrap().to_string(), s);
+        }
+        // epoch length resolution
+        assert_eq!(ExchangeCadence::Step.epoch_steps(16), 1);
+        assert_eq!(ExchangeCadence::MinDelay.epoch_steps(16), 16);
+        assert_eq!(ExchangeCadence::Every(3).epoch_steps(16), 3);
+    }
+
+    #[test]
+    fn exchange_cadence_capped_by_min_delay() {
+        let mut cfg = RunConfig::default();
+        cfg.net.delay_min_steps = 4;
+        cfg.exchange_every = ExchangeCadence::Every(4);
+        cfg.validate().unwrap();
+        cfg.exchange_every = ExchangeCadence::Every(5);
+        assert!(cfg.validate().is_err(), "epoch > delay_min must fail");
+        // MinDelay is always safe, whatever the network's window is
+        cfg.exchange_every = ExchangeCadence::MinDelay;
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn exchange_cadence_from_toml() {
+        let cfg = RunConfig::from_toml_str(
+            "[network]\ndelay_min_steps = 8\n[run]\nexchange_every = \"min-delay\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.exchange_every, ExchangeCadence::MinDelay);
+        let cfg = RunConfig::from_toml_str(
+            "[network]\ndelay_min_steps = 8\n[run]\nexchange_every = \"4\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.exchange_every, ExchangeCadence::Every(4));
+        // default network: delay_min_steps = 1, so a 16-step epoch fails
+        let r = RunConfig::from_toml_str("[run]\nexchange_every = \"16\"");
+        assert!(r.is_err());
     }
 
     #[test]

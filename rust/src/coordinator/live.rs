@@ -1,15 +1,29 @@
 //! Live execution: P ranks as OS threads over the in-process all-to-all
 //! transport, with the paper's comp/comm/barrier profiling.
 //!
-//! Step protocol per rank (matching DPSNN's synchronous-collective
-//! scheme):
+//! The loop is organized around **delay epochs** — windows of
+//! `1..=delay_min_steps` consecutive network steps between exchanges
+//! ([`crate::config::ExchangeCadence`]). Per rank, per epoch:
 //!
-//! 1. integrate local dynamics            -> Computation
-//! 2. AER-encode + all-to-all exchange    -> Communication
-//! 3. decode + deliver into delay rings   -> Computation
-//! 4. explicit barrier                    -> Barrier/synchronization
+//! 1. integrate the epoch's steps, buffering locally-emitted spikes
+//!    with their emission step          -> Computation
+//! 2. AER-encode + ONE all-to-all exchange for the whole
+//!    epoch                            -> Communication
+//! 3. decode + deliver into delay rings (each spike lands at
+//!    `d + (t_emit - t_now)`, its per-step arrival slot) -> Computation
+//! 4. one explicit barrier             -> Barrier/synchronization
 //!
-//! Phase 2 runs one of two protocols (selected by
+//! An epoch of length 1 — [`crate::config::ExchangeCadence::Step`], the
+//! default — is
+//! exactly the paper's synchronous-collective protocol, down to the
+//! flat 12-byte AER stream on the wire; longer epochs frame the stream
+//! with per-step run headers ([`crate::comm::aer::encode_spikes_epoch`])
+//! and divide the exchange/barrier count by the epoch length. A spike
+//! emitted at step `t` cannot be integrated anywhere before
+//! `t + delay_min_steps`, so every spike still arrives before the first
+//! step it can influence and the raster is unchanged.
+//!
+//! Phase 2 runs one of two routing protocols (selected by
 //! [`RunConfig::routing`](crate::config::RunConfig)):
 //!
 //! * **broadcast** — each rank clones its full AER buffer to every rank
@@ -21,14 +35,16 @@
 //!
 //! Because connectivity, stimulus and initial state are pure functions of
 //! global neuron ids, and synaptic weights live on an exact f32 grid, the
-//! spike raster is **bitwise identical for every process count and both
-//! routing protocols** — a spike dropped by the filter would have met an
-//! empty synapse row at the destination anyway. Tested in
-//! `rust/tests/determinism.rs` and `rust/tests/routing_props.rs`.
+//! spike raster is **bitwise identical for every process count, both
+//! routing protocols and every exchange cadence** — a spike dropped by
+//! the filter would have met an empty synapse row at the destination
+//! anyway, and a spike deferred by an epoch still lands in its per-step
+//! arrival slot. Tested in `rust/tests/determinism.rs`,
+//! `rust/tests/routing_props.rs` and `rust/tests/cadence_props.rs`.
 
 use anyhow::{Context, Result};
 
-use crate::comm::aer::{decode_spikes, encode_spikes};
+use crate::comm::aer::{decode_spikes, decode_spikes_epoch, encode_spikes, encode_spikes_epoch};
 use crate::comm::local::LocalCluster;
 use crate::comm::routing::RoutingTable;
 use crate::comm::transport::Transport;
@@ -177,32 +193,64 @@ fn rank_main(
         .as_ref()
         .is_some_and(|t| t.degenerates_to_broadcast());
 
+    // Exchange cadence: how many steps each communication epoch spans.
+    // Validated against delay_min_steps in RunConfig::validate, so every
+    // spike still arrives before the first step it can influence.
+    let epoch = cfg
+        .exchange_every
+        .epoch_steps(cfg.net.delay_min_steps)
+        .min(steps.max(1));
+    // The paper's flat 12-byte stream needs no run headers when every
+    // exchange carries exactly one step.
+    let framed = epoch > 1;
+    let encode: fn(&[Spike], f64, &mut Vec<u8>) = if framed {
+        encode_spikes_epoch
+    } else {
+        encode_spikes
+    };
+
     let p = cluster.n_ranks() as usize;
     let mut comp = Components::default();
     let mut comm_vol = CommVolume::default();
     let mut sw = Stopwatch::new();
     let mut my_spikes: Vec<Spike> = Vec::new();
+    let mut epoch_spikes: Vec<Spike> = Vec::new();
     let mut wire: Vec<u8> = Vec::new();
     let mut out_bufs: Vec<Vec<u8>> = vec![Vec::new(); p];
     let mut per_dst: Vec<Vec<Spike>> = vec![Vec::new(); p];
     let mut all_spikes: Vec<Spike> = Vec::new();
     let mut step_spikes: Vec<u32> = Vec::with_capacity(steps as usize);
 
-    for step in 0..steps {
-        // 1. computation: integrate
+    let mut step = 0u32;
+    while step < steps {
+        let len = epoch.min(steps - step);
+
+        // 1. computation: integrate the epoch's steps, buffering local
+        // emissions (tagged with their emission step) until the
+        // exchange. The ring advances between steps but not after the
+        // last one — delivery runs first — so an epoch of length 1 is
+        // exactly the paper's per-step protocol.
         sw.reset();
-        engine.integrate(&mut my_spikes)?;
-        step_spikes.push(my_spikes.len() as u32);
+        epoch_spikes.clear();
+        for k in 0..len {
+            engine.integrate(&mut my_spikes)?;
+            step_spikes.push(my_spikes.len() as u32);
+            epoch_spikes.extend_from_slice(&my_spikes);
+            if k + 1 < len {
+                engine.finish_step();
+            }
+        }
         comp.add_computation(sw.lap());
 
-        // 2. communication: AER encode + synchronous all-to-all
+        // 2. communication: AER encode + ONE synchronous all-to-all for
+        // the whole epoch.
         for buf in out_bufs.iter_mut() {
             buf.clear();
         }
         match &routing {
             Some(_) if full_fanout => {
                 wire.clear();
-                encode_spikes(&my_spikes, cfg.net.dt_ms, &mut wire);
+                encode(&epoch_spikes, cfg.net.dt_ms, &mut wire);
                 for (dst, buf) in out_bufs.iter_mut().enumerate() {
                     if dst as u32 != rank {
                         buf.extend_from_slice(&wire);
@@ -213,7 +261,9 @@ fn rank_main(
                 for list in per_dst.iter_mut() {
                     list.clear();
                 }
-                for s in &my_spikes {
+                // epoch_spikes is step-ordered, so each per-destination
+                // list stays step-ordered — the epoch framing's contract.
+                for s in &epoch_spikes {
                     for dst in table.dest_ranks(s.gid - lo) {
                         if dst != rank {
                             per_dst[dst as usize].push(*s);
@@ -221,12 +271,12 @@ fn rank_main(
                     }
                 }
                 for (dst, list) in per_dst.iter().enumerate() {
-                    encode_spikes(list, cfg.net.dt_ms, &mut out_bufs[dst]);
+                    encode(list, cfg.net.dt_ms, &mut out_bufs[dst]);
                 }
             }
             None => {
                 wire.clear();
-                encode_spikes(&my_spikes, cfg.net.dt_ms, &mut wire);
+                encode(&epoch_spikes, cfg.net.dt_ms, &mut wire);
                 for buf in out_bufs.iter_mut() {
                     buf.extend_from_slice(&wire);
                 }
@@ -238,11 +288,14 @@ fn rank_main(
 
         // 3. computation: decode + deliver through delay rings. Source
         // order is preserved (src 0..P, own spikes in their slot), so the
-        // delivered event stream matches broadcast exactly.
+        // delivered event stream matches broadcast exactly; each spike
+        // lands at `d + (t_emit - t_now)`, its per-step arrival slot.
         all_spikes.clear();
         for (src, buf) in incoming.iter().enumerate() {
             if routing.is_some() && src as u32 == rank {
-                all_spikes.extend_from_slice(&my_spikes);
+                all_spikes.extend_from_slice(&epoch_spikes);
+            } else if framed {
+                decode_spikes_epoch(buf, cfg.net.dt_ms, &mut all_spikes)?;
             } else {
                 decode_spikes(buf, cfg.net.dt_ms, &mut all_spikes)?;
             }
@@ -251,14 +304,15 @@ fn rank_main(
         engine.finish_step();
         comp.add_computation(sw.lap());
 
-        // 4. synchronization barrier
+        // 4. synchronization barrier (one per epoch)
         cluster.barrier(rank);
         comp.add_barrier(sw.lap());
 
-        if cfg.progress && rank == 0 && (step + 1) % 1000 == 0 {
+        step += len;
+        if cfg.progress && rank == 0 && step / 1000 > (step - len) / 1000 {
             eprintln!(
                 "  [live] step {}/{} rate so far {:.2} Hz",
-                step + 1,
+                step,
                 steps,
                 engine.mean_rate_hz(cfg.net.dt_ms)
             );
@@ -309,6 +363,25 @@ mod tests {
         let b = run_live(&tiny_cfg(4)).unwrap();
         assert_eq!(a.total_spikes, b.total_spikes, "partition independence");
         assert_eq!(a.pop_counts, b.pop_counts);
+    }
+
+    #[test]
+    fn min_delay_epoch_matches_per_step_bitwise() {
+        use crate::config::ExchangeCadence;
+        let mut per_step = tiny_cfg(4);
+        per_step.net.delay_min_steps = 4;
+        let mut batched = per_step.clone();
+        batched.exchange_every = ExchangeCadence::MinDelay;
+        let a = run_live(&per_step).unwrap();
+        let b = run_live(&batched).unwrap();
+        assert!(a.total_spikes > 0, "network must be active");
+        assert_eq!(a.pop_counts, b.pop_counts, "cadence changed the raster");
+        assert_eq!(a.total_syn_events, b.total_syn_events);
+        // 200 steps in epochs of 4 -> 50 exchanges instead of 200, with
+        // one barrier per exchange.
+        let exchanges = |r: &RunResult| r.comm_volume.iter().map(|c| c.exchanges).max().unwrap();
+        assert_eq!(exchanges(&a), 200);
+        assert_eq!(exchanges(&b), 50);
     }
 
     #[test]

@@ -13,6 +13,10 @@
 //! fan-out loop with branch-free slot arithmetic and unchecked indexing
 //! (safety: targets and delays are validated at construction by
 //! [`crate::model::connectivity::IncomingSynapses`]).
+//! [`DelayRing::deliver_row_offset`] is the same loop shifted `back`
+//! steps toward the present — the epoch-batched exchange delivers a
+//! whole min-delay window of buffered spikes at once, each landing in
+//! the slot per-step delivery would have used.
 
 /// Ring of `depth` future input-current accumulators over `n` local neurons.
 #[derive(Debug, Clone)]
@@ -68,17 +72,37 @@ impl DelayRing {
     /// writes of a run land in one slot's accumulator.
     #[inline]
     pub fn deliver_row(&mut self, tgts: &[u32], delays: &[u8], w: f32) {
+        self.deliver_row_offset(tgts, delays, w, 0);
+    }
+
+    /// [`Self::deliver_row`] for a spike emitted `back` steps before the
+    /// step currently being integrated — the epoch-batched exchange,
+    /// where spikes buffered over a min-delay window are all delivered
+    /// at the epoch boundary. Each synapse lands at effective delay
+    /// `d - back` (the `d + (t_emit - t_now)` slot), i.e. in the same
+    /// absolute step as per-step delivery would have put it, so the
+    /// raster is bitwise identical across exchange cadences. The caller
+    /// guarantees `back < d` for every delay in the row; epochs never
+    /// exceed `delay_min_steps`, which keeps every effective delay in
+    /// `[1, max_delay]`.
+    #[inline]
+    pub fn deliver_row_offset(&mut self, tgts: &[u32], delays: &[u8], w: f32, back: u32) {
         debug_assert_eq!(tgts.len(), delays.len());
         let n = self.n;
         let depth = self.depth;
+        let back = back as usize;
         let cur = self.cur;
         let flat = self.flat.as_mut_ptr();
         let mut last_d = 0u8; // delays are >= 1, so this forces a recompute
         let mut base = 0usize;
         for (&t, &d) in tgts.iter().zip(delays) {
             debug_assert!((t as usize) < n && (1..depth).contains(&(d as usize)));
+            debug_assert!(
+                (d as usize) > back,
+                "offset {back} >= delay {d}: spike delivered past its arrival step"
+            );
             if d != last_d {
-                let mut slot = cur + d as usize;
+                let mut slot = cur + d as usize - back;
                 if slot >= depth {
                     slot -= depth;
                 }
@@ -162,6 +186,55 @@ mod tests {
             a.advance();
             b.advance();
         }
+    }
+
+    #[test]
+    fn offset_delivery_matches_per_step_delivery() {
+        // Epoch-batched semantics: delivering at t_now = t_emit + back
+        // with deliver_row_offset lands in the same absolute slots as
+        // per-step delivery at t_emit.
+        let tgts = [0u32, 2, 2, 5];
+        let delays = [3u8, 3, 4, 6];
+        let mut per_step = DelayRing::new(6, 8);
+        let mut batched = DelayRing::new(6, 8);
+        // per-step: deliver at emission time, then run two steps
+        per_step.deliver_row(&tgts, &delays, 0.25);
+        per_step.advance();
+        per_step.advance();
+        // batched: the ring runs two steps ahead, then delivers with back=2
+        batched.advance();
+        batched.advance();
+        batched.deliver_row_offset(&tgts, &delays, 0.25, 2);
+        for _ in 0..9 {
+            assert_eq!(per_step.current(), batched.current());
+            per_step.advance();
+            batched.advance();
+        }
+    }
+
+    #[test]
+    fn offset_zero_is_plain_delivery() {
+        let tgts = [1u32, 3];
+        let delays = [2u8, 5];
+        let mut a = DelayRing::new(4, 6);
+        let mut b = DelayRing::new(4, 6);
+        a.deliver_row(&tgts, &delays, 1.5);
+        b.deliver_row_offset(&tgts, &delays, 1.5, 0);
+        for _ in 0..7 {
+            assert_eq!(a.current(), b.current());
+            a.advance();
+            b.advance();
+        }
+    }
+
+    #[test]
+    fn offset_delivery_can_hit_the_next_step() {
+        // back == d - 1: the spike lands in the very next slot.
+        let mut r = DelayRing::new(1, 4);
+        r.advance(); // t_now = 1
+        r.deliver_row_offset(&[0], &[2], 1.0, 1); // emitted at t=0, d=2 -> step 2
+        r.advance(); // now integrating step 2
+        assert_eq!(r.current()[0], 1.0);
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! The per-rank simulation engine: spikes, delay rings, partitioning and
-//! the hybrid event/time-driven 1 ms step.
+//! the hybrid event/time-driven 1 ms step, driven per step or in
+//! delay epochs of up to `delay_min_steps` steps between exchanges.
 
 pub mod spike;
 pub mod delay_queue;

@@ -3,16 +3,29 @@
 //! network step at a time.
 //!
 //! The step protocol (driven by the coordinator) is DPSNN's hybrid
-//! event/time-driven scheme:
+//! event/time-driven scheme, generalized to *delay epochs* of up to
+//! `delay_min_steps` consecutive steps between exchanges:
 //!
 //! 1. [`RankEngine::integrate`] — event-driven neural dynamics for the
 //!    current step: external Poisson events + queued synaptic events are
 //!    injected and the LIF+SFA update runs (native or XLA backend).
-//! 2. The coordinator exchanges the emitted spikes (time-driven, every
-//!    1 ms, all-to-all) — see [`crate::comm`].
+//!    Emitted spikes carry their emission step, so the coordinator can
+//!    buffer them across an epoch ([`Spike::step`]).
+//! 2. The coordinator exchanges the emitted spikes all-to-all — every
+//!    step under the paper's protocol, or once per epoch under
+//!    [`crate::config::ExchangeCadence::MinDelay`] — see [`crate::comm`].
 //! 3. [`RankEngine::deliver`] — each received spike is expanded through
 //!    the local incoming-synapse rows into future delay-ring slots.
+//!    Spikes emitted earlier in the epoch land `t_now - t_emit` slots
+//!    nearer the present, i.e. in exactly the step per-step delivery
+//!    would have used; no spike may be older than `delay_min_steps - 1`
+//!    steps (asserted), which is why epochs are capped at the min delay.
 //! 4. [`RankEngine::finish_step`] — the ring rotates to the next step.
+//!
+//! Because delivery only ever *adds* exactly-representable weights into
+//! future accumulator slots, batching the exchange changes neither the
+//! values nor (observably) the order of any accumulation: the spike
+//! raster is bitwise identical across exchange cadences.
 
 use anyhow::Result;
 
@@ -46,6 +59,10 @@ pub struct RankEngine {
     j_exc: f32,
     j_inh: f32,
     inh_start: u32,
+    /// Minimum axonal delay in steps: the widest exchange epoch this
+    /// network tolerates, and the bound [`Self::deliver`] enforces on
+    /// spike age.
+    delay_min: u32,
     /// Scratch buffers reused every step (allocation-free hot path).
     i_ext: Vec<f32>,
     spiked_local: Vec<u32>,
@@ -80,6 +97,7 @@ impl RankEngine {
             j_exc: net.j_exc,
             j_inh: net.j_inh,
             inh_start: net.inh_start(),
+            delay_min: net.delay_min_steps.max(1),
             i_ext: vec![0.0; n],
             spiked_local: Vec::with_capacity(n / 4 + 8),
             step: 0,
@@ -119,11 +137,30 @@ impl RankEngine {
 
     /// Phase 3: deliver received spikes (own + remote) through the local
     /// incoming-synapse rows into the delay ring.
+    ///
+    /// Spikes may have been emitted up to `delay_min_steps - 1` steps
+    /// before the step currently being integrated (the epoch-batched
+    /// exchange buffers a whole min-delay window before delivering).
+    /// Each one lands at effective delay `d - (t_now - t_emit)` — the
+    /// same absolute step per-step delivery would have used — so the
+    /// raster is bitwise identical across exchange cadences. Spikes
+    /// older than the min-delay window would already have missed their
+    /// arrival step; that protocol violation panics rather than
+    /// corrupting the ring (the offset delivery indexes unchecked).
     pub fn deliver(&mut self, spikes: &[Spike]) {
         for sp in spikes {
+            let back = self.step.wrapping_sub(sp.step);
+            assert!(
+                back < self.delay_min,
+                "spike emitted at step {} delivered at step {} violates the \
+                 min-delay window ({} steps)",
+                sp.step,
+                self.step,
+                self.delay_min
+            );
             let w = if sp.gid < self.inh_start { self.j_exc } else { self.j_inh };
             let (tgts, delays) = self.incoming.row(sp.gid);
-            self.ring.deliver_row(tgts, delays, w);
+            self.ring.deliver_row_offset(tgts, delays, w, back);
             self.totals.syn_events += tgts.len() as u64;
         }
     }
@@ -196,6 +233,54 @@ mod tests {
             e.deliver(&spikes);
             e.finish_step();
         }
+    }
+
+    #[test]
+    fn epoch_batched_delivery_matches_per_step() {
+        // Drive two identical engines: one delivers every step, the
+        // other buffers a whole min-delay window and delivers at the
+        // epoch boundary. Spike trains and totals must match exactly.
+        let mut net = NetworkParams::tiny(256);
+        net.delay_min_steps = 4;
+        let mut a = engine(&net, 11, 0, 256);
+        let mut b = engine(&net, 11, 0, 256);
+        let mut spikes = Vec::new();
+        let mut buffered: Vec<Spike> = Vec::new();
+        let mut counts_a = Vec::new();
+        let mut counts_b = Vec::new();
+        for _ in 0..25 {
+            // per-step engine: integrate/deliver/finish each step
+            for _ in 0..4 {
+                a.integrate(&mut spikes).unwrap();
+                counts_a.push(spikes.len());
+                a.deliver(&spikes);
+                a.finish_step();
+            }
+            // epoch engine: integrate four steps, deliver once
+            buffered.clear();
+            for k in 0..4 {
+                b.integrate(&mut spikes).unwrap();
+                counts_b.push(spikes.len());
+                buffered.extend_from_slice(&spikes);
+                if k < 3 {
+                    b.finish_step();
+                }
+            }
+            b.deliver(&buffered);
+            b.finish_step();
+        }
+        assert_eq!(counts_a, counts_b);
+        assert_eq!(a.totals, b.totals);
+        assert!(a.totals.spikes > 0, "network must be active");
+    }
+
+    #[test]
+    #[should_panic(expected = "min-delay window")]
+    fn spike_older_than_the_min_delay_window_panics() {
+        let net = NetworkParams::tiny(64); // delay_min_steps = 1
+        let mut e = engine(&net, 3, 0, 64);
+        e.finish_step(); // now at step 1
+        e.deliver(&[Spike::new(5, 0)]); // back = 1 >= delay_min = 1
     }
 
     #[test]

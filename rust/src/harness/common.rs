@@ -4,7 +4,7 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 
-use crate::config::{Mode, NetworkParams, Routing, RunConfig};
+use crate::config::{ExchangeCadence, Mode, NetworkParams, Routing, RunConfig};
 use crate::coordinator::{run, RunResult};
 
 /// Where harness CSVs land.
@@ -37,8 +37,11 @@ pub fn modeled(
     cfg.sim_seconds = sim_seconds;
     cfg.mode = Mode::Modeled;
     // The harnesses reproduce the paper, whose runs broadcast every
-    // spike to every rank; filtered pricing is opt-in via --routing.
+    // spike to every rank and synchronize every 1 ms step; filtered
+    // pricing and min-delay epoch batching are opt-in via --routing /
+    // --exchange-every and never touch the figure/table numbers.
     cfg.routing = Routing::Broadcast;
+    cfg.exchange_every = ExchangeCadence::Step;
     cfg.platform = platform.to_string();
     cfg.interconnect = interconnect.to_string();
     run(&cfg)

@@ -21,7 +21,12 @@
 //!   target on every rank) but always removes the transport loopback,
 //!   and at large P or sparse connectivity it removes whole rank pairs
 //!   — while keeping the spike raster bitwise identical for every
-//!   process count.
+//!   process count. Orthogonally, the exchange *cadence*
+//!   ([`config::ExchangeCadence`]) batches up to `delay_min_steps`
+//!   steps of spikes into one collective — a spike emitted at step `t`
+//!   cannot act before `t + delay_min_steps`, so the per-message
+//!   latency is amortized over the whole window and the raster is
+//!   again bitwise identical.
 //! * [`simnet`] — interconnect models (InfiniBand, Ethernet, GbE) used by
 //!   the modeled/timing mode.
 //! * [`platform`] — CPU/node models of the paper's three testbeds

@@ -3,7 +3,7 @@
 //! ```text
 //! dpsnn run [config.toml] [--neurons N] [--procs P] [--seconds S]
 //!           [--backend native|xla] [--mode live|modeled]
-//!           [--routing filtered|broadcast]
+//!           [--routing filtered|broadcast] [--exchange-every step|min-delay|N]
 //!           [--platform NAME] [--interconnect NAME] [--seed X] [--progress]
 //! dpsnn repro <fig1..fig8|table1..table4|all> [--fast]
 //! dpsnn bench-smoke [--neurons N] [--procs P] [--seconds S] [--out F]
@@ -27,7 +27,9 @@ USAGE:
   dpsnn run [config.toml] [options]     run one simulation
   dpsnn repro <id|all> [--fast]         regenerate a paper figure/table
   dpsnn replay <trace.csv> [options]    replay a recorded trace on a
-                                        modeled platform (see --record-trace)
+                                        modeled platform (see --record-trace);
+                                        pass --delay-min to price an
+                                        --exchange-every cadence what-if
   dpsnn bench-smoke [options]           tiny live run, filtered vs broadcast
                                         routing, JSON perf record (CI)
   dpsnn list-platforms                  show modeled platform presets
@@ -40,6 +42,8 @@ RUN OPTIONS:
   --backend B        native | xla (default native)
   --mode M           live | modeled (default live)
   --routing R        filtered | broadcast spike exchange (default filtered)
+  --exchange-every C step | min-delay | N — steps per spike exchange
+                     (default step; N must not exceed delay_min_steps)
   --platform NAME    modeled platform preset (default xeon)
   --interconnect IC  ib | eth1g | shm | exanest (default ib)
   --artifacts DIR    AOT artifact directory (default artifacts)
@@ -49,6 +53,8 @@ RUN OPTIONS:
 
 BENCH-SMOKE OPTIONS:
   --neurons N / --procs P / --seconds S   workload (default 2048 / 4 / 1)
+  --delay-min D      min axonal delay in steps — the epoch the min-delay
+                     cadence run batches over (default 8)
   --out F            JSON output path (default BENCH_routing.json)
   --platform NAME    power-model platform preset (default xeon)
 
@@ -101,6 +107,9 @@ fn build_config(args: &Args) -> Result<RunConfig> {
     }
     if let Some(r) = args.get("routing") {
         cfg.routing = r.parse()?;
+    }
+    if let Some(x) = args.get("exchange-every") {
+        cfg.exchange_every = x.parse()?;
     }
     if let Some(p) = args.get("platform") {
         cfg.platform = p.to_string();
@@ -171,6 +180,14 @@ fn cmd_replay(args: &Args) -> Result<()> {
     // Recorded traces came from the paper-style exchange; price broadcast
     // unless the user asks for the filtered matrix.
     cfg.routing = args.get_or("routing", dpsnn::config::Routing::Broadcast)?;
+    // Traces carry no delay metadata, so a cadence what-if needs the
+    // recorded network's min-delay window declared explicitly; validate()
+    // then rejects epochs the live engine could never run. The window is
+    // honored exactly (delay_max stretches with it), never clamped.
+    cfg.net.delay_min_steps = args.get_or("delay-min", cfg.net.delay_min_steps)?;
+    cfg.net.delay_max_steps = cfg.net.delay_max_steps.max(cfg.net.delay_min_steps);
+    cfg.exchange_every =
+        args.get_or("exchange-every", dpsnn::config::ExchangeCadence::Step)?;
     cfg.platform = args.get_or("platform", "xeon".to_string())?;
     cfg.interconnect = args.get_or("interconnect", "ib".to_string())?;
     cfg.procs = args.get_or("procs", trace.procs)?;
@@ -180,6 +197,7 @@ fn cmd_replay(args: &Args) -> Result<()> {
         trace
     };
     cfg.sim_seconds = trace.sim_seconds();
+    cfg.validate()?;
     eprintln!(
         "replaying {} steps x {} ranks ({} spikes, {:.2} Hz) on {}+{}...",
         trace.steps(),
@@ -195,16 +213,20 @@ fn cmd_replay(args: &Args) -> Result<()> {
 }
 
 /// CI perf smoke: run a tiny live simulation under both spike-routing
-/// protocols and emit a machine-readable `BENCH_routing.json` with
-/// wall-clock, per-rank transport bytes and the power model's
-/// J/synaptic-event, so successive PRs accumulate a perf trajectory.
+/// protocols and both exchange cadences (per-step vs min-delay epoch
+/// batching) and emit a machine-readable `BENCH_routing.json` with
+/// wall-clock, barrier/exchange counts, per-rank transport bytes and
+/// the power model's J/synaptic-event, so successive PRs accumulate a
+/// perf trajectory.
 fn cmd_bench_smoke(args: &Args) -> Result<()> {
-    use dpsnn::config::Routing;
+    use dpsnn::config::{ExchangeCadence, Routing};
     use dpsnn::coordinator::RunResult;
+    use dpsnn::metrics::expected_exchanges;
 
     let neurons: u32 = args.get_or("neurons", 2048u32)?;
     let procs: u32 = args.get_or("procs", 4u32)?;
     let seconds: f64 = args.get_or("seconds", 1.0)?;
+    let delay_min: u32 = args.get_or("delay-min", 8u32)?;
     let out = args.get_or("out", "BENCH_routing.json".to_string())?;
     let platform_name = args.get_or("platform", "xeon".to_string())?;
 
@@ -214,14 +236,18 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
     let comm_model = dpsnn::simnet::AllToAllModel::new(link, ranks_per_node);
     let power = dpsnn::power::PowerModel::new(platform, link);
 
-    let run_one = |routing: Routing| -> Result<RunResult> {
+    let run_one = |routing: Routing, cadence: ExchangeCadence| -> Result<RunResult> {
         let mut cfg = RunConfig::default();
         cfg.net = NetworkParams::tiny(neurons);
+        // One network for every run: the min-delay cadence batches over
+        // this window, and the per-step runs simulate the same physics.
+        cfg.net.delay_min_steps = delay_min.clamp(1, cfg.net.delay_max_steps);
         cfg.procs = procs;
         cfg.sim_seconds = seconds;
         cfg.routing = routing;
+        cfg.exchange_every = cadence;
         cfg.validate()?;
-        eprintln!("[bench-smoke] live run, {routing} routing...");
+        eprintln!("[bench-smoke] {routing} routing, {cadence} cadence...");
         coordinator::run(&cfg)
     };
 
@@ -261,6 +287,8 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
                 "      \"bytes_sent_per_rank\": {},\n",
                 "      \"bytes_recv_per_rank\": {},\n",
                 "      \"messages_per_rank\": {},\n",
+                "      \"exchanges_per_rank\": {},\n",
+                "      \"barriers_per_rank\": {},\n",
                 "      \"modeled_exchange_s_per_step\": {:.9},\n",
                 "      \"energy_j_modeled\": {:.3},\n",
                 "      \"uj_per_syn_event\": {:.4}\n",
@@ -273,16 +301,24 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
             u64s(|c| c.bytes_sent),
             u64s(|c| c.bytes_recv),
             u64s(|c| c.messages),
+            u64s(|c| c.exchanges),
+            // one barrier per exchange, by protocol
+            u64s(|c| c.exchanges),
             exchange_s,
             energy_j,
             uj,
         )
     };
 
-    let filtered = run_one(Routing::Filtered)?;
-    let broadcast = run_one(Routing::Broadcast)?;
+    let filtered = run_one(Routing::Filtered, ExchangeCadence::Step)?;
+    let broadcast = run_one(Routing::Broadcast, ExchangeCadence::Step)?;
+    let batched = run_one(Routing::Filtered, ExchangeCadence::MinDelay)?;
+
     let recv = |r: &RunResult| -> u64 {
         r.comm_volume.iter().map(|c| c.bytes_recv).sum()
+    };
+    let exchanges = |r: &RunResult| -> u64 {
+        r.comm_volume.iter().map(|c| c.exchanges).max().unwrap_or(0)
     };
     let (recv_f, recv_b) = (recv(&filtered), recv(&broadcast));
     anyhow::ensure!(
@@ -290,10 +326,23 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
         "routing protocols must produce identical rasters"
     );
     anyhow::ensure!(
+        batched.pop_counts == filtered.pop_counts,
+        "exchange cadences must produce identical rasters"
+    );
+    anyhow::ensure!(
         recv_f < recv_b,
         "filtered routing must receive fewer bytes ({recv_f} vs {recv_b})"
     );
+    let steps = filtered.pop_counts.len() as u32;
+    let epoch = delay_min.clamp(1, NetworkParams::tiny(neurons).delay_max_steps);
+    let (x_step, x_batched) = (exchanges(&filtered), exchanges(&batched));
+    anyhow::ensure!(
+        x_batched == expected_exchanges(steps, epoch),
+        "min-delay cadence must exchange once per {epoch}-step epoch \
+         ({x_batched} exchanges over {steps} steps)"
+    );
     let reduction = 1.0 - recv_f as f64 / recv_b as f64;
+    let exchange_reduction = x_step as f64 / x_batched.max(1) as f64;
 
     let json = format!(
         concat!(
@@ -303,28 +352,39 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
             "  \"syn_per_neuron\": {},\n",
             "  \"procs\": {},\n",
             "  \"sim_seconds\": {},\n",
+            "  \"delay_min_steps\": {},\n",
             "  \"power_platform\": \"{}\",\n",
             "  \"routing\": {{\n",
             "    \"filtered\": {},\n",
             "    \"broadcast\": {}\n",
             "  }},\n",
-            "  \"recv_bytes_reduction_frac\": {:.6}\n",
+            "  \"cadence\": {{\n",
+            "    \"per_step\": {},\n",
+            "    \"min_delay\": {}\n",
+            "  }},\n",
+            "  \"recv_bytes_reduction_frac\": {:.6},\n",
+            "  \"exchange_reduction_factor\": {:.3}\n",
             "}}\n"
         ),
         neurons,
         NetworkParams::tiny(neurons).syn_per_neuron,
         procs,
         seconds,
+        epoch,
         platform_name,
         section(&filtered),
         section(&broadcast),
+        section(&filtered),
+        section(&batched),
         reduction,
+        exchange_reduction,
     );
     std::fs::write(&out, &json)?;
     println!("{}", filtered.summary());
     println!(
         "bench-smoke: recv bytes/run {recv_f} (filtered) vs {recv_b} (broadcast), \
-         -{:.1}%; wrote {out}",
+         -{:.1}%; exchanges/run {x_step} (per-step) vs {x_batched} (min-delay), \
+         {exchange_reduction:.1}x fewer; wrote {out}",
         reduction * 100.0
     );
     Ok(())

@@ -19,6 +19,11 @@ pub struct CommVolume {
     pub bytes_recv: u64,
     /// Network messages sent (envelopes included).
     pub messages: u64,
+    /// Transport exchanges (all-to-all collectives) this rank took part
+    /// in: one per step under per-step cadence, one per delay epoch
+    /// under epoch batching. Each exchange is followed by exactly one
+    /// barrier, so this is also the rank's barrier count.
+    pub exchanges: u64,
     /// Cumulative payload bytes posted per destination rank — this
     /// rank's row of the run-total traffic matrix.
     pub per_dst_bytes: Vec<u64>,
@@ -30,6 +35,7 @@ impl CommVolume {
         self.bytes_sent += stats.bytes_sent;
         self.bytes_recv += stats.bytes_recv;
         self.messages += stats.messages;
+        self.exchanges += 1;
         if self.per_dst_bytes.len() < stats.per_dst_bytes.len() {
             self.per_dst_bytes.resize(stats.per_dst_bytes.len(), 0);
         }
@@ -37,6 +43,14 @@ impl CommVolume {
             *acc += b;
         }
     }
+}
+
+/// Exchanges (and barriers) a run of `steps` steps performs under an
+/// `epoch_steps`-step cadence: the last epoch may be short, so this is
+/// the ceiling division — the ~`delay_min_steps`× reduction the
+/// epoch-batched protocol buys.
+pub fn expected_exchanges(steps: u32, epoch_steps: u32) -> u64 {
+    steps.div_ceil(epoch_steps.max(1)) as u64
 }
 
 /// Probability that a source neuron projects to at least one neuron of a
@@ -108,7 +122,17 @@ mod tests {
         assert_eq!(v.bytes_sent, 12);
         assert_eq!(v.bytes_recv, 16);
         assert_eq!(v.messages, 6);
+        assert_eq!(v.exchanges, 2, "one exchange per observe()");
         assert_eq!(v.per_dst_bytes, vec![4, 2, 6, 4]);
+    }
+
+    #[test]
+    fn expected_exchanges_is_ceil_division() {
+        assert_eq!(expected_exchanges(100, 1), 100);
+        assert_eq!(expected_exchanges(100, 16), 7); // 6 full epochs + a short one
+        assert_eq!(expected_exchanges(32, 16), 2);
+        assert_eq!(expected_exchanges(0, 16), 0);
+        assert_eq!(expected_exchanges(5, 0), 5, "zero epoch = per-step");
     }
 
     #[test]

@@ -6,6 +6,6 @@ pub mod synevents;
 pub mod energy;
 pub mod comm_volume;
 
-pub use comm_volume::CommVolume;
+pub use comm_volume::{expected_exchanges, CommVolume};
 pub use energy::joules_per_synaptic_event;
 pub use synevents::SynapticEventCount;

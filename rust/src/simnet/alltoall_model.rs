@@ -79,6 +79,29 @@ impl AllToAllModel {
         CommBreakdown { software, fabric }
     }
 
+    /// One exchange per `epoch_steps`-step delay window (the
+    /// epoch-batched AER protocol,
+    /// [`crate::comm::aer::encode_spikes_epoch`]): the per-message
+    /// latency α, CPU overhead and fabric message cost are paid once per
+    /// window, while the payload is the window's full spike traffic plus
+    /// one 8-byte run header per step. Returns the cost of the whole
+    /// window — compare against `epoch_steps ×`
+    /// [`Self::exchange_time`]`(p, bytes_per_step_msg)` for the paper's
+    /// per-step protocol. This is the latency-vs-bandwidth tradeoff as a
+    /// first-class what-if: near real time the exchange is
+    /// latency-dominated, so batching approaches an `epoch_steps`×
+    /// communication speedup.
+    pub fn exchange_time_epoch(
+        &self,
+        p: u32,
+        bytes_per_step_msg: u64,
+        epoch_steps: u32,
+    ) -> CommBreakdown {
+        let e = epoch_steps.max(1);
+        let framing = crate::comm::aer::epoch_framing_bytes(e, e);
+        self.exchange_time(p, bytes_per_step_msg * e as u64 + framing)
+    }
+
     /// Exchange where each (src, dst) pair is active with probability
     /// `coverage` — the destination-filtered routing of
     /// [`crate::comm::routing`], where a pair only puts bytes on the
@@ -253,6 +276,36 @@ mod tests {
         let t256 = m.exchange_time(256, 25).total();
         assert!((1.5e-4..6e-4).contains(&t32), "t32={t32}");
         assert!((1.0e-2..4.0e-2).contains(&t256), "t256={t256}");
+    }
+
+    #[test]
+    fn epoch_batching_amortizes_the_latency_wall() {
+        // 16 steps of 25 B batched into one 400 B (+framing) exchange:
+        // near real time the α term dominates, so one batched window
+        // must cost far less than 16 per-step exchanges.
+        let m = AllToAllModel::new(IB, 16);
+        for p in [32u32, 64, 256] {
+            let batched_window = m.exchange_time_epoch(p, 25, 16).total();
+            let per_step_window = 16.0 * m.exchange_time(p, 25).total();
+            assert!(
+                batched_window < 0.25 * per_step_window,
+                "p={p}: batched {batched_window} vs per-step {per_step_window}"
+            );
+        }
+    }
+
+    #[test]
+    fn epoch_of_one_is_the_flat_exchange() {
+        let m = AllToAllModel::new(IB, 16);
+        assert_eq!(m.exchange_time(64, 25), m.exchange_time_epoch(64, 25, 1));
+        assert_eq!(m.exchange_time_epoch(1, 25, 16).total(), 0.0);
+        // payload conservation: a window carries the window's bytes
+        // (plus headers), so batching trades latency, not bandwidth
+        let eth = AllToAllModel::new(ETH1G, 16);
+        let one = eth.exchange_time_epoch(64, 1_000_000, 4).total();
+        let four = 4.0 * eth.exchange_time(64, 1_000_000).total();
+        // at megabyte payloads both regimes are bandwidth-bound: no 4x win
+        assert!(one > 0.5 * four, "bandwidth-bound: {one} vs {four}");
     }
 
     #[test]

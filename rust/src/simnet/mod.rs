@@ -5,7 +5,10 @@
 //! *latency-dominated*: every rank sends P-1 small messages (12 B/spike)
 //! every simulated millisecond, so message count grows as P² while
 //! payloads shrink. A LogGP-style per-message cost `α + bytes/β` with
-//! per-NIC serialization reproduces exactly that wall.
+//! per-NIC serialization reproduces exactly that wall — and
+//! [`AllToAllModel::exchange_time_epoch`] prices the counter-move,
+//! min-delay epoch batching, which pays α once per
+//! `delay_min_steps`-step window instead of once per step.
 
 pub mod link;
 pub mod alltoall_model;

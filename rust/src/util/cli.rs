@@ -27,7 +27,7 @@ impl Args {
                 }
                 if let Some((k, v)) = name.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
-                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
                     out.options.insert(name.to_string(), it.next().unwrap());
                 } else {
                     out.flags.push(name.to_string());

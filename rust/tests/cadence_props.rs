@@ -1,0 +1,122 @@
+//! Exchange-cadence acceptance tests: epoch-batched exchange
+//! (`--exchange-every min-delay`) must produce the bitwise-identical
+//! spike raster to the paper's per-step protocol across process counts,
+//! routing protocols and min-delay windows, while performing
+//! ~`delay_min_steps`× fewer transport exchanges (and barriers).
+
+use dpsnn::config::{ExchangeCadence, Mode, NetworkParams, Routing, RunConfig};
+use dpsnn::coordinator::{self, RunResult};
+use dpsnn::metrics::expected_exchanges;
+
+fn cfg(procs: u32, routing: Routing, delay_min: u32, cadence: ExchangeCadence) -> RunConfig {
+    let mut c = RunConfig::default();
+    c.net = NetworkParams::tiny(512);
+    c.net.syn_per_neuron = 24; // sparse enough for pair filtering at P=8
+    c.net.delay_min_steps = delay_min;
+    c.procs = procs;
+    c.sim_seconds = 0.15;
+    c.seed = 2026;
+    c.mode = Mode::Live;
+    c.routing = routing;
+    c.exchange_every = cadence;
+    c
+}
+
+/// Exchange count of the busiest rank (all ranks tie on a synchronous
+/// collective, but take the max to be explicit).
+fn exchanges(r: &RunResult) -> u64 {
+    r.comm_volume.iter().map(|c| c.exchanges).max().unwrap_or(0)
+}
+
+#[test]
+fn epoch_batched_raster_is_bitwise_identical() {
+    // P ∈ {1, 2, 4, 8} × routing ∈ {broadcast, filtered} ×
+    // delay_min_steps ∈ {1, 2, 4, 16}: min-delay batching must match the
+    // single-rank per-step reference raster bitwise, with exactly
+    // ceil(steps / delay_min) exchanges.
+    for &delay_min in &[1u32, 2, 4, 16] {
+        for &routing in &[Routing::Broadcast, Routing::Filtered] {
+            let reference =
+                coordinator::run(&cfg(1, routing, delay_min, ExchangeCadence::Step)).unwrap();
+            assert!(
+                reference.total_spikes > 0,
+                "network must be active at dmin={delay_min}"
+            );
+            let steps = reference.pop_counts.len() as u32;
+            for &procs in &[1u32, 2, 4, 8] {
+                let batched =
+                    coordinator::run(&cfg(procs, routing, delay_min, ExchangeCadence::MinDelay))
+                        .unwrap();
+                assert_eq!(
+                    batched.pop_counts, reference.pop_counts,
+                    "raster diverged: P={procs} routing={routing} dmin={delay_min}"
+                );
+                assert_eq!(batched.total_spikes, reference.total_spikes);
+                assert_eq!(batched.total_syn_events, reference.total_syn_events);
+                assert_eq!(batched.total_ext_events, reference.total_ext_events);
+                assert_eq!(
+                    exchanges(&batched),
+                    expected_exchanges(steps, delay_min),
+                    "P={procs} routing={routing} dmin={delay_min}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn intermediate_cadence_also_identical() {
+    // --exchange-every N between 1 and delay_min: same raster, N× fewer
+    // exchanges.
+    let reference =
+        coordinator::run(&cfg(4, Routing::Filtered, 4, ExchangeCadence::Step)).unwrap();
+    let every2 =
+        coordinator::run(&cfg(4, Routing::Filtered, 4, ExchangeCadence::Every(2))).unwrap();
+    assert_eq!(every2.pop_counts, reference.pop_counts);
+    let steps = reference.pop_counts.len() as u32;
+    assert_eq!(exchanges(&reference), steps as u64);
+    assert_eq!(exchanges(&every2), expected_exchanges(steps, 2));
+}
+
+#[test]
+fn cadence_beyond_min_delay_is_rejected() {
+    let c = cfg(2, Routing::Filtered, 4, ExchangeCadence::Every(5));
+    assert!(c.validate().is_err(), "epoch > delay_min must be rejected");
+    cfg(2, Routing::Filtered, 4, ExchangeCadence::Every(4)).validate().unwrap();
+}
+
+#[test]
+fn default_network_min_delay_cuts_exchanges_8x() {
+    // The acceptance bar: on the paper's default 20480-neuron network
+    // with a 16-step min-delay window, min-delay cadence must produce
+    // the bitwise-identical raster with ≤ 1/8 the transport exchanges.
+    // The window is kept short (the synapse build dominates runtime).
+    let mut per_step = RunConfig::default(); // 20480N, filtered routing
+    per_step.net.delay_min_steps = 16;
+    per_step.sim_seconds = 0.05;
+    per_step.mode = Mode::Live;
+    per_step.procs = 8;
+    let mut batched = per_step.clone();
+    batched.exchange_every = ExchangeCadence::MinDelay;
+
+    let a = coordinator::run(&per_step).unwrap();
+    let b = coordinator::run(&batched).unwrap();
+    assert!(a.total_spikes > 0, "network must be active");
+    assert_eq!(a.pop_counts, b.pop_counts, "cadence changed the raster");
+    assert_eq!(a.total_spikes, b.total_spikes);
+    assert_eq!(a.total_syn_events, b.total_syn_events);
+
+    let (xa, xb) = (exchanges(&a), exchanges(&b));
+    assert!(
+        xb * 8 <= xa,
+        "min-delay must perform <= 1/8 the exchanges ({xb} vs {xa})"
+    );
+    // messages shrink with the exchanges: P-1 envelopes per collective
+    let msgs = |r: &RunResult| r.comm_volume.iter().map(|c| c.messages).sum::<u64>();
+    assert!(
+        msgs(&b) * 8 <= msgs(&a),
+        "messages must shrink with the exchange count ({} vs {})",
+        msgs(&b),
+        msgs(&a)
+    );
+}
