@@ -11,7 +11,28 @@
 
 use dpsnn::config::{Mode, NetworkParams, RunConfig};
 use dpsnn::coordinator;
+use dpsnn::simnet::presets::IB;
+use dpsnn::simnet::AllToAllModel;
 use dpsnn::util::table::Table;
+
+/// ~2 spikes/rank/step near the real-time point: the latency-dominated
+/// payload regime of the paper's Fig 2.
+const SPIKE_MSG_BYTES: u64 = 25;
+
+/// Smallest process count (doubling sweep) where the node-leader
+/// hierarchical exchange beats the flat one on this model.
+fn hier_crossover(model: &AllToAllModel) -> Option<u32> {
+    let mut p = 2u32;
+    while p <= 1024 {
+        let flat = model.exchange_time(p, SPIKE_MSG_BYTES).total();
+        let hier = model.exchange_time_hierarchical(p, SPIKE_MSG_BYTES).total();
+        if hier < flat {
+            return Some(p);
+        }
+        p *= 2;
+    }
+    None
+}
 
 fn wall(net: NetworkParams, ic: &str, procs: u32) -> anyhow::Result<f64> {
     let mut cfg = RunConfig::default();
@@ -73,9 +94,52 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     println!("{}", cap.render());
+
+    // Topology what-if: how much of the latency wall does node-leader
+    // aggregation (--topology nodes:<k>) claw back, per node packing?
+    let rpns = [1u32, 4, 8, 16];
+    let mut topo = Table::new(
+        "flat/hier exchange-time ratio (IB, 25 B/pair/step) by ranks-per-node",
+        &["procs", "rpn=1", "rpn=4", "rpn=8", "rpn=16"],
+    );
+    for procs in [4u32, 8, 16, 32, 64, 128, 256, 512] {
+        let mut row = vec![procs.to_string()];
+        for rpn in rpns {
+            let m = AllToAllModel::new(IB, rpn);
+            let flat = m.exchange_time(procs, SPIKE_MSG_BYTES).total();
+            let hier = m.exchange_time_hierarchical(procs, SPIKE_MSG_BYTES).total();
+            let cell = if hier > 0.0 {
+                format!("{:.1}x", flat / hier)
+            } else {
+                "-".into()
+            };
+            row.push(cell);
+        }
+        topo.row(row);
+    }
+    println!("{}", topo.render());
+    topo.write_csv(std::path::Path::new(
+        "results/interconnect_whatif_topology.csv",
+    ))?;
+    for rpn in rpns {
+        let m = AllToAllModel::new(IB, rpn);
+        match hier_crossover(&m) {
+            Some(p) => println!(
+                "rpn={rpn:>2}: hierarchy beats flat from P={p} \
+                 ({} fabric msgs/exchange vs flat {})",
+                m.hierarchical_inter_messages(p),
+                m.flat_inter_messages(p),
+            ),
+            None => println!(
+                "rpn={rpn:>2}: hierarchy never beats flat up to P=1024 \
+                 (single-rank nodes only add framing)"
+            ),
+        }
+    }
     println!(
-        "the paper's thesis quantified: lower fabric latency directly buys\n\
-         real-time capacity for larger cortical fields."
+        "the paper's thesis quantified: lower fabric latency — or a topology\n\
+         that aggregates before touching the fabric — directly buys real-time\n\
+         capacity for larger cortical fields."
     );
     Ok(())
 }

@@ -1,0 +1,387 @@
+//! Two-level hierarchical transport: node-leader aggregation for the
+//! inter-node spike exchange (`--topology nodes:<k>`).
+//!
+//! The flat [`super::local::LocalCluster`] puts every rank pair on the
+//! same mailbox fabric, so one exchange costs `P(P−1)` messages — the
+//! quadratic cliff the paper's latency wall is made of. Real systems
+//! dodge it with the fabric's hierarchy: ranks sharing a node exchange
+//! through shared memory, and only node *leaders* talk across the
+//! network, concatenating their node's traffic into one message per node
+//! pair (SpiNNaker's multicast tree, NEST's node-local exchange). This
+//! transport reproduces that protocol in-process, per exchange:
+//!
+//! 1. **intra-node** — each rank posts its payload for same-node peers
+//!    straight into the shared mailbox matrix (one hop, as before);
+//! 2. **gather** — each non-leader frames its whole off-node payload as
+//!    `(dst: u32, len: u32, bytes)` runs and posts ONE blob to its node
+//!    leader (leaders frame their own payload in place);
+//! 3. **aggregate + exchange** — each leader re-frames the node's blobs
+//!    as `(src: u32, dst: u32, len: u32, bytes)` runs, binned per
+//!    destination node, and posts ONE aggregated message per other node:
+//!    `N(N−1)` fabric messages instead of `P(P−1)`;
+//! 4. **scatter** — each leader unpacks the aggregated messages
+//!    addressed to its node into the `(src, dst)` mailbox slots.
+//!
+//! Because the source tag travels with every sub-buffer, the collected
+//! incoming column is byte-identical to the flat transport's — same
+//! buffers, same source indexing — so the coordinator's source-ordered
+//! delivery (and therefore the spike raster) is bitwise unchanged.
+//! Message/byte accounting per rank is specified on
+//! [`ExchangeStats`](super::transport::ExchangeStats); summed over ranks
+//! it equals [`NodeMap::total_messages_per_exchange`] exactly.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::barrier::SenseBarrier;
+use super::topology::NodeMap;
+use super::transport::{ExchangeStats, Transport};
+
+/// Framing bytes per destination run in a gather blob (`dst` + `len`).
+pub const GATHER_FRAME_BYTES: usize = 8;
+
+/// Framing bytes per (src, dst) sub-buffer in an aggregated inter-node
+/// message (`src` + `dst` + `len`).
+pub const HIER_FRAME_BYTES: usize = 12;
+
+/// Shared state for one simulated cluster of `p` ranks grouped into
+/// virtual nodes of `ranks_per_node`.
+pub struct HierCluster {
+    map: NodeMap,
+    /// mailbox[src][dst]: final (source → destination) payloads — the
+    /// same matrix the flat transport uses, but inter-node slots are
+    /// filled by the destination node's leader during scatter.
+    mailboxes: Vec<Vec<Mutex<Vec<u8>>>>,
+    /// gather[src]: the framed off-node payload rank `src` posted for
+    /// its node leader this exchange.
+    gather: Vec<Mutex<Vec<u8>>>,
+    /// internode[src_node][dst_node]: the aggregated node-pair message.
+    internode: Vec<Vec<Mutex<Vec<u8>>>>,
+    barrier: SenseBarrier,
+}
+
+impl HierCluster {
+    pub fn new(p: u32, ranks_per_node: u32) -> Arc<Self> {
+        let map = NodeMap::new(p, ranks_per_node);
+        let n = map.n_nodes();
+        Arc::new(Self {
+            map,
+            mailboxes: (0..p)
+                .map(|_| (0..p).map(|_| Mutex::new(Vec::new())).collect())
+                .collect(),
+            gather: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
+            internode: (0..n)
+                .map(|_| (0..n).map(|_| Mutex::new(Vec::new())).collect())
+                .collect(),
+            barrier: SenseBarrier::new(p),
+        })
+    }
+
+    pub fn node_map(&self) -> &NodeMap {
+        &self.map
+    }
+
+    /// Post `payload` into the `(src, dst)` mailbox slot.
+    fn post(&self, src: u32, dst: u32, payload: &[u8]) {
+        let mut slot = self.mailboxes[src as usize][dst as usize].lock().unwrap();
+        slot.clear();
+        slot.extend_from_slice(payload);
+    }
+
+    /// Leader only: merge the node's gather blobs into one aggregated
+    /// message per other node and post them. Returns (messages, bytes).
+    fn aggregate_and_send(&self, my_node: u32) -> (u64, u64) {
+        let n = self.map.n_nodes() as usize;
+        let mut bins: Vec<Vec<u8>> = vec![Vec::new(); n];
+        for src in self.map.ranks_of(my_node) {
+            let blob = self.gather[src as usize].lock().unwrap();
+            let mut off = 0usize;
+            while off < blob.len() {
+                let dst = u32::from_le_bytes(blob[off..off + 4].try_into().unwrap());
+                let len = u32::from_le_bytes(blob[off + 4..off + 8].try_into().unwrap()) as usize;
+                off += GATHER_FRAME_BYTES;
+                let bin = &mut bins[self.map.node_of(dst) as usize];
+                bin.extend_from_slice(&src.to_le_bytes());
+                bin.extend_from_slice(&dst.to_le_bytes());
+                bin.extend_from_slice(&(len as u32).to_le_bytes());
+                bin.extend_from_slice(&blob[off..off + len]);
+                off += len;
+            }
+        }
+        let (mut msgs, mut bytes) = (0u64, 0u64);
+        for (node, bin) in bins.iter_mut().enumerate() {
+            if node as u32 == my_node {
+                debug_assert!(bin.is_empty(), "gather blobs hold off-node runs only");
+                continue;
+            }
+            msgs += 1;
+            bytes += bin.len() as u64;
+            *self.internode[my_node as usize][node].lock().unwrap() = std::mem::take(bin);
+        }
+        (msgs, bytes)
+    }
+
+    /// Leader only: unpack the aggregated messages addressed to this
+    /// node into the `(src, dst)` mailbox slots.
+    fn scatter(&self, my_node: u32) {
+        for src_node in 0..self.map.n_nodes() {
+            if src_node == my_node {
+                continue;
+            }
+            let msg = std::mem::take(
+                &mut *self.internode[src_node as usize][my_node as usize].lock().unwrap(),
+            );
+            let mut off = 0usize;
+            while off < msg.len() {
+                let src = u32::from_le_bytes(msg[off..off + 4].try_into().unwrap());
+                let dst = u32::from_le_bytes(msg[off + 4..off + 8].try_into().unwrap());
+                let len = u32::from_le_bytes(msg[off + 8..off + 12].try_into().unwrap()) as usize;
+                off += HIER_FRAME_BYTES;
+                debug_assert_eq!(self.map.node_of(src), src_node);
+                debug_assert_eq!(self.map.node_of(dst), my_node);
+                self.post(src, dst, &msg[off..off + len]);
+                off += len;
+            }
+        }
+    }
+}
+
+impl Transport for Arc<HierCluster> {
+    fn n_ranks(&self) -> u32 {
+        self.map.n_ranks()
+    }
+
+    fn alltoall(
+        &self,
+        rank: u32,
+        outgoing: &[Vec<u8>],
+    ) -> Result<(Vec<Vec<u8>>, ExchangeStats)> {
+        let p = self.map.n_ranks();
+        assert_eq!(outgoing.len() as u32, p, "need one buffer per rank");
+        let my_node = self.map.node_of(rank);
+        let n_nodes = self.map.n_nodes();
+        let mut stats = ExchangeStats {
+            per_dst_bytes: outgoing.iter().map(|b| b.len() as u64).collect(),
+            ..ExchangeStats::default()
+        };
+
+        // Phase 1a: loopback + direct intra-node posts.
+        self.post(rank, rank, &outgoing[rank as usize]);
+        for dst in self.map.ranks_of(my_node) {
+            if dst == rank {
+                continue;
+            }
+            let payload = &outgoing[dst as usize];
+            self.post(rank, dst, payload);
+            stats.bytes_sent += payload.len() as u64;
+            stats.intra_messages += 1;
+            stats.intra_bytes += payload.len() as u64;
+        }
+        // Phase 1b: frame the off-node payload as one gather blob. Every
+        // off-node destination gets a run (envelopes are transmitted even
+        // when empty, like the flat transport's P−1 messages). Leaders
+        // frame in place; non-leaders pay one intra-node gather message.
+        if n_nodes > 1 {
+            let mut blob = Vec::new();
+            for dst in 0..p {
+                if self.map.node_of(dst) == my_node {
+                    continue;
+                }
+                let payload = &outgoing[dst as usize];
+                blob.extend_from_slice(&dst.to_le_bytes());
+                blob.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+                blob.extend_from_slice(payload);
+            }
+            if !self.map.is_leader(rank) {
+                stats.bytes_sent += blob.len() as u64;
+                stats.intra_messages += 1;
+                stats.intra_bytes += blob.len() as u64;
+            }
+            *self.gather[rank as usize].lock().unwrap() = blob;
+        }
+        self.barrier.wait();
+
+        if n_nodes > 1 {
+            // Phase 2: leaders aggregate the node's blobs into one
+            // framed message per other node — the N(N−1) fabric hop.
+            if self.map.is_leader(rank) {
+                let (msgs, bytes) = self.aggregate_and_send(my_node);
+                stats.inter_messages += msgs;
+                stats.inter_bytes += bytes;
+                stats.bytes_sent += bytes;
+            }
+            self.barrier.wait();
+            // Phase 3: leaders scatter the incoming aggregates into the
+            // (src, dst) mailbox slots of their node.
+            if self.map.is_leader(rank) {
+                self.scatter(my_node);
+            }
+            self.barrier.wait();
+        }
+        stats.messages = stats.intra_messages + stats.inter_messages;
+
+        // Phase 4: collect the column addressed to this rank — identical
+        // in content and source indexing to the flat transport's.
+        let mut incoming = Vec::with_capacity(p as usize);
+        for src in 0..p as usize {
+            let mut slot = self.mailboxes[src][rank as usize].lock().unwrap();
+            incoming.push(std::mem::take(&mut *slot));
+        }
+        stats.bytes_recv = incoming.iter().map(|b| b.len() as u64).sum();
+        // Phase 5: everyone must finish reading before the next post.
+        self.barrier.wait();
+        Ok((incoming, stats))
+    }
+
+    fn barrier(&self, _rank: u32) {
+        self.barrier.wait();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive one exchange round on `p` threads with
+    /// `payload(src, dst)` buffers and return the per-rank stats after
+    /// asserting every rank received exactly `payload(src, rank)`.
+    fn exchange_round(
+        p: u32,
+        ranks_per_node: u32,
+        rounds: u32,
+        payload: fn(u32, u32, u32) -> Vec<u8>,
+    ) -> Vec<ExchangeStats> {
+        let cluster = HierCluster::new(p, ranks_per_node);
+        let mut handles = Vec::new();
+        for rank in 0..p {
+            let t = cluster.clone();
+            handles.push(std::thread::spawn(move || -> ExchangeStats {
+                let mut last = ExchangeStats::default();
+                for round in 0..rounds {
+                    let outgoing: Vec<Vec<u8>> =
+                        (0..p).map(|dst| payload(rank, dst, round)).collect();
+                    let (incoming, stats) = t.alltoall(rank, &outgoing).unwrap();
+                    for (src, buf) in incoming.iter().enumerate() {
+                        assert_eq!(
+                            buf,
+                            &payload(src as u32, rank, round),
+                            "rank {rank} from {src} round {round}"
+                        );
+                    }
+                    last = stats;
+                }
+                last
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    fn tagged(src: u32, dst: u32, round: u32) -> Vec<u8> {
+        format!("r{src}->d{dst}@{round}").into_bytes()
+    }
+
+    #[test]
+    fn routes_every_pair_across_nodes() {
+        // 6 ranks on 3 nodes of 2: multi-node, leaders and followers.
+        let stats = exchange_round(6, 2, 20, tagged);
+        for (rank, s) in stats.iter().enumerate() {
+            let leader = rank % 2 == 0;
+            // 1 direct intra post + (gather | 2 aggregated messages)
+            assert_eq!(s.intra_messages, if leader { 1 } else { 2 }, "rank {rank}");
+            assert_eq!(s.inter_messages, if leader { 2 } else { 0 }, "rank {rank}");
+            assert_eq!(s.messages, 3, "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn ragged_last_node_routes_correctly() {
+        // 5 ranks on nodes of 2 -> sizes (2, 2, 1); rank 4 is a solo
+        // leader with no intra-node peers.
+        let stats = exchange_round(5, 2, 10, tagged);
+        assert_eq!(stats[4].intra_messages, 0);
+        assert_eq!(stats[4].inter_messages, 2);
+        assert_eq!(stats[1].intra_messages, 2, "direct post + gather");
+        assert_eq!(stats[1].inter_messages, 0);
+    }
+
+    #[test]
+    fn single_node_degenerates_to_flat_intra_exchange() {
+        let stats = exchange_round(4, 8, 5, tagged);
+        for s in &stats {
+            assert_eq!(s.intra_messages, 3);
+            assert_eq!(s.inter_messages, 0);
+            assert_eq!(s.messages, 3);
+            assert_eq!(s.intra_bytes, s.bytes_sent);
+        }
+    }
+
+    #[test]
+    fn message_accounting_matches_closed_form() {
+        // The satellite contract: summed over ranks, one exchange's
+        // message count equals NodeMap's closed form for every (P, k) —
+        // even splits, ragged splits, solo nodes, single node.
+        for &(p, k) in &[(1u32, 1u32), (2, 1), (4, 2), (6, 4), (8, 3), (8, 4), (9, 4), (5, 8)] {
+            let stats = exchange_round(p, k, 2, |s, d, _| vec![s as u8, d as u8]);
+            let map = NodeMap::new(p, k);
+            let total: u64 = stats.iter().map(|s| s.messages).sum();
+            assert_eq!(total, map.total_messages_per_exchange(), "p={p} k={k}");
+            let inter: u64 = stats.iter().map(|s| s.inter_messages).sum();
+            let expect_inter = if map.n_nodes() > 1 {
+                map.inter_messages_per_exchange()
+            } else {
+                0
+            };
+            assert_eq!(inter, expect_inter, "p={p} k={k}");
+            for s in &stats {
+                assert_eq!(s.messages, s.intra_messages + s.inter_messages);
+            }
+        }
+    }
+
+    #[test]
+    fn byte_accounting_is_exact() {
+        // 4 ranks, 2 nodes of 2, every payload exactly 3 bytes.
+        let stats = exchange_round(4, 2, 3, |s, d, _| vec![s as u8, d as u8, 0]);
+        for (rank, s) in stats.iter().enumerate() {
+            // everyone receives 4 payloads of 3 bytes (loopback included)
+            assert_eq!(s.bytes_recv, 12, "rank {rank}");
+            assert_eq!(s.per_dst_bytes, vec![3, 3, 3, 3]);
+            // direct intra post: 3 B. Gather blob: 2 off-node runs of
+            // (8 B frame + 3 B payload) = 22 B.
+            let blob = 2 * (GATHER_FRAME_BYTES as u64 + 3);
+            if rank % 2 == 0 {
+                // leader: 3 B intra + one aggregated message of 4
+                // (src,dst) sub-buffers: 4 * (12 B frame + 3 B) = 60 B
+                let aggregate = 4 * (HIER_FRAME_BYTES as u64 + 3);
+                assert_eq!(s.intra_bytes, 3, "rank {rank}");
+                assert_eq!(s.inter_bytes, aggregate, "rank {rank}");
+                assert_eq!(s.bytes_sent, 3 + aggregate, "rank {rank}");
+            } else {
+                assert_eq!(s.intra_bytes, 3 + blob, "rank {rank}");
+                assert_eq!(s.inter_bytes, 0, "rank {rank}");
+                assert_eq!(s.bytes_sent, 3 + blob, "rank {rank}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_payloads_still_synchronize() {
+        let stats = exchange_round(6, 3, 4, |_, _, _| Vec::new());
+        for s in &stats {
+            assert_eq!(s.bytes_recv, 0);
+            // envelopes still move: framing bytes on gather/aggregate
+            assert!(s.messages > 0);
+        }
+    }
+
+    #[test]
+    fn single_rank_round_trips() {
+        let cluster = HierCluster::new(1, 4);
+        let (incoming, stats) = cluster.alltoall(0, &[b"self".to_vec()]).unwrap();
+        assert_eq!(incoming[0], b"self");
+        assert_eq!(stats.messages, 0);
+        assert_eq!(stats.bytes_sent, 0);
+        assert_eq!(stats.bytes_recv, 4);
+    }
+}

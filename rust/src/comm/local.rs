@@ -55,6 +55,10 @@ impl Transport for Arc<LocalCluster> {
             if dst as u32 != rank {
                 stats.bytes_sent += payload.len() as u64;
                 stats.messages += 1;
+                // the flat transport is topology-blind: every peer
+                // message crosses the shared fabric (see ExchangeStats)
+                stats.inter_messages += 1;
+                stats.inter_bytes += payload.len() as u64;
             }
         }
         self.barrier.wait();
@@ -93,6 +97,9 @@ mod tests {
                         .collect();
                     let (incoming, stats) = t.alltoall(rank, &outgoing).unwrap();
                     assert_eq!(stats.messages, (p - 1) as u64);
+                    assert_eq!(stats.inter_messages, (p - 1) as u64);
+                    assert_eq!(stats.intra_messages, 0, "flat has no node notion");
+                    assert_eq!(stats.inter_bytes, stats.bytes_sent);
                     for (src, buf) in incoming.iter().enumerate() {
                         let expect = format!("r{src}->d{rank}@{round}");
                         assert_eq!(buf, expect.as_bytes(), "rank {rank} round {round}");

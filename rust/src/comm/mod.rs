@@ -23,10 +23,23 @@
 //! AER stream) or once per min-delay epoch ([`aer::encode_spikes_epoch`]
 //! run-header framing), amortizing the per-message latency over
 //! `delay_min_steps` network steps with a bitwise-identical raster.
+//!
+//! A third orthogonal axis is the transport *topology*
+//! ([`crate::config::Topology`]): the flat [`local::LocalCluster`] puts
+//! every rank pair on the shared fabric (`P(P−1)` messages per
+//! exchange), while the hierarchical [`hier::HierCluster`] groups ranks
+//! into virtual nodes ([`topology::NodeMap`]) where intra-node spikes
+//! move through the node-local mailbox slots and inter-node traffic is
+//! gathered at a per-node leader into ONE source-tagged framed message
+//! per node pair — `N(N−1)` fabric messages — then scattered back, with
+//! a byte-identical incoming column and therefore a bitwise-identical
+//! raster.
 
 pub mod aer;
 pub mod transport;
 pub mod local;
+pub mod hier;
+pub mod topology;
 pub mod barrier;
 pub mod routing;
 
@@ -34,6 +47,8 @@ pub use aer::{
     decode_spikes, decode_spikes_epoch, encode_spikes, encode_spikes_epoch,
     EPOCH_HEADER_BYTES, SPIKE_WIRE_BYTES,
 };
+pub use hier::{HierCluster, GATHER_FRAME_BYTES, HIER_FRAME_BYTES};
 pub use local::LocalCluster;
 pub use routing::RoutingTable;
+pub use topology::NodeMap;
 pub use transport::{ExchangeStats, Transport};

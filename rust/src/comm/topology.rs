@@ -1,0 +1,202 @@
+//! Rank→node topology for the live transport.
+//!
+//! A [`NodeMap`] groups `p` ranks into virtual nodes of `ranks_per_node`
+//! consecutive ranks (rank `r` lives on node `r / ranks_per_node`, the
+//! same index-order packing [`crate::simnet::alltoall_model::AllToAllModel`]
+//! prices), with the first rank of each node acting as the node's
+//! **leader** for the hierarchical exchange ([`super::hier::HierCluster`]).
+//! The last node may be ragged (fewer than `ranks_per_node` ranks) when
+//! `p` is not a multiple of the node size.
+//!
+//! The map also owns the closed-form message accounting of one
+//! hierarchical exchange, so live measurements
+//! ([`crate::metrics::comm_volume::CommVolume`]) and the analytic
+//! interconnect model agree *exactly* — per exchange:
+//!
+//! * every rank posts one intra-node message to each same-node peer
+//!   (`Σ sᵢ(sᵢ−1)` over node sizes `sᵢ`),
+//! * every non-leader posts ONE gather message to its node leader
+//!   (`Σ (sᵢ−1)`, only when there is more than one node),
+//! * every leader posts ONE aggregated message to each other node's
+//!   leader (`N(N−1)` inter-node messages — the paper's `P(P−1)` flat
+//!   message count collapsed to node granularity).
+
+use std::ops::Range;
+
+/// Index-order packing of `p` ranks onto nodes of `ranks_per_node`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeMap {
+    p: u32,
+    ranks_per_node: u32,
+}
+
+impl NodeMap {
+    pub fn new(p: u32, ranks_per_node: u32) -> Self {
+        assert!(p >= 1, "need at least one rank");
+        assert!(ranks_per_node >= 1, "need at least one rank per node");
+        Self { p, ranks_per_node }
+    }
+
+    pub fn n_ranks(&self) -> u32 {
+        self.p
+    }
+
+    pub fn ranks_per_node(&self) -> u32 {
+        self.ranks_per_node
+    }
+
+    /// Number of nodes hosting the `p` ranks.
+    pub fn n_nodes(&self) -> u32 {
+        self.p.div_ceil(self.ranks_per_node)
+    }
+
+    /// Node hosting rank `r`.
+    pub fn node_of(&self, r: u32) -> u32 {
+        debug_assert!(r < self.p);
+        r / self.ranks_per_node
+    }
+
+    /// Leader rank of `node` (its first rank).
+    pub fn leader_of(&self, node: u32) -> u32 {
+        debug_assert!(node < self.n_nodes());
+        node * self.ranks_per_node
+    }
+
+    /// Is rank `r` its node's leader?
+    pub fn is_leader(&self, r: u32) -> bool {
+        r % self.ranks_per_node == 0
+    }
+
+    /// Ranks hosted by `node` (the last node may be ragged).
+    pub fn ranks_of(&self, node: u32) -> Range<u32> {
+        debug_assert!(node < self.n_nodes());
+        let lo = node * self.ranks_per_node;
+        lo..(lo + self.ranks_per_node).min(self.p)
+    }
+
+    /// Number of ranks on `node`.
+    pub fn node_size(&self, node: u32) -> u32 {
+        let r = self.ranks_of(node);
+        r.end - r.start
+    }
+
+    /// Are ranks `a` and `b` hosted by the same node?
+    pub fn same_node(&self, a: u32, b: u32) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// Inter-node messages of one hierarchical exchange: one aggregated
+    /// message per ordered node pair, `N(N−1)` — versus the flat
+    /// transport's `P(P−1)`.
+    pub fn inter_messages_per_exchange(&self) -> u64 {
+        let n = self.n_nodes() as u64;
+        n * (n - 1)
+    }
+
+    /// Total messages (intra + gather + inter) of one hierarchical
+    /// exchange, ragged last node included. This is exactly what the
+    /// live [`super::hier::HierCluster`] accounts across ranks per
+    /// `alltoall` call, and what the interconnect model predicts
+    /// ([`crate::simnet::alltoall_model::AllToAllModel::hierarchical_messages`]).
+    pub fn total_messages_per_exchange(&self) -> u64 {
+        let n = self.n_nodes();
+        let mut total = 0u64;
+        for node in 0..n {
+            let s = self.node_size(node) as u64;
+            // direct intra-node posts between same-node peers
+            total += s * (s - 1);
+            // one gather message per non-leader (only when there is
+            // inter-node traffic to aggregate)
+            if n > 1 {
+                total += s - 1;
+            }
+        }
+        if n > 1 {
+            total += self.inter_messages_per_exchange();
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_packing() {
+        let m = NodeMap::new(8, 4);
+        assert_eq!(m.n_nodes(), 2);
+        assert_eq!(m.node_of(0), 0);
+        assert_eq!(m.node_of(3), 0);
+        assert_eq!(m.node_of(4), 1);
+        assert_eq!(m.leader_of(0), 0);
+        assert_eq!(m.leader_of(1), 4);
+        assert!(m.is_leader(0) && m.is_leader(4));
+        assert!(!m.is_leader(1) && !m.is_leader(7));
+        assert_eq!(m.ranks_of(1), 4..8);
+        assert_eq!(m.node_size(1), 4);
+        assert!(m.same_node(1, 3) && !m.same_node(3, 4));
+    }
+
+    #[test]
+    fn ragged_last_node() {
+        let m = NodeMap::new(10, 4);
+        assert_eq!(m.n_nodes(), 3);
+        assert_eq!(m.ranks_of(2), 8..10);
+        assert_eq!(m.node_size(2), 2);
+        assert!(m.is_leader(8));
+        assert_eq!(m.node_of(9), 2);
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        // one rank: one node, no messages at all
+        let m = NodeMap::new(1, 4);
+        assert_eq!(m.n_nodes(), 1);
+        assert_eq!(m.total_messages_per_exchange(), 0);
+        // everyone on one node: flat all-to-all within the node
+        let m = NodeMap::new(6, 8);
+        assert_eq!(m.n_nodes(), 1);
+        assert_eq!(m.total_messages_per_exchange(), 6 * 5);
+        assert_eq!(m.inter_messages_per_exchange(), 0);
+        // one rank per node: gathers vanish, inter = flat count
+        let m = NodeMap::new(5, 1);
+        assert_eq!(m.n_nodes(), 5);
+        assert_eq!(m.total_messages_per_exchange(), 5 * 4);
+        assert_eq!(m.inter_messages_per_exchange(), 5 * 4);
+    }
+
+    #[test]
+    fn closed_form_matches_enumeration() {
+        // brute-force the protocol's message count and compare
+        for p in 1..=12u32 {
+            for k in 1..=6u32 {
+                let m = NodeMap::new(p, k);
+                let n = m.n_nodes();
+                let mut count = 0u64;
+                for r in 0..p {
+                    // direct posts to same-node peers
+                    count += (m.node_size(m.node_of(r)) - 1) as u64;
+                    // gather to the leader
+                    if n > 1 && !m.is_leader(r) {
+                        count += 1;
+                    }
+                    // aggregated messages to other leaders
+                    if n > 1 && m.is_leader(r) {
+                        count += (n - 1) as u64;
+                    }
+                }
+                assert_eq!(count, m.total_messages_per_exchange(), "p={p} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchy_beats_flat_message_count() {
+        // the tentpole claim: P(P-1) collapses to ~N(N-1) on the wire
+        let m = NodeMap::new(256, 16);
+        assert_eq!(m.inter_messages_per_exchange(), 16 * 15);
+        let flat = 256u64 * 255;
+        assert!(m.inter_messages_per_exchange() * 100 < flat);
+    }
+}

@@ -5,32 +5,85 @@
 //! addressed to the calling rank. A conforming implementation must be a
 //! *barrier*: no rank's exchange completes until every rank has
 //! contributed (matching the paper's synchronous MPI collectives).
+//!
+//! Two implementations exist:
+//!
+//! * [`crate::comm::local::LocalCluster`] — **flat**: every rank pair
+//!   crosses one shared mailbox matrix, the transport analogue of MPI
+//!   point-to-point over the fabric for every pair.
+//! * [`crate::comm::hier::HierCluster`] — **hierarchical**
+//!   (`--topology nodes:<k>`): ranks are grouped into virtual nodes;
+//!   intra-node pairs exchange directly while inter-node traffic is
+//!   aggregated at per-node leaders into one framed message per node
+//!   pair.
 
 use anyhow::Result;
 
 /// Per-call accounting used by the profiler and the workload recorder.
 ///
-/// Byte counts are *payload* bytes moved through the transport. Sent
+/// Byte counts are bytes moved through the transport. Sent
 /// bytes exclude the self slot (posting to yourself is not a network
 /// send), while received bytes include the loopback block when one was
 /// posted: `MPI_Alltoall` copies the self block through the exchange
 /// like any other, and the destination-filtered protocol
 /// ([`crate::comm::routing`]) saves exactly that copy by delivering
 /// local spikes directly.
+///
+/// # Message-count semantics
+///
+/// `messages` counts the envelopes this rank put on the transport, and
+/// synchronous collectives always transmit envelopes, even empty ones.
+/// The split by locality (and the per-topology counts) is:
+///
+/// * **flat** ([`crate::comm::local::LocalCluster`]) — every rank sends
+///   P−1 messages per exchange, all accounted as *inter-node*: the flat
+///   transport is topology-blind, so every pair crosses the shared
+///   fabric (the `P(P−1)` cliff the paper measures).
+/// * **hierarchical** ([`crate::comm::hier::HierCluster`], N > 1 nodes)
+///   — a rank sends one *intra-node* message to each of its s−1
+///   same-node peers; a **non-leader** additionally sends exactly ONE
+///   intra-node gather message (its whole off-node payload) to its node
+///   leader; a **leader** additionally sends exactly N−1 *inter-node*
+///   aggregated messages, one per other node. Summed over ranks this is
+///   `Σ sᵢ(sᵢ−1) + Σ (sᵢ−1) + N(N−1)`
+///   ([`crate::comm::topology::NodeMap::total_messages_per_exchange`]).
+///
+/// Relay bytes are accounted where they are *sent*: a non-leader's
+/// gather payload appears in its own `bytes_sent` (intra) and again in
+/// its leader's `bytes_sent` (inter) when forwarded — the hierarchical
+/// protocol really does move those bytes twice, trading a cheap
+/// node-local hop for `P(P−1) → N(N−1)` fabric messages. `bytes_recv`
+/// stays payload-only: the bytes delivered to this rank's incoming
+/// column, regardless of the route they took.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct ExchangeStats {
-    /// Bytes this rank sent (sum over destinations, self excluded).
+    /// Bytes this rank sent (sum over destinations, self excluded;
+    /// hierarchical transports include gather/aggregate framing).
     pub bytes_sent: u64,
     /// Bytes delivered to this rank, loopback block included.
     pub bytes_recv: u64,
-    /// Messages this rank sent (= P-1 for all-to-all, even when empty:
-    /// synchronous collectives always transmit envelopes).
+    /// Messages this rank sent (`intra_messages + inter_messages`; see
+    /// the message-count semantics above).
     pub messages: u64,
+    /// Messages that stayed inside this rank's node (direct posts to
+    /// same-node peers + the gather message to the leader). Zero on the
+    /// flat transport, which has no node notion.
+    pub intra_messages: u64,
+    /// Messages that crossed nodes. The flat transport counts every
+    /// peer message here; the hierarchical transport only the leaders'
+    /// aggregated node-pair messages.
+    pub inter_messages: u64,
+    /// Bytes carried by `intra_messages`.
+    pub intra_bytes: u64,
+    /// Bytes carried by `inter_messages`.
+    pub inter_bytes: u64,
     /// Payload bytes posted per destination rank (`per_dst_bytes[d]`,
     /// length P; index `self` is the loopback block). This is the
     /// rank's row of the step's traffic matrix — the quantity the
     /// interconnect model prices pair-by-pair
-    /// (`simnet::alltoall_model::AllToAllModel::exchange_time_matrix`).
+    /// (`simnet::alltoall_model::AllToAllModel::exchange_time_matrix`) —
+    /// and is independent of the transport topology: aggregation changes
+    /// the route, never the (source, destination) payload.
     pub per_dst_bytes: Vec<u64>,
 }
 
@@ -41,7 +94,12 @@ pub trait Transport: Send {
     /// Synchronous all-to-all: `outgoing[p]` is this rank's payload for
     /// rank `p` (`outgoing[self]` is returned to self unchanged, matching
     /// MPI_Alltoall semantics). Returns the incoming buffers indexed by
-    /// source rank, plus accounting.
+    /// source rank, plus accounting. Implementations must preserve the
+    /// (source → payload) mapping exactly — aggregation or re-framing
+    /// inside the transport must be invisible to the caller, so the
+    /// coordinator's source-ordered delivery contract
+    /// ([`crate::engine::rank::RankEngine::deliver`]) survives any
+    /// topology.
     fn alltoall(
         &self,
         rank: u32,

@@ -5,4 +5,4 @@ pub mod network;
 pub mod run;
 
 pub use network::NetworkParams;
-pub use run::{Backend, ExchangeCadence, Mode, Routing, RunConfig};
+pub use run::{Backend, ExchangeCadence, Mode, Routing, RunConfig, Topology};

@@ -132,6 +132,70 @@ impl std::fmt::Display for ExchangeCadence {
     }
 }
 
+/// How live ranks are grouped onto (virtual) nodes — the transport
+/// *topology* (see [`crate::comm`]).
+///
+/// Orthogonal to [`Routing`] (*where* spikes travel) and
+/// [`ExchangeCadence`] (*how often*): topology decides *what crosses
+/// the fabric*. `flat` sends every rank pair's message through the
+/// shared transport (`P(P−1)` messages per exchange — the paper's
+/// measured regime); `nodes:<k>` groups `k` consecutive ranks per node
+/// and aggregates all inter-node traffic at per-node leaders into one
+/// framed message per node pair (`N(N−1)` messages), the hierarchical
+/// exchange of the ExaNeSt-class fabrics the paper argues for. The
+/// spike raster is bitwise identical either way.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// One shared mailbox fabric for every rank pair (the baseline).
+    Flat,
+    /// Two-level node-leader aggregation with this many ranks per node.
+    Nodes(u32),
+}
+
+impl Topology {
+    /// Ranks per virtual node, when the topology declares one.
+    pub fn ranks_per_node(&self) -> Option<u32> {
+        match self {
+            Topology::Flat => None,
+            Topology::Nodes(k) => Some(*k),
+        }
+    }
+}
+
+impl std::str::FromStr for Topology {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        let s = s.to_ascii_lowercase();
+        match s.as_str() {
+            "flat" => Ok(Topology::Flat),
+            _ => {
+                let k: u32 = s
+                    .strip_prefix("nodes:")
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("unknown topology {s:?} (flat|nodes:<ranks_per_node>)")
+                    })?
+                    .parse()
+                    .map_err(|_| {
+                        anyhow::anyhow!("bad ranks-per-node in topology {s:?} (nodes:<k>)")
+                    })?;
+                if k == 0 {
+                    bail!("topology nodes:<k> needs at least 1 rank per node");
+                }
+                Ok(Topology::Nodes(k))
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Topology::Flat => write!(f, "flat"),
+            Topology::Nodes(k) => write!(f, "nodes:{k}"),
+        }
+    }
+}
+
 /// How the run is executed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
@@ -173,6 +237,11 @@ pub struct RunConfig {
     /// bitwise identical either way; only the number of collectives
     /// (and their per-message latency bill) changes.
     pub exchange_every: ExchangeCadence,
+    /// Transport topology: flat (every rank pair on the fabric) or
+    /// node-leader hierarchical aggregation (live: the two-level
+    /// `HierCluster`; modeled: the hierarchical exchange pricing with
+    /// this node packing).
+    pub topology: Topology,
     /// Platform preset name for modeled runs (see `platform::presets`).
     pub platform: String,
     /// Interconnect preset for modeled runs ("ib", "eth1g", ...).
@@ -197,6 +266,7 @@ impl Default for RunConfig {
             mode: Mode::Live,
             routing: Routing::Filtered,
             exchange_every: ExchangeCadence::Step,
+            topology: Topology::Flat,
             platform: "xeon".to_string(),
             interconnect: "ib".to_string(),
             artifacts_dir: "artifacts".to_string(),
@@ -237,6 +307,9 @@ impl RunConfig {
                     self.net.delay_min_steps
                 );
             }
+        }
+        if self.topology.ranks_per_node() == Some(0) {
+            bail!("topology nodes:<k> needs at least 1 rank per node");
         }
         Ok(())
     }
@@ -304,6 +377,9 @@ impl RunConfig {
             .parse()?;
         cfg.exchange_every = doc
             .str_or("run", "exchange_every", &cfg.exchange_every.to_string())
+            .parse()?;
+        cfg.topology = doc
+            .str_or("run", "topology", &cfg.topology.to_string())
             .parse()?;
         cfg.platform = doc.str_or("run", "platform", &cfg.platform);
         cfg.interconnect = doc.str_or("run", "interconnect", &cfg.interconnect);
@@ -405,6 +481,37 @@ mod tests {
         // default network: delay_min_steps = 1, so a 16-step epoch fails
         let r = RunConfig::from_toml_str("[run]\nexchange_every = \"16\"");
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn topology_parses_and_defaults_to_flat() {
+        assert_eq!(RunConfig::default().topology, Topology::Flat);
+        let parse = |s: &str| s.parse::<Topology>();
+        assert_eq!(parse("flat").unwrap(), Topology::Flat);
+        assert_eq!(parse("nodes:4").unwrap(), Topology::Nodes(4));
+        assert_eq!(parse("NODES:16").unwrap(), Topology::Nodes(16));
+        assert!(parse("nodes:0").is_err(), "zero ranks per node");
+        assert!(parse("nodes:").is_err());
+        assert!(parse("torus").is_err());
+        // display round-trips through FromStr
+        for s in ["flat", "nodes:4", "nodes:16"] {
+            assert_eq!(parse(s).unwrap().to_string(), s);
+        }
+        assert_eq!(Topology::Nodes(8).ranks_per_node(), Some(8));
+        assert_eq!(Topology::Flat.ranks_per_node(), None);
+    }
+
+    #[test]
+    fn topology_from_toml_and_validation() {
+        let cfg = RunConfig::from_toml_str("[run]\ntopology = \"nodes:4\"").unwrap();
+        assert_eq!(cfg.topology, Topology::Nodes(4));
+        let cfg = RunConfig::from_toml_str("[run]\ntopology = \"flat\"").unwrap();
+        assert_eq!(cfg.topology, Topology::Flat);
+        assert!(RunConfig::from_toml_str("[run]\ntopology = \"nodes:0\"").is_err());
+        // direct construction of the invalid value is caught by validate
+        let mut cfg = RunConfig::default();
+        cfg.topology = Topology::Nodes(0);
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -33,22 +33,37 @@
 //!   precomputed [`RoutingTable`]; its own spikes are delivered directly
 //!   and never loop back through the transport.
 //!
+//! Orthogonally again, the transport *topology*
+//! ([`RunConfig::topology`](crate::config::RunConfig)) decides what the
+//! exchange puts on the fabric: `flat` drives the shared
+//! [`LocalCluster`] mailbox for every rank pair, while `nodes:<k>`
+//! drives the two-level [`HierCluster`](crate::comm::hier::HierCluster),
+//! where same-node spikes take the node-local path and all inter-node
+//! traffic is gathered at per-node leaders into one framed message per
+//! node pair — the leader gather/aggregate/scatter runs inside the
+//! transport call, i.e. inside the profiled Communication lap. The
+//! incoming column a rank collects is byte-identical either way, so the
+//! topology is invisible to delivery.
+//!
 //! Because connectivity, stimulus and initial state are pure functions of
 //! global neuron ids, and synaptic weights live on an exact f32 grid, the
 //! spike raster is **bitwise identical for every process count, both
-//! routing protocols and every exchange cadence** — a spike dropped by
-//! the filter would have met an empty synapse row at the destination
-//! anyway, and a spike deferred by an epoch still lands in its per-step
-//! arrival slot. Tested in `rust/tests/determinism.rs`,
-//! `rust/tests/routing_props.rs` and `rust/tests/cadence_props.rs`.
+//! routing protocols, every exchange cadence and both topologies** — a
+//! spike dropped by the filter would have met an empty synapse row at
+//! the destination anyway, a spike deferred by an epoch still lands in
+//! its per-step arrival slot, and aggregation re-frames routes without
+//! touching payloads. Tested in `rust/tests/determinism.rs`,
+//! `rust/tests/routing_props.rs`, `rust/tests/cadence_props.rs` and
+//! `rust/tests/topology_props.rs`.
 
 use anyhow::{Context, Result};
 
 use crate::comm::aer::{decode_spikes, decode_spikes_epoch, encode_spikes, encode_spikes_epoch};
+use crate::comm::hier::HierCluster;
 use crate::comm::local::LocalCluster;
 use crate::comm::routing::RoutingTable;
 use crate::comm::transport::Transport;
-use crate::config::{Mode, Routing, RunConfig};
+use crate::config::{Mode, Routing, RunConfig, Topology};
 use crate::engine::partition::Partition;
 use crate::engine::rank::RankEngine;
 use crate::engine::spike::Spike;
@@ -77,24 +92,12 @@ pub fn run_live(cfg: &RunConfig) -> Result<RunResult> {
     let p = cfg.procs;
     let steps = cfg.steps();
     let part = Partition::even(cfg.net.n_neurons, p);
-    let cluster = LocalCluster::new(p);
 
     let t0 = std::time::Instant::now();
-    let reports: Vec<RankReport> = std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for rank in 0..p {
-            let cluster = cluster.clone();
-            let cfg = cfg.clone();
-            let part = part.clone();
-            handles.push(scope.spawn(move || -> Result<RankReport> {
-                rank_main(rank, &cfg, &part, cluster, steps)
-            }));
-        }
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("rank thread panicked"))
-            .collect::<Result<Vec<_>>>()
-    })?;
+    let reports: Vec<RankReport> = match cfg.topology {
+        Topology::Flat => spawn_ranks(cfg, &part, LocalCluster::new(p), steps)?,
+        Topology::Nodes(k) => spawn_ranks(cfg, &part, HierCluster::new(p, k), steps)?,
+    };
     let wall_s = t0.elapsed().as_secs_f64();
 
     let per_rank: Vec<Components> = reports.iter().map(|r| r.components).collect();
@@ -149,6 +152,7 @@ pub fn run_live(cfg: &RunConfig) -> Result<RunResult> {
         trace,
         comm_volume,
         routing: cfg.routing,
+        topology: cfg.topology,
         backend: match cfg.backend {
             crate::config::Backend::Native => "native",
             crate::config::Backend::Xla => "xla",
@@ -157,11 +161,35 @@ pub fn run_live(cfg: &RunConfig) -> Result<RunResult> {
     })
 }
 
-fn rank_main(
+/// Run one rank thread per rank over `transport` and collect reports.
+fn spawn_ranks<T: Transport + Clone>(
+    cfg: &RunConfig,
+    part: &Partition,
+    transport: T,
+    steps: u32,
+) -> Result<Vec<RankReport>> {
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for rank in 0..cfg.procs {
+            let transport = transport.clone();
+            let cfg = cfg.clone();
+            let part = part.clone();
+            handles.push(scope.spawn(move || -> Result<RankReport> {
+                rank_main(rank, &cfg, &part, transport, steps)
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("rank thread panicked"))
+            .collect::<Result<Vec<_>>>()
+    })
+}
+
+fn rank_main<T: Transport>(
     rank: u32,
     cfg: &RunConfig,
     part: &Partition,
-    cluster: std::sync::Arc<LocalCluster>,
+    transport: T,
     steps: u32,
 ) -> Result<RankReport> {
     let (lo, hi) = part.range(rank);
@@ -209,7 +237,7 @@ fn rank_main(
         encode_spikes
     };
 
-    let p = cluster.n_ranks() as usize;
+    let p = transport.n_ranks() as usize;
     let mut comp = Components::default();
     let mut comm_vol = CommVolume::default();
     let mut sw = Stopwatch::new();
@@ -282,7 +310,7 @@ fn rank_main(
                 }
             }
         }
-        let (incoming, stats) = cluster.alltoall(rank, &out_bufs)?;
+        let (incoming, stats) = transport.alltoall(rank, &out_bufs)?;
         comm_vol.observe(&stats);
         comp.add_communication(sw.lap());
 
@@ -305,7 +333,7 @@ fn rank_main(
         comp.add_computation(sw.lap());
 
         // 4. synchronization barrier (one per epoch)
-        cluster.barrier(rank);
+        transport.barrier(rank);
         comp.add_barrier(sw.lap());
 
         step += len;
@@ -382,6 +410,27 @@ mod tests {
         let exchanges = |r: &RunResult| r.comm_volume.iter().map(|c| c.exchanges).max().unwrap();
         assert_eq!(exchanges(&a), 200);
         assert_eq!(exchanges(&b), 50);
+    }
+
+    #[test]
+    fn hierarchical_topology_matches_flat_bitwise() {
+        let flat = run_live(&tiny_cfg(4)).unwrap();
+        let mut cfg = tiny_cfg(4);
+        cfg.topology = Topology::Nodes(2);
+        let hier = run_live(&cfg).unwrap();
+        assert!(flat.total_spikes > 0, "network must be active");
+        assert_eq!(flat.pop_counts, hier.pop_counts, "topology changed the raster");
+        assert_eq!(flat.total_syn_events, hier.total_syn_events);
+        assert_eq!(hier.topology, Topology::Nodes(2));
+        // P=4 flat: 4*3 = 12 inter messages per exchange; nodes:2 -> two
+        // virtual nodes, N(N-1) = 2 aggregated messages per exchange.
+        let inter = |r: &RunResult| r.comm_volume.iter().map(|c| c.inter_messages).sum::<u64>();
+        let exchanges = flat.comm_volume.iter().map(|c| c.exchanges).max().unwrap();
+        assert_eq!(inter(&flat), 12 * exchanges);
+        assert_eq!(inter(&hier), 2 * exchanges);
+        // the node-local traffic moved to intra-node messages instead
+        assert!(hier.comm_volume.iter().all(|c| c.intra_messages > 0));
+        assert!(flat.comm_volume.iter().all(|c| c.intra_messages == 0));
     }
 
     #[test]

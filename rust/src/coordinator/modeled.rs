@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 
-use crate::config::{Mode, Routing, RunConfig};
+use crate::config::{Mode, Routing, RunConfig, Topology};
 use crate::metrics::comm_volume::mean_pair_coverage;
 use crate::metrics::energy::joules_per_synaptic_event;
 use crate::metrics::synevents::SynapticEventCount;
@@ -30,9 +30,26 @@ pub fn run_modeled(cfg: &RunConfig) -> Result<RunResult> {
 pub fn run_modeled_trace(cfg: &RunConfig, trace: &WorkloadTrace) -> Result<RunResult> {
     let platform = platform_by_name(&cfg.platform)?;
     let link = interconnect_by_name(&cfg.interconnect)?;
-    let rpn = platform.node.cores_per_node;
-    let cluster = HeteroCluster::homogeneous(platform.node.core, cfg.procs, rpn);
-    let mut run = ModelRun::new(cluster, AllToAllModel::new(link, rpn));
+    // One ranks-per-node notion per run: the platform's packing
+    // (PlatformModel::ranks_per_node, shared with the energy model's
+    // node occupancy) — unless a nodes:<k> topology declares a
+    // different packing what-if, which then drives contention grouping,
+    // intra/inter link split and leader aggregation alike.
+    let mut run = match cfg.topology {
+        Topology::Flat => ModelRun::new(
+            HeteroCluster::homogeneous(
+                platform.node.core,
+                cfg.procs,
+                platform.ranks_per_node(),
+            ),
+            platform.comm_model(link),
+        ),
+        Topology::Nodes(k) => ModelRun::new(
+            HeteroCluster::homogeneous(platform.node.core, cfg.procs, k),
+            AllToAllModel::new(link, k),
+        )
+        .with_hierarchical(),
+    };
     // Exchange cadence: price one collective per epoch instead of one
     // per step (latency amortized over the min-delay window; payload
     // unchanged apart from run-header framing).
@@ -73,6 +90,7 @@ pub fn run_modeled_trace(cfg: &RunConfig, trace: &WorkloadTrace) -> Result<RunRe
         energy: Some(energy),
         comm_volume: Vec::new(),
         routing: cfg.routing,
+        topology: cfg.topology,
         backend: "model",
         platform: format!("{}+{}", platform.name, link.name),
         trace: None,
@@ -111,6 +129,7 @@ pub fn run_modeled_cluster(
         comm_volume: Vec::new(),
         // Hetero replays keep the paper's baseline exchange.
         routing: Routing::Broadcast,
+        topology: Topology::Flat,
         backend: "model",
         platform: format!("hetero+{}", link.name),
         trace: None,
@@ -199,6 +218,27 @@ mod tests {
             a.wall_s
         );
         assert_eq!(a.total_spikes, b.total_spikes, "same workload either way");
+    }
+
+    #[test]
+    fn hierarchical_topology_relieves_the_latency_wall() {
+        // The tentpole's modeled what-if: at the paper's worst point
+        // (20480N, 256 procs, >90% communication) pricing the
+        // node-leader aggregated exchange must claw back most of the
+        // wall-clock, because N(N-1) aggregated messages replace the
+        // P(P-1) per-pair envelopes.
+        let flat = run_modeled(&cfg("xeon", "ib", 256)).unwrap();
+        let mut hier_cfg = cfg("xeon", "ib", 256);
+        hier_cfg.topology = Topology::Nodes(12); // the xeon node packing
+        let hier = run_modeled(&hier_cfg).unwrap();
+        assert_eq!(hier.topology, Topology::Nodes(12));
+        assert_eq!(flat.total_spikes, hier.total_spikes, "same workload");
+        assert!(
+            hier.wall_s < 0.5 * flat.wall_s,
+            "hier {} vs flat {}",
+            hier.wall_s,
+            flat.wall_s
+        );
     }
 
     #[test]

@@ -2,7 +2,7 @@
 
 use anyhow::Result;
 
-use crate::config::{Mode, Routing, RunConfig};
+use crate::config::{Mode, Routing, RunConfig, Topology};
 use crate::metrics::comm_volume::CommVolume;
 use crate::profiling::components::Components;
 
@@ -43,6 +43,8 @@ pub struct RunResult {
     pub comm_volume: Vec<CommVolume>,
     /// Spike exchange protocol the run used (live) or priced (modeled).
     pub routing: Routing,
+    /// Transport topology the run used (live) or priced (modeled).
+    pub topology: Topology,
     pub backend: &'static str,
     pub platform: String,
     /// Recorded workload trace (live runs with `record_trace` set).
@@ -93,15 +95,25 @@ impl RunResult {
             ),
             None => String::new(),
         };
-        let volume = if self.comm_volume.is_empty() {
-            String::new()
-        } else {
+        let volume = if !self.comm_volume.is_empty() {
+            let inter: u64 = self.comm_volume.iter().map(|c| c.inter_messages).sum();
             format!(
-                "  transport [{}]: recv {:.2} MB/rank, sent {:.2} MB/rank\n",
+                "  transport [{}, {}]: recv {:.2} MB/rank, sent {:.2} MB/rank, \
+                 {inter} inter-node msgs\n",
                 self.routing,
+                self.topology,
                 self.mean_recv_bytes_per_rank() / 1e6,
                 self.mean_sent_bytes_per_rank() / 1e6,
             )
+        } else if self.topology != Topology::Flat {
+            // modeled runs track no per-rank volume, but the topology
+            // what-if still changed the pricing — say so
+            format!(
+                "  transport [{}, {}]: hierarchical exchange priced analytically\n",
+                self.routing, self.topology,
+            )
+        } else {
+            String::new()
         };
         format!(
             "{} run [{}] on {}: {} procs\n\
@@ -161,6 +173,7 @@ mod tests {
             energy: None,
             comm_volume: vec![],
             routing: Routing::Filtered,
+            topology: Topology::Flat,
             backend: "native",
             platform: "host".into(),
             trace: None,

@@ -11,8 +11,7 @@ use anyhow::Result;
 
 use crate::config::NetworkParams;
 use crate::platform::hetero::HeteroCluster;
-use crate::platform::presets::XEON_E5_2630V2;
-use crate::simnet::alltoall_model::AllToAllModel;
+use crate::platform::presets::platform_by_name;
 use crate::simnet::presets::IB;
 use crate::timing::replay::ModelRun;
 use crate::trace::analytic::AnalyticWorkload;
@@ -53,14 +52,16 @@ pub fn run(fast: bool) -> Result<String> {
     let mut series: Vec<(&str, Vec<(f64, f64)>)> = Vec::new();
     let mut cols: Vec<Vec<(f64, f64)>> = vec![Vec::new(); nets.len()];
 
+    // the scaling cluster: one ranks-per-node notion from the preset
+    let xeon = platform_by_name("xeon")?;
     for &p in &procs {
         let mut row = vec![p.to_string()];
         for (i, (_, net)) in nets.iter().enumerate() {
             let trace =
                 AnalyticWorkload::paper_regime(net.clone(), 0x0F16).generate(p, sim_s);
             let run = ModelRun::new(
-                HeteroCluster::homogeneous(XEON_E5_2630V2, p, 12),
-                AllToAllModel::new(IB, 12),
+                HeteroCluster::homogeneous(xeon.node.core, p, xeon.ranks_per_node()),
+                xeon.comm_model(IB),
             )
             .with_peers(PEERS);
             let o = run.replay(&trace);
@@ -95,11 +96,12 @@ mod tests {
     fn large_nets_scale_monotonically() {
         // the figure's message: these nets keep accelerating to 1024 procs
         let net = large_net(2_097_152);
+        let xeon = platform_by_name("xeon").unwrap();
         let wall = |p: u32| {
             let tr = AnalyticWorkload::paper_regime(net.clone(), 1).generate(p, 0.2);
             ModelRun::new(
-                HeteroCluster::homogeneous(XEON_E5_2630V2, p, 12),
-                AllToAllModel::new(IB, 12),
+                HeteroCluster::homogeneous(xeon.node.core, p, xeon.ranks_per_node()),
+                xeon.comm_model(IB),
             )
             .with_peers(PEERS)
             .replay(&tr)

@@ -26,7 +26,12 @@
 //!   steps of spikes into one collective — a spike emitted at step `t`
 //!   cannot act before `t + delay_min_steps`, so the per-message
 //!   latency is amortized over the whole window and the raster is
-//!   again bitwise identical.
+//!   again bitwise identical. A third orthogonal axis, the transport
+//!   *topology* ([`config::Topology`]), groups ranks into virtual
+//!   nodes whose leaders aggregate all inter-node traffic into one
+//!   source-tagged message per node pair (`comm::hier`), collapsing
+//!   the fabric message count from `P(P−1)` to `N(N−1)` per exchange
+//!   — again with a bitwise-identical raster.
 //! * [`simnet`] — interconnect models (InfiniBand, Ethernet, GbE) used by
 //!   the modeled/timing mode.
 //! * [`platform`] — CPU/node models of the paper's three testbeds

@@ -4,6 +4,7 @@
 //! dpsnn run [config.toml] [--neurons N] [--procs P] [--seconds S]
 //!           [--backend native|xla] [--mode live|modeled]
 //!           [--routing filtered|broadcast] [--exchange-every step|min-delay|N]
+//!           [--topology flat|nodes:<k>]
 //!           [--platform NAME] [--interconnect NAME] [--seed X] [--progress]
 //! dpsnn repro <fig1..fig8|table1..table4|all> [--fast]
 //! dpsnn bench-smoke [--neurons N] [--procs P] [--seconds S] [--out F]
@@ -29,9 +30,13 @@ USAGE:
   dpsnn replay <trace.csv> [options]    replay a recorded trace on a
                                         modeled platform (see --record-trace);
                                         pass --delay-min to price an
-                                        --exchange-every cadence what-if
-  dpsnn bench-smoke [options]           tiny live run, filtered vs broadcast
-                                        routing, JSON perf record (CI)
+                                        --exchange-every cadence what-if,
+                                        --topology nodes:<k> for a
+                                        hierarchical-exchange what-if
+  dpsnn bench-smoke [options]           tiny live runs: filtered vs broadcast
+                                        routing, per-step vs min-delay cadence,
+                                        flat vs hierarchical topology; JSON
+                                        perf records (CI)
   dpsnn list-platforms                  show modeled platform presets
   dpsnn raster [options]                live run + population-rate raster
 
@@ -44,6 +49,10 @@ RUN OPTIONS:
   --routing R        filtered | broadcast spike exchange (default filtered)
   --exchange-every C step | min-delay | N — steps per spike exchange
                      (default step; N must not exceed delay_min_steps)
+  --topology T       flat | nodes:<k> — transport topology (default flat);
+                     nodes:<k> groups k consecutive ranks per virtual node
+                     and aggregates inter-node spikes at per-node leaders
+                     (one framed message per node pair)
   --platform NAME    modeled platform preset (default xeon)
   --interconnect IC  ib | eth1g | shm | exanest (default ib)
   --artifacts DIR    AOT artifact directory (default artifacts)
@@ -56,6 +65,10 @@ BENCH-SMOKE OPTIONS:
   --delay-min D      min axonal delay in steps — the epoch the min-delay
                      cadence run batches over (default 8)
   --out F            JSON output path (default BENCH_routing.json)
+  --topology T       hierarchical topology to compare against flat
+                     (default nodes:2; must be nodes:<k>, ideally with
+                     procs > k so the hierarchy spans >= 2 nodes)
+  --topology-out F   topology JSON output path (default BENCH_topology.json)
   --platform NAME    power-model platform preset (default xeon)
 
 REPRO IDS:
@@ -110,6 +123,9 @@ fn build_config(args: &Args) -> Result<RunConfig> {
     }
     if let Some(x) = args.get("exchange-every") {
         cfg.exchange_every = x.parse()?;
+    }
+    if let Some(t) = args.get("topology") {
+        cfg.topology = t.parse()?;
     }
     if let Some(p) = args.get("platform") {
         cfg.platform = p.to_string();
@@ -188,6 +204,9 @@ fn cmd_replay(args: &Args) -> Result<()> {
     cfg.net.delay_max_steps = cfg.net.delay_max_steps.max(cfg.net.delay_min_steps);
     cfg.exchange_every =
         args.get_or("exchange-every", dpsnn::config::ExchangeCadence::Step)?;
+    // Topology what-if: price the node-leader hierarchical exchange
+    // (nodes:<k> also declares the replay's ranks-per-node packing).
+    cfg.topology = args.get_or("topology", dpsnn::config::Topology::Flat)?;
     cfg.platform = args.get_or("platform", "xeon".to_string())?;
     cfg.interconnect = args.get_or("interconnect", "ib".to_string())?;
     cfg.procs = args.get_or("procs", trace.procs)?;
@@ -213,13 +232,15 @@ fn cmd_replay(args: &Args) -> Result<()> {
 }
 
 /// CI perf smoke: run a tiny live simulation under both spike-routing
-/// protocols and both exchange cadences (per-step vs min-delay epoch
-/// batching) and emit a machine-readable `BENCH_routing.json` with
-/// wall-clock, barrier/exchange counts, per-rank transport bytes and
-/// the power model's J/synaptic-event, so successive PRs accumulate a
-/// perf trajectory.
+/// protocols, both exchange cadences (per-step vs min-delay epoch
+/// batching) and both transport topologies (flat vs node-leader
+/// hierarchical) and emit machine-readable `BENCH_routing.json` +
+/// `BENCH_topology.json` with wall-clock, barrier/exchange counts,
+/// per-rank transport bytes/messages (intra/inter split) and the power
+/// model's J/synaptic-event, so successive PRs accumulate a perf
+/// trajectory.
 fn cmd_bench_smoke(args: &Args) -> Result<()> {
-    use dpsnn::config::{ExchangeCadence, Routing};
+    use dpsnn::config::{ExchangeCadence, Routing, Topology};
     use dpsnn::coordinator::RunResult;
     use dpsnn::metrics::expected_exchanges;
 
@@ -228,28 +249,42 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
     let seconds: f64 = args.get_or("seconds", 1.0)?;
     let delay_min: u32 = args.get_or("delay-min", 8u32)?;
     let out = args.get_or("out", "BENCH_routing.json".to_string())?;
+    // default nodes:2 keeps the hierarchy non-degenerate (>= 2 virtual
+    // nodes) at the default 4-proc workload; CI passes nodes:4 with 8
+    // procs for the same reason
+    let topology: Topology = args.get_or("topology", Topology::Nodes(2))?;
+    // reject a non-hierarchical topology up front, before burning
+    // minutes of live benchmark runs on a flag that can't be compared
+    let hier_k = topology.ranks_per_node().ok_or_else(|| {
+        anyhow::anyhow!("bench-smoke --topology must be nodes:<k>, got {topology}")
+    })?;
+    let topo_out = args.get_or("topology-out", "BENCH_topology.json".to_string())?;
     let platform_name = args.get_or("platform", "xeon".to_string())?;
 
     let platform = dpsnn::platform::presets::platform_by_name(&platform_name)?;
     let link = dpsnn::simnet::presets::interconnect_by_name(platform.default_interconnect)?;
-    let ranks_per_node = platform.node.cores_per_node;
-    let comm_model = dpsnn::simnet::AllToAllModel::new(link, ranks_per_node);
+    // one ranks-per-node notion: the platform's (asserted against the
+    // power model's node occupancy in platform::presets tests)
+    let comm_model = platform.comm_model(link);
     let power = dpsnn::power::PowerModel::new(platform, link);
 
-    let run_one = |routing: Routing, cadence: ExchangeCadence| -> Result<RunResult> {
-        let mut cfg = RunConfig::default();
-        cfg.net = NetworkParams::tiny(neurons);
-        // One network for every run: the min-delay cadence batches over
-        // this window, and the per-step runs simulate the same physics.
-        cfg.net.delay_min_steps = delay_min.clamp(1, cfg.net.delay_max_steps);
-        cfg.procs = procs;
-        cfg.sim_seconds = seconds;
-        cfg.routing = routing;
-        cfg.exchange_every = cadence;
-        cfg.validate()?;
-        eprintln!("[bench-smoke] {routing} routing, {cadence} cadence...");
-        coordinator::run(&cfg)
-    };
+    let run_one =
+        |routing: Routing, cadence: ExchangeCadence, topo: Topology| -> Result<RunResult> {
+            let mut cfg = RunConfig::default();
+            cfg.net = NetworkParams::tiny(neurons);
+            // One network for every run: the min-delay cadence batches
+            // over this window, and the per-step runs simulate the same
+            // physics.
+            cfg.net.delay_min_steps = delay_min.clamp(1, cfg.net.delay_max_steps);
+            cfg.procs = procs;
+            cfg.sim_seconds = seconds;
+            cfg.routing = routing;
+            cfg.exchange_every = cadence;
+            cfg.topology = topo;
+            cfg.validate()?;
+            eprintln!("[bench-smoke] {routing} routing, {cadence} cadence, {topo} topology...");
+            coordinator::run(&cfg)
+        };
 
     let section = |r: &RunResult| -> String {
         let utilization = r.components.fractions().0;
@@ -287,6 +322,8 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
                 "      \"bytes_sent_per_rank\": {},\n",
                 "      \"bytes_recv_per_rank\": {},\n",
                 "      \"messages_per_rank\": {},\n",
+                "      \"intra_messages_per_rank\": {},\n",
+                "      \"inter_messages_per_rank\": {},\n",
                 "      \"exchanges_per_rank\": {},\n",
                 "      \"barriers_per_rank\": {},\n",
                 "      \"modeled_exchange_s_per_step\": {:.9},\n",
@@ -301,6 +338,8 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
             u64s(|c| c.bytes_sent),
             u64s(|c| c.bytes_recv),
             u64s(|c| c.messages),
+            u64s(|c| c.intra_messages),
+            u64s(|c| c.inter_messages),
             u64s(|c| c.exchanges),
             // one barrier per exchange, by protocol
             u64s(|c| c.exchanges),
@@ -310,9 +349,10 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
         )
     };
 
-    let filtered = run_one(Routing::Filtered, ExchangeCadence::Step)?;
-    let broadcast = run_one(Routing::Broadcast, ExchangeCadence::Step)?;
-    let batched = run_one(Routing::Filtered, ExchangeCadence::MinDelay)?;
+    let filtered = run_one(Routing::Filtered, ExchangeCadence::Step, Topology::Flat)?;
+    let broadcast = run_one(Routing::Broadcast, ExchangeCadence::Step, Topology::Flat)?;
+    let batched = run_one(Routing::Filtered, ExchangeCadence::MinDelay, Topology::Flat)?;
+    let hier = run_one(Routing::Filtered, ExchangeCadence::Step, topology)?;
 
     let recv = |r: &RunResult| -> u64 {
         r.comm_volume.iter().map(|c| c.bytes_recv).sum()
@@ -380,11 +420,75 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
         exchange_reduction,
     );
     std::fs::write(&out, &json)?;
+
+    // Topology comparison: the flat per-step filtered run doubles as the
+    // baseline; `hier` ran the same workload over node-leader
+    // aggregation. Raster identical, inter-node messages collapsed, and
+    // the live counts must equal the interconnect model's closed form.
+    anyhow::ensure!(
+        hier.pop_counts == filtered.pop_counts,
+        "transport topologies must produce identical rasters"
+    );
+    let inter = |r: &RunResult| -> u64 {
+        r.comm_volume.iter().map(|c| c.inter_messages).sum()
+    };
+    let (inter_flat, inter_hier) = (inter(&filtered), inter(&hier));
+    anyhow::ensure!(
+        inter_hier * 2 <= inter_flat,
+        "{topology} must move >= 2x fewer inter-node messages \
+         ({inter_hier} vs {inter_flat})"
+    );
+    let hier_model = dpsnn::simnet::AllToAllModel::new(link, hier_k);
+    let x_hier = exchanges(&hier);
+    anyhow::ensure!(
+        inter_hier == hier_model.hierarchical_inter_messages(procs) * x_hier,
+        "live inter-node messages ({inter_hier}) must match the model's \
+         closed form exactly"
+    );
+    // Price flat vs hierarchical on the same node packing at the run's
+    // mean per-pair payload.
+    let pairs = (procs as u64 * (procs as u64).saturating_sub(1)).max(1);
+    let sent_total: u64 = filtered.comm_volume.iter().map(|c| c.bytes_sent).sum();
+    let mean_pair_bytes = (sent_total / (pairs * steps.max(1) as u64)).max(1);
+    let modeled_flat_s = hier_model.exchange_time(procs, mean_pair_bytes).total();
+    let modeled_hier_s = hier_model.exchange_time_hierarchical(procs, mean_pair_bytes).total();
+    let topo_json = format!(
+        concat!(
+            "{{\n",
+            "  \"benchmark\": \"topology_smoke\",\n",
+            "  \"neurons\": {},\n",
+            "  \"procs\": {},\n",
+            "  \"sim_seconds\": {},\n",
+            "  \"topology\": \"{}\",\n",
+            "  \"power_platform\": \"{}\",\n",
+            "  \"sections\": {{\n",
+            "    \"flat\": {},\n",
+            "    \"hier\": {}\n",
+            "  }},\n",
+            "  \"inter_messages_total\": {{ \"flat\": {}, \"hier\": {} }},\n",
+            "  \"modeled_exchange_s_per_step\": {{ \"flat\": {:.9}, \"hier\": {:.9} }}\n",
+            "}}\n"
+        ),
+        neurons,
+        procs,
+        seconds,
+        topology,
+        platform_name,
+        section(&filtered),
+        section(&hier),
+        inter_flat,
+        inter_hier,
+        modeled_flat_s,
+        modeled_hier_s,
+    );
+    std::fs::write(&topo_out, &topo_json)?;
+
     println!("{}", filtered.summary());
     println!(
         "bench-smoke: recv bytes/run {recv_f} (filtered) vs {recv_b} (broadcast), \
          -{:.1}%; exchanges/run {x_step} (per-step) vs {x_batched} (min-delay), \
-         {exchange_reduction:.1}x fewer; wrote {out}",
+         {exchange_reduction:.1}x fewer; inter-node msgs/run {inter_flat} (flat) \
+         vs {inter_hier} ({topology}); wrote {out} + {topo_out}",
         reduction * 100.0
     );
     Ok(())

@@ -17,8 +17,22 @@ pub struct CommVolume {
     /// Payload bytes delivered to this rank, loopback block included
     /// (see [`ExchangeStats`]).
     pub bytes_recv: u64,
-    /// Network messages sent (envelopes included).
+    /// Messages sent (envelopes included; `intra_messages +
+    /// inter_messages`, see [`ExchangeStats`]).
     pub messages: u64,
+    /// Messages that stayed inside the rank's (virtual) node: direct
+    /// posts to same-node peers plus the gather message to the node
+    /// leader. Zero under the flat topology, which has no node notion.
+    pub intra_messages: u64,
+    /// Messages that crossed nodes: every peer message under the flat
+    /// topology, only the leaders' aggregated node-pair messages under
+    /// `--topology nodes:<k>` — the count the hierarchical transport
+    /// collapses from `P(P−1)` to `N(N−1)` per exchange.
+    pub inter_messages: u64,
+    /// Bytes carried by `intra_messages`.
+    pub intra_bytes: u64,
+    /// Bytes carried by `inter_messages`.
+    pub inter_bytes: u64,
     /// Transport exchanges (all-to-all collectives) this rank took part
     /// in: one per step under per-step cadence, one per delay epoch
     /// under epoch batching. Each exchange is followed by exactly one
@@ -35,6 +49,10 @@ impl CommVolume {
         self.bytes_sent += stats.bytes_sent;
         self.bytes_recv += stats.bytes_recv;
         self.messages += stats.messages;
+        self.intra_messages += stats.intra_messages;
+        self.inter_messages += stats.inter_messages;
+        self.intra_bytes += stats.intra_bytes;
+        self.inter_bytes += stats.inter_bytes;
         self.exchanges += 1;
         if self.per_dst_bytes.len() < stats.per_dst_bytes.len() {
             self.per_dst_bytes.resize(stats.per_dst_bytes.len(), 0);
@@ -111,17 +129,29 @@ mod tests {
             bytes_sent: 10,
             bytes_recv: 14,
             messages: 3,
+            intra_messages: 2,
+            inter_messages: 1,
+            intra_bytes: 6,
+            inter_bytes: 4,
             per_dst_bytes: vec![4, 0, 6, 4],
         });
         v.observe(&ExchangeStats {
             bytes_sent: 2,
             bytes_recv: 2,
             messages: 3,
+            intra_messages: 1,
+            inter_messages: 2,
+            intra_bytes: 2,
+            inter_bytes: 0,
             per_dst_bytes: vec![0, 2, 0, 0],
         });
         assert_eq!(v.bytes_sent, 12);
         assert_eq!(v.bytes_recv, 16);
         assert_eq!(v.messages, 6);
+        assert_eq!(v.intra_messages, 3);
+        assert_eq!(v.inter_messages, 3);
+        assert_eq!(v.intra_bytes, 8);
+        assert_eq!(v.inter_bytes, 4);
         assert_eq!(v.exchanges, 2, "one exchange per observe()");
         assert_eq!(v.per_dst_bytes, vec![4, 2, 6, 4]);
     }

@@ -5,6 +5,8 @@ use anyhow::{bail, Result};
 pub use super::cpu::WESTMERE;
 use super::cpu::CoreModel;
 use super::node::NodeModel;
+use crate::simnet::alltoall_model::AllToAllModel;
+use crate::simnet::link::LinkModel;
 
 /// A complete modeled platform: node type + whole-setup power baseline.
 #[derive(Debug, Clone)]
@@ -20,6 +22,25 @@ pub struct PlatformModel {
     /// cards draw their full figure; the SoC boards' on-chip GbE MACs
     /// draw a small fraction of it.
     pub nic_power_scale: f64,
+}
+
+impl PlatformModel {
+    /// *The* ranks-per-node notion for this platform: its schedulable
+    /// cores per node. Both the energy model's node occupancy
+    /// ([`NodeModel::nodes_for`]) and the interconnect model's packing
+    /// ([`AllToAllModel::ranks_per_node`]) derive from this one field,
+    /// so modeled energy and modeled communication time cannot silently
+    /// disagree about how ranks fill nodes.
+    pub fn ranks_per_node(&self) -> u32 {
+        self.node.cores_per_node
+    }
+
+    /// Interconnect model packed with this platform's ranks-per-node —
+    /// the sanctioned way to build an [`AllToAllModel`] for a named
+    /// platform (preset agreement is asserted in this module's tests).
+    pub fn comm_model(&self, link: LinkModel) -> AllToAllModel {
+        AllToAllModel::new(link, self.ranks_per_node())
+    }
 }
 
 /// Xeon E5-2630 v2 (Ivy Bridge, 2.6 GHz) — the scaling cluster of
@@ -160,6 +181,28 @@ mod tests {
             platform_by_name(n).unwrap();
         }
         assert!(platform_by_name("sparc").is_err());
+    }
+
+    #[test]
+    fn comm_model_agrees_with_node_packing() {
+        // The unification contract: one ranks-per-node per platform —
+        // the interconnect model's packing and the power model's node
+        // occupancy must agree for every preset.
+        for name in all_names() {
+            let p = platform_by_name(name).unwrap();
+            let link = crate::simnet::presets::interconnect_by_name(p.default_interconnect)
+                .unwrap();
+            let m = p.comm_model(link);
+            assert_eq!(m.ranks_per_node, p.node.cores_per_node, "{name}");
+            assert_eq!(m.ranks_per_node, p.ranks_per_node(), "{name}");
+            for procs in [1u32, 7, 16, 33, 256] {
+                assert_eq!(
+                    m.nodes(procs),
+                    p.node.nodes_for(procs),
+                    "{name}: node counts diverge at {procs} procs"
+                );
+            }
+        }
     }
 
     #[test]

@@ -102,6 +102,75 @@ impl AllToAllModel {
         self.exchange_time(p, bytes_per_step_msg * e as u64 + framing)
     }
 
+    /// Time for one **hierarchical** (node-leader aggregated) exchange —
+    /// the live [`crate::comm::hier::HierCluster`] protocol priced
+    /// end-to-end, assuming even index-order packing of
+    /// `ranks_per_node` ranks per node:
+    ///
+    /// 1. **direct intra-node posts** — k−1 shared-memory messages of
+    ///    `bytes_per_msg` per rank;
+    /// 2. **gather** — each member's off-node payload
+    ///    (`(P−k)·bytes_per_msg` plus 8-byte per-destination frames)
+    ///    reaches its leader as ONE shared-memory message;
+    /// 3. **inter-node exchange** — each leader sends ONE aggregated
+    ///    message per other node carrying the node pair's `k × k`
+    ///    sub-buffers (12-byte source-tagged frames): `N(N−1)` fabric
+    ///    messages per exchange instead of the flat `P(P−1)`;
+    /// 4. **scatter** — the incoming aggregates fan back out to the
+    ///    members over shared memory, mirroring the gather.
+    ///
+    /// The software term is the *leader's* lap (the busiest rank —
+    /// non-leaders only pay 1+2). Inter-node payload bytes are conserved
+    /// versus the flat exchange (`N(N−1)·k² = P(P−k)` pair payloads, plus
+    /// framing): hierarchy trades per-message latency and fabric
+    /// occupancy, not bandwidth. Message counts come from the same
+    /// closed form the live transport satisfies exactly
+    /// ([`Self::hierarchical_messages`]).
+    pub fn exchange_time_hierarchical(&self, p: u32, bytes_per_msg: u64) -> CommBreakdown {
+        if p <= 1 {
+            return CommBreakdown::default();
+        }
+        let n = self.nodes(p);
+        if n == 1 {
+            // one node: the whole exchange is the node-local flat path
+            return self.exchange_time(p, bytes_per_msg);
+        }
+        let k = self.ranks_per_node.min(p) as u64;
+        let (remote, local) = self.peers(p);
+        let b = bytes_per_msg;
+        let gather_bytes = remote as u64 * (b + crate::comm::hier::GATHER_FRAME_BYTES as u64);
+        let pair_bytes = k * k * (b + crate::comm::hier::HIER_FRAME_BYTES as u64);
+        // leader's software lap: direct posts + (k-1) gather receives +
+        // (N-1) aggregated sends + (k-1) scatter sends
+        let software = local as f64 * self.shm.message_time(b)
+            + 2.0 * local as f64 * self.shm.message_time(gather_bytes)
+            + (n - 1) as f64 * self.net.message_time(pair_bytes);
+        let internode_msgs = n as u64 * (n as u64 - 1);
+        let internode_bytes = internode_msgs * pair_bytes;
+        let bisection_bps = self.net.beta_bps * (n as f64 / 2.0).max(1.0);
+        let fabric = internode_msgs as f64 * self.net.fabric_msg_cost_s
+            + internode_bytes as f64 / bisection_bps;
+        CommBreakdown { software, fabric }
+    }
+
+    /// Total messages of one hierarchical exchange (direct intra-node +
+    /// gathers + aggregated inter-node), ragged last node included —
+    /// delegates to the closed form the live transport's accounting
+    /// matches exactly
+    /// ([`crate::comm::topology::NodeMap::total_messages_per_exchange`]).
+    pub fn hierarchical_messages(&self, p: u32) -> u64 {
+        crate::comm::topology::NodeMap::new(p.max(1), self.ranks_per_node)
+            .total_messages_per_exchange()
+    }
+
+    /// Inter-node (fabric) messages of one hierarchical exchange:
+    /// `N(N−1)` aggregated node-pair messages, versus the flat
+    /// exchange's `P(P−1)` ([`Self::total_messages`]).
+    pub fn hierarchical_inter_messages(&self, p: u32) -> u64 {
+        crate::comm::topology::NodeMap::new(p.max(1), self.ranks_per_node)
+            .inter_messages_per_exchange()
+    }
+
     /// Exchange where each (src, dst) pair is active with probability
     /// `coverage` — the destination-filtered routing of
     /// [`crate::comm::routing`], where a pair only puts bytes on the
@@ -212,6 +281,19 @@ impl AllToAllModel {
     /// of the number of processes").
     pub fn total_messages(&self, p: u32) -> u64 {
         p as u64 * (p as u64 - 1)
+    }
+
+    /// Inter-node messages of one *flat* exchange in the model's view:
+    /// only off-node pairs cross the fabric, `P·(P−k)` for `k` ranks per
+    /// node. (The live in-process flat transport is topology-blind and
+    /// reports all `P(P−1)` peer messages as inter-node; the model
+    /// credits it the shared-memory pairs.)
+    pub fn flat_inter_messages(&self, p: u32) -> u64 {
+        if p <= 1 {
+            return 0;
+        }
+        let k = self.ranks_per_node.min(p) as u64;
+        p as u64 * (p as u64 - k)
     }
 }
 
@@ -381,6 +463,61 @@ mod tests {
         assert!(t.total() < m.exchange_time_matrix(&full).total() / 4.0);
         // degenerate: single rank
         assert_eq!(m.exchange_time_matrix(&[vec![0]]).total(), 0.0);
+    }
+
+    #[test]
+    fn hierarchical_exchange_beats_flat_at_scale() {
+        // The tentpole claim, priced: near real time the flat exchange
+        // pays P(P-1) per-message costs; node-leader aggregation pays
+        // N(N-1) bigger ones. At spike-sized payloads the win is large.
+        let m = AllToAllModel::new(IB, 16);
+        for p in [64u32, 256] {
+            let flat = m.exchange_time(p, 25).total();
+            let hier = m.exchange_time_hierarchical(p, 25).total();
+            assert!(
+                hier < flat / 4.0,
+                "p={p}: hier {hier} vs flat {flat}"
+            );
+        }
+    }
+
+    #[test]
+    fn hierarchical_degenerates_inside_one_node() {
+        let m = AllToAllModel::new(IB, 16);
+        assert_eq!(m.exchange_time_hierarchical(1, 100).total(), 0.0);
+        // p <= ranks_per_node: no leaders, no fabric — the flat
+        // node-local exchange
+        assert_eq!(m.exchange_time_hierarchical(8, 100), m.exchange_time(8, 100));
+        assert_eq!(m.exchange_time_hierarchical(8, 100).fabric, 0.0);
+    }
+
+    #[test]
+    fn hierarchical_conserves_internode_payload() {
+        // Aggregation trades message count, not bandwidth: at
+        // megabyte payloads both regimes are serialization-bound on the
+        // same inter-node byte volume (modulo the 12 B frames), so the
+        // fabric terms converge.
+        let m = AllToAllModel::new(IB, 16);
+        let flat = m.exchange_time(64, 1_000_000).fabric;
+        let hier = m.exchange_time_hierarchical(64, 1_000_000).fabric;
+        let ratio = hier / flat;
+        assert!((0.95..1.05).contains(&ratio), "fabric ratio {ratio}");
+    }
+
+    #[test]
+    fn hierarchical_message_counts_match_topology_closed_form() {
+        let m = AllToAllModel::new(IB, 4);
+        // 8 ranks on 2 nodes of 4: 2*4*3 direct + 2*3 gathers + 2 inter
+        assert_eq!(m.hierarchical_messages(8), 24 + 6 + 2);
+        assert_eq!(m.hierarchical_inter_messages(8), 2);
+        // flat comparison: the P(P-1) cliff
+        assert_eq!(m.total_messages(8), 56);
+        // one node: no gathers, no inter
+        assert_eq!(m.hierarchical_messages(4), 12);
+        assert_eq!(m.hierarchical_inter_messages(4), 0);
+        // one rank per node: inter equals the flat count
+        let m1 = AllToAllModel::new(IB, 1);
+        assert_eq!(m1.hierarchical_inter_messages(6), 30);
     }
 
     #[test]

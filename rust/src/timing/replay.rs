@@ -58,6 +58,16 @@ pub struct ModelRun {
     /// `exchanges_per_second` lever: `1000 / (dt_ms * steps_per_exchange)`
     /// collectives per simulated second instead of the paper's 1000.
     pub steps_per_exchange: u32,
+    /// When set, each collective is priced as the node-leader
+    /// hierarchical exchange
+    /// ([`AllToAllModel::exchange_time_hierarchical`]): `N(N−1)`
+    /// aggregated fabric messages per exchange instead of the flat
+    /// `P(P−1)`, with node packing taken from the comm model's
+    /// `ranks_per_node`. Composes with `filter_coverage` (filtering
+    /// thins the aggregated payload, not the node-pair message count)
+    /// and is ignored when `peers` is set — the neighbor model already
+    /// restricts the traffic matrix.
+    pub hierarchical: bool,
 }
 
 /// Replay result.
@@ -75,6 +85,13 @@ pub struct ModeledOutcome {
     /// per step at per-step cadence, `ceil(steps / steps_per_exchange)`
     /// under epoch batching.
     pub exchanges: u64,
+    /// Messages the run put on the inter-node fabric, summed over
+    /// exchanges: `P·(P−k)` per flat exchange (only off-node pairs cross
+    /// the fabric in the model's view; coverage-thinned under filtered
+    /// routing), `N(N−1)` per hierarchical exchange — aggregated
+    /// node-pair envelopes are NOT thinned by filtering, which only
+    /// shrinks their payload.
+    pub inter_messages: u64,
 }
 
 impl ModeledOutcome {
@@ -96,6 +113,7 @@ impl ModelRun {
             peers: None,
             filter_coverage: None,
             steps_per_exchange: 1,
+            hierarchical: false,
         }
     }
 
@@ -115,6 +133,13 @@ impl ModelRun {
     /// Epoch-batched variant: one collective per `steps` network steps.
     pub fn with_exchange_every(mut self, steps: u32) -> Self {
         self.steps_per_exchange = steps.max(1);
+        self
+    }
+
+    /// Hierarchical-topology variant: price each collective as the
+    /// node-leader aggregated exchange (`--topology nodes:<k>`).
+    pub fn with_hierarchical(mut self) -> Self {
+        self.hierarchical = true;
         self
     }
 
@@ -151,11 +176,26 @@ impl ModelRun {
 
         let cont = self.contention(p);
         let epoch = self.steps_per_exchange.max(1);
+        // Fabric messages one collective costs under this run's topology
+        // and routing (see ModeledOutcome::inter_messages).
+        let inter_per_exchange: u64 = if p <= 1 {
+            0
+        } else if self.hierarchical && self.peers.is_none() {
+            self.comm.hierarchical_inter_messages(p)
+        } else {
+            let base = self.comm.flat_inter_messages(p);
+            match (self.peers, self.filter_coverage) {
+                (Some(k), _) => base.min(p as u64 * k.min(p - 1) as u64),
+                (None, Some(q)) => (base as f64 * q).round() as u64,
+                (None, None) => base,
+            }
+        };
         let mut comp_s = 0.0;
         let mut comm_s = 0.0;
         let mut barrier_s = 0.0;
         let mut total_syn_events = 0u64;
         let mut exchanges = 0u64;
+        let mut inter_messages = 0u64;
         // Payload accumulated since the last collective (mean per-pair
         // bytes) and the number of steps it spans.
         let mut epoch_bytes = 0.0f64;
@@ -204,10 +244,17 @@ impl ModelRun {
             epoch_len += 1;
             if epoch_len == epoch || step + 1 == trace.steps() {
                 let bytes = epoch_bytes.round() as u64 + epoch_framing_bytes(epoch, epoch_len);
-                let exch = match (self.peers, self.filter_coverage) {
-                    (Some(k), _) => self.comm.exchange_time_neighbors(p, bytes, k),
-                    (None, Some(q)) => self.comm.exchange_time_filtered(p, bytes, q),
-                    (None, None) => self.comm.exchange_time(p, bytes),
+                let exch = match (self.peers, self.hierarchical, self.filter_coverage) {
+                    (Some(k), _, _) => self.comm.exchange_time_neighbors(p, bytes, k),
+                    (None, true, q) => {
+                        // topology nodes:<k>: filtering thins the
+                        // aggregated payload; the N(N-1) node-pair
+                        // message count is unchanged
+                        let b = (bytes as f64 * q.unwrap_or(1.0)).round() as u64;
+                        self.comm.exchange_time_hierarchical(p, b)
+                    }
+                    (None, false, Some(q)) => self.comm.exchange_time_filtered(p, bytes, q),
+                    (None, false, None) => self.comm.exchange_time(p, bytes),
                 };
                 let comm = exch.total();
                 comm_s += comm;
@@ -215,6 +262,7 @@ impl ModelRun {
                 // collective, once per exchange.
                 barrier_s += self.comm.barrier_time(p) + 0.05 * comm;
                 exchanges += 1;
+                inter_messages += inter_per_exchange;
                 epoch_bytes = 0.0;
                 epoch_len = 0;
             }
@@ -235,6 +283,7 @@ impl ModelRun {
             total_syn_events,
             mean_rate_hz: trace.mean_rate_hz(),
             exchanges,
+            inter_messages,
         }
     }
 }
@@ -375,6 +424,31 @@ mod tests {
             per_step.components.communication
         );
         assert!(batched.wall_s < per_step.wall_s);
+    }
+
+    #[test]
+    fn hierarchical_topology_collapses_the_message_count() {
+        let w = AnalyticWorkload::paper_regime(NetworkParams::paper_20480(), 5);
+        let trace = w.generate(256, 1.0);
+        let base = ModelRun::new(
+            HeteroCluster::homogeneous(XEON_E5_2630V2, 256, 16),
+            AllToAllModel::new(IB, 16),
+        );
+        let flat = base.clone().replay(&trace);
+        let hier = base.with_hierarchical().replay(&trace);
+        // identical physics, fewer fabric messages, less wall-clock
+        assert_eq!(flat.total_spikes, hier.total_spikes);
+        assert_eq!(flat.exchanges, hier.exchanges);
+        // flat: 256*(256-16) off-node pairs; hier: 16*15 node pairs
+        assert_eq!(flat.inter_messages, 256 * 240 * flat.exchanges);
+        assert_eq!(hier.inter_messages, 16 * 15 * hier.exchanges);
+        assert!(
+            hier.components.communication < 0.5 * flat.components.communication,
+            "hier {} vs flat {}",
+            hier.components.communication,
+            flat.components.communication
+        );
+        assert!(hier.wall_s < flat.wall_s);
     }
 
     #[test]

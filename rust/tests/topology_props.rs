@@ -1,0 +1,141 @@
+//! Topology acceptance tests: the hierarchical node-leader transport
+//! (`--topology nodes:<k>`) must produce the bitwise-identical spike
+//! raster to the flat transport across process counts, routing
+//! protocols and exchange cadences, while collapsing the inter-node
+//! message count from the flat `P(P−1)` to `N(N−1)` per exchange — and
+//! the live accounting must equal the interconnect model's closed-form
+//! prediction *exactly*.
+
+use dpsnn::comm::NodeMap;
+use dpsnn::config::{ExchangeCadence, Mode, NetworkParams, Routing, RunConfig, Topology};
+use dpsnn::coordinator::{self, RunResult};
+use dpsnn::metrics::expected_exchanges;
+use dpsnn::simnet::presets::IB;
+use dpsnn::simnet::AllToAllModel;
+
+fn cfg(procs: u32, routing: Routing, cadence: ExchangeCadence, topology: Topology) -> RunConfig {
+    let mut c = RunConfig::default();
+    c.net = NetworkParams::tiny(512);
+    c.net.syn_per_neuron = 24; // sparse enough for pair filtering at P=8
+    c.net.delay_min_steps = 4;
+    c.procs = procs;
+    c.sim_seconds = 0.15;
+    c.seed = 2026;
+    c.mode = Mode::Live;
+    c.routing = routing;
+    c.exchange_every = cadence;
+    c.topology = topology;
+    c
+}
+
+/// Exchange count of the busiest rank (all ranks tie on a synchronous
+/// collective, but take the max to be explicit).
+fn exchanges(r: &RunResult) -> u64 {
+    r.comm_volume.iter().map(|c| c.exchanges).max().unwrap_or(0)
+}
+
+fn inter_messages(r: &RunResult) -> u64 {
+    r.comm_volume.iter().map(|c| c.inter_messages).sum()
+}
+
+fn total_messages(r: &RunResult) -> u64 {
+    r.comm_volume.iter().map(|c| c.messages).sum()
+}
+
+#[test]
+fn hierarchical_raster_is_bitwise_identical() {
+    // topology ∈ {nodes:2, nodes:4} × routing × cadence × P ∈ {1,2,4,8}:
+    // every combination must match the flat single-rank per-step
+    // reference raster bitwise (the same bar cadence_props sets).
+    for &routing in &[Routing::Broadcast, Routing::Filtered] {
+        let flat = cfg(1, routing, ExchangeCadence::Step, Topology::Flat);
+        let reference = coordinator::run(&flat).unwrap();
+        assert!(reference.total_spikes > 0, "network must be active");
+        let steps = reference.pop_counts.len() as u32;
+        for &cadence in &[ExchangeCadence::Step, ExchangeCadence::MinDelay] {
+            for &procs in &[1u32, 2, 4, 8] {
+                for &k in &[2u32, 4] {
+                    let run =
+                        coordinator::run(&cfg(procs, routing, cadence, Topology::Nodes(k)))
+                            .unwrap();
+                    let tag = format!("P={procs} routing={routing} cadence={cadence} nodes:{k}");
+                    assert_eq!(run.pop_counts, reference.pop_counts, "raster diverged: {tag}");
+                    assert_eq!(run.total_spikes, reference.total_spikes, "{tag}");
+                    assert_eq!(run.total_syn_events, reference.total_syn_events, "{tag}");
+                    assert_eq!(run.total_ext_events, reference.total_ext_events, "{tag}");
+                    let epoch = cadence.epoch_steps(4);
+                    assert_eq!(exchanges(&run), expected_exchanges(steps, epoch), "{tag}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn live_message_accounting_equals_closed_form() {
+    // For every (P, ranks_per_node) — even, ragged, solo-leader — the
+    // per-exchange message total measured on the live transport must
+    // equal NodeMap's closed form, and the inter-node count must equal
+    // the interconnect model's prediction exactly (the acceptance bar).
+    for &(procs, k) in &[(2u32, 1u32), (4, 2), (6, 4), (8, 3), (8, 4)] {
+        let c = cfg(procs, Routing::Broadcast, ExchangeCadence::Step, Topology::Nodes(k));
+        let run = coordinator::run(&c).unwrap();
+        let x = exchanges(&run);
+        assert!(x > 0);
+        let map = NodeMap::new(procs, k);
+        let total = total_messages(&run);
+        assert_eq!(total, map.total_messages_per_exchange() * x, "P={procs} nodes:{k}");
+        let model = AllToAllModel::new(IB, k);
+        assert_eq!(total, model.hierarchical_messages(procs) * x, "P={procs} nodes:{k}");
+        assert_eq!(
+            inter_messages(&run),
+            model.hierarchical_inter_messages(procs) * x,
+            "P={procs} nodes:{k}: inter-node count must match the model"
+        );
+        // every rank's split is consistent
+        for v in &run.comm_volume {
+            assert_eq!(v.messages, v.intra_messages + v.inter_messages);
+        }
+    }
+}
+
+#[test]
+fn acceptance_nodes4_at_p8_cuts_inter_node_messages() {
+    // The PR's acceptance assert: nodes:4 at P=8 must move at least 2×
+    // fewer inter-node messages than flat (it actually moves 28× fewer:
+    // 8·7 = 56 pair envelopes collapse to 2·1 = 2 aggregated messages
+    // per exchange), with the bitwise-identical raster.
+    let fc = cfg(8, Routing::Filtered, ExchangeCadence::Step, Topology::Flat);
+    let hc = cfg(8, Routing::Filtered, ExchangeCadence::Step, Topology::Nodes(4));
+    let flat = coordinator::run(&fc).unwrap();
+    let hier = coordinator::run(&hc).unwrap();
+    assert!(flat.total_spikes > 0, "network must be active");
+    assert_eq!(flat.pop_counts, hier.pop_counts, "topology changed the raster");
+    assert_eq!(flat.total_syn_events, hier.total_syn_events);
+
+    let x = exchanges(&flat);
+    assert_eq!(x, exchanges(&hier), "same cadence, same collectives");
+    let (fi, hi) = (inter_messages(&flat), inter_messages(&hier));
+    assert!(hi * 2 <= fi, "nodes:4 must move >= 2x fewer inter-node messages ({hi} vs {fi})");
+    // and exactly: flat puts all P(P-1) pair envelopes on the fabric,
+    // the hierarchy N(N-1) aggregated messages
+    assert_eq!(fi, 8 * 7 * x);
+    assert_eq!(hi, 2 * x);
+}
+
+#[test]
+fn topology_composes_with_min_delay_batching() {
+    // nodes:4 under min-delay cadence: exchanges shrink by the epoch
+    // AND each exchange still costs only N(N-1) fabric messages — the
+    // two axes multiply.
+    let pc = cfg(8, Routing::Filtered, ExchangeCadence::Step, Topology::Nodes(4));
+    let bc = cfg(8, Routing::Filtered, ExchangeCadence::MinDelay, Topology::Nodes(4));
+    let per_step = coordinator::run(&pc).unwrap();
+    let batched = coordinator::run(&bc).unwrap();
+    assert_eq!(per_step.pop_counts, batched.pop_counts);
+    let steps = per_step.pop_counts.len() as u32;
+    assert_eq!(exchanges(&per_step), steps as u64);
+    assert_eq!(exchanges(&batched), expected_exchanges(steps, 4));
+    assert_eq!(inter_messages(&per_step), 2 * steps as u64);
+    assert_eq!(inter_messages(&batched), 2 * expected_exchanges(steps, 4));
+}
