@@ -11,8 +11,9 @@
 
 use dpsnn::config::{Mode, NetworkParams, RunConfig};
 use dpsnn::coordinator;
+use dpsnn::platform::presets::platform_by_name;
 use dpsnn::simnet::presets::IB;
-use dpsnn::simnet::AllToAllModel;
+use dpsnn::simnet::{AllToAllModel, LinkModel};
 use dpsnn::util::table::Table;
 
 /// ~2 spikes/rank/step near the real-time point: the latency-dominated
@@ -27,6 +28,27 @@ fn hier_crossover(model: &AllToAllModel) -> Option<u32> {
         let flat = model.exchange_time(p, SPIKE_MSG_BYTES).total();
         let hier = model.exchange_time_hierarchical(p, SPIKE_MSG_BYTES).total();
         if hier < flat {
+            return Some(p);
+        }
+        p *= 2;
+    }
+    None
+}
+
+/// Smallest process count (doubling sweep) where the L-level tree
+/// exchange over per-tier `links` beats the flat one.
+fn tree_crossover(
+    model: &AllToAllModel,
+    shape: &[u32],
+    links: &[LinkModel],
+) -> Option<u32> {
+    let mut p = 2u32;
+    while p <= 1024 {
+        let flat = model.exchange_time(p, SPIKE_MSG_BYTES).total();
+        let tree = model
+            .exchange_time_tree(p, SPIKE_MSG_BYTES, shape, links)
+            .total();
+        if tree < flat {
             return Some(p);
         }
         p *= 2;
@@ -136,9 +158,100 @@ fn main() -> anyhow::Result<()> {
             ),
         }
     }
+
+    // Multi-tier what-if: sweep board → chassis → rack shapes with the
+    // xeon platform's per-tier link derating (each tier above the
+    // board link costs more latency and less bandwidth) and predict
+    // the crossover P where each tree starts beating the flat
+    // exchange — and where a DEEPER hierarchy starts beating a
+    // shallower one.
+    let platform = platform_by_name("xeon")?;
+    let shapes: &[&[u32]] = &[&[16], &[16, 4], &[4, 4, 4]];
+    let mut tiers = Table::new(
+        "flat/tree exchange-time ratio (IB base + per-tier derating, 25 B/pair/step)",
+        &["procs", "tree:16", "tree:16,4", "tree:4,4,4"],
+    );
+    for procs in [8u32, 16, 32, 64, 128, 256, 512, 1024] {
+        let mut row = vec![procs.to_string()];
+        for shape in shapes {
+            let m = AllToAllModel::new(IB, shape[0]);
+            let links = platform.tree_links(IB, shape.len());
+            let flat = m.exchange_time(procs, SPIKE_MSG_BYTES).total();
+            let tree = m
+                .exchange_time_tree(procs, SPIKE_MSG_BYTES, shape, &links)
+                .total();
+            row.push(if tree > 0.0 {
+                format!("{:.1}x", flat / tree)
+            } else {
+                "-".into()
+            });
+        }
+        tiers.row(row);
+    }
+    println!("{}", tiers.render());
+    tiers.write_csv(std::path::Path::new(
+        "results/interconnect_whatif_tiers.csv",
+    ))?;
+    for shape in shapes {
+        let m = AllToAllModel::new(IB, shape[0]);
+        let links = platform.tree_links(IB, shape.len());
+        let label: Vec<String> = shape.iter().map(|k| k.to_string()).collect();
+        match tree_crossover(&m, shape, &links) {
+            Some(p) => println!(
+                "tree:{}: beats flat from P={p} ({} fabric msgs/exchange, \
+                 {} on the top tier, vs flat {})",
+                label.join(","),
+                m.tree_fabric_messages(p, shape),
+                m.tree_level_messages(p, shape).last().copied().unwrap_or(0),
+                m.flat_inter_messages(p),
+            ),
+            None => println!(
+                "tree:{}: never beats flat up to P=1024 on this fabric",
+                label.join(","),
+            ),
+        }
+    }
+    // deeper-vs-shallower: one machine, two topology descriptors. The
+    // rack fabric keeps IB-class bandwidth but pays 10x the latency
+    // per message (long-haul switch stages); the chassis tier is IB.
+    // tree:16 puts every board pair straight on the rack fabric;
+    // tree:16,4 inserts the chassis tier so only chassis pairs cross
+    // the slow link. Where the deeper descriptor wins is the paper's
+    // "design the interconnect hierarchy" question made concrete.
+    let rack = LinkModel {
+        alpha_s: IB.alpha_s * 10.0,
+        fabric_msg_cost_s: IB.fabric_msg_cost_s * 10.0,
+        ..IB
+    };
+    let m = AllToAllModel::new(IB, 16);
+    let mut deeper_at = None;
+    let mut p = 2u32;
+    while p <= 1024 {
+        let t2 = m
+            .exchange_time_tree(p, SPIKE_MSG_BYTES, &[16], &[rack])
+            .total();
+        let t3 = m
+            .exchange_time_tree(p, SPIKE_MSG_BYTES, &[16, 4], &[IB, rack])
+            .total();
+        if t3 < t2 && deeper_at.is_none() {
+            deeper_at = Some(p);
+        }
+        p *= 2;
+    }
+    match deeper_at {
+        Some(p) => println!(
+            "tree:16,4 beats tree:16 from P={p} on a latency-poor rack \
+             fabric: the chassis tier's aggregation outweighs its extra \
+             store-and-forward hop"
+        ),
+        None => println!(
+            "tree:16,4 never beats tree:16 up to P=1024 on this fabric"
+        ),
+    }
     println!(
         "the paper's thesis quantified: lower fabric latency — or a topology\n\
-         that aggregates before touching the fabric — directly buys real-time\n\
+         that aggregates before touching the fabric, at every tier of the\n\
+         board → chassis → rack hierarchy — directly buys real-time\n\
          capacity for larger cortical fields."
     );
     Ok(())

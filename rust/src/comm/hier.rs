@@ -1,85 +1,189 @@
-//! Two-level hierarchical transport: node-leader aggregation for the
-//! inter-node spike exchange (`--topology nodes:<k>`).
+//! L-level hierarchical transport: leader aggregation at every tier of
+//! the fabric (`--topology tree:<k1>,<k2>,...`; `nodes:<k>` is sugar
+//! for the one-level tree).
 //!
 //! The flat [`super::local::LocalCluster`] puts every rank pair on the
 //! same mailbox fabric, so one exchange costs `P(P−1)` messages — the
 //! quadratic cliff the paper's latency wall is made of. Real systems
-//! dodge it with the fabric's hierarchy: ranks sharing a node exchange
-//! through shared memory, and only node *leaders* talk across the
-//! network, concatenating their node's traffic into one message per node
-//! pair (SpiNNaker's multicast tree, NEST's node-local exchange). This
-//! transport reproduces that protocol in-process, per exchange:
+//! dodge it with the fabric's hierarchy: the paper's ExaNeSt/EuroExa
+//! context is explicitly multi-tier (board → chassis → rack), and where
+//! a message crosses the hierarchy determines its latency and Joule
+//! cost. This transport reproduces the tiered protocol in-process over
+//! a [`TopologyTree`], per exchange:
 //!
-//! 1. **intra-node** — each rank posts its payload for same-node peers
-//!    straight into the shared mailbox matrix (one hop, as before);
-//! 2. **gather** — each non-leader frames its whole off-node payload as
-//!    `(dst: u32, len: u32, bytes)` runs and posts ONE blob to its node
-//!    leader (leaders frame their own payload in place);
-//! 3. **aggregate + exchange** — each leader re-frames the node's blobs
-//!    as `(src: u32, dst: u32, len: u32, bytes)` runs, binned per
-//!    destination node, and posts ONE aggregated message per other node:
-//!    `N(N−1)` fabric messages instead of `P(P−1)`;
-//! 4. **scatter** — each leader unpacks the aggregated messages
-//!    addressed to its node into the `(src, dst)` mailbox slots.
+//! 1. **intra-board** — each rank posts its payload for same-board
+//!    peers straight into the shared mailbox matrix (one hop);
+//! 2. **gather** — each rank frames its whole off-board payload as
+//!    `(dst: u32, len: u32, bytes)` runs and posts ONE blob to its
+//!    board leader (the leader frames its own payload in place);
+//! 3. **aggregate upward, level by level** — each level-`g` group
+//!    leader re-frames its group's outward traffic as
+//!    `(src: u32, dst: u32, len: u32, bytes)` runs, posts ONE
+//!    aggregated message to each *sibling* level-`g` group's leader
+//!    (sibling = same level-`g+1` parent), and forwards everything
+//!    that must travel beyond the parent as ONE blob to the parent's
+//!    leader — so a rack pair exchanges ONE message regardless of how
+//!    many ranks it contains;
+//! 4. **scatter downward** — each leader unpacks the aggregated
+//!    messages addressed into its subtree, forwarding per-child blobs
+//!    down to the child leaders until board leaders post the
+//!    `(src, dst)` mailbox slots.
 //!
 //! Because the source tag travels with every sub-buffer, the collected
 //! incoming column is byte-identical to the flat transport's — same
 //! buffers, same source indexing — so the coordinator's source-ordered
-//! delivery (and therefore the spike raster) is bitwise unchanged.
+//! delivery (and therefore the spike raster) is bitwise unchanged, for
+//! every tree shape and leader-rotation policy.
+//!
+//! **Leadership** is decided per exchange by the
+//! [`LeaderRotation`](crate::config::LeaderRotation) policy: `fixed`
+//! pins each group's first rank, `round-robin` walks leadership through
+//! the group so the aggregation CPU cost is not pinned to rank 0 of
+//! each group. Rotation changes *who* relays, never *what* travels:
+//! message counts per link level, summed over ranks, equal
+//! [`TopologyTree::messages_at_level`] exactly under either policy
+//! (per-rank attribution shifts with the rotation, as intended).
 //! Message/byte accounting per rank is specified on
-//! [`ExchangeStats`](super::transport::ExchangeStats); summed over ranks
-//! it equals [`NodeMap::total_messages_per_exchange`] exactly.
+//! [`ExchangeStats`](super::transport::ExchangeStats).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
+use crate::config::LeaderRotation;
+
 use super::barrier::SenseBarrier;
-use super::topology::NodeMap;
+use super::topology::TopologyTree;
 use super::transport::{ExchangeStats, Transport};
 
-/// Framing bytes per destination run in a gather blob (`dst` + `len`).
+/// Framing bytes per destination run in a rank's gather blob
+/// (`dst` + `len`; the source is the posting rank).
 pub const GATHER_FRAME_BYTES: usize = 8;
 
-/// Framing bytes per (src, dst) sub-buffer in an aggregated inter-node
-/// message (`src` + `dst` + `len`).
+/// Framing bytes per (src, dst) sub-buffer in an aggregated message
+/// (`src` + `dst` + `len`).
 pub const HIER_FRAME_BYTES: usize = 12;
 
-/// Shared state for one simulated cluster of `p` ranks grouped into
-/// virtual nodes of `ranks_per_node`.
+/// One parsed `(src, dst, payload)` run inside an aggregated blob.
+struct Run<'a> {
+    src: u32,
+    dst: u32,
+    payload: &'a [u8],
+}
+
+/// Iterate the `(dst, len)`-framed runs of a rank's gather blob (the
+/// source is the posting rank).
+fn each_gather_run<'a>(src: u32, blob: &'a [u8], mut f: impl FnMut(Run<'a>)) {
+    let mut off = 0usize;
+    while off < blob.len() {
+        let dst = u32::from_le_bytes(blob[off..off + 4].try_into().unwrap());
+        let len = u32::from_le_bytes(blob[off + 4..off + 8].try_into().unwrap()) as usize;
+        off += GATHER_FRAME_BYTES;
+        f(Run {
+            src,
+            dst,
+            payload: &blob[off..off + len],
+        });
+        off += len;
+    }
+}
+
+/// Iterate the `(src, dst, len)`-framed runs of an aggregated blob.
+fn each_run<'a>(blob: &'a [u8], mut f: impl FnMut(Run<'a>)) {
+    let mut off = 0usize;
+    while off < blob.len() {
+        let src = u32::from_le_bytes(blob[off..off + 4].try_into().unwrap());
+        let dst = u32::from_le_bytes(blob[off + 4..off + 8].try_into().unwrap());
+        let len = u32::from_le_bytes(blob[off + 8..off + 12].try_into().unwrap()) as usize;
+        off += HIER_FRAME_BYTES;
+        f(Run {
+            src,
+            dst,
+            payload: &blob[off..off + len],
+        });
+        off += len;
+    }
+}
+
+/// Append one `(src, dst, len, payload)` run to an aggregated blob.
+fn push_run(bin: &mut Vec<u8>, src: u32, dst: u32, payload: &[u8]) {
+    bin.extend_from_slice(&src.to_le_bytes());
+    bin.extend_from_slice(&dst.to_le_bytes());
+    bin.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    bin.extend_from_slice(payload);
+}
+
+/// Shared state for one simulated cluster of `p` ranks grouped into an
+/// L-level topology tree.
 pub struct HierCluster {
-    map: NodeMap,
+    tree: TopologyTree,
+    rotation: LeaderRotation,
     /// mailbox[src][dst]: final (source → destination) payloads — the
-    /// same matrix the flat transport uses, but inter-node slots are
-    /// filled by the destination node's leader during scatter.
+    /// same matrix the flat transport uses, but cross-board slots are
+    /// filled by the destination board's leader during scatter.
     mailboxes: Vec<Vec<Mutex<Vec<u8>>>>,
-    /// gather[src]: the framed off-node payload rank `src` posted for
-    /// its node leader this exchange.
-    gather: Vec<Mutex<Vec<u8>>>,
-    /// internode[src_node][dst_node]: the aggregated node-pair message.
-    internode: Vec<Vec<Mutex<Vec<u8>>>>,
+    /// gather0[rank]: the `(dst, len)`-framed off-board payload each
+    /// rank posted for its board leader this exchange.
+    gather0: Vec<Mutex<Vec<u8>>>,
+    /// pair[g-1][src_group][dst_group]: the aggregated message between
+    /// sibling level-`g` groups, for `g` in `1..=L`.
+    pair: Vec<Vec<Vec<Mutex<Vec<u8>>>>>,
+    /// up[g-1][group]: the blob a level-`g` group leader forwards to
+    /// its level-`g+1` leader (traffic beyond the parent), `g` in
+    /// `1..L`.
+    up: Vec<Vec<Mutex<Vec<u8>>>>,
+    /// down[g-1][group]: the entries addressed into level-`g` `group`
+    /// that its level-`g+1` leader forwarded down, `g` in `1..L`.
+    down: Vec<Vec<Mutex<Vec<u8>>>>,
+    /// Per-rank exchange counters driving the leader rotation; all
+    /// ranks advance in lockstep (one call per collective), so every
+    /// rank derives the same leaders for a given exchange.
+    counters: Vec<AtomicU64>,
     barrier: SenseBarrier,
 }
 
 impl HierCluster {
+    /// Two-level node-leader cluster (`--topology nodes:<k>`) with
+    /// fixed leaders — sugar for the one-level tree.
     pub fn new(p: u32, ranks_per_node: u32) -> Arc<Self> {
-        let map = NodeMap::new(p, ranks_per_node);
-        let n = map.n_nodes();
+        Self::with_tree(p, &[ranks_per_node], LeaderRotation::Fixed)
+    }
+
+    /// L-level cluster over the given tree shape and rotation policy.
+    pub fn with_tree(p: u32, shape: &[u32], rotation: LeaderRotation) -> Arc<Self> {
+        let tree = TopologyTree::new(p, shape);
+        let depth = tree.depth();
+        let pair = (1..=depth)
+            .map(|g| {
+                let n = tree.n_groups(g) as usize;
+                (0..n)
+                    .map(|_| (0..n).map(|_| Mutex::new(Vec::new())).collect())
+                    .collect()
+            })
+            .collect();
+        let leader_slots = |g: usize| -> Vec<Mutex<Vec<u8>>> {
+            (0..tree.n_groups(g)).map(|_| Mutex::new(Vec::new())).collect()
+        };
+        let up = (1..depth).map(leader_slots).collect();
+        let down = (1..depth).map(leader_slots).collect();
         Arc::new(Self {
-            map,
+            tree,
+            rotation,
             mailboxes: (0..p)
                 .map(|_| (0..p).map(|_| Mutex::new(Vec::new())).collect())
                 .collect(),
-            gather: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
-            internode: (0..n)
-                .map(|_| (0..n).map(|_| Mutex::new(Vec::new())).collect())
-                .collect(),
+            gather0: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
+            pair,
+            up,
+            down,
+            counters: (0..p).map(|_| AtomicU64::new(0)).collect(),
             barrier: SenseBarrier::new(p),
         })
     }
 
-    pub fn node_map(&self) -> &NodeMap {
-        &self.map
+    pub fn topology_tree(&self) -> &TopologyTree {
+        &self.tree
     }
 
     /// Post `payload` into the `(src, dst)` mailbox slot.
@@ -89,59 +193,135 @@ impl HierCluster {
         slot.extend_from_slice(payload);
     }
 
-    /// Leader only: merge the node's gather blobs into one aggregated
-    /// message per other node and post them. Returns (messages, bytes).
-    fn aggregate_and_send(&self, my_node: u32) -> (u64, u64) {
-        let n = self.map.n_nodes() as usize;
-        let mut bins: Vec<Vec<u8>> = vec![Vec::new(); n];
-        for src in self.map.ranks_of(my_node) {
-            let blob = self.gather[src as usize].lock().unwrap();
-            let mut off = 0usize;
-            while off < blob.len() {
-                let dst = u32::from_le_bytes(blob[off..off + 4].try_into().unwrap());
-                let len = u32::from_le_bytes(blob[off + 4..off + 8].try_into().unwrap()) as usize;
-                off += GATHER_FRAME_BYTES;
-                let bin = &mut bins[self.map.node_of(dst) as usize];
-                bin.extend_from_slice(&src.to_le_bytes());
-                bin.extend_from_slice(&dst.to_le_bytes());
-                bin.extend_from_slice(&(len as u32).to_le_bytes());
-                bin.extend_from_slice(&blob[off..off + len]);
-                off += len;
-            }
+    /// Sibling level-`g` groups of `group` (its level-`g+1` parent's
+    /// children; the whole tier for `g = L`), `group` included.
+    fn siblings_of(&self, group: u32, g: usize) -> std::ops::Range<u32> {
+        if g == self.tree.depth() {
+            0..self.tree.n_groups(g)
+        } else {
+            self.tree.children_of(self.tree.parent_of(group, g), g + 1)
         }
-        let (mut msgs, mut bytes) = (0u64, 0u64);
-        for (node, bin) in bins.iter_mut().enumerate() {
-            if node as u32 == my_node {
-                debug_assert!(bin.is_empty(), "gather blobs hold off-node runs only");
-                continue;
-            }
-            msgs += 1;
-            bytes += bin.len() as u64;
-            *self.internode[my_node as usize][node].lock().unwrap() = std::mem::take(bin);
-        }
-        (msgs, bytes)
     }
 
-    /// Leader only: unpack the aggregated messages addressed to this
-    /// node into the `(src, dst)` mailbox slots.
-    fn scatter(&self, my_node: u32) {
-        for src_node in 0..self.map.n_nodes() {
-            if src_node == my_node {
+    /// Upward phase `g`: the leader of each level-`g` group merges its
+    /// children's blobs, posts ONE aggregated message per sibling group
+    /// and forwards the beyond-parent remainder up. Counts the posted
+    /// messages/bytes on link level `g` into `stats`.
+    fn aggregate_up(&self, rank: u32, g: usize, exchange: u64, stats: &mut ExchangeStats) {
+        let tree = &self.tree;
+        let depth = tree.depth();
+        if tree.n_groups(g) <= 1 || !tree.is_leader(rank, g, self.rotation, exchange) {
+            return;
+        }
+        let gidx = tree.group_of(rank, g);
+        // Stream the children's blobs straight into the destination
+        // bins (sibling pairs) or the up blob (beyond the parent) —
+        // one parse, one copy, no intermediate run list on the hot
+        // exchange path.
+        let mut bins: Vec<Vec<u8>> = vec![Vec::new(); tree.n_groups(g) as usize];
+        let mut up_bin: Vec<u8> = Vec::new();
+        {
+            let mut route = |src: u32, dst: u32, payload: &[u8]| {
+                let dg = tree.group_of(dst, g);
+                debug_assert_ne!(dg, gidx, "upward runs must leave the group");
+                let sibling =
+                    g == depth || tree.parent_of(dg, g) == tree.parent_of(gidx, g);
+                if sibling {
+                    push_run(&mut bins[dg as usize], src, dst, payload);
+                } else {
+                    push_run(&mut up_bin, src, dst, payload);
+                }
+            };
+            if g == 1 {
+                for m in tree.ranks_of(gidx, 1) {
+                    let blob =
+                        std::mem::take(&mut *self.gather0[m as usize].lock().unwrap());
+                    each_gather_run(m, &blob, |r| route(r.src, r.dst, r.payload));
+                }
+            } else {
+                for c in tree.children_of(gidx, g) {
+                    let blob =
+                        std::mem::take(&mut *self.up[g - 2][c as usize].lock().unwrap());
+                    each_run(&blob, |r| route(r.src, r.dst, r.payload));
+                }
+            }
+        }
+        // ONE aggregated message per ordered sibling pair — envelopes
+        // travel even when empty, like every synchronous collective.
+        for d in self.siblings_of(gidx, g) {
+            if d == gidx {
                 continue;
             }
-            let msg = std::mem::take(
-                &mut *self.internode[src_node as usize][my_node as usize].lock().unwrap(),
-            );
-            let mut off = 0usize;
-            while off < msg.len() {
-                let src = u32::from_le_bytes(msg[off..off + 4].try_into().unwrap());
-                let dst = u32::from_le_bytes(msg[off + 4..off + 8].try_into().unwrap());
-                let len = u32::from_le_bytes(msg[off + 8..off + 12].try_into().unwrap()) as usize;
-                off += HIER_FRAME_BYTES;
-                debug_assert_eq!(self.map.node_of(src), src_node);
-                debug_assert_eq!(self.map.node_of(dst), my_node);
-                self.post(src, dst, &msg[off..off + len]);
-                off += len;
+            let bin = std::mem::take(&mut bins[d as usize]);
+            stats.level_messages[g] += 1;
+            stats.level_bytes[g] += bin.len() as u64;
+            *self.pair[g - 1][gidx as usize][d as usize].lock().unwrap() = bin;
+        }
+        // Forward the beyond-parent remainder to the parent's leader
+        // (kept in place, uncounted, when this rank leads the parent
+        // too — the same "frames in place" rule the rank gather uses).
+        if g < depth && tree.n_groups(g + 1) > 1 {
+            if !tree.is_leader(rank, g + 1, self.rotation, exchange) {
+                stats.level_messages[g] += 1;
+                stats.level_bytes[g] += up_bin.len() as u64;
+            }
+            *self.up[g - 1][gidx as usize].lock().unwrap() = up_bin;
+        } else {
+            debug_assert!(up_bin.is_empty(), "no tier above to route to");
+        }
+    }
+
+    /// Downward phase `g`: the leader of each level-`g` group unpacks
+    /// the sibling pair messages (plus whatever its parent forwarded
+    /// down) and pushes each run one hop closer to its destination.
+    /// Scatter hops are not accounted as messages (see
+    /// [`TopologyTree`]).
+    fn scatter_down(&self, rank: u32, g: usize, exchange: u64) {
+        let tree = &self.tree;
+        let depth = tree.depth();
+        if tree.n_groups(g) <= 1 || !tree.is_leader(rank, g, self.rotation, exchange) {
+            return;
+        }
+        let gidx = tree.group_of(rank, g);
+        let mut blobs: Vec<Vec<u8>> = Vec::new();
+        for s in self.siblings_of(gidx, g) {
+            if s == gidx {
+                continue;
+            }
+            blobs.push(std::mem::take(
+                &mut *self.pair[g - 1][s as usize][gidx as usize].lock().unwrap(),
+            ));
+        }
+        if g < depth && tree.n_groups(g + 1) > 1 {
+            blobs.push(std::mem::take(
+                &mut *self.down[g - 1][gidx as usize].lock().unwrap(),
+            ));
+        }
+        if g == 1 {
+            // Final hop: the board leader fills the (src, dst) mailbox
+            // slots of its board.
+            for blob in &blobs {
+                each_run(blob, |r| {
+                    debug_assert_eq!(tree.group_of(r.dst, 1), gidx);
+                    self.post(r.src, r.dst, r.payload);
+                });
+            }
+        } else {
+            let children = tree.children_of(gidx, g);
+            let base = children.start as usize;
+            let mut down_bins: Vec<Vec<u8>> =
+                vec![Vec::new(); (children.end - children.start) as usize];
+            for blob in &blobs {
+                each_run(blob, |r| {
+                    let child = tree.group_of(r.dst, g - 1);
+                    debug_assert_eq!(tree.group_of(r.dst, g), gidx);
+                    push_run(&mut down_bins[child as usize - base], r.src, r.dst, r.payload);
+                });
+            }
+            // Write every child slot (even empty) so no stale blob from
+            // a previous exchange survives.
+            for (i, bin) in down_bins.iter_mut().enumerate() {
+                *self.down[g - 2][base + i].lock().unwrap() = std::mem::take(bin);
             }
         }
     }
@@ -149,7 +329,7 @@ impl HierCluster {
 
 impl Transport for Arc<HierCluster> {
     fn n_ranks(&self) -> u32 {
-        self.map.n_ranks()
+        self.tree.n_ranks()
     }
 
     fn alltoall(
@@ -157,35 +337,40 @@ impl Transport for Arc<HierCluster> {
         rank: u32,
         outgoing: &[Vec<u8>],
     ) -> Result<(Vec<Vec<u8>>, ExchangeStats)> {
-        let p = self.map.n_ranks();
+        let tree = &self.tree;
+        let p = tree.n_ranks();
         assert_eq!(outgoing.len() as u32, p, "need one buffer per rank");
-        let my_node = self.map.node_of(rank);
-        let n_nodes = self.map.n_nodes();
+        let depth = tree.depth();
+        let exchange = self.counters[rank as usize].fetch_add(1, Ordering::Relaxed);
+        let my_board = tree.group_of(rank, 1);
+        let n_boards = tree.n_groups(1);
         let mut stats = ExchangeStats {
             per_dst_bytes: outgoing.iter().map(|b| b.len() as u64).collect(),
+            level_messages: vec![0; depth + 1],
+            level_bytes: vec![0; depth + 1],
             ..ExchangeStats::default()
         };
 
-        // Phase 1a: loopback + direct intra-node posts.
+        // Phase 0a: loopback + direct intra-board posts (link level 0).
         self.post(rank, rank, &outgoing[rank as usize]);
-        for dst in self.map.ranks_of(my_node) {
+        for dst in tree.ranks_of(my_board, 1) {
             if dst == rank {
                 continue;
             }
             let payload = &outgoing[dst as usize];
             self.post(rank, dst, payload);
-            stats.bytes_sent += payload.len() as u64;
-            stats.intra_messages += 1;
-            stats.intra_bytes += payload.len() as u64;
+            stats.level_messages[0] += 1;
+            stats.level_bytes[0] += payload.len() as u64;
         }
-        // Phase 1b: frame the off-node payload as one gather blob. Every
-        // off-node destination gets a run (envelopes are transmitted even
-        // when empty, like the flat transport's P−1 messages). Leaders
-        // frame in place; non-leaders pay one intra-node gather message.
-        if n_nodes > 1 {
+        // Phase 0b: frame the whole off-board payload as one gather
+        // blob. Every off-board destination gets a run (envelopes are
+        // transmitted even when empty, like the flat transport's P−1
+        // messages). The board leader frames in place; everyone else
+        // pays one board-local gather message.
+        if n_boards > 1 {
             let mut blob = Vec::new();
             for dst in 0..p {
-                if self.map.node_of(dst) == my_node {
+                if tree.group_of(dst, 1) == my_board {
                     continue;
                 }
                 let payload = &outgoing[dst as usize];
@@ -193,43 +378,49 @@ impl Transport for Arc<HierCluster> {
                 blob.extend_from_slice(&(payload.len() as u32).to_le_bytes());
                 blob.extend_from_slice(payload);
             }
-            if !self.map.is_leader(rank) {
-                stats.bytes_sent += blob.len() as u64;
-                stats.intra_messages += 1;
-                stats.intra_bytes += blob.len() as u64;
+            if !tree.is_leader(rank, 1, self.rotation, exchange) {
+                stats.level_messages[0] += 1;
+                stats.level_bytes[0] += blob.len() as u64;
             }
-            *self.gather[rank as usize].lock().unwrap() = blob;
+            *self.gather0[rank as usize].lock().unwrap() = blob;
         }
         self.barrier.wait();
 
-        if n_nodes > 1 {
-            // Phase 2: leaders aggregate the node's blobs into one
-            // framed message per other node — the N(N−1) fabric hop.
-            if self.map.is_leader(rank) {
-                let (msgs, bytes) = self.aggregate_and_send(my_node);
-                stats.inter_messages += msgs;
-                stats.inter_bytes += bytes;
-                stats.bytes_sent += bytes;
-            }
-            self.barrier.wait();
-            // Phase 3: leaders scatter the incoming aggregates into the
-            // (src, dst) mailbox slots of their node.
-            if self.map.is_leader(rank) {
-                self.scatter(my_node);
-            }
+        // Group counts are non-increasing with level, so the levels
+        // with more than one group (the only ones whose phases do any
+        // work) form a prefix. Skip the degenerate upper tiers AND
+        // their barriers — `active` is a pure function of (p, shape),
+        // identical on every rank, so the barrier sequence still
+        // matches. A single-board cluster does no up/down phase at
+        // all, exactly like the flat intra-node exchange.
+        let active = (1..=depth).take_while(|&g| tree.n_groups(g) > 1).count();
+        // Upward: aggregate at every level boundary, boards first.
+        for g in 1..=active {
+            self.aggregate_up(rank, g, exchange, &mut stats);
             self.barrier.wait();
         }
-        stats.messages = stats.intra_messages + stats.inter_messages;
+        // Downward: scatter from the top tier back to the mailboxes.
+        for g in (1..=active).rev() {
+            self.scatter_down(rank, g, exchange);
+            self.barrier.wait();
+        }
 
-        // Phase 4: collect the column addressed to this rank — identical
-        // in content and source indexing to the flat transport's.
+        stats.intra_messages = stats.level_messages[0];
+        stats.intra_bytes = stats.level_bytes[0];
+        stats.inter_messages = stats.level_messages[1..].iter().sum();
+        stats.inter_bytes = stats.level_bytes[1..].iter().sum();
+        stats.messages = stats.intra_messages + stats.inter_messages;
+        stats.bytes_sent = stats.level_bytes.iter().sum();
+
+        // Collect the column addressed to this rank — identical in
+        // content and source indexing to the flat transport's.
         let mut incoming = Vec::with_capacity(p as usize);
         for src in 0..p as usize {
             let mut slot = self.mailboxes[src][rank as usize].lock().unwrap();
             incoming.push(std::mem::take(&mut *slot));
         }
         stats.bytes_recv = incoming.iter().map(|b| b.len() as u64).sum();
-        // Phase 5: everyone must finish reading before the next post.
+        // Everyone must finish reading before the next post.
         self.barrier.wait();
         Ok((incoming, stats))
     }
@@ -243,16 +434,18 @@ impl Transport for Arc<HierCluster> {
 mod tests {
     use super::*;
 
-    /// Drive one exchange round on `p` threads with
-    /// `payload(src, dst)` buffers and return the per-rank stats after
-    /// asserting every rank received exactly `payload(src, rank)`.
-    fn exchange_round(
+    /// Drive `rounds` exchange rounds on `p` threads over `shape` with
+    /// `payload(src, dst, round)` buffers, asserting every rank
+    /// receives exactly `payload(src, rank, round)` each round.
+    /// Returns the per-rank stats of the LAST round.
+    fn tree_round(
         p: u32,
-        ranks_per_node: u32,
+        shape: &[u32],
+        rotation: LeaderRotation,
         rounds: u32,
         payload: fn(u32, u32, u32) -> Vec<u8>,
     ) -> Vec<ExchangeStats> {
-        let cluster = HierCluster::new(p, ranks_per_node);
+        let cluster = HierCluster::with_tree(p, shape, rotation);
         let mut handles = Vec::new();
         for rank in 0..p {
             let t = cluster.clone();
@@ -277,6 +470,16 @@ mod tests {
         handles.into_iter().map(|h| h.join().unwrap()).collect()
     }
 
+    /// Two-level compatibility driver (the `nodes:<k>` sugar).
+    fn exchange_round(
+        p: u32,
+        ranks_per_node: u32,
+        rounds: u32,
+        payload: fn(u32, u32, u32) -> Vec<u8>,
+    ) -> Vec<ExchangeStats> {
+        tree_round(p, &[ranks_per_node], LeaderRotation::Fixed, rounds, payload)
+    }
+
     fn tagged(src: u32, dst: u32, round: u32) -> Vec<u8> {
         format!("r{src}->d{dst}@{round}").into_bytes()
     }
@@ -291,6 +494,9 @@ mod tests {
             assert_eq!(s.intra_messages, if leader { 1 } else { 2 }, "rank {rank}");
             assert_eq!(s.inter_messages, if leader { 2 } else { 0 }, "rank {rank}");
             assert_eq!(s.messages, 3, "rank {rank}");
+            assert_eq!(s.level_messages.len(), 2);
+            assert_eq!(s.level_messages[0], s.intra_messages);
+            assert_eq!(s.level_messages[1], s.inter_messages);
         }
     }
 
@@ -318,21 +524,16 @@ mod tests {
 
     #[test]
     fn message_accounting_matches_closed_form() {
-        // The satellite contract: summed over ranks, one exchange's
-        // message count equals NodeMap's closed form for every (P, k) —
-        // even splits, ragged splits, solo nodes, single node.
+        // The contract: summed over ranks, one exchange's message count
+        // equals the topology closed form for every (P, k) — even
+        // splits, ragged splits, solo nodes, single node.
         for &(p, k) in &[(1u32, 1u32), (2, 1), (4, 2), (6, 4), (8, 3), (8, 4), (9, 4), (5, 8)] {
             let stats = exchange_round(p, k, 2, |s, d, _| vec![s as u8, d as u8]);
-            let map = NodeMap::new(p, k);
+            let tree = TopologyTree::new(p, &[k]);
             let total: u64 = stats.iter().map(|s| s.messages).sum();
-            assert_eq!(total, map.total_messages_per_exchange(), "p={p} k={k}");
+            assert_eq!(total, tree.total_messages_per_exchange(), "p={p} k={k}");
             let inter: u64 = stats.iter().map(|s| s.inter_messages).sum();
-            let expect_inter = if map.n_nodes() > 1 {
-                map.inter_messages_per_exchange()
-            } else {
-                0
-            };
-            assert_eq!(inter, expect_inter, "p={p} k={k}");
+            assert_eq!(inter, tree.fabric_messages_per_exchange(), "p={p} k={k}");
             for s in &stats {
                 assert_eq!(s.messages, s.intra_messages + s.inter_messages);
             }
@@ -383,5 +584,99 @@ mod tests {
         assert_eq!(stats.messages, 0);
         assert_eq!(stats.bytes_sent, 0);
         assert_eq!(stats.bytes_recv, 4);
+    }
+
+    #[test]
+    fn three_level_tree_routes_every_pair() {
+        // 16 ranks as tree:2,2,2 — boards of 2, chassis of 2 boards,
+        // racks of 2 chassis, 2 racks. Every (src, dst) payload must
+        // arrive byte-identically through up to three aggregation hops.
+        let stats = tree_round(16, &[2, 2, 2], LeaderRotation::Fixed, 6, tagged);
+        let tree = TopologyTree::new(16, &[2, 2, 2]);
+        for lvl in 0..=3usize {
+            let live: u64 = stats.iter().map(|s| s.level_messages[lvl]).sum();
+            assert_eq!(live, tree.messages_at_level(lvl), "level {lvl}");
+        }
+        let total: u64 = stats.iter().map(|s| s.messages).sum();
+        assert_eq!(total, tree.total_messages_per_exchange());
+        // rank 0 leads board, chassis and rack under fixed rotation:
+        // 1 direct + 1 board pair msg + board gather... as the top
+        // leader it relays at every level.
+        assert!(stats[0].inter_messages > 0);
+        // a plain member only pays the board-local hop
+        assert_eq!(stats[1].inter_messages, 0);
+        assert_eq!(stats[1].level_messages[0], 2, "direct + gather");
+    }
+
+    #[test]
+    fn ragged_tree_routes_every_pair() {
+        // 10 ranks as tree:2,2 — 5 boards, chassis of (2, 2, 1) boards.
+        let stats = tree_round(10, &[2, 2], LeaderRotation::Fixed, 5, tagged);
+        let tree = TopologyTree::new(10, &[2, 2]);
+        for lvl in 0..=2usize {
+            let live: u64 = stats.iter().map(|s| s.level_messages[lvl]).sum();
+            assert_eq!(live, tree.messages_at_level(lvl), "level {lvl}");
+        }
+        // 7 ranks as tree:3,2 — boards (3, 3, 1), chassis (2, 1).
+        let stats = tree_round(7, &[3, 2], LeaderRotation::Fixed, 5, tagged);
+        let tree = TopologyTree::new(7, &[3, 2]);
+        let total: u64 = stats.iter().map(|s| s.messages).sum();
+        assert_eq!(total, tree.total_messages_per_exchange());
+    }
+
+    #[test]
+    fn round_robin_rotation_spreads_leader_load() {
+        // Under round-robin every board rank must take a leader turn:
+        // with 2-rank boards, inter messages alternate between the two
+        // members, so after an even number of rounds both have sent
+        // some. Totals per exchange still match the closed form.
+        let p = 8u32;
+        let cluster = HierCluster::with_tree(p, &[2, 2], LeaderRotation::RoundRobin);
+        let tree = TopologyTree::new(p, &[2, 2]);
+        let mut handles = Vec::new();
+        for rank in 0..p {
+            let t = cluster.clone();
+            handles.push(std::thread::spawn(move || -> (u64, Vec<u64>) {
+                let mut fabric_msgs = 0u64;
+                let mut per_level_total = vec![0u64; 3];
+                for round in 0..4u32 {
+                    let outgoing: Vec<Vec<u8>> =
+                        (0..p).map(|dst| tagged(rank, dst, round)).collect();
+                    let (incoming, stats) = t.alltoall(rank, &outgoing).unwrap();
+                    for (src, buf) in incoming.iter().enumerate() {
+                        assert_eq!(buf, &tagged(src as u32, rank, round));
+                    }
+                    fabric_msgs += stats.inter_messages;
+                    for (lvl, &m) in stats.level_messages.iter().enumerate() {
+                        per_level_total[lvl] += m;
+                    }
+                }
+                (fabric_msgs, per_level_total)
+            }));
+        }
+        let results: Vec<(u64, Vec<u64>)> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // every rank relayed on the fabric at least once over 4 rounds
+        for (rank, (fabric, _)) in results.iter().enumerate() {
+            assert!(*fabric > 0, "rank {rank} never took a leader turn");
+        }
+        // per-level totals over 4 exchanges == 4 x closed form
+        for lvl in 0..=2usize {
+            let live: u64 = results.iter().map(|r| r.1[lvl]).sum();
+            assert_eq!(live, 4 * tree.messages_at_level(lvl), "level {lvl}");
+        }
+    }
+
+    #[test]
+    fn rotation_is_invisible_to_payload_routing() {
+        // Same shape, both policies: tree_round already asserts every
+        // (src, dst, round) payload arrives intact, so this is the
+        // "rotation changes who relays, never what travels" contract.
+        for rot in [LeaderRotation::Fixed, LeaderRotation::RoundRobin] {
+            let stats = tree_round(9, &[2, 2], rot, 5, tagged);
+            let tree = TopologyTree::new(9, &[2, 2]);
+            let total: u64 = stats.iter().map(|s| s.messages).sum();
+            assert_eq!(total, tree.total_messages_per_exchange(), "{rot}");
+        }
     }
 }

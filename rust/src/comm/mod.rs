@@ -28,12 +28,16 @@
 //! ([`crate::config::Topology`]): the flat [`local::LocalCluster`] puts
 //! every rank pair on the shared fabric (`P(P−1)` messages per
 //! exchange), while the hierarchical [`hier::HierCluster`] groups ranks
-//! into virtual nodes ([`topology::NodeMap`]) where intra-node spikes
-//! move through the node-local mailbox slots and inter-node traffic is
-//! gathered at a per-node leader into ONE source-tagged framed message
-//! per node pair — `N(N−1)` fabric messages — then scattered back, with
-//! a byte-identical incoming column and therefore a bitwise-identical
-//! raster.
+//! into an L-level tree ([`topology::TopologyTree`]: boards, chassis,
+//! racks — [`topology::NodeMap`] is the two-level special case) where
+//! same-board spikes move through the board-local mailbox slots and
+//! boundary-crossing traffic is gathered at per-group leaders into ONE
+//! source-tagged framed message per ordered sibling-group pair at every
+//! level — so a rack pair exchanges one message regardless of how many
+//! ranks it contains — then scattered back, with a byte-identical
+//! incoming column and therefore a bitwise-identical raster. Which rank
+//! pays the aggregation CPU cost is the
+//! [`crate::config::LeaderRotation`] policy.
 
 pub mod aer;
 pub mod transport;
@@ -50,5 +54,5 @@ pub use aer::{
 pub use hier::{HierCluster, GATHER_FRAME_BYTES, HIER_FRAME_BYTES};
 pub use local::LocalCluster;
 pub use routing::RoutingTable;
-pub use topology::NodeMap;
+pub use topology::{NodeMap, TopologyTree};
 pub use transport::{ExchangeStats, Transport};

@@ -1,29 +1,63 @@
-//! Rank→node topology for the live transport.
+//! Rank→group topology for the live transport: where each rank sits in
+//! the fabric hierarchy, who leads each group, and the closed-form
+//! message accounting the live transport must reproduce exactly.
 //!
-//! A [`NodeMap`] groups `p` ranks into virtual nodes of `ranks_per_node`
-//! consecutive ranks (rank `r` lives on node `r / ranks_per_node`, the
-//! same index-order packing [`crate::simnet::alltoall_model::AllToAllModel`]
-//! prices), with the first rank of each node acting as the node's
-//! **leader** for the hierarchical exchange ([`super::hier::HierCluster`]).
-//! The last node may be ragged (fewer than `ranks_per_node` ranks) when
-//! `p` is not a multiple of the node size.
+//! Two views of the same idea live here:
 //!
-//! The map also owns the closed-form message accounting of one
-//! hierarchical exchange, so live measurements
-//! ([`crate::metrics::comm_volume::CommVolume`]) and the analytic
-//! interconnect model agree *exactly* — per exchange:
+//! * [`NodeMap`] — the two-level special case (`--topology nodes:<k>`):
+//!   `p` ranks packed onto virtual nodes of `ranks_per_node` consecutive
+//!   ranks, first rank of each node leading. Kept as the simple,
+//!   heavily-referenced closed form
+//!   ([`crate::simnet::alltoall_model::AllToAllModel`] prices the same
+//!   index-order packing).
+//! * [`TopologyTree`] — the L-level generalization
+//!   (`--topology tree:<k1>,<k2>,...`): level-1 groups (*boards*) of
+//!   `k1` ranks, level-2 groups (*chassis*) of `k2` boards, level-3
+//!   groups (*racks*) of `k3` chassis, and so on. Any level may be
+//!   ragged when sizes don't divide `p`. The tree owns per-**link-level**
+//!   message counts (level 0 = intra-board, level `g` = crossing
+//!   level-`g` group boundaries inside one level-`g+1` parent) and the
+//!   rotation-aware leader choice ([`crate::config::LeaderRotation`])
+//!   the live [`super::hier::HierCluster`] follows.
 //!
-//! * every rank posts one intra-node message to each same-node peer
-//!   (`Σ sᵢ(sᵢ−1)` over node sizes `sᵢ`),
-//! * every non-leader posts ONE gather message to its node leader
-//!   (`Σ (sᵢ−1)`, only when there is more than one node),
-//! * every leader posts ONE aggregated message to each other node's
-//!   leader (`N(N−1)` inter-node messages — the paper's `P(P−1)` flat
-//!   message count collapsed to node granularity).
+//! Both closed forms are exact contracts: summed over ranks, the live
+//! transport's per-exchange accounting
+//! ([`crate::metrics::comm_volume::CommVolume`]) equals them for every
+//! shape, ragged or not — tested here, in `comm::hier`, and end-to-end
+//! in `rust/tests/topology_props.rs`.
 
 use std::ops::Range;
 
+use crate::config::LeaderRotation;
+
 /// Index-order packing of `p` ranks onto nodes of `ranks_per_node`.
+///
+/// The closed-form message counts of one hierarchical exchange are the
+/// contract the live transport satisfies exactly:
+///
+/// ```
+/// use dpsnn::comm::NodeMap;
+///
+/// // 8 ranks on 2 virtual nodes of 4, per exchange:
+/// let m = NodeMap::new(8, 4);
+/// assert_eq!(m.n_nodes(), 2);
+/// // 2 nodes × 4·3 direct intra-node posts, 2 × 3 gathers to the
+/// // leaders, 2·1 aggregated node-pair messages on the fabric —
+/// // versus the flat transport's P(P−1) = 56.
+/// assert_eq!(m.total_messages_per_exchange(), 24 + 6 + 2);
+/// assert_eq!(m.inter_messages_per_exchange(), 2);
+///
+/// // ragged last node: 10 ranks on nodes of 4 → sizes (4, 4, 2)
+/// let r = NodeMap::new(10, 4);
+/// assert_eq!(r.n_nodes(), 3);
+/// assert_eq!(r.node_size(2), 2);
+/// assert_eq!(
+///     r.total_messages_per_exchange(),
+///     (4 * 3 + 4 * 3 + 2 * 1)    // intra-node posts
+///         + (3 + 3 + 1)          // gathers to the three leaders
+///         + 3 * 2                // aggregated node-pair messages
+/// );
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct NodeMap {
     p: u32,
@@ -118,6 +152,234 @@ impl NodeMap {
     }
 }
 
+/// L-level grouping of `p` ranks (board → chassis → rack ...), the
+/// general form behind `--topology tree:<k1>,<k2>,...`.
+///
+/// *Group levels* run `1..=L` (level 1 = boards of `k1` ranks, level 2
+/// = chassis of `k2` boards, ...); level 0 is the rank itself and the
+/// whole job is the virtual root above level L. *Link levels* run
+/// `0..=L`: a message on link level `g` crosses level-`g` group
+/// boundaries while staying inside one level-`g+1` parent (level 0 =
+/// shared memory inside a board, level L = the top-tier fabric). Any
+/// level may be ragged when the branching factors don't divide `p`.
+///
+/// One exchange of the protocol in [`super::hier::HierCluster`] puts on
+/// link level `g`, per exchange:
+///
+/// * **pair messages** — ONE aggregated message per ordered pair of
+///   sibling level-`g` groups under each level-`g+1` parent
+///   (`Σ c(c−1)` over parents; for `g = 0` these are the direct
+///   intra-board rank-pair posts, for `g = L` the top-tier group
+///   pairs), and
+/// * **up-gathers** — ONE message from each level-`g` group leader to
+///   its level-`g+1` group leader carrying everything that must travel
+///   beyond the parent (`Σ (c−1)` over parents, only when more than
+///   one level-`g+1` group exists).
+///
+/// Scatter hops mirror the gathers on the way down and are *not*
+/// accounted as messages — the same convention [`NodeMap`] documents
+/// for the two-level case, which this reproduces exactly at depth 1.
+///
+/// Leadership is hierarchical: a group's leader is always the leader of
+/// one of its child groups, chosen by the
+/// [`LeaderRotation`](crate::config::LeaderRotation) policy — `fixed`
+/// picks the first child at every level (so rank 0 of a board leads
+/// board, chassis and rack alike), `round-robin` picks child
+/// `exchange % children` so the aggregation CPU cost walks through the
+/// group members. Rotation never changes what travels, so these closed
+/// forms are rotation-invariant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TopologyTree {
+    p: u32,
+    /// Branching factors: `shape[l]` = level-`l+1` group size counted
+    /// in level-`l` groups (`shape[0]` = ranks per board).
+    shape: Vec<u32>,
+    /// `strides[g]` = nominal ranks per level-`g` group
+    /// (`strides[0] = 1`).
+    strides: Vec<u64>,
+}
+
+impl TopologyTree {
+    pub fn new(p: u32, shape: &[u32]) -> Self {
+        assert!(p >= 1, "need at least one rank");
+        assert!(!shape.is_empty(), "need at least one tree level");
+        assert!(
+            shape.iter().all(|&k| k >= 1),
+            "branching factors must be at least 1"
+        );
+        let mut strides = vec![1u64; shape.len() + 1];
+        for (l, &k) in shape.iter().enumerate() {
+            strides[l + 1] = strides[l].saturating_mul(k as u64);
+        }
+        Self {
+            p,
+            shape: shape.to_vec(),
+            strides,
+        }
+    }
+
+    /// Number of grouping levels L (1 = boards only).
+    pub fn depth(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn n_ranks(&self) -> u32 {
+        self.p
+    }
+
+    /// The branching factors, smallest tier first.
+    pub fn shape(&self) -> &[u32] {
+        &self.shape
+    }
+
+    fn n_groups_u64(&self, level: usize) -> u64 {
+        (self.p as u64).div_ceil(self.strides[level])
+    }
+
+    /// Number of level-`level` groups (level 0 = ranks, so `p`).
+    pub fn n_groups(&self, level: usize) -> u32 {
+        debug_assert!(level <= self.depth());
+        self.n_groups_u64(level) as u32
+    }
+
+    /// Level-`level` group hosting rank `r`.
+    pub fn group_of(&self, r: u32, level: usize) -> u32 {
+        debug_assert!(r < self.p && level <= self.depth());
+        ((r as u64) / self.strides[level]) as u32
+    }
+
+    /// Ranks of level-`level` group `group` (possibly ragged).
+    pub fn ranks_of(&self, group: u32, level: usize) -> Range<u32> {
+        debug_assert!(level <= self.depth() && group < self.n_groups(level));
+        let lo = (group as u64).saturating_mul(self.strides[level]);
+        let hi = lo.saturating_add(self.strides[level]).min(self.p as u64);
+        (lo as u32)..(hi as u32)
+    }
+
+    /// Number of ranks in level-`level` group `group`.
+    pub fn group_size(&self, group: u32, level: usize) -> u32 {
+        let r = self.ranks_of(group, level);
+        r.end - r.start
+    }
+
+    /// Level-`level-1` child groups of `parent` at level `level >= 1`.
+    pub fn children_of(&self, parent: u32, level: usize) -> Range<u32> {
+        debug_assert!((1..=self.depth()).contains(&level));
+        debug_assert!(parent < self.n_groups(level));
+        let k = self.shape[level - 1] as u64;
+        let lo = (parent as u64) * k;
+        let hi = (lo + k).min(self.n_groups_u64(level - 1));
+        (lo as u32)..(hi as u32)
+    }
+
+    /// Number of level-`level-1` children of `parent` at level `level`.
+    pub fn children_count(&self, parent: u32, level: usize) -> u32 {
+        let c = self.children_of(parent, level);
+        c.end - c.start
+    }
+
+    /// Level-`level+1` parent of a level-`level` group (`level < L`).
+    pub fn parent_of(&self, group: u32, level: usize) -> u32 {
+        debug_assert!(level < self.depth());
+        group / self.shape[level]
+    }
+
+    /// Leader rank of level-`level` group `group` for exchange number
+    /// `exchange` under `rotation`: descend the tree picking the
+    /// leading child at every level, so a chassis leader is always one
+    /// of its board leaders.
+    pub fn leader_of(
+        &self,
+        group: u32,
+        level: usize,
+        rotation: LeaderRotation,
+        exchange: u64,
+    ) -> u32 {
+        debug_assert!(level <= self.depth());
+        let mut group = group;
+        let mut level = level;
+        while level > 0 {
+            let children = self.children_of(group, level);
+            let c = children.end - children.start;
+            let pick = match rotation {
+                LeaderRotation::Fixed => 0,
+                LeaderRotation::RoundRobin => (exchange % c as u64) as u32,
+            };
+            group = children.start + pick;
+            level -= 1;
+        }
+        group
+    }
+
+    /// Is rank `r` the leader of its level-`level` group this exchange?
+    pub fn is_leader(
+        &self,
+        r: u32,
+        level: usize,
+        rotation: LeaderRotation,
+        exchange: u64,
+    ) -> bool {
+        self.leader_of(self.group_of(r, level), level, rotation, exchange) == r
+    }
+
+    /// Pair messages one exchange puts on link level `lvl`: one per
+    /// ordered pair of sibling level-`lvl` groups under each
+    /// level-`lvl+1` parent (the whole job for `lvl = L`).
+    pub fn pair_messages_at_level(&self, lvl: usize) -> u64 {
+        let depth = self.depth();
+        debug_assert!(lvl <= depth);
+        if lvl == depth {
+            let c = self.n_groups_u64(depth);
+            return c * (c - 1);
+        }
+        let mut total = 0u64;
+        for parent in 0..self.n_groups(lvl + 1) {
+            let c = self.children_count(parent, lvl + 1) as u64;
+            total += c * (c - 1);
+        }
+        total
+    }
+
+    /// Up-gather messages one exchange puts on link level `lvl`: one
+    /// per non-leading level-`lvl` group leader toward its
+    /// level-`lvl+1` leader, present only when traffic crosses the
+    /// level-`lvl+1` boundary at all.
+    pub fn gather_messages_at_level(&self, lvl: usize) -> u64 {
+        let depth = self.depth();
+        debug_assert!(lvl <= depth);
+        if lvl >= depth || self.n_groups(lvl + 1) <= 1 {
+            return 0;
+        }
+        (0..self.n_groups(lvl + 1))
+            .map(|parent| self.children_count(parent, lvl + 1) as u64 - 1)
+            .sum()
+    }
+
+    /// All messages one exchange puts on link level `lvl` (pair
+    /// messages + up-gathers).
+    pub fn messages_at_level(&self, lvl: usize) -> u64 {
+        self.pair_messages_at_level(lvl) + self.gather_messages_at_level(lvl)
+    }
+
+    /// Per-link-level message counts of one exchange, length `L + 1`
+    /// (index 0 = intra-board) — the exact contract the live
+    /// [`super::hier::HierCluster`] accounting sums to.
+    pub fn level_message_counts(&self) -> Vec<u64> {
+        (0..=self.depth()).map(|g| self.messages_at_level(g)).collect()
+    }
+
+    /// Total messages of one exchange across all link levels.
+    pub fn total_messages_per_exchange(&self) -> u64 {
+        self.level_message_counts().iter().sum()
+    }
+
+    /// Messages one exchange puts on the fabric (link levels >= 1,
+    /// i.e. everything that leaves a board).
+    pub fn fabric_messages_per_exchange(&self) -> u64 {
+        (1..=self.depth()).map(|g| self.messages_at_level(g)).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -198,5 +460,131 @@ mod tests {
         assert_eq!(m.inter_messages_per_exchange(), 16 * 15);
         let flat = 256u64 * 255;
         assert!(m.inter_messages_per_exchange() * 100 < flat);
+    }
+
+    #[test]
+    fn one_level_tree_matches_nodemap() {
+        // the tree at depth 1 IS the NodeMap closed form, ragged or not
+        for p in 1..=12u32 {
+            for k in 1..=6u32 {
+                let tree = TopologyTree::new(p, &[k]);
+                let map = NodeMap::new(p, k);
+                assert_eq!(tree.n_groups(1), map.n_nodes(), "p={p} k={k}");
+                assert_eq!(
+                    tree.total_messages_per_exchange(),
+                    map.total_messages_per_exchange(),
+                    "p={p} k={k}"
+                );
+                assert_eq!(
+                    tree.messages_at_level(1),
+                    map.inter_messages_per_exchange(),
+                    "p={p} k={k}"
+                );
+                assert_eq!(
+                    tree.fabric_messages_per_exchange(),
+                    map.inter_messages_per_exchange(),
+                    "p={p} k={k}"
+                );
+                for r in 0..p {
+                    assert_eq!(tree.group_of(r, 1), map.node_of(r));
+                    assert_eq!(
+                        tree.leader_of(tree.group_of(r, 1), 1, LeaderRotation::Fixed, 0),
+                        map.leader_of(map.node_of(r)),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_two_level_tree_counts_by_hand() {
+        // 10 ranks, tree:2,2 — 5 boards of 2, chassis of (2, 2, 1)
+        // boards, 3 chassis at the top.
+        let t = TopologyTree::new(10, &[2, 2]);
+        assert_eq!(t.depth(), 2);
+        assert_eq!(t.n_groups(1), 5);
+        assert_eq!(t.n_groups(2), 3);
+        assert_eq!(t.children_count(2, 2), 1, "ragged chassis has one board");
+        assert_eq!(t.ranks_of(2, 2), 8..10);
+        // level 0: 5 boards × 2·1 direct + 5 × 1 gathers
+        assert_eq!(t.messages_at_level(0), 10 + 5);
+        // level 1: board pairs per chassis 2+2+0, gathers 1+1+0
+        assert_eq!(t.pair_messages_at_level(1), 4);
+        assert_eq!(t.gather_messages_at_level(1), 2);
+        // level 2 (top): 3·2 chassis pairs
+        assert_eq!(t.messages_at_level(2), 6);
+        assert_eq!(t.total_messages_per_exchange(), 15 + 6 + 6);
+        assert_eq!(t.fabric_messages_per_exchange(), 6 + 6);
+        assert_eq!(t.level_message_counts(), vec![15, 6, 6]);
+    }
+
+    #[test]
+    fn degenerate_tree_levels_cost_nothing() {
+        // one chassis: the top tier vanishes, board pairs remain
+        let t = TopologyTree::new(8, &[2, 4]);
+        assert_eq!(t.n_groups(2), 1);
+        assert_eq!(t.messages_at_level(2), 0);
+        assert_eq!(t.gather_messages_at_level(1), 0, "nothing leaves the chassis");
+        assert_eq!(t.pair_messages_at_level(1), 4 * 3);
+        // single board: nothing leaves shared memory at all
+        let t = TopologyTree::new(4, &[8, 2]);
+        assert_eq!(t.fabric_messages_per_exchange(), 0);
+        assert_eq!(t.total_messages_per_exchange(), 4 * 3);
+    }
+
+    #[test]
+    fn leaders_descend_the_tree_and_rotate() {
+        let t = TopologyTree::new(10, &[2, 2]);
+        // fixed: first rank leads at every level
+        assert_eq!(t.leader_of(1, 2, LeaderRotation::Fixed, 7), 4);
+        assert_eq!(t.leader_of(3, 1, LeaderRotation::Fixed, 7), 6);
+        assert!(t.is_leader(0, 2, LeaderRotation::Fixed, 0));
+        assert!(!t.is_leader(1, 1, LeaderRotation::Fixed, 0));
+        // round-robin at exchange 1: chassis 1 -> board 3 -> rank 7
+        assert_eq!(t.leader_of(1, 2, LeaderRotation::RoundRobin, 1), 7);
+        // and back to the first rank on even exchanges
+        assert_eq!(t.leader_of(1, 2, LeaderRotation::RoundRobin, 2), 4);
+        // ragged solo chassis: only one board, rotation cycles its ranks
+        assert_eq!(t.leader_of(2, 2, LeaderRotation::RoundRobin, 1), 9);
+        assert_eq!(t.leader_of(2, 2, LeaderRotation::RoundRobin, 2), 8);
+        // the leader is always a member of its group
+        for level in 0..=t.depth() {
+            for g in 0..t.n_groups(level) {
+                for x in 0..6u64 {
+                    for rot in [LeaderRotation::Fixed, LeaderRotation::RoundRobin] {
+                        let r = t.leader_of(g, level, rot, x);
+                        assert!(t.ranks_of(g, level).contains(&r), "g={g} level={level}");
+                    }
+                }
+            }
+        }
+        // exactly one leader per group per exchange
+        for x in 0..4u64 {
+            for level in 1..=t.depth() {
+                let leaders: Vec<u32> = (0..t.n_ranks())
+                    .filter(|&r| t.is_leader(r, level, LeaderRotation::RoundRobin, x))
+                    .collect();
+                assert_eq!(leaders.len() as u32, t.n_groups(level), "x={x} level={level}");
+            }
+        }
+    }
+
+    #[test]
+    fn three_level_tree_counts() {
+        // 16 ranks, tree:2,2,2 — 8 boards, 4 chassis, 2 racks.
+        let t = TopologyTree::new(16, &[2, 2, 2]);
+        assert_eq!(t.depth(), 3);
+        assert_eq!(
+            t.level_message_counts(),
+            vec![
+                8 * 2 + 8,     // direct posts + rank gathers
+                4 * 2 + 4,     // board pairs per chassis + board gathers
+                2 * 2 + 2,     // chassis pairs per rack + chassis gathers
+                2,             // rack pair
+            ]
+        );
+        // deeper trees put dramatically fewer messages on the top fabric
+        assert_eq!(t.messages_at_level(3), 2);
+        assert!(t.fabric_messages_per_exchange() < 16 * 15);
     }
 }

@@ -12,10 +12,11 @@
 //!   crosses one shared mailbox matrix, the transport analogue of MPI
 //!   point-to-point over the fabric for every pair.
 //! * [`crate::comm::hier::HierCluster`] — **hierarchical**
-//!   (`--topology nodes:<k>`): ranks are grouped into virtual nodes;
-//!   intra-node pairs exchange directly while inter-node traffic is
-//!   aggregated at per-node leaders into one framed message per node
-//!   pair.
+//!   (`--topology tree:<k1>,<k2>,...`, with `nodes:<k>` as one-level
+//!   sugar): ranks are grouped into an L-level tree of boards, chassis
+//!   and racks; same-board pairs exchange directly while traffic that
+//!   crosses a group boundary is aggregated at per-group leaders into
+//!   ONE framed message per ordered sibling-group pair at every level.
 
 use anyhow::Result;
 
@@ -38,23 +39,30 @@ use anyhow::Result;
 /// * **flat** ([`crate::comm::local::LocalCluster`]) — every rank sends
 ///   P−1 messages per exchange, all accounted as *inter-node*: the flat
 ///   transport is topology-blind, so every pair crosses the shared
-///   fabric (the `P(P−1)` cliff the paper measures).
-/// * **hierarchical** ([`crate::comm::hier::HierCluster`], N > 1 nodes)
-///   — a rank sends one *intra-node* message to each of its s−1
-///   same-node peers; a **non-leader** additionally sends exactly ONE
-///   intra-node gather message (its whole off-node payload) to its node
-///   leader; a **leader** additionally sends exactly N−1 *inter-node*
-///   aggregated messages, one per other node. Summed over ranks this is
+///   fabric (the `P(P−1)` cliff the paper measures). The per-level
+///   columns stay empty — there are no levels to attribute to.
+/// * **hierarchical** ([`crate::comm::hier::HierCluster`]) — messages
+///   are attributed to the *link level* they cross (see
+///   [`crate::comm::topology::TopologyTree`]): level 0 carries the
+///   direct same-board posts plus each non-leader's ONE gather message
+///   to its board leader; level `g >= 1` carries the leaders' ONE
+///   aggregated message per ordered sibling-group pair plus the
+///   up-gathers toward the next tier's leaders. Summed over ranks each
+///   level equals
+///   [`TopologyTree::messages_at_level`](crate::comm::topology::TopologyTree::messages_at_level)
+///   exactly; at depth 1 this is the classic
 ///   `Σ sᵢ(sᵢ−1) + Σ (sᵢ−1) + N(N−1)`
 ///   ([`crate::comm::topology::NodeMap::total_messages_per_exchange`]).
 ///
 /// Relay bytes are accounted where they are *sent*: a non-leader's
-/// gather payload appears in its own `bytes_sent` (intra) and again in
-/// its leader's `bytes_sent` (inter) when forwarded — the hierarchical
-/// protocol really does move those bytes twice, trading a cheap
-/// node-local hop for `P(P−1) → N(N−1)` fabric messages. `bytes_recv`
-/// stays payload-only: the bytes delivered to this rank's incoming
-/// column, regardless of the route they took.
+/// gather payload appears in its own `bytes_sent` (level 0) and again
+/// in each relaying leader's `bytes_sent` (the level it forwards on) —
+/// the hierarchical protocol really does move those bytes once per hop,
+/// trading cheap low-tier hops for `P(P−1) → N(N−1)`-style collapses on
+/// every fabric tier. Scatter (downward) hops mirror the gathers and
+/// are not accounted, matching the closed form. `bytes_recv` stays
+/// payload-only: the bytes delivered to this rank's incoming column,
+/// regardless of the route they took.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct ExchangeStats {
     /// Bytes this rank sent (sum over destinations, self excluded;
@@ -77,6 +85,15 @@ pub struct ExchangeStats {
     pub intra_bytes: u64,
     /// Bytes carried by `inter_messages`.
     pub inter_bytes: u64,
+    /// Messages this rank sent per link level (length `L + 1` on an
+    /// L-level tree transport; index 0 = intra-board, index `g` =
+    /// crossing level-`g` group boundaries). `intra_messages` is level
+    /// 0, `inter_messages` the sum of levels >= 1. Empty on the flat
+    /// transport, which has no levels.
+    pub level_messages: Vec<u64>,
+    /// Bytes carried per link level (same indexing as
+    /// `level_messages`).
+    pub level_bytes: Vec<u64>,
     /// Payload bytes posted per destination rank (`per_dst_bytes[d]`,
     /// length P; index `self` is the loopback block). This is the
     /// rank's row of the step's traffic matrix — the quantity the

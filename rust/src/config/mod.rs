@@ -5,4 +5,6 @@ pub mod network;
 pub mod run;
 
 pub use network::NetworkParams;
-pub use run::{Backend, ExchangeCadence, Mode, Routing, RunConfig, Topology};
+pub use run::{
+    Backend, ExchangeCadence, LeaderRotation, Mode, Routing, RunConfig, Topology, TreeShape,
+};

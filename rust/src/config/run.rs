@@ -132,32 +132,158 @@ impl std::fmt::Display for ExchangeCadence {
     }
 }
 
-/// How live ranks are grouped onto (virtual) nodes — the transport
+/// Maximum depth of a `tree:` topology. Four tiers cover the paper's
+/// ExaNeSt/EuroExa context (board → chassis → rack) with one to spare.
+pub const MAX_TREE_LEVELS: usize = 4;
+
+/// Branching factors of an L-level topology tree, smallest tier first:
+/// `tree:4,2` means 4 ranks per board and 2 boards per chassis (any
+/// number of chassis). Fixed capacity so [`Topology`] stays `Copy`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TreeShape {
+    levels: [u32; MAX_TREE_LEVELS],
+    n_levels: u8,
+}
+
+impl TreeShape {
+    /// Build a shape from branching factors (smallest tier first).
+    pub fn new(levels: &[u32]) -> Result<Self> {
+        if levels.is_empty() {
+            bail!("tree topology needs at least one level (tree:<k1>[,<k2>...])");
+        }
+        if levels.len() > MAX_TREE_LEVELS {
+            bail!(
+                "tree topology supports at most {MAX_TREE_LEVELS} levels, got {}",
+                levels.len()
+            );
+        }
+        if levels.iter().any(|&k| k == 0) {
+            bail!("tree topology branching factors must be at least 1");
+        }
+        let mut arr = [1u32; MAX_TREE_LEVELS];
+        arr[..levels.len()].copy_from_slice(levels);
+        Ok(Self {
+            levels: arr,
+            n_levels: levels.len() as u8,
+        })
+    }
+
+    /// One-level shape (`nodes:<k>` sugar). Panics on `k == 0`.
+    pub fn one_level(k: u32) -> Self {
+        Self::new(&[k]).expect("one-level shape needs k >= 1")
+    }
+
+    /// The branching factors, smallest tier first.
+    pub fn levels(&self) -> &[u32] {
+        &self.levels[..self.n_levels as usize]
+    }
+
+    /// Number of grouping levels (1 = boards only, 3 = board → chassis
+    /// → rack).
+    pub fn depth(&self) -> usize {
+        self.n_levels as usize
+    }
+
+    /// Ranks per lowest-tier group (board).
+    pub fn ranks_per_board(&self) -> u32 {
+        self.levels[0]
+    }
+}
+
+impl std::fmt::Display for TreeShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, k) in self.levels().iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{k}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Who pays the aggregation CPU cost in a hierarchical topology: the
+/// per-group leaders that gather, aggregate and scatter each exchange.
+///
+/// `fixed` pins every group's leadership to its first rank (rank 0 of
+/// each board leads the board, the chassis, the rack...), so the same
+/// ranks do leader work every exchange. `round-robin` rotates
+/// leadership through the group members exchange by exchange, spreading
+/// the aggregation CPU load evenly — message counts, bytes on each
+/// link level and the spike raster are unchanged (the rotation decides
+/// *who* relays, never *what* travels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LeaderRotation {
+    /// The first rank of each group leads every exchange.
+    #[default]
+    Fixed,
+    /// Leadership rotates through the group members per exchange.
+    RoundRobin,
+}
+
+impl std::str::FromStr for LeaderRotation {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "fixed" => Ok(LeaderRotation::Fixed),
+            "round-robin" | "roundrobin" | "rr" => Ok(LeaderRotation::RoundRobin),
+            other => bail!("unknown leader rotation {other:?} (fixed|round-robin)"),
+        }
+    }
+}
+
+impl std::fmt::Display for LeaderRotation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LeaderRotation::Fixed => write!(f, "fixed"),
+            LeaderRotation::RoundRobin => write!(f, "round-robin"),
+        }
+    }
+}
+
+/// How live ranks are grouped onto the fabric hierarchy — the transport
 /// *topology* (see [`crate::comm`]).
 ///
 /// Orthogonal to [`Routing`] (*where* spikes travel) and
 /// [`ExchangeCadence`] (*how often*): topology decides *what crosses
 /// the fabric*. `flat` sends every rank pair's message through the
 /// shared transport (`P(P−1)` messages per exchange — the paper's
-/// measured regime); `nodes:<k>` groups `k` consecutive ranks per node
-/// and aggregates all inter-node traffic at per-node leaders into one
-/// framed message per node pair (`N(N−1)` messages), the hierarchical
-/// exchange of the ExaNeSt-class fabrics the paper argues for. The
-/// spike raster is bitwise identical either way.
+/// measured regime); `tree:<k1>,<k2>,...` groups ranks into an L-level
+/// hierarchy (k1 ranks per board, k2 boards per chassis, k3 chassis per
+/// rack) and aggregates traffic at per-group leaders so sibling groups
+/// exchange ONE framed message per ordered pair at every level — the
+/// multi-tier exchange of the ExaNeSt-class fabrics the paper argues
+/// for. `nodes:<k>` is sugar for the one-level `tree:<k>`. The spike
+/// raster is bitwise identical whatever the topology.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Topology {
     /// One shared mailbox fabric for every rank pair (the baseline).
     Flat,
-    /// Two-level node-leader aggregation with this many ranks per node.
+    /// Two-level node-leader aggregation with this many ranks per node
+    /// (sugar for the one-level tree).
     Nodes(u32),
+    /// L-level leader hierarchy (board → chassis → rack ...).
+    Tree(TreeShape),
 }
 
 impl Topology {
-    /// Ranks per virtual node, when the topology declares one.
+    /// Ranks per lowest-tier group (virtual node / board), when the
+    /// topology declares one.
     pub fn ranks_per_node(&self) -> Option<u32> {
         match self {
             Topology::Flat => None,
             Topology::Nodes(k) => Some(*k),
+            Topology::Tree(t) => Some(t.ranks_per_board()),
+        }
+    }
+
+    /// The grouping tree this topology declares (`None` for flat);
+    /// `nodes:<k>` is sugar for the one-level `tree:<k>`.
+    pub fn tree(&self) -> Option<TreeShape> {
+        match self {
+            Topology::Flat => None,
+            Topology::Nodes(k) => Some(TreeShape::one_level(*k)),
+            Topology::Tree(t) => Some(*t),
         }
     }
 }
@@ -166,24 +292,32 @@ impl std::str::FromStr for Topology {
     type Err = anyhow::Error;
     fn from_str(s: &str) -> Result<Self> {
         let s = s.to_ascii_lowercase();
-        match s.as_str() {
-            "flat" => Ok(Topology::Flat),
-            _ => {
-                let k: u32 = s
-                    .strip_prefix("nodes:")
-                    .ok_or_else(|| {
-                        anyhow::anyhow!("unknown topology {s:?} (flat|nodes:<ranks_per_node>)")
-                    })?
-                    .parse()
-                    .map_err(|_| {
-                        anyhow::anyhow!("bad ranks-per-node in topology {s:?} (nodes:<k>)")
-                    })?;
-                if k == 0 {
-                    bail!("topology nodes:<k> needs at least 1 rank per node");
-                }
-                Ok(Topology::Nodes(k))
-            }
+        if s == "flat" {
+            return Ok(Topology::Flat);
         }
+        if let Some(rest) = s.strip_prefix("nodes:") {
+            let k: u32 = rest.parse().map_err(|_| {
+                anyhow::anyhow!("bad ranks-per-node in topology {s:?} (nodes:<k>)")
+            })?;
+            if k == 0 {
+                bail!("topology nodes:<k> needs at least 1 rank per node");
+            }
+            return Ok(Topology::Nodes(k));
+        }
+        if let Some(rest) = s.strip_prefix("tree:") {
+            let mut levels = Vec::new();
+            for part in rest.split(',') {
+                let k: u32 = part.trim().parse().map_err(|_| {
+                    anyhow::anyhow!(
+                        "bad branching factor {part:?} in topology {s:?} \
+                         (tree:<k1>[,<k2>...])"
+                    )
+                })?;
+                levels.push(k);
+            }
+            return Ok(Topology::Tree(TreeShape::new(&levels)?));
+        }
+        bail!("unknown topology {s:?} (flat|nodes:<k>|tree:<k1>[,<k2>...])")
     }
 }
 
@@ -192,6 +326,7 @@ impl std::fmt::Display for Topology {
         match self {
             Topology::Flat => write!(f, "flat"),
             Topology::Nodes(k) => write!(f, "nodes:{k}"),
+            Topology::Tree(t) => write!(f, "tree:{t}"),
         }
     }
 }
@@ -238,10 +373,14 @@ pub struct RunConfig {
     /// (and their per-message latency bill) changes.
     pub exchange_every: ExchangeCadence,
     /// Transport topology: flat (every rank pair on the fabric) or
-    /// node-leader hierarchical aggregation (live: the two-level
-    /// `HierCluster`; modeled: the hierarchical exchange pricing with
-    /// this node packing).
+    /// leader-hierarchical aggregation (live: the L-level
+    /// `HierCluster`; modeled: the tree exchange pricing with this
+    /// grouping). `nodes:<k>` is sugar for the one-level `tree:<k>`.
     pub topology: Topology,
+    /// Leader-rotation policy for hierarchical topologies: which rank
+    /// of each group pays the aggregation CPU cost per exchange.
+    /// Ignored under the flat topology.
+    pub leader_rotation: LeaderRotation,
     /// Platform preset name for modeled runs (see `platform::presets`).
     pub platform: String,
     /// Interconnect preset for modeled runs ("ib", "eth1g", ...).
@@ -267,6 +406,7 @@ impl Default for RunConfig {
             routing: Routing::Filtered,
             exchange_every: ExchangeCadence::Step,
             topology: Topology::Flat,
+            leader_rotation: LeaderRotation::Fixed,
             platform: "xeon".to_string(),
             interconnect: "ib".to_string(),
             artifacts_dir: "artifacts".to_string(),
@@ -308,6 +448,8 @@ impl RunConfig {
                 );
             }
         }
+        // Topology::Tree needs no check here: TreeShape's constructors
+        // already reject empty shapes and zero branching factors.
         if self.topology.ranks_per_node() == Some(0) {
             bail!("topology nodes:<k> needs at least 1 rank per node");
         }
@@ -380,6 +522,9 @@ impl RunConfig {
             .parse()?;
         cfg.topology = doc
             .str_or("run", "topology", &cfg.topology.to_string())
+            .parse()?;
+        cfg.leader_rotation = doc
+            .str_or("run", "leader_rotation", &cfg.leader_rotation.to_string())
             .parse()?;
         cfg.platform = doc.str_or("run", "platform", &cfg.platform);
         cfg.interconnect = doc.str_or("run", "interconnect", &cfg.interconnect);
@@ -499,6 +644,51 @@ mod tests {
         }
         assert_eq!(Topology::Nodes(8).ranks_per_node(), Some(8));
         assert_eq!(Topology::Flat.ranks_per_node(), None);
+    }
+
+    #[test]
+    fn tree_topology_parses_and_round_trips() {
+        let parse = |s: &str| s.parse::<Topology>();
+        let t42 = parse("tree:4,2").unwrap();
+        assert_eq!(t42, Topology::Tree(TreeShape::new(&[4, 2]).unwrap()));
+        assert_eq!(t42.ranks_per_node(), Some(4));
+        assert_eq!(t42.tree().unwrap().levels(), &[4, 2]);
+        assert_eq!(t42.tree().unwrap().depth(), 2);
+        // nodes:<k> is sugar for the one-level tree
+        assert_eq!(
+            parse("nodes:4").unwrap().tree().unwrap().levels(),
+            parse("tree:4").unwrap().tree().unwrap().levels()
+        );
+        assert!(Topology::Flat.tree().is_none());
+        // display round-trips through FromStr
+        for s in ["tree:4", "tree:4,2", "tree:2,2,2"] {
+            assert_eq!(parse(s).unwrap().to_string(), s);
+        }
+        // rejects malformed shapes
+        assert!(parse("tree:").is_err());
+        assert!(parse("tree:4,0").is_err());
+        assert!(parse("tree:4,x").is_err());
+        assert!(parse("tree:1,1,1,1,1").is_err(), "too many levels");
+        assert!(TreeShape::new(&[]).is_err());
+    }
+
+    #[test]
+    fn leader_rotation_parses_and_defaults_to_fixed() {
+        assert_eq!(RunConfig::default().leader_rotation, LeaderRotation::Fixed);
+        let parse = |s: &str| s.parse::<LeaderRotation>();
+        assert_eq!(parse("fixed").unwrap(), LeaderRotation::Fixed);
+        assert_eq!(parse("round-robin").unwrap(), LeaderRotation::RoundRobin);
+        assert_eq!(parse("rr").unwrap(), LeaderRotation::RoundRobin);
+        assert!(parse("random").is_err());
+        for s in ["fixed", "round-robin"] {
+            assert_eq!(parse(s).unwrap().to_string(), s);
+        }
+        let cfg = RunConfig::from_toml_str(
+            "[run]\ntopology = \"tree:2,2\"\nleader_rotation = \"round-robin\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.leader_rotation, LeaderRotation::RoundRobin);
+        assert_eq!(cfg.topology.tree().unwrap().levels(), &[2, 2]);
     }
 
     #[test]

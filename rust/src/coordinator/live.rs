@@ -36,14 +36,17 @@
 //! Orthogonally again, the transport *topology*
 //! ([`RunConfig::topology`](crate::config::RunConfig)) decides what the
 //! exchange puts on the fabric: `flat` drives the shared
-//! [`LocalCluster`] mailbox for every rank pair, while `nodes:<k>`
-//! drives the two-level [`HierCluster`](crate::comm::hier::HierCluster),
-//! where same-node spikes take the node-local path and all inter-node
-//! traffic is gathered at per-node leaders into one framed message per
-//! node pair — the leader gather/aggregate/scatter runs inside the
-//! transport call, i.e. inside the profiled Communication lap. The
-//! incoming column a rank collects is byte-identical either way, so the
-//! topology is invisible to delivery.
+//! [`LocalCluster`] mailbox for every rank pair, while
+//! `tree:<k1>,<k2>,...` (and its one-level sugar `nodes:<k>`) drives
+//! the L-level [`HierCluster`](crate::comm::hier::HierCluster), where
+//! same-board spikes take the board-local path and boundary-crossing
+//! traffic is aggregated at per-group leaders into one framed message
+//! per sibling-group pair at every tier — the leader
+//! gather/aggregate/scatter runs inside the transport call, i.e.
+//! inside the profiled Communication lap, and which rank pays it is
+//! the [`RunConfig::leader_rotation`](crate::config::RunConfig)
+//! policy. The incoming column a rank collects is byte-identical
+//! either way, so the topology is invisible to delivery.
 //!
 //! Because connectivity, stimulus and initial state are pure functions of
 //! global neuron ids, and synaptic weights live on an exact f32 grid, the
@@ -96,7 +99,18 @@ pub fn run_live(cfg: &RunConfig) -> Result<RunResult> {
     let t0 = std::time::Instant::now();
     let reports: Vec<RankReport> = match cfg.topology {
         Topology::Flat => spawn_ranks(cfg, &part, LocalCluster::new(p), steps)?,
-        Topology::Nodes(k) => spawn_ranks(cfg, &part, HierCluster::new(p, k), steps)?,
+        Topology::Nodes(k) => spawn_ranks(
+            cfg,
+            &part,
+            HierCluster::with_tree(p, &[k], cfg.leader_rotation),
+            steps,
+        )?,
+        Topology::Tree(shape) => spawn_ranks(
+            cfg,
+            &part,
+            HierCluster::with_tree(p, shape.levels(), cfg.leader_rotation),
+            steps,
+        )?,
     };
     let wall_s = t0.elapsed().as_secs_f64();
 
@@ -431,6 +445,30 @@ mod tests {
         // the node-local traffic moved to intra-node messages instead
         assert!(hier.comm_volume.iter().all(|c| c.intra_messages > 0));
         assert!(flat.comm_volume.iter().all(|c| c.intra_messages == 0));
+    }
+
+    #[test]
+    fn tree_topology_with_rotation_matches_flat_bitwise() {
+        use crate::config::{LeaderRotation, TreeShape};
+        let flat = run_live(&tiny_cfg(4)).unwrap();
+        let mut cfg = tiny_cfg(4);
+        cfg.topology = Topology::Tree(TreeShape::new(&[2, 2]).unwrap());
+        cfg.leader_rotation = LeaderRotation::RoundRobin;
+        let tree = run_live(&cfg).unwrap();
+        assert!(flat.total_spikes > 0, "network must be active");
+        assert_eq!(flat.pop_counts, tree.pop_counts, "tree changed the raster");
+        assert_eq!(flat.total_syn_events, tree.total_syn_events);
+        // P=4 as tree:2,2 -> 2 boards under a single chassis: two
+        // board-pair messages per exchange, nothing on the top tier.
+        let level = |r: &RunResult, lvl: usize| -> u64 {
+            r.comm_volume
+                .iter()
+                .map(|c| c.level_messages.get(lvl).copied().unwrap_or(0))
+                .sum()
+        };
+        let exchanges = tree.comm_volume.iter().map(|c| c.exchanges).max().unwrap();
+        assert_eq!(level(&tree, 1), 2 * exchanges);
+        assert_eq!(level(&tree, 2), 0, "single chassis: no top-tier traffic");
     }
 
     #[test]

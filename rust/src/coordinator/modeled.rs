@@ -32,9 +32,10 @@ pub fn run_modeled_trace(cfg: &RunConfig, trace: &WorkloadTrace) -> Result<RunRe
     let link = interconnect_by_name(&cfg.interconnect)?;
     // One ranks-per-node notion per run: the platform's packing
     // (PlatformModel::ranks_per_node, shared with the energy model's
-    // node occupancy) — unless a nodes:<k> topology declares a
-    // different packing what-if, which then drives contention grouping,
-    // intra/inter link split and leader aggregation alike.
+    // node occupancy) — unless a nodes:<k> / tree:<...> topology
+    // declares a different packing what-if, which then drives
+    // contention grouping, intra/inter link split and leader
+    // aggregation alike (the tree's board size is its rank packing).
     let mut run = match cfg.topology {
         Topology::Flat => ModelRun::new(
             HeteroCluster::homogeneous(
@@ -49,6 +50,17 @@ pub fn run_modeled_trace(cfg: &RunConfig, trace: &WorkloadTrace) -> Result<RunRe
             AllToAllModel::new(link, k),
         )
         .with_hierarchical(),
+        Topology::Tree(shape) => {
+            let k1 = shape.ranks_per_board();
+            ModelRun::new(
+                HeteroCluster::homogeneous(platform.node.core, cfg.procs, k1),
+                AllToAllModel::new(link, k1),
+            )
+            .with_tree(
+                shape.levels().to_vec(),
+                platform.tree_links(link, shape.depth()),
+            )
+        }
     };
     // Exchange cadence: price one collective per epoch instead of one
     // per step (latency amortized over the min-delay window; payload
@@ -237,6 +249,26 @@ mod tests {
             hier.wall_s < 0.5 * flat.wall_s,
             "hier {} vs flat {}",
             hier.wall_s,
+            flat.wall_s
+        );
+    }
+
+    #[test]
+    fn tree_topology_prices_per_level_links() {
+        // The L-level generalization of the hierarchical what-if: a
+        // board → chassis tree with the platform's per-tier link
+        // derating still collapses the flat P(P−1) envelope storm at
+        // the paper's worst point.
+        let flat = run_modeled(&cfg("xeon", "ib", 256)).unwrap();
+        let mut tcfg = cfg("xeon", "ib", 256);
+        tcfg.topology = "tree:12,4".parse().unwrap();
+        let tree = run_modeled(&tcfg).unwrap();
+        assert_eq!(tree.topology.tree().unwrap().levels(), &[12, 4]);
+        assert_eq!(flat.total_spikes, tree.total_spikes, "same workload");
+        assert!(
+            tree.wall_s < 0.5 * flat.wall_s,
+            "tree {} vs flat {}",
+            tree.wall_s,
             flat.wall_s
         );
     }

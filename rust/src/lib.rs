@@ -27,11 +27,14 @@
 //!   cannot act before `t + delay_min_steps`, so the per-message
 //!   latency is amortized over the whole window and the raster is
 //!   again bitwise identical. A third orthogonal axis, the transport
-//!   *topology* ([`config::Topology`]), groups ranks into virtual
-//!   nodes whose leaders aggregate all inter-node traffic into one
-//!   source-tagged message per node pair (`comm::hier`), collapsing
-//!   the fabric message count from `P(P−1)` to `N(N−1)` per exchange
-//!   — again with a bitwise-identical raster.
+//!   *topology* ([`config::Topology`]), groups ranks into an L-level
+//!   tree of boards, chassis and racks whose per-group leaders
+//!   aggregate all boundary-crossing traffic into one source-tagged
+//!   message per sibling-group pair at every tier (`comm::hier`),
+//!   collapsing the fabric message count from `P(P−1)` to
+//!   `N(N−1)`-per-tier per exchange — again with a bitwise-identical
+//!   raster, under either leader-rotation policy
+//!   ([`config::LeaderRotation`]).
 //! * [`simnet`] — interconnect models (InfiniBand, Ethernet, GbE) used by
 //!   the modeled/timing mode.
 //! * [`platform`] — CPU/node models of the paper's three testbeds

@@ -4,7 +4,8 @@
 //! dpsnn run [config.toml] [--neurons N] [--procs P] [--seconds S]
 //!           [--backend native|xla] [--mode live|modeled]
 //!           [--routing filtered|broadcast] [--exchange-every step|min-delay|N]
-//!           [--topology flat|nodes:<k>]
+//!           [--topology flat|nodes:<k>|tree:<k1>,<k2>,...]
+//!           [--leader-rotation fixed|round-robin]
 //!           [--platform NAME] [--interconnect NAME] [--seed X] [--progress]
 //! dpsnn repro <fig1..fig8|table1..table4|all> [--fast]
 //! dpsnn bench-smoke [--neurons N] [--procs P] [--seconds S] [--out F]
@@ -31,8 +32,11 @@ USAGE:
                                         modeled platform (see --record-trace);
                                         pass --delay-min to price an
                                         --exchange-every cadence what-if,
-                                        --topology nodes:<k> for a
+                                        --topology nodes:<k> or
+                                        tree:<k1>,<k2>,... for a
                                         hierarchical-exchange what-if
+                                        (tree tiers priced with the
+                                        platform's per-level links)
   dpsnn bench-smoke [options]           tiny live runs: filtered vs broadcast
                                         routing, per-step vs min-delay cadence,
                                         flat vs hierarchical topology; JSON
@@ -49,10 +53,17 @@ RUN OPTIONS:
   --routing R        filtered | broadcast spike exchange (default filtered)
   --exchange-every C step | min-delay | N — steps per spike exchange
                      (default step; N must not exceed delay_min_steps)
-  --topology T       flat | nodes:<k> — transport topology (default flat);
-                     nodes:<k> groups k consecutive ranks per virtual node
-                     and aggregates inter-node spikes at per-node leaders
-                     (one framed message per node pair)
+  --topology T       flat | nodes:<k> | tree:<k1>,<k2>,... — transport
+                     topology (default flat); tree:<k1>,<k2>,... groups
+                     k1 ranks per board, k2 boards per chassis, k3
+                     chassis per rack and aggregates boundary-crossing
+                     spikes at per-group leaders (ONE framed message per
+                     sibling-group pair at every tier); nodes:<k> is
+                     sugar for tree:<k>
+  --leader-rotation R fixed | round-robin — which rank of each group
+                     pays the aggregation CPU cost per exchange
+                     (default fixed; raster and message counts are
+                     identical either way)
   --platform NAME    modeled platform preset (default xeon)
   --interconnect IC  ib | eth1g | shm | exanest (default ib)
   --artifacts DIR    AOT artifact directory (default artifacts)
@@ -66,8 +77,9 @@ BENCH-SMOKE OPTIONS:
                      cadence run batches over (default 8)
   --out F            JSON output path (default BENCH_routing.json)
   --topology T       hierarchical topology to compare against flat
-                     (default nodes:2; must be nodes:<k>, ideally with
-                     procs > k so the hierarchy spans >= 2 nodes)
+                     (default nodes:2; nodes:<k> or tree:<k1>,...,
+                     ideally with procs > k1 so the hierarchy spans
+                     >= 2 groups)
   --topology-out F   topology JSON output path (default BENCH_topology.json)
   --platform NAME    power-model platform preset (default xeon)
 
@@ -126,6 +138,9 @@ fn build_config(args: &Args) -> Result<RunConfig> {
     }
     if let Some(t) = args.get("topology") {
         cfg.topology = t.parse()?;
+    }
+    if let Some(r) = args.get("leader-rotation") {
+        cfg.leader_rotation = r.parse()?;
     }
     if let Some(p) = args.get("platform") {
         cfg.platform = p.to_string();
@@ -250,13 +265,15 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
     let delay_min: u32 = args.get_or("delay-min", 8u32)?;
     let out = args.get_or("out", "BENCH_routing.json".to_string())?;
     // default nodes:2 keeps the hierarchy non-degenerate (>= 2 virtual
-    // nodes) at the default 4-proc workload; CI passes nodes:4 with 8
-    // procs for the same reason
+    // nodes) at the default 4-proc workload; CI passes tree:2,2 with 8
+    // procs so the multi-tier path is exercised too
     let topology: Topology = args.get_or("topology", Topology::Nodes(2))?;
     // reject a non-hierarchical topology up front, before burning
     // minutes of live benchmark runs on a flag that can't be compared
-    let hier_k = topology.ranks_per_node().ok_or_else(|| {
-        anyhow::anyhow!("bench-smoke --topology must be nodes:<k>, got {topology}")
+    let tree_shape = topology.tree().ok_or_else(|| {
+        anyhow::anyhow!(
+            "bench-smoke --topology must be nodes:<k> or tree:<k1>,..., got {topology}"
+        )
     })?;
     let topo_out = args.get_or("topology-out", "BENCH_topology.json".to_string())?;
     let platform_name = args.get_or("platform", "xeon".to_string())?;
@@ -438,10 +455,10 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
         "{topology} must move >= 2x fewer inter-node messages \
          ({inter_hier} vs {inter_flat})"
     );
-    let hier_model = dpsnn::simnet::AllToAllModel::new(link, hier_k);
+    let hier_model = dpsnn::simnet::AllToAllModel::new(link, tree_shape.ranks_per_board());
     let x_hier = exchanges(&hier);
     anyhow::ensure!(
-        inter_hier == hier_model.hierarchical_inter_messages(procs) * x_hier,
+        inter_hier == hier_model.tree_fabric_messages(procs, tree_shape.levels()) * x_hier,
         "live inter-node messages ({inter_hier}) must match the model's \
          closed form exactly"
     );
@@ -451,7 +468,9 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
     let sent_total: u64 = filtered.comm_volume.iter().map(|c| c.bytes_sent).sum();
     let mean_pair_bytes = (sent_total / (pairs * steps.max(1) as u64)).max(1);
     let modeled_flat_s = hier_model.exchange_time(procs, mean_pair_bytes).total();
-    let modeled_hier_s = hier_model.exchange_time_hierarchical(procs, mean_pair_bytes).total();
+    let modeled_hier_s = hier_model
+        .exchange_time_tree(procs, mean_pair_bytes, tree_shape.levels(), &[])
+        .total();
     let topo_json = format!(
         concat!(
             "{{\n",

@@ -33,6 +33,14 @@ pub struct CommVolume {
     pub intra_bytes: u64,
     /// Bytes carried by `inter_messages`.
     pub inter_bytes: u64,
+    /// Messages sent per link level of the topology tree (index 0 =
+    /// intra-board; index `g` = crossing level-`g` group boundaries —
+    /// see [`crate::comm::topology::TopologyTree`]). Empty under the
+    /// flat topology. Summed over ranks and divided by `exchanges`,
+    /// each level equals the tree's closed form exactly.
+    pub level_messages: Vec<u64>,
+    /// Bytes carried per link level (same indexing).
+    pub level_bytes: Vec<u64>,
     /// Transport exchanges (all-to-all collectives) this rank took part
     /// in: one per step under per-step cadence, one per delay epoch
     /// under epoch batching. Each exchange is followed by exactly one
@@ -58,6 +66,18 @@ impl CommVolume {
             self.per_dst_bytes.resize(stats.per_dst_bytes.len(), 0);
         }
         for (acc, &b) in self.per_dst_bytes.iter_mut().zip(&stats.per_dst_bytes) {
+            *acc += b;
+        }
+        if self.level_messages.len() < stats.level_messages.len() {
+            self.level_messages.resize(stats.level_messages.len(), 0);
+        }
+        for (acc, &m) in self.level_messages.iter_mut().zip(&stats.level_messages) {
+            *acc += m;
+        }
+        if self.level_bytes.len() < stats.level_bytes.len() {
+            self.level_bytes.resize(stats.level_bytes.len(), 0);
+        }
+        for (acc, &b) in self.level_bytes.iter_mut().zip(&stats.level_bytes) {
             *acc += b;
         }
     }
@@ -133,6 +153,8 @@ mod tests {
             inter_messages: 1,
             intra_bytes: 6,
             inter_bytes: 4,
+            level_messages: vec![2, 1],
+            level_bytes: vec![6, 4],
             per_dst_bytes: vec![4, 0, 6, 4],
         });
         v.observe(&ExchangeStats {
@@ -143,6 +165,8 @@ mod tests {
             inter_messages: 2,
             intra_bytes: 2,
             inter_bytes: 0,
+            level_messages: vec![1, 1, 1],
+            level_bytes: vec![2, 0, 0],
             per_dst_bytes: vec![0, 2, 0, 0],
         });
         assert_eq!(v.bytes_sent, 12);
@@ -154,6 +178,9 @@ mod tests {
         assert_eq!(v.inter_bytes, 4);
         assert_eq!(v.exchanges, 2, "one exchange per observe()");
         assert_eq!(v.per_dst_bytes, vec![4, 2, 6, 4]);
+        // per-level columns widen to the deepest tree observed
+        assert_eq!(v.level_messages, vec![3, 2, 1]);
+        assert_eq!(v.level_bytes, vec![8, 4, 0]);
     }
 
     #[test]

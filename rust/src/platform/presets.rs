@@ -22,6 +22,14 @@ pub struct PlatformModel {
     /// cards draw their full figure; the SoC boards' on-chip GbE MACs
     /// draw a small fraction of it.
     pub nic_power_scale: f64,
+    /// Latency (and per-message fabric cost) multiplier per fabric tier
+    /// above the board link, for `--topology tree:` pricing: chassis
+    /// and rack links cross more switch stages than the board
+    /// backplane. The ExaNeSt-class unified fabrics derate gently;
+    /// commodity cluster tiers roughly double per stage.
+    pub tier_latency_mul: f64,
+    /// Bandwidth divisor per fabric tier above the board link.
+    pub tier_bandwidth_div: f64,
 }
 
 impl PlatformModel {
@@ -40,6 +48,27 @@ impl PlatformModel {
     /// platform (preset agreement is asserted in this module's tests).
     pub fn comm_model(&self, link: LinkModel) -> AllToAllModel {
         AllToAllModel::new(link, self.ranks_per_node())
+    }
+
+    /// Per-level fabric links for an L-level `tree:` topology: link
+    /// level 1 (board-to-board) is `base` unchanged; each tier above
+    /// multiplies latency and per-message fabric cost by
+    /// `tier_latency_mul` and divides bandwidth by
+    /// `tier_bandwidth_div`. Feed the result to
+    /// [`AllToAllModel::exchange_time_tree`].
+    pub fn tree_links(&self, base: LinkModel, levels: usize) -> Vec<LinkModel> {
+        (0..levels)
+            .map(|t| {
+                let lat = self.tier_latency_mul.powi(t as i32);
+                let bw = self.tier_bandwidth_div.powi(t as i32);
+                LinkModel {
+                    alpha_s: base.alpha_s * lat,
+                    beta_bps: base.beta_bps / bw,
+                    fabric_msg_cost_s: base.fabric_msg_cost_s * lat,
+                    ..base
+                }
+            })
+            .collect()
     }
 }
 
@@ -114,6 +143,8 @@ pub fn platform_by_name(name: &str) -> Result<PlatformModel> {
             baseline_w: 564.0,
             default_interconnect: "ib",
             nic_power_scale: 1.0,
+            tier_latency_mul: 2.0,
+            tier_bandwidth_div: 1.5,
         },
         "xeon-eth" => PlatformModel {
             name: "xeon-eth",
@@ -121,6 +152,8 @@ pub fn platform_by_name(name: &str) -> Result<PlatformModel> {
             baseline_w: 564.0,
             default_interconnect: "eth1g",
             nic_power_scale: 1.0,
+            tier_latency_mul: 2.0,
+            tier_bandwidth_div: 1.5,
         },
         "westmere" => PlatformModel {
             name: "westmere",
@@ -128,6 +161,8 @@ pub fn platform_by_name(name: &str) -> Result<PlatformModel> {
             baseline_w: 564.0,
             default_interconnect: "ib",
             nic_power_scale: 1.0,
+            tier_latency_mul: 2.0,
+            tier_bandwidth_div: 1.5,
         },
         "westmere-eth" => PlatformModel {
             name: "westmere-eth",
@@ -135,6 +170,8 @@ pub fn platform_by_name(name: &str) -> Result<PlatformModel> {
             baseline_w: 564.0,
             default_interconnect: "eth1g",
             nic_power_scale: 1.0,
+            tier_latency_mul: 2.0,
+            tier_bandwidth_div: 1.5,
         },
         "trenz" | "exanest" => PlatformModel {
             name: "trenz",
@@ -142,6 +179,9 @@ pub fn platform_by_name(name: &str) -> Result<PlatformModel> {
             baseline_w: 20.0,
             default_interconnect: "eth1g",
             nic_power_scale: 0.06,
+            // ExaNeSt's unified multi-tier fabric derates gently
+            tier_latency_mul: 1.4,
+            tier_bandwidth_div: 1.2,
         },
         "jetson" | "arm" => PlatformModel {
             name: "jetson",
@@ -149,6 +189,8 @@ pub fn platform_by_name(name: &str) -> Result<PlatformModel> {
             baseline_w: 49.2,
             default_interconnect: "eth1g",
             nic_power_scale: 0.06,
+            tier_latency_mul: 2.0,
+            tier_bandwidth_div: 1.5,
         },
         other => bail!(
             "unknown platform {other:?} \
@@ -209,5 +251,32 @@ mod tests {
     fn baselines_match_paper() {
         assert_eq!(platform_by_name("westmere").unwrap().baseline_w, 564.0);
         assert_eq!(platform_by_name("jetson").unwrap().baseline_w, 49.2);
+    }
+
+    #[test]
+    fn tree_links_derate_per_tier() {
+        for name in all_names() {
+            let p = platform_by_name(name).unwrap();
+            let base =
+                crate::simnet::presets::interconnect_by_name(p.default_interconnect).unwrap();
+            let links = p.tree_links(base, 3);
+            assert_eq!(links.len(), 3);
+            // the board tier is the base link untouched
+            assert_eq!(links[0].alpha_s, base.alpha_s, "{name}");
+            assert_eq!(links[0].beta_bps, base.beta_bps, "{name}");
+            // every tier above is strictly slower in latency and
+            // no faster in bandwidth
+            for t in 1..links.len() {
+                assert!(links[t].alpha_s > links[t - 1].alpha_s, "{name} tier {t}");
+                assert!(links[t].beta_bps <= links[t - 1].beta_bps, "{name} tier {t}");
+                assert!(
+                    links[t].fabric_msg_cost_s >= links[t - 1].fabric_msg_cost_s,
+                    "{name} tier {t}"
+                );
+            }
+            // the ExaNeSt prototype's unified fabric derates most gently
+            let trenz = platform_by_name("trenz").unwrap();
+            assert!(trenz.tier_latency_mul <= p.tier_latency_mul, "{name}");
+        }
     }
 }

@@ -14,6 +14,17 @@
 //! The model is deliberately homogeneous-workload: with the paper's
 //! homogeneous connection probability every rank sends the same payload
 //! to every other rank.
+//!
+//! Beyond the flat exchange, the model prices the leader-aggregated
+//! protocols of [`crate::comm::hier::HierCluster`]:
+//! [`AllToAllModel::exchange_time_hierarchical`] for the two-level
+//! node-leader split, and [`AllToAllModel::exchange_time_tree`] for the
+//! general L-level board → chassis → rack hierarchy with **per-level
+//! link parameters** (each tier its own latency/bandwidth — see
+//! [`crate::platform::presets::PlatformModel::tree_links`]). Message
+//! counts always come from the exact ragged-aware closed forms in
+//! [`crate::comm::topology`], so live accounting, model prediction and
+//! what-if sweeps can be compared number for number.
 
 use super::link::LinkModel;
 use super::presets::SHM;
@@ -151,6 +162,133 @@ impl AllToAllModel {
         let fabric = internode_msgs as f64 * self.net.fabric_msg_cost_s
             + internode_bytes as f64 / bisection_bps;
         CommBreakdown { software, fabric }
+    }
+
+    /// Time for one **L-level tree** exchange (`--topology
+    /// tree:<k1>,<k2>,...`): the live [`crate::comm::hier::HierCluster`]
+    /// protocol priced end-to-end with one [`LinkModel`] per fabric
+    /// tier. `shape` holds the branching factors (ranks per board,
+    /// boards per chassis, ...); `level_links[t]` prices link level
+    /// `t + 1` (level 0 is always the shared-memory transport; missing
+    /// entries fall back to this model's `net` link).
+    ///
+    /// The software term sums the barrier-separated leader laps, level
+    /// by level: direct board posts, then per boundary the gather
+    /// receive + scatter send mirror (`2(c−1)` messages of the child
+    /// blob), the `sib−1` aggregated sibling-pair posts, and the ONE
+    /// up-forward of everything bound beyond the parent. The fabric
+    /// term charges each tier's link with that tier's exact closed-form
+    /// message count ([`crate::comm::topology::TopologyTree`], ragged
+    /// shapes included; up/down forwards count twice — once per
+    /// direction), with payload sizes from the even-packing model.
+    /// Leader *rotation* never appears here: the phases are
+    /// barrier-separated, so per-exchange wall time is
+    /// rotation-invariant — rotation spreads which rank pays the CPU,
+    /// which matters for per-rank load and energy, not latency.
+    ///
+    /// A one-level `shape` with default links reproduces
+    /// [`Self::exchange_time_hierarchical`] exactly; callers should
+    /// pack the model with `ranks_per_node == shape[0]` so the
+    /// single-board degenerate case agrees too.
+    pub fn exchange_time_tree(
+        &self,
+        p: u32,
+        bytes_per_msg: u64,
+        shape: &[u32],
+        level_links: &[LinkModel],
+    ) -> CommBreakdown {
+        if p <= 1 {
+            return CommBreakdown::default();
+        }
+        // One source of truth for the packing arithmetic: the same tree
+        // the live transport's accounting is tested against.
+        let tree = crate::comm::topology::TopologyTree::new(p, shape);
+        let depth = tree.depth();
+        let groups = |g: usize| -> u64 { tree.n_groups(g) as u64 };
+        if groups(1) <= 1 {
+            // one board: the whole exchange is the board-local flat path
+            return self.exchange_time(p, bytes_per_msg);
+        }
+        let b = bytes_per_msg;
+        let link = |g: usize| -> LinkModel {
+            if g == 0 {
+                self.shm
+            } else {
+                level_links.get(g - 1).copied().unwrap_or(self.net)
+            }
+        };
+        // even-model ranks per level-g group (group 0 is always full)
+        let s = |g: usize| -> u64 { tree.group_size(0, g) as u64 };
+        // gather blob crossing the level-g boundary: one level-(g-1)
+        // child group's ranks times their beyond-group destinations
+        let gb = |g: usize| -> u64 {
+            let frame = if g == 1 {
+                crate::comm::hier::GATHER_FRAME_BYTES
+            } else {
+                crate::comm::hier::HIER_FRAME_BYTES
+            } as u64;
+            s(g - 1) * ((p as u64) - s(g)) * (b + frame)
+        };
+        let pair_bytes = |g: usize| -> u64 {
+            s(g) * s(g) * (b + crate::comm::hier::HIER_FRAME_BYTES as u64)
+        };
+
+        let k1 = s(1);
+        let mut software = (k1 - 1) as f64 * self.shm.message_time(b);
+        let mut fabric = 0.0f64;
+        for g in 1..=depth {
+            if groups(g) > 1 {
+                // the level-g leader receives its children's gathers and
+                // mirrors them on the way down
+                let c = (shape[g - 1] as u64).min(groups(g - 1));
+                software += 2.0 * (c - 1) as f64 * link(g - 1).message_time(gb(g));
+            }
+            // aggregated pair posts to the sibling groups of this tier
+            let sib = if g == depth {
+                groups(g)
+            } else {
+                (shape[g] as u64).min(groups(g))
+            };
+            if sib > 1 {
+                software += (sib - 1) as f64 * link(g).message_time(pair_bytes(g));
+            }
+            // ONE up-forward of everything bound beyond the parent
+            if g < depth && groups(g + 1) > 1 {
+                software += link(g).message_time(gb(g + 1));
+            }
+
+            // fabric occupancy of this tier: exact closed-form counts
+            let pair_cnt = tree.pair_messages_at_level(g);
+            let gather_cnt = tree.gather_messages_at_level(g);
+            if pair_cnt + gather_cnt > 0 {
+                let lg = link(g);
+                let msgs = pair_cnt + 2 * gather_cnt;
+                let gather_bytes = if gather_cnt > 0 {
+                    2 * gather_cnt * gb(g + 1)
+                } else {
+                    0
+                };
+                let bytes = pair_cnt * pair_bytes(g) + gather_bytes;
+                let bisection_bps = lg.beta_bps * (groups(g) as f64 / 2.0).max(1.0);
+                fabric += msgs as f64 * lg.fabric_msg_cost_s
+                    + bytes as f64 / bisection_bps;
+            }
+        }
+        CommBreakdown { software, fabric }
+    }
+
+    /// Per-link-level messages of one tree exchange (index 0 =
+    /// intra-board) — the exact ragged-aware closed form the live
+    /// transport's accounting sums to
+    /// ([`crate::comm::topology::TopologyTree::level_message_counts`]).
+    pub fn tree_level_messages(&self, p: u32, shape: &[u32]) -> Vec<u64> {
+        crate::comm::topology::TopologyTree::new(p.max(1), shape).level_message_counts()
+    }
+
+    /// Fabric messages (link levels >= 1) of one tree exchange.
+    pub fn tree_fabric_messages(&self, p: u32, shape: &[u32]) -> u64 {
+        crate::comm::topology::TopologyTree::new(p.max(1), shape)
+            .fabric_messages_per_exchange()
     }
 
     /// Total messages of one hierarchical exchange (direct intra-node +
@@ -518,6 +656,71 @@ mod tests {
         // one rank per node: inter equals the flat count
         let m1 = AllToAllModel::new(IB, 1);
         assert_eq!(m1.hierarchical_inter_messages(6), 30);
+    }
+
+    #[test]
+    fn one_level_tree_matches_hierarchical_pricing() {
+        // tree:<k> with default links IS the two-level node-leader
+        // exchange — same software lap, same fabric term.
+        let m = AllToAllModel::new(IB, 16);
+        for p in [2u32, 8, 16, 32, 64, 256, 300] {
+            for b in [0u64, 25, 1000] {
+                let tree = m.exchange_time_tree(p, b, &[16], &[]);
+                let hier = m.exchange_time_hierarchical(p, b);
+                let close = |a: f64, b: f64| (a - b).abs() <= 1e-12 * b.abs().max(1e-30);
+                assert!(close(tree.software, hier.software), "p={p} b={b}");
+                assert!(close(tree.fabric, hier.fabric), "p={p} b={b}");
+            }
+        }
+        assert_eq!(m.exchange_time_tree(1, 25, &[16], &[]).total(), 0.0);
+    }
+
+    #[test]
+    fn tree_message_counts_match_topology_closed_form() {
+        let m = AllToAllModel::new(IB, 2);
+        // 10 ranks as tree:2,2 (ragged chassis): levels by hand
+        assert_eq!(m.tree_level_messages(10, &[2, 2]), vec![15, 6, 6]);
+        assert_eq!(m.tree_fabric_messages(10, &[2, 2]), 12);
+        // depth 1 equals the NodeMap closed form
+        assert_eq!(
+            m.tree_fabric_messages(8, &[2]),
+            m.hierarchical_inter_messages(8)
+        );
+    }
+
+    #[test]
+    fn deeper_tree_wins_when_the_top_tier_is_expensive() {
+        // The tentpole's pricing claim: once the top tier is slow
+        // relative to the tiers below, adding a chassis level between
+        // board and rack collapses the expensive-link message count
+        // (240 board pairs -> 12 chassis pairs at P=256) and wins
+        // end-to-end, despite the extra gather/scatter hops.
+        let m = AllToAllModel::new(IB, 16);
+        let rack = LinkModel {
+            alpha_s: IB.alpha_s * 10.0,
+            fabric_msg_cost_s: IB.fabric_msg_cost_s * 10.0,
+            ..IB
+        };
+        let p = 256;
+        let two = m.exchange_time_tree(p, 25, &[16], &[rack]).total();
+        let three = m.exchange_time_tree(p, 25, &[16, 4], &[IB, rack]).total();
+        assert!(three < two, "three-tier {three} vs two-tier {two}");
+        // inside one chassis the extra tier never touches the rack link
+        let small_two = m.exchange_time_tree(32, 25, &[16], &[rack]).total();
+        let small_three = m.exchange_time_tree(32, 25, &[16, 4], &[IB, rack]).total();
+        assert!(small_three < small_two);
+    }
+
+    #[test]
+    fn tree_with_uniform_links_adds_hops_for_nothing() {
+        // With a SINGLE uniform link class the deeper tree only adds
+        // store-and-forward hops on the same fabric, so it must not
+        // beat the two-level split — per-level pricing is what makes
+        // depth worthwhile, and this pins the null case.
+        let m = AllToAllModel::new(IB, 16);
+        let two = m.exchange_time_tree(256, 25, &[16], &[IB]).total();
+        let three = m.exchange_time_tree(256, 25, &[16, 4], &[IB, IB]).total();
+        assert!(three > two, "uniform links: three {three} vs two {two}");
     }
 
     #[test]

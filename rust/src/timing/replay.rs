@@ -29,6 +29,7 @@ use crate::comm::aer::{epoch_framing_bytes, SPIKE_WIRE_BYTES};
 use crate::platform::hetero::HeteroCluster;
 use crate::profiling::components::Components;
 use crate::simnet::alltoall_model::AllToAllModel;
+use crate::simnet::link::LinkModel;
 use crate::trace::workload::WorkloadTrace;
 
 /// Per-spike fixed overhead (decode + row lookup) at Westmere speed, s.
@@ -68,6 +69,12 @@ pub struct ModelRun {
     /// and is ignored when `peers` is set — the neighbor model already
     /// restricts the traffic matrix.
     pub hierarchical: bool,
+    /// When set, each collective is priced as the L-level tree exchange
+    /// ([`AllToAllModel::exchange_time_tree`]): branching factors plus
+    /// one link per fabric tier (board, chassis, rack...). Takes
+    /// precedence over `hierarchical`, composes with `filter_coverage`
+    /// like it, and is ignored when `peers` is set.
+    pub tree: Option<(Vec<u32>, Vec<LinkModel>)>,
 }
 
 /// Replay result.
@@ -92,6 +99,11 @@ pub struct ModeledOutcome {
     /// node-pair envelopes are NOT thinned by filtering, which only
     /// shrinks their payload.
     pub inter_messages: u64,
+    /// Per-link-level message totals over the run (index 0 =
+    /// intra-board), from the topology tree's closed form × exchanges.
+    /// Empty unless the run priced a tree topology
+    /// ([`ModelRun::with_tree`]).
+    pub level_messages: Vec<u64>,
 }
 
 impl ModeledOutcome {
@@ -114,6 +126,7 @@ impl ModelRun {
             filter_coverage: None,
             steps_per_exchange: 1,
             hierarchical: false,
+            tree: None,
         }
     }
 
@@ -140,6 +153,15 @@ impl ModelRun {
     /// node-leader aggregated exchange (`--topology nodes:<k>`).
     pub fn with_hierarchical(mut self) -> Self {
         self.hierarchical = true;
+        self
+    }
+
+    /// Tree-topology variant: price each collective as the L-level
+    /// leader hierarchy (`--topology tree:<k1>,<k2>,...`) with one
+    /// fabric link per tier (see
+    /// [`crate::platform::presets::PlatformModel::tree_links`]).
+    pub fn with_tree(mut self, shape: Vec<u32>, links: Vec<LinkModel>) -> Self {
+        self.tree = Some((shape, links));
         self
     }
 
@@ -176,10 +198,19 @@ impl ModelRun {
 
         let cont = self.contention(p);
         let epoch = self.steps_per_exchange.max(1);
+        // Per-level messages one tree collective costs (tree runs only).
+        let level_per_exchange: Option<Vec<u64>> = match (&self.tree, self.peers) {
+            (Some((shape, _)), None) if p > 1 => {
+                Some(self.comm.tree_level_messages(p, shape))
+            }
+            _ => None,
+        };
         // Fabric messages one collective costs under this run's topology
         // and routing (see ModeledOutcome::inter_messages).
         let inter_per_exchange: u64 = if p <= 1 {
             0
+        } else if let Some(levels) = &level_per_exchange {
+            levels[1..].iter().sum()
         } else if self.hierarchical && self.peers.is_none() {
             self.comm.hierarchical_inter_messages(p)
         } else {
@@ -244,17 +275,27 @@ impl ModelRun {
             epoch_len += 1;
             if epoch_len == epoch || step + 1 == trace.steps() {
                 let bytes = epoch_bytes.round() as u64 + epoch_framing_bytes(epoch, epoch_len);
-                let exch = match (self.peers, self.hierarchical, self.filter_coverage) {
-                    (Some(k), _, _) => self.comm.exchange_time_neighbors(p, bytes, k),
-                    (None, true, q) => {
+                let exch = match (self.peers, &self.tree, self.hierarchical, self.filter_coverage)
+                {
+                    (Some(k), _, _, _) => self.comm.exchange_time_neighbors(p, bytes, k),
+                    (None, Some((shape, links)), _, q) => {
+                        // topology tree:<...>: filtering thins the
+                        // aggregated payload; the per-level pair
+                        // message counts are unchanged
+                        let b = (bytes as f64 * q.unwrap_or(1.0)).round() as u64;
+                        self.comm.exchange_time_tree(p, b, shape, links)
+                    }
+                    (None, None, true, q) => {
                         // topology nodes:<k>: filtering thins the
                         // aggregated payload; the N(N-1) node-pair
                         // message count is unchanged
                         let b = (bytes as f64 * q.unwrap_or(1.0)).round() as u64;
                         self.comm.exchange_time_hierarchical(p, b)
                     }
-                    (None, false, Some(q)) => self.comm.exchange_time_filtered(p, bytes, q),
-                    (None, false, None) => self.comm.exchange_time(p, bytes),
+                    (None, None, false, Some(q)) => {
+                        self.comm.exchange_time_filtered(p, bytes, q)
+                    }
+                    (None, None, false, None) => self.comm.exchange_time(p, bytes),
                 };
                 let comm = exch.total();
                 comm_s += comm;
@@ -284,6 +325,9 @@ impl ModelRun {
             mean_rate_hz: trace.mean_rate_hz(),
             exchanges,
             inter_messages,
+            level_messages: level_per_exchange
+                .map(|levels| levels.iter().map(|m| m * exchanges).collect())
+                .unwrap_or_default(),
         }
     }
 }
@@ -449,6 +493,50 @@ mod tests {
             flat.components.communication
         );
         assert!(hier.wall_s < flat.wall_s);
+    }
+
+    #[test]
+    fn tree_pricing_threads_through_replay() {
+        let w = AnalyticWorkload::paper_regime(NetworkParams::paper_20480(), 5);
+        let trace = w.generate(256, 1.0);
+        let base = ModelRun::new(
+            HeteroCluster::homogeneous(XEON_E5_2630V2, 256, 16),
+            AllToAllModel::new(IB, 16),
+        );
+        // depth-1 tree with the default link reproduces the two-level
+        // hierarchical path, message counts and pricing alike
+        let hier = base.clone().with_hierarchical().replay(&trace);
+        let tree1 = base.clone().with_tree(vec![16], vec![]).replay(&trace);
+        assert_eq!(tree1.inter_messages, hier.inter_messages);
+        assert!(
+            (tree1.components.communication - hier.components.communication).abs()
+                < 1e-9 * hier.components.communication,
+            "tree {} vs hier {}",
+            tree1.components.communication,
+            hier.components.communication
+        );
+        assert_eq!(tree1.level_messages.len(), 2);
+        assert_eq!(tree1.level_messages[1], tree1.inter_messages);
+        assert!(hier.level_messages.is_empty(), "non-tree runs track no levels");
+        // a chassis tier pays off once the top link is derated
+        let rack = LinkModel {
+            alpha_s: IB.alpha_s * 10.0,
+            fabric_msg_cost_s: IB.fabric_msg_cost_s * 10.0,
+            ..IB
+        };
+        let two = base.clone().with_tree(vec![16], vec![rack]).replay(&trace);
+        let three = base.with_tree(vec![16, 4], vec![IB, rack]).replay(&trace);
+        assert_eq!(two.total_spikes, three.total_spikes, "same workload");
+        assert!(
+            three.components.communication < two.components.communication,
+            "three {} vs two {}",
+            three.components.communication,
+            two.components.communication
+        );
+        // 256 ranks as 16 boards x 4 chassis: 4·3 rack-tier messages
+        // per exchange instead of 16·15
+        assert_eq!(three.level_messages[2], 12 * three.exchanges);
+        assert_eq!(two.level_messages[1], 240 * two.exchanges);
     }
 
     #[test]

@@ -6,8 +6,10 @@
 //! the live accounting must equal the interconnect model's closed-form
 //! prediction *exactly*.
 
-use dpsnn::comm::NodeMap;
-use dpsnn::config::{ExchangeCadence, Mode, NetworkParams, Routing, RunConfig, Topology};
+use dpsnn::comm::{NodeMap, TopologyTree};
+use dpsnn::config::{
+    ExchangeCadence, LeaderRotation, Mode, NetworkParams, Routing, RunConfig, Topology, TreeShape,
+};
 use dpsnn::coordinator::{self, RunResult};
 use dpsnn::metrics::expected_exchanges;
 use dpsnn::simnet::presets::IB;
@@ -121,6 +123,198 @@ fn acceptance_nodes4_at_p8_cuts_inter_node_messages() {
     // the hierarchy N(N-1) aggregated messages
     assert_eq!(fi, 8 * 7 * x);
     assert_eq!(hi, 2 * x);
+}
+
+/// Live per-level message total of a run at one link level.
+fn level_messages(r: &RunResult, lvl: usize) -> u64 {
+    r.comm_volume
+        .iter()
+        .map(|c| c.level_messages.get(lvl).copied().unwrap_or(0))
+        .sum()
+}
+
+#[test]
+fn acceptance_tree_4_2_at_p16_is_bitwise_identical() {
+    // The PR's acceptance bar: --topology tree:4,2 at P=16 (4 ranks
+    // per board, 2 boards per chassis, 2 chassis) must produce a
+    // bitwise-identical raster to flat, and the live per-level message
+    // counts must equal the TopologyTree closed form exactly.
+    let flat = coordinator::run(&cfg(
+        16,
+        Routing::Filtered,
+        ExchangeCadence::Step,
+        Topology::Flat,
+    ))
+    .unwrap();
+    let shape = TreeShape::new(&[4, 2]).unwrap();
+    let run = coordinator::run(&cfg(
+        16,
+        Routing::Filtered,
+        ExchangeCadence::Step,
+        Topology::Tree(shape),
+    ))
+    .unwrap();
+    assert!(flat.total_spikes > 0, "network must be active");
+    assert_eq!(flat.pop_counts, run.pop_counts, "tree:4,2 changed the raster");
+    assert_eq!(flat.total_syn_events, run.total_syn_events);
+    assert_eq!(run.topology, Topology::Tree(shape));
+
+    let x = exchanges(&run);
+    assert_eq!(x, exchanges(&flat), "same cadence, same collectives");
+    let tree = TopologyTree::new(16, &[4, 2]);
+    for lvl in 0..=2usize {
+        assert_eq!(
+            level_messages(&run, lvl),
+            tree.messages_at_level(lvl) * x,
+            "level {lvl} accounting diverged from the closed form"
+        );
+    }
+    assert_eq!(inter_messages(&run), tree.fabric_messages_per_exchange() * x);
+    assert_eq!(total_messages(&run), tree.total_messages_per_exchange() * x);
+    // the top tier carries 2 chassis-pair messages per exchange where
+    // the flat exchange paid 16·15 = 240 envelopes
+    assert_eq!(tree.messages_at_level(2), 2);
+    assert_eq!(inter_messages(&flat), 240 * x);
+}
+
+#[test]
+fn ragged_trees_match_flat_and_closed_form() {
+    // Group sizes that do NOT divide P at one or both levels: ragged
+    // boards, ragged chassis, solo groups. Raster stays bitwise
+    // identical and every link level matches the closed form.
+    let reference = coordinator::run(&cfg(
+        1,
+        Routing::Filtered,
+        ExchangeCadence::Step,
+        Topology::Flat,
+    ))
+    .unwrap();
+    assert!(reference.total_spikes > 0, "network must be active");
+    for &(procs, shape) in &[
+        (6u32, &[4u32, 2][..]),  // ragged boards (4, 2) under one chassis
+        (10, &[3, 2]),           // boards (3, 3, 3, 1), chassis (2, 2)
+        (7, &[2, 2]),            // boards (2, 2, 2, 1), chassis (2, 2)
+    ] {
+        let t = TreeShape::new(shape).unwrap();
+        let run = coordinator::run(&cfg(
+            procs,
+            Routing::Filtered,
+            ExchangeCadence::Step,
+            Topology::Tree(t),
+        ))
+        .unwrap();
+        let tag = format!("P={procs} tree:{t}");
+        assert_eq!(run.pop_counts, reference.pop_counts, "raster diverged: {tag}");
+        let x = exchanges(&run);
+        let tree = TopologyTree::new(procs, shape);
+        assert_eq!(
+            total_messages(&run),
+            tree.total_messages_per_exchange() * x,
+            "{tag}"
+        );
+        for lvl in 0..=tree.depth() {
+            assert_eq!(
+                level_messages(&run, lvl),
+                tree.messages_at_level(lvl) * x,
+                "{tag} level {lvl}"
+            );
+        }
+        for v in &run.comm_volume {
+            assert_eq!(v.messages, v.intra_messages + v.inter_messages, "{tag}");
+        }
+    }
+}
+
+#[test]
+fn leader_rotation_keeps_raster_and_totals_spreads_load() {
+    // round-robin rotation must not change the raster or any summed
+    // message count — it only moves the relay work between ranks.
+    let shape = TreeShape::new(&[2, 2]).unwrap();
+    let mut base = cfg(
+        8,
+        Routing::Filtered,
+        ExchangeCadence::Step,
+        Topology::Tree(shape),
+    );
+    let fixed = coordinator::run(&base).unwrap();
+    base.leader_rotation = LeaderRotation::RoundRobin;
+    let rot = coordinator::run(&base).unwrap();
+    assert!(fixed.total_spikes > 0, "network must be active");
+    assert_eq!(fixed.pop_counts, rot.pop_counts, "rotation changed the raster");
+    assert_eq!(fixed.total_syn_events, rot.total_syn_events);
+    assert_eq!(total_messages(&fixed), total_messages(&rot));
+    assert_eq!(inter_messages(&fixed), inter_messages(&rot));
+    for lvl in 0..=2usize {
+        assert_eq!(level_messages(&fixed, lvl), level_messages(&rot, lvl), "level {lvl}");
+    }
+    // fixed leadership pins all fabric relaying onto first ranks:
+    // rank 1 (a plain board member) never sends beyond its board
+    assert_eq!(fixed.comm_volume[1].inter_messages, 0, "fixed: rank 1 led");
+    // rotation walks leadership through every rank over the run
+    for (rank, v) in rot.comm_volume.iter().enumerate() {
+        assert!(v.inter_messages > 0, "rank {rank} never took a leader turn");
+    }
+    // and the per-exchange totals still equal the closed form
+    let x = exchanges(&rot);
+    let tree = TopologyTree::new(8, &[2, 2]);
+    for lvl in 0..=2usize {
+        assert_eq!(level_messages(&rot, lvl), tree.messages_at_level(lvl) * x);
+    }
+}
+
+#[test]
+fn nodes_sugar_equals_one_level_tree() {
+    let a = coordinator::run(&cfg(
+        8,
+        Routing::Filtered,
+        ExchangeCadence::Step,
+        Topology::Nodes(4),
+    ))
+    .unwrap();
+    let b = coordinator::run(&cfg(
+        8,
+        Routing::Filtered,
+        ExchangeCadence::Step,
+        Topology::Tree(TreeShape::one_level(4)),
+    ))
+    .unwrap();
+    assert_eq!(a.pop_counts, b.pop_counts);
+    assert_eq!(total_messages(&a), total_messages(&b));
+    assert_eq!(inter_messages(&a), inter_messages(&b));
+    assert_eq!(level_messages(&a, 0), level_messages(&b, 0));
+    assert_eq!(level_messages(&a, 1), level_messages(&b, 1));
+}
+
+#[test]
+fn tree_composes_with_min_delay_batching() {
+    // tree:2,2 under min-delay cadence: exchanges shrink by the epoch
+    // AND each exchange still costs the closed-form fabric messages —
+    // the two axes multiply, tiers included.
+    let shape = TreeShape::new(&[2, 2]).unwrap();
+    let pc = cfg(
+        8,
+        Routing::Filtered,
+        ExchangeCadence::Step,
+        Topology::Tree(shape),
+    );
+    let bc = cfg(
+        8,
+        Routing::Filtered,
+        ExchangeCadence::MinDelay,
+        Topology::Tree(shape),
+    );
+    let per_step = coordinator::run(&pc).unwrap();
+    let batched = coordinator::run(&bc).unwrap();
+    assert_eq!(per_step.pop_counts, batched.pop_counts);
+    let steps = per_step.pop_counts.len() as u32;
+    // 8 ranks as tree:2,2 -> 4 boards, 2 chassis: per exchange the
+    // fabric carries 4 board pairs + 2 board gathers + 2 chassis pairs
+    let fabric = TopologyTree::new(8, &[2, 2]).fabric_messages_per_exchange();
+    assert_eq!(fabric, 8);
+    assert_eq!(exchanges(&per_step), steps as u64);
+    assert_eq!(exchanges(&batched), expected_exchanges(steps, 4));
+    assert_eq!(inter_messages(&per_step), fabric * steps as u64);
+    assert_eq!(inter_messages(&batched), fabric * expected_exchanges(steps, 4));
 }
 
 #[test]
