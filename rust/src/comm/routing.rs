@@ -38,18 +38,20 @@ pub struct RoutingTable {
 }
 
 impl RoutingTable {
-    /// Build the table for the local sources of `rank` (range from
-    /// `part`). Cost: at most `n_local * M` stateless synapse draws, with
-    /// an early exit once a source is known to cover every rank — for
-    /// dense connectivity the sweep stops after ~P ln P draws per source.
+    /// Build the table for the local sources of `rank` (whatever gid set
+    /// the placement policy gave it — rows are indexed by the rank's
+    /// local numbering). Cost: at most `n_local * M` stateless synapse
+    /// draws, with an early exit once a source is known to cover every
+    /// rank — for dense connectivity the sweep stops after ~P ln P draws
+    /// per source.
     pub fn build(cp: &ConnectivityParams, part: &Partition, rank: u32) -> Self {
-        let (lo, hi) = part.range(rank);
+        let owned = part.owned(rank);
         let p = part.n_ranks();
         let words_per_src = (p as usize).div_ceil(64);
-        let n_local = hi - lo;
+        let n_local = owned.len();
         let mut bits = vec![0u64; n_local as usize * words_per_src];
-        for s in lo..hi {
-            let base = (s - lo) as usize * words_per_src;
+        for (local, s) in owned.iter().enumerate() {
+            let base = local * words_per_src;
             let row = &mut bits[base..base + words_per_src];
             let mut covered = 0u32;
             for k in 0..cp.m {
@@ -185,6 +187,34 @@ mod tests {
                             "p={p} rank={rank} s={s} dst={dst}"
                         );
                     }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matches_incoming_rows_under_permuted_ownership() {
+        // same contract as above, but ownership is scattered by the
+        // round-robin placement: rows are in each rank's local numbering
+        use crate::config::PartitionPolicy;
+        use crate::engine::partition::AllocContext;
+        let c = cp(96, 3, 1234);
+        let part =
+            Partition::allocate(PartitionPolicy::RoundRobin, 96, 4, &AllocContext::empty());
+        let incoming: Vec<IncomingSynapses> = (0..4)
+            .map(|r| IncomingSynapses::build_owned(&c, part.owned(r)))
+            .collect();
+        for rank in 0..4 {
+            let table = RoutingTable::build(&c, &part, rank);
+            assert_eq!(table.n_local(), part.size(rank));
+            for (local, s) in part.owned(rank).iter().enumerate() {
+                for dst in 0..4 {
+                    let has_targets = !incoming[dst as usize].row(s).0.is_empty();
+                    assert_eq!(
+                        table.sends_to(local as u32, dst),
+                        has_targets,
+                        "rank={rank} s={s} dst={dst}"
+                    );
                 }
             }
         }

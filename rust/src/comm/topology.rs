@@ -262,6 +262,33 @@ impl TopologyTree {
         r.end - r.start
     }
 
+    /// Link level a point-to-point payload from rank `a` to rank `b`
+    /// traverses: 0 inside a board, `g` when the finest shared group of
+    /// `a` and `b` is at level `g` (so `L` = the top-tier fabric).
+    /// This is the per-pair view of the per-level message accounting,
+    /// and what comm-aware placement
+    /// ([`crate::engine::partition::GreedyCommsAllocator`]) prices.
+    ///
+    /// ```
+    /// use dpsnn::comm::TopologyTree;
+    ///
+    /// // 8 ranks, boards of 2, chassis of 2 boards
+    /// let t = TopologyTree::new(8, &[2, 2]);
+    /// assert_eq!(t.link_level(0, 1), 0); // same board
+    /// assert_eq!(t.link_level(0, 2), 1); // same chassis, other board
+    /// assert_eq!(t.link_level(0, 4), 2); // top-tier fabric
+    /// assert_eq!(t.link_level(5, 5), 0);
+    /// ```
+    pub fn link_level(&self, a: u32, b: u32) -> usize {
+        debug_assert!(a < self.p && b < self.p);
+        for g in 1..=self.depth() {
+            if self.group_of(a, g) == self.group_of(b, g) {
+                return g - 1;
+            }
+        }
+        self.depth()
+    }
+
     /// Level-`level-1` child groups of `parent` at level `level >= 1`.
     pub fn children_of(&self, parent: u32, level: usize) -> Range<u32> {
         debug_assert!((1..=self.depth()).contains(&level));
@@ -567,6 +594,29 @@ mod tests {
                 assert_eq!(leaders.len() as u32, t.n_groups(level), "x={x} level={level}");
             }
         }
+    }
+
+    #[test]
+    fn link_level_finds_the_finest_shared_group() {
+        let t = TopologyTree::new(10, &[2, 2]);
+        for a in 0..10u32 {
+            assert_eq!(t.link_level(a, a), 0);
+            for b in 0..10u32 {
+                assert_eq!(t.link_level(a, b), t.link_level(b, a));
+                let want = if t.group_of(a, 1) == t.group_of(b, 1) {
+                    0
+                } else if t.group_of(a, 2) == t.group_of(b, 2) {
+                    1
+                } else {
+                    2
+                };
+                assert_eq!(t.link_level(a, b), want, "a={a} b={b}");
+            }
+        }
+        // flat-ish tree: everything off-board is level 1
+        let t = TopologyTree::new(6, &[2]);
+        assert_eq!(t.link_level(0, 1), 0);
+        assert_eq!(t.link_level(0, 5), 1);
     }
 
     #[test]

@@ -6,5 +6,6 @@ pub mod run;
 
 pub use network::NetworkParams;
 pub use run::{
-    Backend, ExchangeCadence, LeaderRotation, Mode, Routing, RunConfig, Topology, TreeShape,
+    Backend, ExchangeCadence, LeaderRotation, Mode, PartitionPolicy, Routing, RunConfig,
+    Topology, TreeShape,
 };

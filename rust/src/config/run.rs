@@ -69,6 +69,51 @@ impl std::fmt::Display for Routing {
     }
 }
 
+/// Which neuron→rank placement policy builds the
+/// [`crate::engine::partition::Partition`] (see the `Allocator` trait
+/// there). Placement permutes *ownership* only — connectivity and
+/// stimulus are pure functions of gid, so the spike raster is bitwise
+/// identical under every policy; what changes is which traffic crosses
+/// which topology tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PartitionPolicy {
+    /// Contiguous index-order blocks (the paper's layout; identical to
+    /// the historical even split).
+    #[default]
+    Index,
+    /// Placement blocks dealt round-robin across ranks — the locality
+    /// worst case, useful as a bracketing baseline.
+    RoundRobin,
+    /// Comm-aware placement: pack strongly-connected blocks onto the
+    /// same rank/board/chassis using the partition-independent
+    /// connectome and the topology tree's link levels.
+    GreedyComms,
+}
+
+impl std::str::FromStr for PartitionPolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "index" => Ok(PartitionPolicy::Index),
+            "round-robin" | "roundrobin" => Ok(PartitionPolicy::RoundRobin),
+            "greedy-comms" | "greedycomms" => Ok(PartitionPolicy::GreedyComms),
+            other => bail!(
+                "unknown partition policy {other:?} (index|round-robin|greedy-comms)"
+            ),
+        }
+    }
+}
+
+impl std::fmt::Display for PartitionPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PartitionPolicy::Index => write!(f, "index"),
+            PartitionPolicy::RoundRobin => write!(f, "round-robin"),
+            PartitionPolicy::GreedyComms => write!(f, "greedy-comms"),
+        }
+    }
+}
+
 /// How often ranks exchange spikes and synchronize (the live step
 /// protocol in [`crate::coordinator`]; modeled runs price the same
 /// choice analytically).
@@ -381,6 +426,10 @@ pub struct RunConfig {
     /// of each group pays the aggregation CPU cost per exchange.
     /// Ignored under the flat topology.
     pub leader_rotation: LeaderRotation,
+    /// Neuron→rank placement policy (live runs; modeled runs price the
+    /// index layout). `greedy-comms` reads the connectome and the
+    /// topology tree at startup to co-locate strongly-coupled blocks.
+    pub partition: PartitionPolicy,
     /// Platform preset name for modeled runs (see `platform::presets`).
     pub platform: String,
     /// Interconnect preset for modeled runs ("ib", "eth1g", ...).
@@ -407,6 +456,7 @@ impl Default for RunConfig {
             exchange_every: ExchangeCadence::Step,
             topology: Topology::Flat,
             leader_rotation: LeaderRotation::Fixed,
+            partition: PartitionPolicy::Index,
             platform: "xeon".to_string(),
             interconnect: "ib".to_string(),
             artifacts_dir: "artifacts".to_string(),
@@ -525,6 +575,9 @@ impl RunConfig {
             .parse()?;
         cfg.leader_rotation = doc
             .str_or("run", "leader_rotation", &cfg.leader_rotation.to_string())
+            .parse()?;
+        cfg.partition = doc
+            .str_or("run", "partition", &cfg.partition.to_string())
             .parse()?;
         cfg.platform = doc.str_or("run", "platform", &cfg.platform);
         cfg.interconnect = doc.str_or("run", "interconnect", &cfg.interconnect);
@@ -689,6 +742,27 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.leader_rotation, LeaderRotation::RoundRobin);
         assert_eq!(cfg.topology.tree().unwrap().levels(), &[2, 2]);
+    }
+
+    #[test]
+    fn partition_policy_parses_and_defaults_to_index() {
+        assert_eq!(RunConfig::default().partition, PartitionPolicy::Index);
+        let parse = |s: &str| s.parse::<PartitionPolicy>();
+        assert_eq!(parse("index").unwrap(), PartitionPolicy::Index);
+        assert_eq!(parse("round-robin").unwrap(), PartitionPolicy::RoundRobin);
+        assert_eq!(parse("GREEDY-COMMS").unwrap(), PartitionPolicy::GreedyComms);
+        assert_eq!(parse("greedycomms").unwrap(), PartitionPolicy::GreedyComms);
+        assert!(parse("alphabetical").is_err());
+        // display round-trips through FromStr
+        for s in ["index", "round-robin", "greedy-comms"] {
+            assert_eq!(parse(s).unwrap().to_string(), s);
+        }
+        let cfg = RunConfig::from_toml_str(
+            "[run]\npartition = \"greedy-comms\"\ntopology = \"tree:2,2\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.partition, PartitionPolicy::GreedyComms);
+        assert!(RunConfig::from_toml_str("[run]\npartition = \"zorder\"").is_err());
     }
 
     #[test]

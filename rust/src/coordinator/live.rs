@@ -48,16 +48,26 @@
 //! policy. The incoming column a rank collects is byte-identical
 //! either way, so the topology is invisible to delivery.
 //!
+//! Before any thread starts, the placement layer
+//! ([`Partition::allocate`], selected by
+//! [`RunConfig::partition`](crate::config::RunConfig)) decides which
+//! rank owns which gids: contiguous index blocks, round-robin scatter,
+//! or the comm-aware `greedy-comms` policy that reads the stateless
+//! connectome and the topology tree to keep strongly-coupled blocks on
+//! cheap links.
+//!
 //! Because connectivity, stimulus and initial state are pure functions of
 //! global neuron ids, and synaptic weights live on an exact f32 grid, the
 //! spike raster is **bitwise identical for every process count, both
-//! routing protocols, every exchange cadence and both topologies** — a
+//! routing protocols, every exchange cadence, both topologies and every
+//! placement policy** — a
 //! spike dropped by the filter would have met an empty synapse row at
 //! the destination anyway, a spike deferred by an epoch still lands in
-//! its per-step arrival slot, and aggregation re-frames routes without
-//! touching payloads. Tested in `rust/tests/determinism.rs`,
-//! `rust/tests/routing_props.rs`, `rust/tests/cadence_props.rs` and
-//! `rust/tests/topology_props.rs`.
+//! its per-step arrival slot, aggregation re-frames routes without
+//! touching payloads, and placement permutes ownership without touching
+//! any gid-keyed draw. Tested in `rust/tests/determinism.rs`,
+//! `rust/tests/routing_props.rs`, `rust/tests/cadence_props.rs`,
+//! `rust/tests/topology_props.rs` and `rust/tests/partition_props.rs`.
 
 use anyhow::{Context, Result};
 
@@ -65,9 +75,10 @@ use crate::comm::aer::{decode_spikes, decode_spikes_epoch, encode_spikes, encode
 use crate::comm::hier::HierCluster;
 use crate::comm::local::LocalCluster;
 use crate::comm::routing::RoutingTable;
+use crate::comm::topology::TopologyTree;
 use crate::comm::transport::Transport;
 use crate::config::{Mode, Routing, RunConfig, Topology};
-use crate::engine::partition::Partition;
+use crate::engine::partition::{AllocContext, Partition};
 use crate::engine::rank::RankEngine;
 use crate::engine::spike::Spike;
 use crate::metrics::comm_volume::CommVolume;
@@ -89,12 +100,24 @@ struct RankReport {
     step_spikes: Vec<u32>,
     /// Transport bytes/messages this rank moved over the run.
     comm: CommVolume,
+    /// Spikes this rank emitted from excitatory sources (gid below the
+    /// exc/inh boundary) — a placement-invariant split of the totals.
+    exc_spikes: u64,
 }
 
 pub fn run_live(cfg: &RunConfig) -> Result<RunResult> {
     let p = cfg.procs;
     let steps = cfg.steps();
-    let part = Partition::even(cfg.net.n_neurons, p);
+    // Placement: the allocator policy decides which rank owns which
+    // gids. greedy-comms reads the stateless connectome plus the
+    // topology tree (flat runs get all-equal link costs).
+    let cp = ConnectivityParams::from_network(&cfg.net, cfg.seed);
+    let tree = cfg
+        .topology
+        .tree()
+        .map(|shape| TopologyTree::new(p, shape.levels()));
+    let ctx = AllocContext { connectivity: Some(&cp), tree: tree.as_ref() };
+    let part = Partition::allocate(cfg.partition, cfg.net.n_neurons, p, &ctx);
 
     let t0 = std::time::Instant::now();
     let reports: Vec<RankReport> = match cfg.topology {
@@ -123,6 +146,8 @@ pub fn run_live(cfg: &RunConfig) -> Result<RunResult> {
     let total_spikes: u64 = reports.iter().map(|r| r.totals.spikes).sum();
     let total_syn: u64 = reports.iter().map(|r| r.totals.syn_events).sum();
     let total_ext: u64 = reports.iter().map(|r| r.totals.ext_events).sum();
+    let total_exc: u64 = reports.iter().map(|r| r.exc_spikes).sum();
+    let rank_spikes: Vec<u64> = reports.iter().map(|r| r.totals.spikes).collect();
 
     // Whole-population per-step raster: sum of per-rank emission counts.
     let mut pop_counts = vec![0u32; steps as usize];
@@ -160,6 +185,8 @@ pub fn run_live(cfg: &RunConfig) -> Result<RunResult> {
         total_spikes,
         total_syn_events: total_syn,
         total_ext_events: total_ext,
+        total_exc_spikes: total_exc,
+        rank_spikes,
         mean_rate_hz: total_spikes as f64 / cfg.net.n_neurons as f64 / sim_s,
         pop_counts,
         energy: None,
@@ -167,6 +194,7 @@ pub fn run_live(cfg: &RunConfig) -> Result<RunResult> {
         comm_volume,
         routing: cfg.routing,
         topology: cfg.topology,
+        partition: cfg.partition,
         backend: match cfg.backend {
             crate::config::Backend::Native => "native",
             crate::config::Backend::Xla => "xla",
@@ -206,8 +234,8 @@ fn rank_main<T: Transport>(
     transport: T,
     steps: u32,
 ) -> Result<RankReport> {
-    let (lo, hi) = part.range(rank);
-    let pop = PopulationState::init(&cfg.net, cfg.seed, lo, hi - lo);
+    let owned = part.owned(rank).clone();
+    let pop = PopulationState::init_owned(&cfg.net, cfg.seed, &owned);
     let backend = make_backend(
         cfg.backend,
         &cfg.net,
@@ -215,7 +243,7 @@ fn rank_main<T: Transport>(
         std::path::Path::new(&cfg.artifacts_dir),
     )
     .with_context(|| format!("rank {rank} backend"))?;
-    let mut engine = RankEngine::new(&cfg.net, cfg.seed, rank, lo, hi, backend);
+    let mut engine = RankEngine::new(&cfg.net, cfg.seed, rank, owned, backend);
 
     // Setup (outside the profiled loop, like the synapse build): the
     // destination-rank bitmap for this rank's sources.
@@ -262,6 +290,8 @@ fn rank_main<T: Transport>(
     let mut per_dst: Vec<Vec<Spike>> = vec![Vec::new(); p];
     let mut all_spikes: Vec<Spike> = Vec::new();
     let mut step_spikes: Vec<u32> = Vec::with_capacity(steps as usize);
+    let inh_start = cfg.net.inh_start();
+    let mut exc_spikes = 0u64;
 
     let mut step = 0u32;
     while step < steps {
@@ -277,6 +307,7 @@ fn rank_main<T: Transport>(
         for k in 0..len {
             engine.integrate(&mut my_spikes)?;
             step_spikes.push(my_spikes.len() as u32);
+            exc_spikes += my_spikes.iter().filter(|s| s.gid < inh_start).count() as u64;
             epoch_spikes.extend_from_slice(&my_spikes);
             if k + 1 < len {
                 engine.finish_step();
@@ -305,8 +336,9 @@ fn rank_main<T: Transport>(
                 }
                 // epoch_spikes is step-ordered, so each per-destination
                 // list stays step-ordered — the epoch framing's contract.
+                let owned = engine.owned();
                 for s in &epoch_spikes {
-                    for dst in table.dest_ranks(s.gid - lo) {
+                    for dst in table.dest_ranks(owned.local_of(s.gid)) {
                         if dst != rank {
                             per_dst[dst as usize].push(*s);
                         }
@@ -366,6 +398,7 @@ fn rank_main<T: Transport>(
         totals: engine.totals,
         step_spikes,
         comm: comm_vol,
+        exc_spikes,
     })
 }
 
@@ -469,6 +502,27 @@ mod tests {
         let exchanges = tree.comm_volume.iter().map(|c| c.exchanges).max().unwrap();
         assert_eq!(level(&tree, 1), 2 * exchanges);
         assert_eq!(level(&tree, 2), 0, "single chassis: no top-tier traffic");
+    }
+
+    #[test]
+    fn placement_policies_agree_bitwise() {
+        use crate::config::PartitionPolicy;
+        let base = run_live(&tiny_cfg(4)).unwrap();
+        assert!(base.total_spikes > 0, "network must be active");
+        for policy in [PartitionPolicy::RoundRobin, PartitionPolicy::GreedyComms] {
+            let mut cfg = tiny_cfg(4);
+            cfg.partition = policy;
+            let r = run_live(&cfg).unwrap();
+            assert_eq!(base.pop_counts, r.pop_counts, "{policy:?} changed the raster");
+            assert_eq!(base.total_syn_events, r.total_syn_events);
+            assert_eq!(base.total_exc_spikes, r.total_exc_spikes);
+            assert_eq!(r.partition, policy);
+            // per-rank totals permute, the whole-population sum doesn't
+            assert_eq!(
+                r.rank_spikes.iter().sum::<u64>(),
+                base.total_spikes
+            );
+        }
     }
 
     #[test]

@@ -97,12 +97,15 @@ pub fn run_modeled_trace(cfg: &RunConfig, trace: &WorkloadTrace) -> Result<RunRe
         total_ext_events: (trace.n_neurons as f64
             * trace.ext_events_per_neuron_step
             * trace.steps() as f64) as u64,
+        total_exc_spikes: 0,
+        rank_spikes: Vec::new(),
         mean_rate_hz: outcome.mean_rate_hz,
         pop_counts: Vec::new(),
         energy: Some(energy),
         comm_volume: Vec::new(),
         routing: cfg.routing,
         topology: cfg.topology,
+        partition: cfg.partition,
         backend: "model",
         platform: format!("{}+{}", platform.name, link.name),
         trace: None,
@@ -135,6 +138,8 @@ pub fn run_modeled_cluster(
         total_ext_events: (trace.n_neurons as f64
             * trace.ext_events_per_neuron_step
             * trace.steps() as f64) as u64,
+        total_exc_spikes: 0,
+        rank_spikes: Vec::new(),
         mean_rate_hz: outcome.mean_rate_hz,
         pop_counts: Vec::new(),
         energy: None,
@@ -142,6 +147,7 @@ pub fn run_modeled_cluster(
         // Hetero replays keep the paper's baseline exchange.
         routing: Routing::Broadcast,
         topology: Topology::Flat,
+        partition: crate::config::PartitionPolicy::Index,
         backend: "model",
         platform: format!("hetero+{}", link.name),
         trace: None,

@@ -2,7 +2,7 @@
 
 use anyhow::Result;
 
-use crate::config::{Mode, Routing, RunConfig, Topology};
+use crate::config::{Mode, PartitionPolicy, Routing, RunConfig, Topology};
 use crate::metrics::comm_volume::CommVolume;
 use crate::profiling::components::Components;
 
@@ -33,6 +33,14 @@ pub struct RunResult {
     pub total_spikes: u64,
     pub total_syn_events: u64,
     pub total_ext_events: u64,
+    /// Spikes emitted by excitatory sources (gid below the exc/inh
+    /// boundary) — with `total_spikes` this gives the per-population
+    /// split the placement-invariance checks compare across policies.
+    pub total_exc_spikes: u64,
+    /// Spikes emitted per rank (live runs; empty for modeled runs).
+    /// Placement permutes this vector's values across ranks while its
+    /// sum stays `total_spikes`.
+    pub rank_spikes: Vec<u64>,
     pub mean_rate_hz: f64,
     /// Whole-population spike counts per step (live runs; used for
     /// rasters/regime analysis).
@@ -45,6 +53,8 @@ pub struct RunResult {
     pub routing: Routing,
     /// Transport topology the run used (live) or priced (modeled).
     pub topology: Topology,
+    /// Placement policy that mapped neurons onto ranks.
+    pub partition: PartitionPolicy,
     pub backend: &'static str,
     pub platform: String,
     /// Recorded workload trace (live runs with `record_trace` set).
@@ -98,10 +108,11 @@ impl RunResult {
         let volume = if !self.comm_volume.is_empty() {
             let inter: u64 = self.comm_volume.iter().map(|c| c.inter_messages).sum();
             format!(
-                "  transport [{}, {}]: recv {:.2} MB/rank, sent {:.2} MB/rank, \
+                "  transport [{}, {}, place {}]: recv {:.2} MB/rank, sent {:.2} MB/rank, \
                  {inter} inter-node msgs\n",
                 self.routing,
                 self.topology,
+                self.partition,
                 self.mean_recv_bytes_per_rank() / 1e6,
                 self.mean_sent_bytes_per_rank() / 1e6,
             )
@@ -168,12 +179,15 @@ mod tests {
             total_spikes: 0,
             total_syn_events: 0,
             total_ext_events: 0,
+            total_exc_spikes: 0,
+            rank_spikes: vec![],
             mean_rate_hz: 0.0,
             pop_counts: vec![],
             energy: None,
             comm_volume: vec![],
             routing: Routing::Filtered,
             topology: Topology::Flat,
+            partition: PartitionPolicy::Index,
             backend: "native",
             platform: "host".into(),
             trace: None,

@@ -8,6 +8,9 @@ pub mod partition;
 pub mod rank;
 
 pub use delay_queue::DelayRing;
-pub use partition::Partition;
+pub use partition::{
+    AllocContext, Allocator, BlockGrid, GreedyCommsAllocator, IndexAllocator, OwnedGids,
+    Partition, RoundRobinAllocator,
+};
 pub use rank::{RankEngine, StepOutcome};
 pub use spike::Spike;

@@ -1,28 +1,520 @@
-//! Neuron-to-process partitioning.
+//! Neuron→process placement: partitions and pluggable allocator policies.
 //!
-//! The paper distributes neurons evenly among processes; the heterogeneous
-//! Intel+ARM runs additionally weight the shares by per-core speed
-//! (`weighted`), mirroring DPSNN's MPI "heterogeneous mode" partitioning.
+//! The paper distributes neurons evenly among processes in index order;
+//! the heterogeneous Intel+ARM runs additionally weight the shares by
+//! per-core speed (`weighted`), mirroring DPSNN's MPI "heterogeneous
+//! mode" partitioning. This module generalizes that single hard-coded
+//! layout into a *placement layer*: an [`Allocator`] policy assigns
+//! fixed-size contiguous *placement blocks* of gids to ranks, and the
+//! resulting [`Partition`] may give a rank any union of blocks — not
+//! just one contiguous range.
+//!
+//! Three policies implement the trait (selected by
+//! [`crate::config::PartitionPolicy`], CLI `--partition`):
+//!
+//! * [`IndexAllocator`] (`index`) — consecutive blocks per rank; exactly
+//!   reproduces the historical [`Partition::even`] split.
+//! * [`RoundRobinAllocator`] (`round-robin`) — block `b` goes to rank
+//!   `b % p`, deliberately scattering neighbouring gids across the
+//!   whole machine (the placement *worst case* for locality).
+//! * [`GreedyCommsAllocator`] (`greedy-comms`) — weighs the
+//!   partition-independent connectome
+//!   ([`crate::model::connectivity::ConnectivityParams`]) against the
+//!   topology tree's link levels
+//!   ([`crate::comm::topology::TopologyTree::link_level`]) and packs
+//!   strongly-coupled blocks onto the same rank / board / chassis:
+//!   greedy constructive placement followed by deterministic
+//!   first-improvement block-swap refinement.
+//!
+//! Everything downstream (population init, incoming synapses, routing
+//! bitmaps, delay-ring delivery) works on the per-rank [`OwnedGids`]
+//! interval set, so rasters stay *bitwise identical* across policies —
+//! ownership is a pure permutation and the network itself is a pure
+//! function of gid (see DESIGN.md §7).
 
-/// Contiguous block partition of `n` neurons over `p` ranks.
-#[derive(Debug, Clone, PartialEq)]
-pub struct Partition {
-    /// Block boundaries: rank r owns [bounds[r], bounds[r+1]).
+use crate::comm::topology::TopologyTree;
+use crate::config::PartitionPolicy;
+use crate::model::connectivity::ConnectivityParams;
+
+/// Hard cap on placement blocks per rank (allocation atoms stay coarse
+/// enough that the greedy refinement's O(B³) sweeps remain cheap).
+pub const MAX_BLOCKS_PER_RANK: u32 = 32;
+
+/// Minimum neurons per placement block (finer atoms than this exploit
+/// pure sampling noise of the random connectome).
+pub const MIN_BLOCK_NEURONS: u32 = 8;
+
+/// Cap on greedy-comms refinement sweeps (each sweep strictly decreases
+/// the integer objective, so convergence is typically well under this).
+pub const GREEDY_REFINE_SWEEPS: usize = 20;
+
+/// Relative cost of a link crossing tree level `g` in the greedy-comms
+/// objective: `LINK_COST_BASE^g` (intra-board = 1, each fabric tier
+/// another factor — same spirit as the interconnect model's per-tier
+/// latency hierarchy).
+pub const LINK_COST_BASE: i64 = 16;
+
+/// The ascending, disjoint, coalesced gid intervals owned by one rank,
+/// with prefix offsets for O(log k) local↔global index mapping.
+///
+/// ```
+/// use dpsnn::engine::partition::OwnedGids;
+///
+/// let o = OwnedGids::from_intervals(vec![(10, 12), (40, 43)]);
+/// assert_eq!(o.len(), 5);
+/// assert_eq!(o.iter().collect::<Vec<_>>(), vec![10, 11, 40, 41, 42]);
+/// assert_eq!(o.gid_of(2), 40);
+/// assert_eq!(o.local_of(41), 3);
+/// assert_eq!(o.try_local_of(12), None);
+/// assert!(!o.is_contiguous());
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OwnedGids {
+    /// Ascending, disjoint `[lo, hi)` intervals; adjacent intervals are
+    /// always coalesced, so contiguity ⇔ `intervals.len() <= 1`.
+    intervals: Vec<(u32, u32)>,
+    /// `offsets[i]` = owned gids preceding `intervals[i]`; one terminal
+    /// entry equal to `len()`.
+    offsets: Vec<u32>,
+}
+
+impl OwnedGids {
+    /// The single contiguous range `[lo, hi)`.
+    pub fn contiguous(lo: u32, hi: u32) -> Self {
+        assert!(lo < hi, "empty or inverted range [{lo},{hi})");
+        Self { intervals: vec![(lo, hi)], offsets: vec![0, hi - lo] }
+    }
+
+    /// Build from ascending, disjoint `[lo, hi)` intervals (adjacent
+    /// ones are coalesced).
+    pub fn from_intervals(intervals: Vec<(u32, u32)>) -> Self {
+        assert!(!intervals.is_empty(), "a rank must own at least one gid");
+        let mut merged: Vec<(u32, u32)> = Vec::with_capacity(intervals.len());
+        for (lo, hi) in intervals {
+            assert!(lo < hi, "empty or inverted interval [{lo},{hi})");
+            match merged.last_mut() {
+                Some(last) if last.1 == lo => last.1 = hi,
+                Some(last) => {
+                    assert!(last.1 < lo, "intervals not ascending/disjoint");
+                    merged.push((lo, hi));
+                }
+                None => merged.push((lo, hi)),
+            }
+        }
+        let mut offsets = Vec::with_capacity(merged.len() + 1);
+        let mut acc = 0u32;
+        offsets.push(0);
+        for &(lo, hi) in &merged {
+            acc += hi - lo;
+            offsets.push(acc);
+        }
+        Self { intervals: merged, offsets }
+    }
+
+    /// Number of owned gids.
+    pub fn len(&self) -> u32 {
+        *self.offsets.last().unwrap()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The coalesced `[lo, hi)` intervals, ascending.
+    pub fn intervals(&self) -> &[(u32, u32)] {
+        &self.intervals
+    }
+
+    /// Does this rank own a single contiguous range?
+    pub fn is_contiguous(&self) -> bool {
+        self.intervals.len() <= 1
+    }
+
+    /// Smallest owned gid.
+    pub fn first(&self) -> u32 {
+        self.intervals[0].0
+    }
+
+    /// Local index → global id.
+    ///
+    /// # Panics
+    /// Panics when `local >= len()`.
+    pub fn gid_of(&self, local: u32) -> u32 {
+        assert!(local < self.len(), "local index {local} out of range");
+        let i = self.offsets.partition_point(|&o| o <= local) - 1;
+        self.intervals[i].0 + (local - self.offsets[i])
+    }
+
+    /// Global id → local index, `None` when not owned.
+    pub fn try_local_of(&self, gid: u32) -> Option<u32> {
+        let i = self.intervals.partition_point(|&(lo, _)| lo <= gid);
+        if i == 0 {
+            return None;
+        }
+        let (lo, hi) = self.intervals[i - 1];
+        (gid < hi).then(|| self.offsets[i - 1] + (gid - lo))
+    }
+
+    /// Global id → local index.
+    ///
+    /// # Panics
+    /// Panics when `gid` is not owned — delivering to (or emitting
+    /// from) a non-resident neuron is a protocol violation.
+    pub fn local_of(&self, gid: u32) -> u32 {
+        self.try_local_of(gid)
+            .unwrap_or_else(|| panic!("gid {gid} is not owned by this rank"))
+    }
+
+    pub fn contains(&self, gid: u32) -> bool {
+        self.try_local_of(gid).is_some()
+    }
+
+    /// All owned gids in ascending (= local index) order.
+    pub fn iter(&self) -> impl Iterator<Item = u32> + '_ {
+        self.intervals.iter().flat_map(|&(lo, hi)| lo..hi)
+    }
+}
+
+/// The placement atoms every [`Allocator`] works over: `n` gids cut
+/// into `p * blocks_per_rank` equal contiguous blocks on the floor grid
+/// `bounds[b] = ⌊b·n/B⌋`, so every policy hands each rank exactly
+/// `blocks_per_rank` atoms (perfect neuron balance to within the grid)
+/// and the `index` policy composes to the historical even split.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockGrid {
+    n: u32,
+    p: u32,
+    blocks_per_rank: u32,
+    /// `bounds[b] = ⌊b·n/B⌋`; block `b` covers `[bounds[b], bounds[b+1])`.
     bounds: Vec<u32>,
 }
 
-impl Partition {
-    /// Even split (remainder spread over the first ranks).
-    pub fn even(n: u32, p: u32) -> Self {
+impl BlockGrid {
+    pub fn new(n: u32, p: u32) -> Self {
         assert!(p >= 1 && n >= p, "cannot split {n} neurons over {p} ranks");
-        let bounds = (0..=p)
-            .map(|r| ((r as u64 * n as u64) / p as u64) as u32)
+        let blocks_per_rank =
+            ((n / p) / MIN_BLOCK_NEURONS).clamp(1, MAX_BLOCKS_PER_RANK);
+        let b = p * blocks_per_rank;
+        let bounds = (0..=b)
+            .map(|i| ((i as u64 * n as u64) / b as u64) as u32)
             .collect();
-        Self { bounds }
+        Self { n, p, blocks_per_rank, bounds }
     }
 
-    /// Split proportional to `weights` (e.g. relative core speeds), each
-    /// rank receiving at least one neuron.
+    pub fn n_total(&self) -> u32 {
+        self.n
+    }
+
+    pub fn n_ranks(&self) -> u32 {
+        self.p
+    }
+
+    pub fn blocks_per_rank(&self) -> u32 {
+        self.blocks_per_rank
+    }
+
+    pub fn n_blocks(&self) -> u32 {
+        self.p * self.blocks_per_rank
+    }
+
+    /// Gid range `[lo, hi)` of block `b`.
+    pub fn block_range(&self, b: u32) -> (u32, u32) {
+        (self.bounds[b as usize], self.bounds[b as usize + 1])
+    }
+
+    /// Block containing `gid`: closed form of the floor grid,
+    /// `⌊((gid+1)·B − 1)/n⌋` = the largest `b` with `bounds[b] <= gid`.
+    #[inline]
+    pub fn block_of(&self, gid: u32) -> u32 {
+        debug_assert!(gid < self.n);
+        (((gid as u64 + 1) * self.n_blocks() as u64 - 1) / self.n as u64) as u32
+    }
+}
+
+/// Read-only inputs a placement policy may consult. `index` and
+/// `round-robin` ignore both; `greedy-comms` requires `connectivity`
+/// and treats a missing `tree` as a flat topology (uniform off-rank
+/// link cost).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AllocContext<'a> {
+    /// Partition-independent connectome (affinity source).
+    pub connectivity: Option<&'a ConnectivityParams>,
+    /// Topology tree the run exchanges over (link-level costs).
+    pub tree: Option<&'a TopologyTree>,
+}
+
+impl AllocContext<'static> {
+    /// No connectivity, no tree — enough for `index` and `round-robin`.
+    pub fn empty() -> Self {
+        Self { connectivity: None, tree: None }
+    }
+}
+
+/// A neuron→rank placement policy over a [`BlockGrid`]: returns the
+/// owning rank of every block (`assignment[b] < grid.n_ranks()`), with
+/// exactly `grid.blocks_per_rank()` blocks per rank. Implementations
+/// must be deterministic — placement is part of the reproducible run
+/// configuration, not a tuning knob that may drift between runs.
+pub trait Allocator {
+    fn assign(&self, grid: &BlockGrid, ctx: &AllocContext<'_>) -> Vec<u32>;
+}
+
+/// Consecutive blocks per rank: block `b` → rank `b / blocks_per_rank`.
+/// Composes with the floor grid to exactly the historical
+/// [`Partition::even`] contiguous split.
+pub struct IndexAllocator;
+
+impl Allocator for IndexAllocator {
+    fn assign(&self, grid: &BlockGrid, _ctx: &AllocContext<'_>) -> Vec<u32> {
+        (0..grid.n_blocks()).map(|b| b / grid.blocks_per_rank()).collect()
+    }
+}
+
+/// Block `b` → rank `b % p`: neighbouring blocks land on different
+/// ranks, maximally scattering any locality the connectome has.
+pub struct RoundRobinAllocator;
+
+impl Allocator for RoundRobinAllocator {
+    fn assign(&self, grid: &BlockGrid, _ctx: &AllocContext<'_>) -> Vec<u32> {
+        (0..grid.n_blocks()).map(|b| b % grid.n_ranks()).collect()
+    }
+}
+
+/// Comm-aware placement: minimize
+/// `Σ_{block pairs} affinity(i,j) · link_cost(rank_i, rank_j)` where
+/// affinity is the symmetric synapse count between blocks (one
+/// partition-independent n×m sweep of the connectome) and `link_cost`
+/// is 0 on the same rank, else [`LINK_COST_BASE`]`^link_level` from the
+/// topology tree (uniform off-rank cost when no tree is given).
+///
+/// Two deterministic stages: a capacity-constrained greedy construction
+/// (blocks in descending total-affinity order, each placed on the open
+/// rank of least marginal cost), then first-improvement block-swap
+/// sweeps (at most [`GREEDY_REFINE_SWEEPS`]; each accepted swap
+/// strictly decreases the integer objective).
+pub struct GreedyCommsAllocator;
+
+impl GreedyCommsAllocator {
+    /// `p × p` symmetric link-cost matrix for the greedy objective.
+    fn link_costs(p: usize, tree: Option<&TopologyTree>) -> Vec<i64> {
+        let mut w = vec![0i64; p * p];
+        for a in 0..p {
+            for b in 0..p {
+                if a == b {
+                    continue;
+                }
+                w[a * p + b] = match tree {
+                    Some(t) => {
+                        LINK_COST_BASE.pow(t.link_level(a as u32, b as u32) as u32)
+                    }
+                    None => 1,
+                };
+            }
+        }
+        w
+    }
+
+    /// Symmetric block-pair affinity from one n×m connectome sweep.
+    fn affinity(grid: &BlockGrid, cp: &ConnectivityParams) -> Vec<i64> {
+        let nb = grid.n_blocks() as usize;
+        let mut aff = vec![0i64; nb * nb];
+        for s in 0..cp.n {
+            let sb = grid.block_of(s) as usize;
+            for k in 0..cp.m {
+                let (t, _) = cp.synapse(s, k);
+                let tb = grid.block_of(t) as usize;
+                aff[sb * nb + tb] += 1;
+                aff[tb * nb + sb] += 1;
+            }
+        }
+        aff
+    }
+}
+
+impl Allocator for GreedyCommsAllocator {
+    fn assign(&self, grid: &BlockGrid, ctx: &AllocContext<'_>) -> Vec<u32> {
+        let cp = ctx
+            .connectivity
+            .expect("greedy-comms placement needs ConnectivityParams in the AllocContext");
+        assert_eq!(cp.n, grid.n_total(), "connectome/grid size mismatch");
+        let nb = grid.n_blocks() as usize;
+        let p = grid.n_ranks() as usize;
+        let cap = grid.blocks_per_rank() as usize;
+        let aff = Self::affinity(grid, cp);
+        let w = Self::link_costs(p, ctx.tree);
+
+        // Greedy construction: heaviest blocks first, each onto the
+        // open rank with least marginal cost (ties → lowest rank).
+        let totals: Vec<i64> =
+            (0..nb).map(|i| aff[i * nb..(i + 1) * nb].iter().sum()).collect();
+        let mut order: Vec<usize> = (0..nb).collect();
+        order.sort_by(|&x, &y| totals[y].cmp(&totals[x]).then(x.cmp(&y)));
+        const UNASSIGNED: u32 = u32::MAX;
+        let mut rank_of = vec![UNASSIGNED; nb];
+        let mut load = vec![0usize; p];
+        for &i in &order {
+            let mut best_rank = usize::MAX;
+            let mut best_cost = i64::MAX;
+            for r in 0..p {
+                if load[r] >= cap {
+                    continue;
+                }
+                let mut cost = 0i64;
+                for j in 0..nb {
+                    let rj = rank_of[j];
+                    if rj != UNASSIGNED {
+                        cost += aff[i * nb + j] * w[r * p + rj as usize];
+                    }
+                }
+                if cost < best_cost {
+                    best_cost = cost;
+                    best_rank = r;
+                }
+            }
+            rank_of[i] = best_rank as u32;
+            load[best_rank] += 1;
+        }
+
+        // Swap refinement: for each block, the best strictly-improving
+        // swap partner this sweep (exact integer delta; ties → lowest
+        // partner index). Capacities are preserved by construction.
+        for _sweep in 0..GREEDY_REFINE_SWEEPS {
+            let mut improved = false;
+            for i in 0..nb {
+                let a = rank_of[i] as usize;
+                // a1[r] = Σ_x aff[i][x] · (w[r][r_x] − w[a][r_x])
+                let mut a1 = vec![0i64; p];
+                for x in 0..nb {
+                    let av = aff[i * nb + x];
+                    if av != 0 {
+                        let rx = rank_of[x] as usize;
+                        let base = w[a * p + rx];
+                        for (r, slot) in a1.iter_mut().enumerate() {
+                            *slot += av * (w[r * p + rx] - base);
+                        }
+                    }
+                }
+                let mut best_j = usize::MAX;
+                let mut best_delta = 0i64;
+                for j in 0..nb {
+                    let b = rank_of[j] as usize;
+                    if b == a {
+                        continue;
+                    }
+                    // Δ = Σ_x (aff[i,x]−aff[j,x])·(w[b,r_x]−w[a,r_x])
+                    //     − w[a,b]·(aff[i,i]+aff[j,j]−2·aff[i,j])
+                    let mut dot = 0i64;
+                    for x in 0..nb {
+                        let av = aff[j * nb + x];
+                        if av != 0 {
+                            let rx = rank_of[x] as usize;
+                            dot += av * (w[b * p + rx] - w[a * p + rx]);
+                        }
+                    }
+                    let corr = w[a * p + b]
+                        * (aff[i * nb + i] + aff[j * nb + j] - 2 * aff[i * nb + j]);
+                    let delta = a1[b] - dot - corr;
+                    if delta < best_delta {
+                        best_delta = delta;
+                        best_j = j;
+                    }
+                }
+                if best_j != usize::MAX {
+                    rank_of.swap(i, best_j);
+                    improved = true;
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+        rank_of
+    }
+}
+
+/// A neuron→rank placement: per-rank [`OwnedGids`] plus a compact
+/// atom table (`atom_bounds` + `atom_rank`) for O(log atoms) ownership
+/// lookup. Constructed either contiguously ([`Partition::even`],
+/// [`Partition::weighted`]) or through an [`Allocator`] policy
+/// ([`Partition::allocate`]).
+///
+/// Two partitions compare equal iff they give every rank the same gids
+/// — the atom granularity they were built over is irrelevant:
+///
+/// ```
+/// use dpsnn::config::PartitionPolicy;
+/// use dpsnn::engine::partition::{AllocContext, Partition};
+///
+/// let even = Partition::even(100, 4);
+/// assert_eq!(even.range(1), (25, 50));
+/// assert_eq!(even.owner(37), 1);
+/// assert_eq!(even.sizes(), vec![25, 25, 25, 25]);
+///
+/// // `index` placement reproduces the contiguous even split exactly.
+/// let ctx = AllocContext::empty();
+/// let index = Partition::allocate(PartitionPolicy::Index, 100, 4, &ctx);
+/// assert_eq!(index, even);
+///
+/// // `round-robin` scatters ownership; totals are preserved.
+/// let rr = Partition::allocate(PartitionPolicy::RoundRobin, 100, 4, &ctx);
+/// assert_eq!(rr.sizes().iter().sum::<u32>(), 100);
+/// assert!(!rr.owned(0).is_contiguous());
+/// assert_eq!(rr.owned(0).local_of(rr.owned(0).gid_of(3)), 3);
+/// ```
+#[derive(Debug, Clone)]
+pub struct Partition {
+    n: u32,
+    /// Atom boundaries, strictly ascending, `atom_bounds[0] = 0` and
+    /// `atom_bounds[last] = n`; atom `a` covers
+    /// `[atom_bounds[a], atom_bounds[a+1])`.
+    atom_bounds: Vec<u32>,
+    /// Owning rank of each atom.
+    atom_rank: Vec<u32>,
+    /// Per-rank owned gid sets.
+    owned: Vec<OwnedGids>,
+}
+
+impl PartialEq for Partition {
+    /// Ownership equality: same `n` and the same gids on every rank.
+    fn eq(&self, other: &Self) -> bool {
+        self.n == other.n && self.owned == other.owned
+    }
+}
+
+impl Eq for Partition {}
+
+impl Partition {
+    fn from_atoms(n: u32, atom_bounds: Vec<u32>, atom_rank: Vec<u32>, p: u32) -> Self {
+        debug_assert_eq!(atom_bounds.len(), atom_rank.len() + 1);
+        let mut per_rank: Vec<Vec<(u32, u32)>> = vec![Vec::new(); p as usize];
+        for (a, &r) in atom_rank.iter().enumerate() {
+            assert!(r < p, "atom {a} assigned to rank {r} >= {p}");
+            per_rank[r as usize].push((atom_bounds[a], atom_bounds[a + 1]));
+        }
+        let owned: Vec<OwnedGids> = per_rank
+            .into_iter()
+            .enumerate()
+            .map(|(r, iv)| {
+                assert!(!iv.is_empty(), "rank {r} received no placement blocks");
+                OwnedGids::from_intervals(iv)
+            })
+            .collect();
+        debug_assert_eq!(owned.iter().map(|o| o.len() as u64).sum::<u64>(), n as u64);
+        Self { n, atom_bounds, atom_rank, owned }
+    }
+
+    /// Even contiguous split (remainder spread over the first ranks).
+    pub fn even(n: u32, p: u32) -> Self {
+        assert!(p >= 1 && n >= p, "cannot split {n} neurons over {p} ranks");
+        let bounds: Vec<u32> = (0..=p)
+            .map(|r| ((r as u64 * n as u64) / p as u64) as u32)
+            .collect();
+        let ranks = (0..p).collect();
+        Self::from_atoms(n, bounds, ranks, p)
+    }
+
+    /// Contiguous split proportional to `weights` (e.g. relative core
+    /// speeds), each rank receiving at least one neuron.
     pub fn weighted(n: u32, weights: &[f64]) -> Self {
         let p = weights.len() as u32;
         assert!(p >= 1 && n >= p);
@@ -41,38 +533,93 @@ impl Partition {
             bounds.push(b);
         }
         *bounds.last_mut().unwrap() = n;
-        Self { bounds }
+        let ranks = (0..p).collect();
+        Self::from_atoms(n, bounds, ranks, p)
+    }
+
+    /// Build from a block grid and an allocator's block→rank assignment.
+    pub fn from_blocks(grid: &BlockGrid, assignment: &[u32]) -> Self {
+        assert_eq!(assignment.len(), grid.n_blocks() as usize);
+        Self::from_atoms(
+            grid.n_total(),
+            grid.bounds.clone(),
+            assignment.to_vec(),
+            grid.n_ranks(),
+        )
+    }
+
+    /// Place `n` neurons onto `p` ranks under `policy` (the CLI
+    /// `--partition` entry point). `greedy-comms` requires
+    /// `ctx.connectivity`; a missing `ctx.tree` means flat link costs.
+    pub fn allocate(
+        policy: PartitionPolicy,
+        n: u32,
+        p: u32,
+        ctx: &AllocContext<'_>,
+    ) -> Self {
+        let grid = BlockGrid::new(n, p);
+        let assignment = match policy {
+            PartitionPolicy::Index => IndexAllocator.assign(&grid, ctx),
+            PartitionPolicy::RoundRobin => RoundRobinAllocator.assign(&grid, ctx),
+            PartitionPolicy::GreedyComms => GreedyCommsAllocator.assign(&grid, ctx),
+        };
+        Self::from_blocks(&grid, &assignment)
     }
 
     pub fn n_ranks(&self) -> u32 {
-        (self.bounds.len() - 1) as u32
+        self.owned.len() as u32
     }
 
     pub fn n_total(&self) -> u32 {
-        *self.bounds.last().unwrap()
+        self.n
     }
 
-    /// Global id range owned by rank `r`.
+    /// The gids owned by rank `r`.
+    pub fn owned(&self, r: u32) -> &OwnedGids {
+        &self.owned[r as usize]
+    }
+
+    /// Global id range of rank `r` — only meaningful for contiguous
+    /// placements (`even`, `weighted`, `index`).
+    ///
+    /// # Panics
+    /// Panics when rank `r` owns a non-contiguous gid set; use
+    /// [`Partition::owned`] there instead.
     pub fn range(&self, r: u32) -> (u32, u32) {
-        (self.bounds[r as usize], self.bounds[r as usize + 1])
+        let o = &self.owned[r as usize];
+        assert!(
+            o.is_contiguous(),
+            "rank {r} owns non-contiguous gids under this placement; use owned()"
+        );
+        o.intervals()[0]
     }
 
     pub fn size(&self, r: u32) -> u32 {
-        let (lo, hi) = self.range(r);
-        hi - lo
+        self.owned[r as usize].len()
     }
 
-    /// Which rank owns neuron `gid` (binary search).
+    /// Which rank owns neuron `gid` (binary search over atoms).
+    ///
+    /// # Panics
+    /// Panics when `gid >= n_total()`, in release builds too — asking
+    /// for the owner of a gid outside the network is a protocol
+    /// violation. Use [`Partition::try_owner`] for a checked lookup.
     pub fn owner(&self, gid: u32) -> u32 {
-        debug_assert!(gid < self.n_total());
-        match self.bounds.binary_search(&gid) {
-            Ok(i) => {
-                // gid is exactly a boundary: it belongs to the block starting here,
-                // unless this is the terminal bound.
-                (i as u32).min(self.n_ranks() - 1)
-            }
-            Err(i) => (i - 1) as u32,
-        }
+        assert!(
+            gid < self.n,
+            "gid {gid} out of range: partition covers [0, {})",
+            self.n
+        );
+        let atom = match self.atom_bounds.binary_search(&gid) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        };
+        self.atom_rank[atom]
+    }
+
+    /// Checked owner lookup: `None` when `gid >= n_total()`.
+    pub fn try_owner(&self, gid: u32) -> Option<u32> {
+        (gid < self.n).then(|| self.owner(gid))
     }
 
     pub fn sizes(&self) -> Vec<u32> {
@@ -105,6 +652,21 @@ mod tests {
             let (lo, hi) = p.range(r);
             assert!(gid >= lo && gid < hi, "gid {gid} rank {r} range {lo}..{hi}");
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn owner_panics_past_the_boundary_gid() {
+        // plain assert!, not debug_assert! — must fire in release too
+        Partition::even(100, 4).owner(100);
+    }
+
+    #[test]
+    fn try_owner_is_checked_at_the_boundary() {
+        let p = Partition::even(100, 4);
+        assert_eq!(p.try_owner(99), Some(3));
+        assert_eq!(p.try_owner(100), None);
+        assert_eq!(p.try_owner(u32::MAX), None);
     }
 
     #[test]
@@ -142,5 +704,149 @@ mod tests {
             assert_eq!(wp.sizes().iter().sum::<u32>(), n);
             assert!(wp.sizes().iter().all(|&s| s >= 1));
         });
+    }
+
+    #[test]
+    fn block_grid_closed_form_matches_bounds() {
+        forall("block_of closed form", 50, |rng| {
+            let p = 1 + rng.next_below(12);
+            let n = p + rng.next_below(3000);
+            let grid = BlockGrid::new(n, p);
+            assert_eq!(grid.n_blocks(), grid.n_ranks() * grid.blocks_per_rank());
+            for b in 0..grid.n_blocks() {
+                let (lo, hi) = grid.block_range(b);
+                assert!(lo < hi, "empty block {b}");
+                assert_eq!(grid.block_of(lo), b);
+                assert_eq!(grid.block_of(hi - 1), b);
+            }
+        });
+    }
+
+    #[test]
+    fn index_allocation_reproduces_even_exactly() {
+        for (n, p) in [(100u32, 4u32), (97, 5), (2048, 8), (20_480, 8), (33, 33)] {
+            let idx = Partition::allocate(
+                PartitionPolicy::Index,
+                n,
+                p,
+                &AllocContext::empty(),
+            );
+            let even = Partition::even(n, p);
+            assert_eq!(idx, even, "n={n} p={p}");
+            for gid in (0..n).step_by(13) {
+                assert_eq!(idx.owner(gid), even.owner(gid));
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_scatters_and_covers() {
+        let p = Partition::allocate(
+            PartitionPolicy::RoundRobin,
+            1024,
+            8,
+            &AllocContext::empty(),
+        );
+        assert_eq!(p.sizes().iter().sum::<u32>(), 1024);
+        assert!(p.sizes().iter().all(|&s| s >= 1));
+        assert!(!p.owned(0).is_contiguous());
+        // every gid owned exactly once
+        let mut counts = vec![0u32; 1024];
+        for r in 0..8 {
+            for gid in p.owned(r).iter() {
+                counts[gid as usize] += 1;
+            }
+        }
+        assert!(counts.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn owned_gids_lookups_roundtrip() {
+        let p = Partition::allocate(
+            PartitionPolicy::RoundRobin,
+            500,
+            4,
+            &AllocContext::empty(),
+        );
+        for r in 0..4 {
+            let o = p.owned(r);
+            for (local, gid) in o.iter().enumerate() {
+                assert_eq!(o.gid_of(local as u32), gid);
+                assert_eq!(o.local_of(gid), local as u32);
+                assert_eq!(p.owner(gid), r);
+            }
+            // a gid owned by someone else is not resident here
+            let foreign = p.owned((r + 1) % 4).first();
+            assert_eq!(o.try_local_of(foreign), None);
+        }
+    }
+
+    /// The greedy objective on a concrete assignment (test oracle).
+    fn weighted_cost(
+        grid: &BlockGrid,
+        cp: &ConnectivityParams,
+        tree: Option<&TopologyTree>,
+        assignment: &[u32],
+    ) -> i64 {
+        let nb = grid.n_blocks() as usize;
+        let p = grid.n_ranks() as usize;
+        let aff = GreedyCommsAllocator::affinity(grid, cp);
+        let w = GreedyCommsAllocator::link_costs(p, tree);
+        let mut cost = 0i64;
+        for i in 0..nb {
+            for j in 0..nb {
+                cost += aff[i * nb + j]
+                    * w[assignment[i] as usize * p + assignment[j] as usize];
+            }
+        }
+        cost / 2
+    }
+
+    #[test]
+    fn greedy_comms_covers_and_beats_index_on_its_objective() {
+        let cp = ConnectivityParams { seed: 7, n: 512, m: 4, dmin: 1, dmax: 4 };
+        let tree = TopologyTree::new(4, &[2]);
+        let ctx = AllocContext { connectivity: Some(&cp), tree: Some(&tree) };
+        let grid = BlockGrid::new(512, 4);
+        let greedy = GreedyCommsAllocator.assign(&grid, &ctx);
+        let index = IndexAllocator.assign(&grid, &ctx);
+        // capacity respected
+        let mut load = vec![0u32; 4];
+        for &r in &greedy {
+            load[r as usize] += 1;
+        }
+        assert!(load.iter().all(|&l| l == grid.blocks_per_rank()));
+        // the refined placement is no worse than index order on the
+        // weighted objective (strictly better for this seed)
+        let cg = weighted_cost(&grid, &cp, Some(&tree), &greedy);
+        let ci = weighted_cost(&grid, &cp, Some(&tree), &index);
+        assert!(cg < ci, "greedy {cg} vs index {ci}");
+        // and the partition built from it covers everything
+        let part = Partition::from_blocks(&grid, &greedy);
+        assert_eq!(part.sizes().iter().sum::<u32>(), 512);
+    }
+
+    #[test]
+    fn greedy_comms_is_deterministic() {
+        let cp = ConnectivityParams { seed: 3, n: 300, m: 3, dmin: 1, dmax: 2 };
+        let tree = TopologyTree::new(6, &[2]);
+        let ctx = AllocContext { connectivity: Some(&cp), tree: Some(&tree) };
+        let a = Partition::allocate(PartitionPolicy::GreedyComms, 300, 6, &ctx);
+        let b = Partition::allocate(PartitionPolicy::GreedyComms, 300, 6, &ctx);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn owned_gids_coalesces_adjacent_intervals() {
+        let o = OwnedGids::from_intervals(vec![(0, 4), (4, 8), (20, 21)]);
+        assert_eq!(o.intervals(), &[(0, 8), (20, 21)]);
+        assert_eq!(o.len(), 9);
+        assert_eq!(o.gid_of(8), 20);
+        assert_eq!(o.local_of(20), 8);
+        assert!(o.contains(7) && !o.contains(8) && !o.contains(19));
+        let c = OwnedGids::contiguous(5, 9);
+        assert!(c.is_contiguous());
+        assert_eq!(c.first(), 5);
+        assert_eq!(c.len(), 4);
     }
 }

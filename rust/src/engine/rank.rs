@@ -35,6 +35,7 @@ use crate::model::poisson::ExternalStimulus;
 use crate::runtime::NeuronBackend;
 
 use super::delay_queue::DelayRing;
+use super::partition::OwnedGids;
 use super::spike::Spike;
 
 /// Counters accumulated over a run (the inputs of the paper's
@@ -48,9 +49,9 @@ pub struct StepOutcome {
 
 pub struct RankEngine {
     pub rank: u32,
-    /// Owned global id range [lo, hi).
-    pub lo: u32,
-    pub hi: u32,
+    /// Owned global ids (any union of intervals a placement policy
+    /// produced; local index = ascending-gid order).
+    owned: OwnedGids,
     backend: Box<dyn NeuronBackend>,
     incoming: IncomingSynapses,
     ring: DelayRing,
@@ -73,23 +74,21 @@ pub struct RankEngine {
 }
 
 impl RankEngine {
-    /// Build the engine for rank `rank` owning [lo, hi).
+    /// Build the engine for rank `rank` owning the gids in `owned`.
     pub fn new(
         net: &NetworkParams,
         seed: u64,
         rank: u32,
-        lo: u32,
-        hi: u32,
+        owned: OwnedGids,
         backend: Box<dyn NeuronBackend>,
     ) -> Self {
-        assert_eq!(backend.len(), (hi - lo) as usize);
+        assert_eq!(backend.len(), owned.len() as usize);
         let cp = ConnectivityParams::from_network(net, seed);
-        let incoming = IncomingSynapses::build(&cp, lo, hi);
-        let n = (hi - lo) as usize;
+        let incoming = IncomingSynapses::build_owned(&cp, &owned);
+        let n = owned.len() as usize;
         Self {
             rank,
-            lo,
-            hi,
+            owned,
             backend,
             incoming,
             ring: DelayRing::new(n, net.delay_max_steps),
@@ -109,6 +108,11 @@ impl RankEngine {
         self.backend.len()
     }
 
+    /// The global ids this rank owns.
+    pub fn owned(&self) -> &OwnedGids {
+        &self.owned
+    }
+
     pub fn n_local_synapses(&self) -> usize {
         self.incoming.n_synapses()
     }
@@ -120,17 +124,26 @@ impl RankEngine {
     /// Phase 1: integrate the current step. Returns the local spikes as
     /// global-id [`Spike`]s via `out` (cleared first).
     pub fn integrate(&mut self, out: &mut Vec<Spike>) -> Result<usize> {
-        self.totals.ext_events += self.stim.fill(self.step, self.lo, &mut self.i_ext);
+        // The stimulus is keyed by global id: fill each owned interval's
+        // slice of the buffer from its own first gid.
+        let mut off = 0usize;
+        for &(lo, hi) in self.owned.intervals() {
+            let len = (hi - lo) as usize;
+            self.totals.ext_events +=
+                self.stim.fill(self.step, lo, &mut self.i_ext[off..off + len]);
+            off += len;
+        }
         self.spiked_local.clear();
         let n = self
             .backend
             .step(self.ring.current(), &self.i_ext, &mut self.spiked_local)?;
         self.totals.spikes += n as u64;
         out.clear();
+        let owned = &self.owned;
         out.extend(
             self.spiked_local
                 .iter()
-                .map(|&j| Spike::new(self.lo + j, self.step)),
+                .map(|&j| Spike::new(owned.gid_of(j), self.step)),
         );
         Ok(n)
     }
@@ -195,7 +208,7 @@ mod tests {
     fn engine(net: &NetworkParams, seed: u64, lo: u32, hi: u32) -> RankEngine {
         let pop = PS::init(net, seed, lo, hi - lo);
         let be = Box::new(NativeBackend::new(net, pop));
-        RankEngine::new(net, seed, 0, lo, hi, be)
+        RankEngine::new(net, seed, 0, OwnedGids::contiguous(lo, hi), be)
     }
 
     #[test]

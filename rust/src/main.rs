@@ -5,6 +5,7 @@
 //!           [--backend native|xla] [--mode live|modeled]
 //!           [--routing filtered|broadcast] [--exchange-every step|min-delay|N]
 //!           [--topology flat|nodes:<k>|tree:<k1>,<k2>,...]
+//!           [--partition index|round-robin|greedy-comms]
 //!           [--leader-rotation fixed|round-robin]
 //!           [--platform NAME] [--interconnect NAME] [--seed X] [--progress]
 //! dpsnn repro <fig1..fig8|table1..table4|all> [--fast]
@@ -60,6 +61,13 @@ RUN OPTIONS:
                      spikes at per-group leaders (ONE framed message per
                      sibling-group pair at every tier); nodes:<k> is
                      sugar for tree:<k>
+  --partition P      index | round-robin | greedy-comms — the placement
+                     policy mapping neuron blocks onto ranks (default
+                     index, the historical contiguous split);
+                     greedy-comms reads the stateless connectome and
+                     the topology tree and keeps strongly-coupled
+                     blocks on cheap links (the raster is bitwise
+                     identical under every policy)
   --leader-rotation R fixed | round-robin — which rank of each group
                      pays the aggregation CPU cost per exchange
                      (default fixed; raster and message counts are
@@ -82,6 +90,17 @@ BENCH-SMOKE OPTIONS:
                      >= 2 groups)
   --topology-out F   topology JSON output path (default BENCH_topology.json)
   --platform NAME    power-model platform preset (default xeon)
+  --partition P      comm-aware placement policy to compare against the
+                     index baseline (default greedy-comms)
+  --partition-neurons N / --partition-syn M / --partition-procs P
+                     placement workload (default 20480 / 4 / 8): a
+                     sparse connectome, because the dense M=1125
+                     network degenerates the destination filter to
+                     broadcast (pair_coverage ~ 1) and placement could
+                     not move a byte
+  --partition-seconds S  placement-run simulated seconds (default 0.1)
+  --partition-out F  placement JSON output path (default
+                     BENCH_partition.json)
 
 REPRO IDS:
   fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 table1 table2 table3 table4 all
@@ -138,6 +157,9 @@ fn build_config(args: &Args) -> Result<RunConfig> {
     }
     if let Some(t) = args.get("topology") {
         cfg.topology = t.parse()?;
+    }
+    if let Some(p) = args.get("partition") {
+        cfg.partition = p.parse()?;
     }
     if let Some(r) = args.get("leader-rotation") {
         cfg.leader_rotation = r.parse()?;
@@ -502,13 +524,193 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
     );
     std::fs::write(&topo_out, &topo_json)?;
 
+    // Placement comparison: a sparse connectome of its own (M =
+    // --partition-syn), because with the dense M=1125 network at small
+    // P the destination filter degenerates to broadcast
+    // (pair_coverage ~ 1) and no placement could move a byte. The
+    // three policies simulate bitwise-identical physics, so the
+    // per-pair payload matrix is a deterministic function of placement
+    // alone — greedy-comms must put strictly fewer payload bytes on
+    // the off-board tiers than the index split, and the liveness-based
+    // prediction must price the measured per-level split.
+    use dpsnn::config::PartitionPolicy;
+    use dpsnn::engine::{AllocContext, Partition};
+
+    let pn: u32 = args.get_or("partition-neurons", 20_480u32)?;
+    let pm: u32 = args.get_or("partition-syn", 4u32)?;
+    let pp: u32 = args.get_or("partition-procs", 8u32)?;
+    let pseconds: f64 = args.get_or("partition-seconds", 0.1f64)?;
+    let part_out = args.get_or("partition-out", "BENCH_partition.json".to_string())?;
+    let challenger: PartitionPolicy =
+        args.get_or("partition", PartitionPolicy::GreedyComms)?;
+
+    let part_net = {
+        let mut net = NetworkParams::tiny(pn);
+        net.syn_per_neuron = pm.max(1);
+        net
+    };
+    let run_part = |policy: PartitionPolicy| -> Result<RunResult> {
+        let mut cfg = RunConfig::default();
+        cfg.net = part_net.clone();
+        cfg.procs = pp;
+        cfg.sim_seconds = pseconds;
+        cfg.routing = Routing::Filtered;
+        cfg.topology = topology;
+        cfg.partition = policy;
+        cfg.validate()?;
+        eprintln!("[bench-smoke] {policy} placement, {topology} topology...");
+        coordinator::run(&cfg)
+    };
+    let index = run_part(PartitionPolicy::Index)?;
+    let round_robin = run_part(PartitionPolicy::RoundRobin)?;
+    let greedy = run_part(challenger)?;
+
+    // Spike-count/rate invariants: placement permutes ownership, never
+    // physics. The whole-population raster and the exc/inh split must
+    // be bitwise identical under every policy.
+    for (name, r) in [("round-robin", &round_robin), ("greedy", &greedy)] {
+        anyhow::ensure!(
+            r.pop_counts == index.pop_counts,
+            "{name} placement changed the population raster"
+        );
+        anyhow::ensure!(
+            r.total_exc_spikes == index.total_exc_spikes
+                && r.total_spikes == index.total_spikes,
+            "{name} placement changed the exc/inh spike split"
+        );
+    }
+    anyhow::ensure!(index.total_spikes > 0, "placement bench network is silent");
+
+    // Measured per-level payload split vs the liveness-based prediction.
+    let ptree = dpsnn::comm::TopologyTree::new(pp, tree_shape.levels());
+    let pcp = dpsnn::model::connectivity::ConnectivityParams::from_network(
+        &part_net,
+        RunConfig::default().seed,
+    );
+    let alloc_ctx = AllocContext { connectivity: Some(&pcp), tree: Some(&ptree) };
+    let off_board = |lv: &[u64]| -> u64 { lv.iter().skip(1).sum() };
+    let part_section = |policy: PartitionPolicy, r: &RunResult| -> Result<String> {
+        let measured = dpsnn::metrics::payload_level_bytes(&r.comm_volume, &ptree);
+        // The simnet matrix-pricing path must split the same traffic
+        // matrix onto the same tiers as the metrics accounting.
+        let matrix: Vec<Vec<u64>> =
+            r.comm_volume.iter().map(|c| c.per_dst_bytes.clone()).collect();
+        anyhow::ensure!(
+            hier_model.tree_level_bytes(&matrix, tree_shape.levels()) == measured,
+            "{policy}: simnet per-level byte split disagrees with the metrics view"
+        );
+        let placement = Partition::allocate(policy, pn, pp, &alloc_ctx);
+        let predicted = dpsnn::metrics::predicted_payload_level_bytes(
+            &pcp,
+            &placement,
+            &r.rank_spikes,
+            &ptree,
+        );
+        let meas_off = off_board(&measured) as f64;
+        let pred_off: f64 = predicted.iter().skip(1).sum();
+        anyhow::ensure!(
+            (pred_off - meas_off).abs() <= 0.10 * meas_off.max(1.0),
+            "{policy}: predicted off-board payload {pred_off:.0} B departs >10% \
+             from measured {meas_off:.0} B"
+        );
+        // Placement never changes the envelope counts: the per-level
+        // message totals stay on the tree's closed form.
+        let x = r.comm_volume.iter().map(|c| c.exchanges).max().unwrap_or(0);
+        let closed: Vec<u64> = ptree
+            .level_message_counts()
+            .iter()
+            .map(|&m| m * x)
+            .collect();
+        let mut level_msgs = vec![0u64; ptree.depth() + 1];
+        for c in &r.comm_volume {
+            for (acc, &m) in level_msgs.iter_mut().zip(&c.level_messages) {
+                *acc += m;
+            }
+        }
+        anyhow::ensure!(
+            level_msgs == closed,
+            "{policy}: per-level messages {level_msgs:?} off the closed form {closed:?}"
+        );
+        let fmt = |v: &[u64]| {
+            let cells: Vec<String> = v.iter().map(|b| b.to_string()).collect();
+            format!("[{}]", cells.join(","))
+        };
+        let fmt_f = |v: &[f64]| {
+            let cells: Vec<String> = v.iter().map(|b| format!("{b:.0}")).collect();
+            format!("[{}]", cells.join(","))
+        };
+        Ok(format!(
+            concat!(
+                "{{\n",
+                "      \"policy\": \"{}\",\n",
+                "      \"total_spikes\": {},\n",
+                "      \"exc_spikes\": {},\n",
+                "      \"level_bytes_measured\": {},\n",
+                "      \"level_bytes_predicted\": {},\n",
+                "      \"off_board_bytes\": {},\n",
+                "      \"off_board_bytes_per_exchange\": {:.1}\n",
+                "    }}"
+            ),
+            policy,
+            r.total_spikes,
+            r.total_exc_spikes,
+            fmt(&measured),
+            fmt_f(&predicted),
+            off_board(&measured),
+            off_board(&measured) as f64 / x.max(1) as f64,
+        ))
+    };
+
+    let off_of = |r: &RunResult| -> u64 {
+        off_board(&dpsnn::metrics::payload_level_bytes(&r.comm_volume, &ptree))
+    };
+    let (off_index, off_greedy) = (off_of(&index), off_of(&greedy));
+    anyhow::ensure!(
+        off_greedy < off_index,
+        "{challenger} placement must beat index on off-board payload bytes \
+         ({off_greedy} vs {off_index})"
+    );
+    let delta_frac = 1.0 - off_greedy as f64 / off_index as f64;
+
+    let part_json = format!(
+        concat!(
+            "{{\n",
+            "  \"benchmark\": \"partition_smoke\",\n",
+            "  \"neurons\": {},\n",
+            "  \"syn_per_neuron\": {},\n",
+            "  \"procs\": {},\n",
+            "  \"sim_seconds\": {},\n",
+            "  \"topology\": \"{}\",\n",
+            "  \"sections\": {{\n",
+            "    \"index\": {},\n",
+            "    \"round_robin\": {},\n",
+            "    \"greedy\": {}\n",
+            "  }},\n",
+            "  \"inter_node_bytes_delta_frac\": {:.6}\n",
+            "}}\n"
+        ),
+        pn,
+        part_net.syn_per_neuron,
+        pp,
+        pseconds,
+        topology,
+        part_section(PartitionPolicy::Index, &index)?,
+        part_section(PartitionPolicy::RoundRobin, &round_robin)?,
+        part_section(challenger, &greedy)?,
+        delta_frac,
+    );
+    std::fs::write(&part_out, &part_json)?;
+
     println!("{}", filtered.summary());
     println!(
         "bench-smoke: recv bytes/run {recv_f} (filtered) vs {recv_b} (broadcast), \
          -{:.1}%; exchanges/run {x_step} (per-step) vs {x_batched} (min-delay), \
          {exchange_reduction:.1}x fewer; inter-node msgs/run {inter_flat} (flat) \
-         vs {inter_hier} ({topology}); wrote {out} + {topo_out}",
-        reduction * 100.0
+         vs {inter_hier} ({topology}); off-board payload {off_index} B (index) \
+         vs {off_greedy} B ({challenger}), -{:.2}%; wrote {out} + {topo_out} + \
+         {part_out}",
+        reduction * 100.0,
+        delta_frac * 100.0
     );
     Ok(())
 }

@@ -7,7 +7,10 @@
 //! destination-filtered routing without running the network.
 
 use crate::comm::aer::SPIKE_WIRE_BYTES;
+use crate::comm::topology::TopologyTree;
 use crate::comm::transport::ExchangeStats;
+use crate::engine::partition::Partition;
+use crate::model::connectivity::ConnectivityParams;
 
 /// Bytes/messages a rank moved through the transport over a whole run.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
@@ -89,6 +92,84 @@ impl CommVolume {
 /// epoch-batched protocol buys.
 pub fn expected_exchanges(steps: u32, epoch_steps: u32) -> u64 {
     steps.div_ceil(epoch_steps.max(1)) as u64
+}
+
+/// The realized pair-liveness matrix of a concrete placement:
+/// `live[a][b]` = sources owned by rank `a` with at least one
+/// postsynaptic target on rank `b` (including `a == b`). Under filtered
+/// routing a spike from rank `a` puts bytes on the `a → b` wire iff its
+/// source is live toward `b`, so `live[a][b] / size(a)` is the exact
+/// per-spike traffic probability the placement realizes — the
+/// partition-*dependent* counterpart of the expectation
+/// [`pair_coverage`], and what comm-aware placement actually moves.
+///
+/// Cost: one full n×m sweep of the stateless connectome.
+pub fn pair_liveness(cp: &ConnectivityParams, part: &Partition) -> Vec<Vec<u64>> {
+    assert_eq!(cp.n, part.n_total(), "connectome/partition size mismatch");
+    let p = part.n_ranks() as usize;
+    let mut live = vec![vec![0u64; p]; p];
+    let mut hit = vec![false; p];
+    for s in 0..cp.n {
+        let a = part.owner(s) as usize;
+        hit.iter_mut().for_each(|h| *h = false);
+        for k in 0..cp.m {
+            let (t, _) = cp.synapse(s, k);
+            let b = part.owner(t) as usize;
+            if !hit[b] {
+                hit[b] = true;
+                live[a][b] += 1;
+            }
+        }
+    }
+    live
+}
+
+/// Split the run-total per-pair payload matrix accumulated in
+/// `per_rank[src].per_dst_bytes[dst]` by the topology tree's link
+/// levels (index 0 = intra-board). Loopback slots (`src == dst`) are
+/// excluded — this is the payload the placement actually put on each
+/// fabric tier, the measured side of the placement-pricing check.
+pub fn payload_level_bytes(per_rank: &[CommVolume], tree: &TopologyTree) -> Vec<u64> {
+    let mut lv = vec![0u64; tree.depth() + 1];
+    for (src, v) in per_rank.iter().enumerate() {
+        for (dst, &b) in v.per_dst_bytes.iter().enumerate() {
+            if src != dst && b > 0 {
+                lv[tree.link_level(src as u32, dst as u32)] += b;
+            }
+        }
+    }
+    lv
+}
+
+/// Predicted per-link-level payload bytes of a whole run under
+/// *filtered* routing, from the placement's realized liveness matrix
+/// and the observed per-rank spike totals: rank `a` emitting `S_a`
+/// spikes puts `12 · S_a · live[a][b] / size(a)` expected bytes on the
+/// `a → b` wire (sources spike near-uniformly under the homogeneous
+/// drive). Compare against the measured [`payload_level_bytes`] — the
+/// `simnet`-side prediction the bench checks to ~percent accuracy.
+pub fn predicted_payload_level_bytes(
+    cp: &ConnectivityParams,
+    part: &Partition,
+    rank_spikes: &[u64],
+    tree: &TopologyTree,
+) -> Vec<f64> {
+    let p = part.n_ranks() as usize;
+    assert_eq!(rank_spikes.len(), p, "need one spike total per rank");
+    let live = pair_liveness(cp, part);
+    let mut lv = vec![0.0f64; tree.depth() + 1];
+    for a in 0..p {
+        let size = part.size(a as u32) as f64;
+        for b in 0..p {
+            if a == b {
+                continue;
+            }
+            let frac = live[a][b] as f64 / size;
+            lv[tree.link_level(a as u32, b as u32)] +=
+                SPIKE_WIRE_BYTES as f64 * rank_spikes[a] as f64 * frac;
+        }
+    }
+    lv
 }
 
 /// Probability that a source neuron projects to at least one neuron of a
@@ -181,6 +262,89 @@ mod tests {
         // per-level columns widen to the deepest tree observed
         assert_eq!(v.level_messages, vec![3, 2, 1]);
         assert_eq!(v.level_bytes, vec![8, 4, 0]);
+    }
+
+    #[test]
+    fn pair_liveness_matches_the_incoming_rows() {
+        // live[a][b] must equal the number of rank-a sources whose
+        // incoming row on rank b is non-empty — liveness and the CSR
+        // build are two views of the same stateless generator.
+        use crate::config::PartitionPolicy;
+        use crate::engine::partition::AllocContext;
+        use crate::model::connectivity::IncomingSynapses;
+        let cp = ConnectivityParams { seed: 5, n: 96, m: 3, dmin: 1, dmax: 4 };
+        for policy in [PartitionPolicy::Index, PartitionPolicy::RoundRobin] {
+            let part = Partition::allocate(policy, 96, 4, &AllocContext::empty());
+            let live = pair_liveness(&cp, &part);
+            let incoming: Vec<IncomingSynapses> = (0..4)
+                .map(|r| IncomingSynapses::build_owned(&cp, part.owned(r)))
+                .collect();
+            for a in 0..4u32 {
+                for b in 0..4u32 {
+                    let want = part
+                        .owned(a)
+                        .iter()
+                        .filter(|&s| !incoming[b as usize].row(s).0.is_empty())
+                        .count() as u64;
+                    assert_eq!(
+                        live[a as usize][b as usize],
+                        want,
+                        "{policy:?} a={a} b={b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn payload_level_split_conserves_off_diagonal_bytes() {
+        // tree(4, [2]): boards {0,1} and {2,3} — 0↔1 and 2↔3 are level
+        // 0, everything across the board boundary is level 1.
+        let tree = TopologyTree::new(4, &[2]);
+        let mut v0 = CommVolume::default();
+        v0.per_dst_bytes = vec![99, 10, 20, 30]; // self slot must be ignored
+        let mut v1 = CommVolume::default();
+        v1.per_dst_bytes = vec![5, 0, 7, 0];
+        let lv = payload_level_bytes(&[v0.clone(), v1.clone()], &tree);
+        assert_eq!(lv, vec![15, 57]);
+        let total_off_diag: u64 = lv.iter().sum();
+        let manual: u64 = [&v0, &v1]
+            .iter()
+            .enumerate()
+            .flat_map(|(src, v)| {
+                v.per_dst_bytes
+                    .iter()
+                    .enumerate()
+                    .filter(move |&(dst, _)| dst != src)
+                    .map(|(_, &b)| b)
+            })
+            .sum();
+        assert_eq!(total_off_diag, manual);
+    }
+
+    #[test]
+    fn predicted_bytes_are_exact_when_every_source_spikes_once() {
+        // If every neuron of rank a spikes exactly once, the filtered
+        // payload a→b is exactly 12 · live[a][b] bytes; feeding
+        // rank_spikes = sizes must reproduce that, split by level.
+        let cp = ConnectivityParams { seed: 11, n: 64, m: 2, dmin: 1, dmax: 4 };
+        let part = Partition::even(64, 4);
+        let tree = TopologyTree::new(4, &[2]);
+        let live = pair_liveness(&cp, &part);
+        let sizes: Vec<u64> = (0..4).map(|r| part.size(r) as u64).collect();
+        let pred = predicted_payload_level_bytes(&cp, &part, &sizes, &tree);
+        let mut want = vec![0.0f64; 2];
+        for a in 0..4usize {
+            for b in 0..4usize {
+                if a != b {
+                    want[tree.link_level(a as u32, b as u32)] +=
+                        (SPIKE_WIRE_BYTES as u64 * live[a][b]) as f64;
+                }
+            }
+        }
+        for (lv, (&p, &w)) in pred.iter().zip(want.iter()).enumerate() {
+            assert!((p - w).abs() < 1e-6, "level {lv}: pred {p} want {w}");
+        }
     }
 
     #[test]

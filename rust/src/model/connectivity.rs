@@ -11,6 +11,7 @@
 //! enables the bitwise partition-determinism tests.
 
 use crate::config::NetworkParams;
+use crate::engine::partition::OwnedGids;
 use crate::util::rng::keyed;
 
 /// Immutable description of the random connectome.
@@ -64,25 +65,39 @@ impl ConnectivityParams {
 /// neurons and incoming synapses is assigned to each process").
 #[derive(Debug, Clone)]
 pub struct IncomingSynapses {
-    /// Local gid range [lo, hi).
-    pub lo: u32,
-    pub hi: u32,
+    /// Neurons resident on this rank.
+    n_local: u32,
     /// Row offsets per source gid: len n+1.
     row_ptr: Vec<u32>,
-    /// Target *local* indices (gid - lo).
+    /// Target *local* indices (the owner's local numbering).
     tgt_local: Vec<u32>,
     /// Per-synapse delay in steps.
     delay: Vec<u8>,
 }
 
 impl IncomingSynapses {
-    /// Generate the incoming synapses for the rank owning [lo, hi).
+    /// Generate the incoming synapses for the rank owning the
+    /// contiguous range [lo, hi) (the index-order placement).
+    pub fn build(cp: &ConnectivityParams, lo: u32, hi: u32) -> Self {
+        assert!(lo < hi && hi <= cp.n, "bad range [{lo},{hi}) for n={}", cp.n);
+        Self::build_owned(cp, &OwnedGids::contiguous(lo, hi))
+    }
+
+    /// Generate the incoming synapses for the rank owning `owned` —
+    /// any union of gid intervals a placement policy produced; target
+    /// indices are the owner's *local* numbering
+    /// ([`OwnedGids::local_of`]).
     ///
     /// Cost: iterates all n*m synapses of the network (each rank does the
     /// full sweep — the price of zero-communication construction; ~50 M
     /// draws/s, amortized once per run).
-    pub fn build(cp: &ConnectivityParams, lo: u32, hi: u32) -> Self {
-        assert!(lo < hi && hi <= cp.n, "bad range [{lo},{hi}) for n={}", cp.n);
+    pub fn build_owned(cp: &ConnectivityParams, owned: &OwnedGids) -> Self {
+        assert!(!owned.is_empty(), "a rank must own at least one neuron");
+        assert!(
+            owned.intervals().last().unwrap().1 <= cp.n,
+            "owned gids exceed network size {}",
+            cp.n
+        );
         let mut row_ptr = Vec::with_capacity(cp.n as usize + 1);
         let mut tgt_local = Vec::new();
         let mut delay = Vec::new();
@@ -92,8 +107,8 @@ impl IncomingSynapses {
             scratch.clear();
             for k in 0..cp.m {
                 let (t, d) = cp.synapse(s, k);
-                if t >= lo && t < hi {
-                    scratch.push((d, t - lo));
+                if let Some(local) = owned.try_local_of(t) {
+                    scratch.push((d, local));
                 }
             }
             // Delay-major row order: delivery then writes each delay
@@ -112,12 +127,16 @@ impl IncomingSynapses {
             row_ptr.push(len);
         }
         Self {
-            lo,
-            hi,
+            n_local: owned.len(),
             row_ptr,
             tgt_local,
             delay,
         }
+    }
+
+    /// Neurons resident on this rank.
+    pub fn n_local(&self) -> u32 {
+        self.n_local
     }
 
     /// The synapses from source gid `s` onto this rank's neurons.
@@ -213,6 +232,38 @@ mod tests {
             got.sort_unstable();
             expect.sort_unstable();
             assert_eq!(got, expect);
+        }
+    }
+
+    #[test]
+    fn owned_build_matches_the_stateless_generator() {
+        // scattered two-interval ownership: rows must hold exactly the
+        // synapses whose targets fall in the owned set, delay-sorted,
+        // with targets in the owner's local numbering
+        let c = cp(128, 32);
+        let owned = OwnedGids::from_intervals(vec![(8, 24), (96, 112)]);
+        let part = IncomingSynapses::build_owned(&c, &owned);
+        assert_eq!(part.n_local(), 32);
+        for s in 0..128u32 {
+            let (pt, pd) = part.row(s);
+            assert!(pd.windows(2).all(|w| w[0] <= w[1]), "row {s} not sorted");
+            let mut got: Vec<(u8, u32)> =
+                pd.iter().zip(pt).map(|(&d, &t)| (d, t)).collect();
+            let mut expect: Vec<(u8, u32)> = c
+                .targets_of(s)
+                .into_iter()
+                .filter_map(|(t, d)| owned.try_local_of(t).map(|l| (d, l)))
+                .collect();
+            got.sort_unstable();
+            expect.sort_unstable();
+            assert_eq!(got, expect, "s={s}");
+        }
+        // contiguous build is literally the one-interval special case
+        let a = IncomingSynapses::build(&c, 16, 48);
+        let b = IncomingSynapses::build_owned(&c, &OwnedGids::contiguous(16, 48));
+        assert_eq!(a.n_synapses(), b.n_synapses());
+        for s in 0..128u32 {
+            assert_eq!(a.row(s), b.row(s));
         }
     }
 

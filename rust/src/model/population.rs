@@ -1,13 +1,17 @@
 //! Per-rank population state (structure-of-arrays) and initialization.
 
 use crate::config::NetworkParams;
+use crate::engine::partition::OwnedGids;
 use crate::util::rng::keyed;
 
 /// The dynamic state of the neurons owned by one rank, in SoA layout
 /// matching the kernel ABI: v, w, rf plus the static sfa_inc vector.
+/// Local index order is ascending gid over the owned set (matching
+/// [`OwnedGids`] local numbering), which is `gid0 + local` only for
+/// contiguous placements.
 #[derive(Debug, Clone)]
 pub struct PopulationState {
-    /// Global id of the first local neuron.
+    /// Smallest owned global id.
     pub gid0: u32,
     pub v: Vec<f32>,
     pub w: Vec<f32>,
@@ -17,27 +21,32 @@ pub struct PopulationState {
 }
 
 impl PopulationState {
-    /// Initialize neurons [gid0, gid0+n) of the network described by `p`.
+    /// Initialize the contiguous neurons [gid0, gid0+n).
+    pub fn init(p: &NetworkParams, seed: u64, gid0: u32, n: u32) -> Self {
+        Self::init_owned(p, seed, &OwnedGids::contiguous(gid0, gid0 + n))
+    }
+
+    /// Initialize the neurons a placement policy assigned to one rank.
     ///
     /// Membrane potentials start at a seeded uniform value in
     /// [v_floor/4, theta*0.8) — keyed by *global* id, so initial state is
     /// partition-independent (the same neuron gets the same v whichever
-    /// rank owns it).
-    pub fn init(p: &NetworkParams, seed: u64, gid0: u32, n: u32) -> Self {
-        let mut v = Vec::with_capacity(n as usize);
-        for gid in gid0..gid0 + n {
+    /// rank owns it, under whichever placement policy).
+    pub fn init_owned(p: &NetworkParams, seed: u64, owned: &OwnedGids) -> Self {
+        let n = owned.len() as usize;
+        let mut v = Vec::with_capacity(n);
+        let mut sfa_inc = Vec::with_capacity(n);
+        let span = p.theta * 0.8 - p.v_floor * 0.25;
+        for gid in owned.iter() {
             let mut r = keyed(seed, 0x11F0, gid as u64, 0);
-            let span = p.theta * 0.8 - p.v_floor * 0.25;
             v.push(p.v_floor * 0.25 + r.next_f64() as f32 * span);
+            sfa_inc.push(if p.is_exc(gid) { p.sfa_inc } else { 0.0 });
         }
-        let sfa_inc = (gid0..gid0 + n)
-            .map(|gid| if p.is_exc(gid) { p.sfa_inc } else { 0.0 })
-            .collect();
         Self {
-            gid0,
+            gid0: owned.first(),
             v,
-            w: vec![0.0; n as usize],
-            rf: vec![0.0; n as usize],
+            w: vec![0.0; n],
+            rf: vec![0.0; n],
             sfa_inc,
         }
     }
@@ -48,11 +57,6 @@ impl PopulationState {
 
     pub fn is_empty(&self) -> bool {
         self.v.is_empty()
-    }
-
-    /// Local index -> global neuron id.
-    pub fn gid(&self, local: u32) -> u32 {
-        self.gid0 + local
     }
 }
 
@@ -70,6 +74,22 @@ mod tests {
         assert_eq!(&whole.v[128..], &hi.v[..]);
         assert_eq!(&whole.sfa_inc[..128], &lo.sfa_inc[..]);
         assert_eq!(&whole.sfa_inc[128..], &hi.sfa_inc[..]);
+    }
+
+    #[test]
+    fn init_owned_is_a_gather_of_the_whole() {
+        // scattered ownership gets exactly the same per-gid state the
+        // whole-network init produces — placement permutes, never perturbs
+        let p = NetworkParams::tiny(256);
+        let whole = PopulationState::init(&p, 42, 0, 256);
+        let owned = OwnedGids::from_intervals(vec![(16, 32), (200, 208)]);
+        let part = PopulationState::init_owned(&p, 42, &owned);
+        assert_eq!(part.gid0, 16);
+        assert_eq!(part.len(), 24);
+        for (local, gid) in owned.iter().enumerate() {
+            assert_eq!(part.v[local], whole.v[gid as usize], "gid {gid}");
+            assert_eq!(part.sfa_inc[local], whole.sfa_inc[gid as usize]);
+        }
     }
 
     #[test]

@@ -285,6 +285,27 @@ impl AllToAllModel {
         crate::comm::topology::TopologyTree::new(p.max(1), shape).level_message_counts()
     }
 
+    /// Split an explicit per-pair traffic matrix `bytes[src][dst]` by
+    /// the tree's link levels (index 0 = intra-board): the byte-side
+    /// counterpart of [`Self::tree_level_messages`], and the pricing
+    /// view of the placement study — a comm-aware placement moves bytes
+    /// from the high (expensive) levels down to level 0 without
+    /// changing the total. The self slot is never counted.
+    pub fn tree_level_bytes(&self, bytes: &[Vec<u64>], shape: &[u32]) -> Vec<u64> {
+        let p = bytes.len() as u32;
+        let tree = crate::comm::topology::TopologyTree::new(p.max(1), shape);
+        let mut lv = vec![0u64; tree.depth() + 1];
+        for (src, row) in bytes.iter().enumerate() {
+            assert_eq!(row.len() as u32, p, "traffic matrix must be square");
+            for (dst, &b) in row.iter().enumerate() {
+                if src != dst && b > 0 {
+                    lv[tree.link_level(src as u32, dst as u32)] += b;
+                }
+            }
+        }
+        lv
+    }
+
     /// Fabric messages (link levels >= 1) of one tree exchange.
     pub fn tree_fabric_messages(&self, p: u32, shape: &[u32]) -> u64 {
         crate::comm::topology::TopologyTree::new(p.max(1), shape)
@@ -686,6 +707,31 @@ mod tests {
             m.tree_fabric_messages(8, &[2]),
             m.hierarchical_inter_messages(8)
         );
+    }
+
+    #[test]
+    fn tree_level_bytes_splits_the_traffic_matrix() {
+        let m = AllToAllModel::new(IB, 2);
+        // 4 ranks as tree:2 — boards {0,1}, {2,3}
+        let bytes = vec![
+            vec![99, 10, 20, 30], // self slot ignored
+            vec![5, 0, 7, 0],
+            vec![0, 0, 0, 11],
+            vec![1, 2, 3, 0],
+        ];
+        let lv = m.tree_level_bytes(&bytes, &[2]);
+        assert_eq!(lv, vec![10 + 5 + 11 + 3, 20 + 30 + 7 + 1 + 2]);
+        // conservation: levels sum to the off-diagonal total
+        let off: u64 = bytes
+            .iter()
+            .enumerate()
+            .flat_map(|(s, row)| {
+                row.iter().enumerate().filter(move |&(d, _)| d != s).map(|(_, &b)| b)
+            })
+            .sum();
+        assert_eq!(lv.iter().sum::<u64>(), off);
+        // one board holding every rank: everything is level 0
+        assert_eq!(m.tree_level_bytes(&bytes, &[4]), vec![off, 0]);
     }
 
     #[test]

@@ -1,0 +1,208 @@
+//! Property-based tests for the placement layer: every allocator policy
+//! must cover every neuron exactly once with every rank non-empty —
+//! including ragged topology trees and weighted heterogeneous splits —
+//! and the live simulation's spike-count/rate invariants must hold
+//! across `--partition` × `--topology` × `--exchange-every`.
+//!
+//! Placement permutes neuron→rank ownership, so (unlike the routing,
+//! cadence and topology axes, which are checked raster-bitwise against
+//! a fixed partition) the cross-policy contract is stated on
+//! partition-independent observables: the whole-population per-step
+//! raster, the exc/inh spike split and the per-rank spike totals'
+//! conservation. Because connectivity, stimulus and initial state are
+//! pure functions of global ids, those are in fact bitwise equalities.
+
+use std::collections::HashMap;
+
+use dpsnn::comm::TopologyTree;
+use dpsnn::config::{
+    ExchangeCadence, NetworkParams, PartitionPolicy, RunConfig, Topology,
+};
+use dpsnn::engine::{AllocContext, Partition};
+use dpsnn::model::connectivity::ConnectivityParams;
+use dpsnn::util::prop::forall;
+
+const POLICIES: [PartitionPolicy; 3] = [
+    PartitionPolicy::Index,
+    PartitionPolicy::RoundRobin,
+    PartitionPolicy::GreedyComms,
+];
+
+/// Exactly-once coverage with no starved rank, for one placement.
+fn assert_covers(part: &Partition, n: u32, p: u32, what: &str) {
+    assert_eq!(part.n_total(), n, "{what}");
+    assert_eq!(part.n_ranks(), p, "{what}");
+    let mut seen = vec![false; n as usize];
+    let mut total = 0u32;
+    for r in 0..p {
+        let owned = part.owned(r);
+        assert!(!owned.is_empty(), "{what}: rank {r} got no neurons");
+        total += owned.len();
+        for gid in owned.iter() {
+            assert!(gid < n, "{what}: gid {gid} out of range");
+            assert!(!seen[gid as usize], "{what}: gid {gid} owned twice");
+            seen[gid as usize] = true;
+            assert_eq!(part.owner(gid), r, "{what}: owner({gid})");
+            assert_eq!(part.try_owner(gid), Some(r), "{what}");
+            assert_eq!(owned.gid_of(owned.local_of(gid)), gid, "{what}");
+        }
+    }
+    assert_eq!(total, n, "{what}: sizes must sum to n");
+    assert!(seen.iter().all(|&s| s), "{what}: some gid unowned");
+}
+
+#[test]
+fn every_policy_covers_every_neuron_exactly_once() {
+    forall("placement coverage", 40, |rng| {
+        let p = 1 + rng.next_below(12);
+        let n = p + rng.next_below(3000);
+        let cp = ConnectivityParams {
+            seed: rng.next_u64(),
+            n,
+            m: 1 + rng.next_below(8),
+            dmin: 1,
+            dmax: 4,
+        };
+        // random, usually ragged, tree over the ranks (k1 rarely
+        // divides p): placement must stay a bijection regardless
+        let shape = [1 + rng.next_below(4), 1 + rng.next_below(3)];
+        let tree = TopologyTree::new(p, &shape);
+        let ctx = AllocContext { connectivity: Some(&cp), tree: Some(&tree) };
+        for policy in POLICIES {
+            let part = Partition::allocate(policy, n, p, &ctx);
+            assert_covers(
+                &part,
+                n,
+                p,
+                &format!("{policy:?} n={n} p={p} shape={shape:?}"),
+            );
+        }
+    });
+}
+
+#[test]
+fn index_and_round_robin_need_no_context() {
+    // The context-free policies must also work without connectivity or
+    // tree (the greedy policy documents its panic instead).
+    forall("context-free placement", 25, |rng| {
+        let p = 1 + rng.next_below(9);
+        let n = p + rng.next_below(800);
+        for policy in [PartitionPolicy::Index, PartitionPolicy::RoundRobin] {
+            let part = Partition::allocate(policy, n, p, &AllocContext::empty());
+            assert_covers(&part, n, p, &format!("{policy:?} n={n} p={p}"));
+        }
+        // index reproduces the historical contiguous split exactly
+        let index =
+            Partition::allocate(PartitionPolicy::Index, n, p, &AllocContext::empty());
+        assert_eq!(index, Partition::even(n, p));
+    });
+}
+
+#[test]
+fn weighted_hetero_splits_cover_and_respect_boundaries() {
+    forall("weighted coverage", 25, |rng| {
+        let p = 2 + rng.next_below(7);
+        let n = 4 * p + rng.next_below(2000);
+        let weights: Vec<f64> = (0..p).map(|_| 0.5 + rng.next_f64() * 9.5).collect();
+        let part = Partition::weighted(n, &weights);
+        assert_covers(&part, n, p, &format!("weighted n={n} p={p}"));
+        // contiguous by construction: range() must be usable
+        let mut next = 0u32;
+        for r in 0..p {
+            let (lo, hi) = part.range(r);
+            assert_eq!(lo, next, "weighted ranges must tile in order");
+            next = hi;
+        }
+        assert_eq!(next, n);
+    });
+}
+
+#[test]
+fn boundary_gids_resolve_and_past_the_end_is_rejected() {
+    let tree = TopologyTree::new(5, &[2]);
+    let cp = ConnectivityParams { seed: 3, n: 333, m: 2, dmin: 1, dmax: 4 };
+    let ctx = AllocContext { connectivity: Some(&cp), tree: Some(&tree) };
+    for policy in POLICIES {
+        let part = Partition::allocate(policy, 333, 5, &ctx);
+        // first and last gid resolve under every policy
+        let _ = part.owner(0);
+        let _ = part.owner(332);
+        assert!(part.try_owner(332).is_some());
+        assert_eq!(part.try_owner(333), None, "{policy:?}");
+        assert_eq!(part.try_owner(u32::MAX), None, "{policy:?}");
+        let part2 = part.clone();
+        let panics = std::panic::catch_unwind(move || part2.owner(333));
+        assert!(panics.is_err(), "{policy:?}: owner(n) must panic");
+    }
+}
+
+/// Run the tiny live network under one (policy, topology, cadence)
+/// combination and return the partition-independent observables.
+fn observables(
+    policy: PartitionPolicy,
+    topology: Topology,
+    cadence: ExchangeCadence,
+) -> (Vec<u32>, u64, u64, u64, Vec<u64>) {
+    let mut cfg = RunConfig::default();
+    cfg.net = NetworkParams::tiny(384);
+    cfg.net.delay_min_steps = 4;
+    cfg.procs = 4;
+    cfg.sim_seconds = 0.1;
+    cfg.partition = policy;
+    cfg.topology = topology;
+    cfg.exchange_every = cadence;
+    let r = dpsnn::coordinator::run(&cfg).unwrap();
+    assert_eq!(r.partition, policy);
+    (
+        r.pop_counts,
+        r.total_spikes,
+        r.total_exc_spikes,
+        r.total_syn_events,
+        r.rank_spikes,
+    )
+}
+
+#[test]
+fn spike_invariants_hold_across_partition_topology_and_cadence() {
+    // 3 policies x 2 topologies x 2 cadences = 12 live runs of the same
+    // physics: per-step population raster, total/excitatory spike
+    // counts and synaptic-event totals must all be identical; per-rank
+    // spike totals permute but always conserve the population sum.
+    let topologies = [Topology::Flat, "tree:2".parse::<Topology>().unwrap()];
+    let cadences = [ExchangeCadence::Step, ExchangeCadence::MinDelay];
+    let (base_pop, base_spikes, base_exc, base_syn, _) =
+        observables(PartitionPolicy::Index, Topology::Flat, ExchangeCadence::Step);
+    assert!(base_spikes > 0, "network must be active");
+    assert!(base_exc > 0 && base_exc < base_spikes, "both populations fire");
+    // The placement (and so the per-rank spike split) is a function of
+    // (policy, topology) only — greedy-comms reads the tree's link
+    // costs, so its split may legitimately differ across topologies,
+    // but the cadence must never move a neuron.
+    let mut splits: HashMap<String, Vec<u64>> = HashMap::new();
+    for policy in POLICIES {
+        for topology in topologies {
+            for cadence in cadences {
+                let (pop, spikes, exc, syn, ranks) =
+                    observables(policy, topology, cadence);
+                let tag = format!("{policy:?}/{topology}/{cadence}");
+                assert_eq!(pop, base_pop, "{tag}: raster changed");
+                assert_eq!(spikes, base_spikes, "{tag}");
+                assert_eq!(exc, base_exc, "{tag}: exc/inh split changed");
+                assert_eq!(syn, base_syn, "{tag}: synaptic events changed");
+                assert_eq!(ranks.iter().sum::<u64>(), base_spikes, "{tag}");
+                assert_eq!(ranks.len(), 4, "{tag}");
+                let prev = splits
+                    .entry(format!("{policy:?}/{topology}"))
+                    .or_insert_with(|| ranks.clone());
+                assert_eq!(*prev, ranks, "{tag}: cadence changed the placement");
+            }
+        }
+    }
+    // and the scattering policy really does move neurons off the
+    // contiguous split (a placement-level fact, independent of rates)
+    let ctx = AllocContext::empty();
+    assert_ne!(
+        Partition::allocate(PartitionPolicy::RoundRobin, 384, 4, &ctx),
+        Partition::allocate(PartitionPolicy::Index, 384, 4, &ctx),
+    );
+}
