@@ -42,7 +42,7 @@ fn live_scaling(b: &mut Bench, fast: bool) {
 
 /// Table IV-family: the per-step cost of the AOT LIF+SFA artifact.
 fn xla_exec(b: &mut Bench) {
-    use dpsnn::model::population::PopulationState;
+    use dpsnn::model::population::PopulationSoA;
     use dpsnn::runtime::backend::XlaBackend;
     use dpsnn::runtime::NeuronBackend;
 
@@ -52,7 +52,7 @@ fn xla_exec(b: &mut Bench) {
     }
     for n in [2048u32, 20_480] {
         let net = NetworkParams::paper(n.max(4608)); // keep fan-out < n
-        let pop = PopulationState::init(&net, 1, 0, n);
+        let pop = PopulationSoA::init(&net, 1, 0, n);
         let mut be = match XlaBackend::new(&net, pop, std::path::Path::new("artifacts")) {
             Ok(b) => b,
             Err(e) => {
@@ -61,11 +61,11 @@ fn xla_exec(b: &mut Bench) {
             }
         };
         let i_syn = vec![0.5f32; n as usize];
-        let i_ext = vec![1.0f32; n as usize];
+        be.i_ext_mut().iter_mut().for_each(|x| *x = 1.0);
         let mut spiked = Vec::new();
         b.bench_elems(&format!("xla_step n={n}"), n as f64, || {
             spiked.clear();
-            be.step(&i_syn, &i_ext, &mut spiked).unwrap()
+            be.step(&i_syn, &mut spiked).unwrap()
         });
     }
 }

@@ -1,6 +1,12 @@
 //! Micro-benchmarks of the per-step hot paths (in-tree harness,
 //! `dpsnn::util::bench`; criterion is unavailable offline).
 //!
+//! The three compute kernels (neuron update, Poisson fill, synaptic
+//! delivery) run through the shared `profiling::compute_bench` module —
+//! the same kernels `dpsnn bench-smoke --compute-out` measures into
+//! BENCH_compute.json — in both the scalar baseline and the SoA
+//! production variants at 1/2/4 compute threads.
+//!
 //! Run: `cargo bench --offline` (or `cargo bench -- fast` for a quick pass).
 
 use dpsnn::comm::aer::{decode_spikes, encode_spikes};
@@ -8,8 +14,7 @@ use dpsnn::config::NetworkParams;
 use dpsnn::engine::delay_queue::DelayRing;
 use dpsnn::engine::spike::Spike;
 use dpsnn::model::connectivity::{ConnectivityParams, IncomingSynapses};
-use dpsnn::model::neuron::{step_native, StepParams};
-use dpsnn::model::poisson::ExternalStimulus;
+use dpsnn::profiling::run_compute_bench;
 use dpsnn::util::bench::{black_box, Bench};
 use dpsnn::util::rng::SplitMix64;
 
@@ -18,70 +23,21 @@ fn main() {
     let mut b = if fast { Bench::fast() } else { Bench::new() };
     println!("== hot paths ==");
 
-    neuron_update(&mut b);
-    synaptic_delivery(&mut b);
-    poisson_fill(&mut b);
+    compute_kernels(&mut b);
     aer_codec(&mut b);
     delay_ring(&mut b);
     connectivity_build(&mut b);
     modeled_replay(&mut b);
 }
 
-/// L3-native LIF+SFA update — must sustain >> real-time per core.
-fn neuron_update(b: &mut Bench) {
-    for n in [2_560usize, 20_480] {
-        let params = StepParams::from_network(&NetworkParams::paper_20480());
-        let mut rng = SplitMix64::new(1);
-        let mut v: Vec<f32> = (0..n).map(|_| rng.next_f64() as f32 * 19.0).collect();
-        let mut w = vec![0.1f32; n];
-        let mut rf = vec![0.0f32; n];
-        let i_syn: Vec<f32> = (0..n).map(|_| rng.next_f64() as f32 * 2.0).collect();
-        let i_ext = vec![1.0f32; n];
-        let sfa = vec![0.12f32; n];
-        let mut spiked = Vec::with_capacity(n);
-        b.bench_elems(&format!("neuron_update n={n}"), n as f64, || {
-            spiked.clear();
-            step_native(&params, &mut v, &mut w, &mut rf, &i_syn, &i_ext, &sfa, &mut spiked)
-        });
+/// The compute engine's three kernels, scalar baseline vs SoA path.
+fn compute_kernels(b: &mut Bench) {
+    let report = run_compute_bench(b, 20_480, &[1, 2, 4]);
+    for kind in ["neuron_update", "poisson_fill", "synaptic_delivery"] {
+        if let Some(s) = report.speedup_vs_scalar(kind) {
+            println!("  {kind}: best SoA path {s:.2}x over scalar baseline");
+        }
     }
-}
-
-/// Synaptic event delivery through CSR rows into the delay ring —
-/// the paper's dominant computation component.
-fn synaptic_delivery(b: &mut Bench) {
-    let n = 20_480u32;
-    let net = NetworkParams::paper_20480();
-    let cp = ConnectivityParams::from_network(&net, 7);
-    let inc = IncomingSynapses::build(&cp, 0, n);
-    let mut ring = DelayRing::new(n as usize, net.delay_max_steps);
-    // one step's worth of spikes at 3.2 Hz
-    let mut rng = SplitMix64::new(3);
-    let spikes: Vec<u32> = (0..66).map(|_| rng.next_below(n)).collect();
-    let events: usize = spikes.iter().map(|&s| inc.row(s).0.len()).sum();
-    b.bench_elems(
-        &format!("deliver {} spikes -> {events} syn events", spikes.len()),
-        events as f64,
-        || {
-            for &s in &spikes {
-                let (tgts, delays) = inc.row(s);
-                for (&t, &d) in tgts.iter().zip(delays) {
-                    ring.add(d, t, 0.4);
-                }
-            }
-            ring.advance();
-        },
-    );
-}
-
-fn poisson_fill(b: &mut Bench) {
-    let net = NetworkParams::paper_20480();
-    let stim = ExternalStimulus::new(&net, 5);
-    let mut buf = vec![0.0f32; 20_480];
-    let mut step = 0u32;
-    b.bench_elems("poisson_fill n=20480 (lambda 1.2)", 20_480.0, || {
-        step = step.wrapping_add(1);
-        stim.fill(step, 0, &mut buf);
-    });
 }
 
 fn aer_codec(b: &mut Bench) {

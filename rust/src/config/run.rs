@@ -430,6 +430,12 @@ pub struct RunConfig {
     /// index layout). `greedy-comms` reads the connectome and the
     /// topology tree at startup to co-locate strongly-coupled blocks.
     pub partition: PartitionPolicy,
+    /// Intra-rank compute threads (`--compute-threads`): the neuron
+    /// update, Poisson fill and synaptic delivery split into this many
+    /// fixed chunks per rank. Rasters are bitwise identical for every
+    /// value (chunk geometry is deterministic and every chunk writes a
+    /// disjoint region; see `util::pool`).
+    pub compute_threads: u32,
     /// Platform preset name for modeled runs (see `platform::presets`).
     pub platform: String,
     /// Interconnect preset for modeled runs ("ib", "eth1g", ...).
@@ -457,6 +463,7 @@ impl Default for RunConfig {
             topology: Topology::Flat,
             leader_rotation: LeaderRotation::Fixed,
             partition: PartitionPolicy::Index,
+            compute_threads: 1,
             platform: "xeon".to_string(),
             interconnect: "ib".to_string(),
             artifacts_dir: "artifacts".to_string(),
@@ -502,6 +509,12 @@ impl RunConfig {
         // already reject empty shapes and zero branching factors.
         if self.topology.ranks_per_node() == Some(0) {
             bail!("topology nodes:<k> needs at least 1 rank per node");
+        }
+        if self.compute_threads == 0 || self.compute_threads > 256 {
+            bail!(
+                "compute_threads = {} out of range 1..=256",
+                self.compute_threads
+            );
         }
         Ok(())
     }
@@ -579,6 +592,8 @@ impl RunConfig {
         cfg.partition = doc
             .str_or("run", "partition", &cfg.partition.to_string())
             .parse()?;
+        cfg.compute_threads =
+            doc.i64_or("run", "compute_threads", cfg.compute_threads as i64) as u32;
         cfg.platform = doc.str_or("run", "platform", &cfg.platform);
         cfg.interconnect = doc.str_or("run", "interconnect", &cfg.interconnect);
         cfg.artifacts_dir = doc.str_or("run", "artifacts_dir", &cfg.artifacts_dir);
@@ -620,6 +635,20 @@ mod tests {
         assert_eq!(cfg.mode, Mode::Modeled);
         assert_eq!(cfg.platform, "jetson");
         assert_eq!(cfg.steps(), 2500);
+    }
+
+    #[test]
+    fn compute_threads_parses_and_validates() {
+        assert_eq!(RunConfig::default().compute_threads, 1);
+        let cfg = RunConfig::from_toml_str("[run]\ncompute_threads = 4").unwrap();
+        assert_eq!(cfg.compute_threads, 4);
+        let mut cfg = RunConfig::default();
+        cfg.compute_threads = 0;
+        assert!(cfg.validate().is_err(), "0 threads must fail");
+        cfg.compute_threads = 257;
+        assert!(cfg.validate().is_err(), "absurd thread count must fail");
+        cfg.compute_threads = 256;
+        cfg.validate().unwrap();
     }
 
     #[test]

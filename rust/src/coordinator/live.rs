@@ -83,10 +83,11 @@ use crate::engine::rank::RankEngine;
 use crate::engine::spike::Spike;
 use crate::metrics::comm_volume::CommVolume;
 use crate::model::connectivity::ConnectivityParams;
-use crate::model::population::PopulationState;
+use crate::model::population::PopulationSoA;
 use crate::profiling::components::Components;
 use crate::profiling::timer::Stopwatch;
 use crate::runtime::make_backend;
+use crate::util::pool::ComputePool;
 
 use super::orchestrator::RunResult;
 
@@ -235,15 +236,19 @@ fn rank_main<T: Transport>(
     steps: u32,
 ) -> Result<RankReport> {
     let owned = part.owned(rank).clone();
-    let pop = PopulationState::init_owned(&cfg.net, cfg.seed, &owned);
+    let pop = PopulationSoA::init_owned(&cfg.net, cfg.seed, &owned);
+    // One pool per rank: the backend chunks the neuron update over it and
+    // the engine reuses it for the Poisson fill and ranged delivery.
+    let pool = std::rc::Rc::new(ComputePool::new(cfg.compute_threads as usize));
     let backend = make_backend(
         cfg.backend,
         &cfg.net,
         pop,
         std::path::Path::new(&cfg.artifacts_dir),
+        pool.clone(),
     )
     .with_context(|| format!("rank {rank} backend"))?;
-    let mut engine = RankEngine::new(&cfg.net, cfg.seed, rank, owned, backend);
+    let mut engine = RankEngine::with_pool(&cfg.net, cfg.seed, rank, owned, backend, pool);
 
     // Setup (outside the profiled loop, like the synapse build): the
     // destination-rank bitmap for this rank's sources.

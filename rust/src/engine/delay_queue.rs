@@ -8,22 +8,39 @@
 //! cannot change the result because weights live on the exact 2^-10 grid
 //! (see `config::network::WEIGHT_QUANTUM`).
 //!
-//! **Hot path** (EXPERIMENTS.md §Perf): storage is one flat
-//! `depth * n` array; [`DelayRing::deliver_row`] fuses the per-spike
-//! fan-out loop with branch-free slot arithmetic and unchecked indexing
-//! (safety: targets and delays are validated at construction by
+//! **Hot path** (EXPERIMENTS.md §Perf): storage is one flat cache-aligned
+//! `depth * stride` array (`stride` = n padded to a whole cache line, so
+//! every slot row starts on a 64 B boundary). Rows are stored delay-major
+//! with ascending targets inside each delay run (see
+//! `IncomingSynapses::build`), so [`DelayRing::deliver_row_offset`] scans
+//! each run once, computes the slot base once, and the inner
+//! weight-accumulate walks ascending offsets of a single slot row —
+//! unit-direction, branch-free, unchecked (safety: targets and delays are
+//! validated at construction by
 //! [`crate::model::connectivity::IncomingSynapses`]).
-//! [`DelayRing::deliver_row_offset`] is the same loop shifted `back`
-//! steps toward the present — the epoch-batched exchange delivers a
-//! whole min-delay window of buffered spikes at once, each landing in
-//! the slot per-step delivery would have used.
+//! [`DelayRing::deliver_row_offset`] shifts delivery `back` steps toward
+//! the present — the epoch-batched exchange delivers a whole min-delay
+//! window of buffered spikes at once, each landing in the slot per-step
+//! delivery would have used.
+//!
+//! For `--compute-threads N`, [`DelayRing::shard`] hands out a raw view
+//! that can deliver the *same* rows restricted to a target sub-range
+//! ([`RingShard::deliver_row_offset_ranged`]): each worker walks every
+//! spike's row but writes only its own targets, so every accumulator
+//! receives exactly the per-step add sequence regardless of the thread
+//! count — bitwise determinism by construction.
+
+use crate::util::aligned::{AlignedF32, LANES_PER_LINE};
 
 /// Ring of `depth` future input-current accumulators over `n` local neurons.
 #[derive(Debug, Clone)]
 pub struct DelayRing {
-    /// slot-major flat storage: slots[s * n + j].
-    flat: Vec<f32>,
+    /// slot-major flat storage: slots[s * stride + j]; the pad lanes
+    /// [n, stride) of each slot stay zero forever.
+    flat: AlignedF32,
     n: usize,
+    /// Slot row pitch: n rounded up to a whole 64 B cache line.
+    stride: usize,
     depth: usize,
     /// Slot index holding "the step currently being integrated".
     cur: usize,
@@ -34,7 +51,8 @@ impl DelayRing {
     /// slot for delay d = (cur + d) mod (max_delay + 1).
     pub fn new(n: usize, max_delay: u32) -> Self {
         let depth = max_delay as usize + 1;
-        Self { flat: vec![0.0; depth * n], n, depth, cur: 0 }
+        let stride = n.div_ceil(LANES_PER_LINE).max(1) * LANES_PER_LINE;
+        Self { flat: AlignedF32::zeroed(depth * stride), n, stride, depth, cur: 0 }
     }
 
     pub fn depth(&self) -> usize {
@@ -60,16 +78,13 @@ impl DelayRing {
         if slot >= self.depth {
             slot -= self.depth;
         }
-        self.flat[slot * self.n + tgt as usize] += w;
+        self.flat[slot * self.stride + tgt as usize] += w;
     }
 
     /// Deliver one spike's whole fan-out: add `w` at `(delay, tgt)` for
     /// every synapse in the row. The caller guarantees (and
     /// `IncomingSynapses` construction enforces) `tgt < n` and
     /// `1 <= delay <= max_delay`.
-    /// Rows are stored delay-major (see `IncomingSynapses::build`), so
-    /// the loop advances the slot base only on delay changes and all
-    /// writes of a run land in one slot's accumulator.
     #[inline]
     pub fn deliver_row(&mut self, tgts: &[u32], delays: &[u8], w: f32) {
         self.deliver_row_offset(tgts, delays, w, 0);
@@ -87,45 +102,31 @@ impl DelayRing {
     /// `[1, max_delay]`.
     #[inline]
     pub fn deliver_row_offset(&mut self, tgts: &[u32], delays: &[u8], w: f32, back: u32) {
-        debug_assert_eq!(tgts.len(), delays.len());
-        let n = self.n;
-        let depth = self.depth;
-        let back = back as usize;
-        let cur = self.cur;
-        let flat = self.flat.as_mut_ptr();
-        let mut last_d = 0u8; // delays are >= 1, so this forces a recompute
-        let mut base = 0usize;
-        for (&t, &d) in tgts.iter().zip(delays) {
-            debug_assert!((t as usize) < n && (1..depth).contains(&(d as usize)));
-            debug_assert!(
-                (d as usize) > back,
-                "offset {back} >= delay {d}: spike delivered past its arrival step"
-            );
-            if d != last_d {
-                let mut slot = cur + d as usize - back;
-                if slot >= depth {
-                    slot -= depth;
-                }
-                base = slot * n;
-                last_d = d;
-            }
-            // SAFETY: slot < depth and t < n (validated at build; see
-            // connectivity tests), so the index is within flat's length.
-            unsafe {
-                *flat.add(base + t as usize) += w;
-            }
+        // SAFETY: full target range — one writer, no concurrent shards.
+        unsafe { self.shard().deliver_row_offset_ranged(tgts, delays, w, back, 0, self.n as u32) }
+    }
+
+    /// A raw, range-restrictable delivery view for the threaded path.
+    /// Shards alias the ring's storage; see the safety contract on
+    /// [`RingShard::deliver_row_offset_ranged`].
+    pub fn shard(&mut self) -> RingShard {
+        RingShard {
+            flat: self.flat.as_mut_ptr(),
+            stride: self.stride,
+            depth: self.depth,
+            cur: self.cur,
         }
     }
 
     /// Borrow the accumulator for the current step (the `i_syn` input of
-    /// the neuron update).
+    /// the neuron update). 64 B-aligned (slot rows sit on the line grid).
     pub fn current(&self) -> &[f32] {
-        &self.flat[self.cur * self.n..(self.cur + 1) * self.n]
+        &self.flat[self.cur * self.stride..self.cur * self.stride + self.n]
     }
 
     /// Finish the current step: zero its slot and advance the ring.
     pub fn advance(&mut self) {
-        let a = self.cur * self.n;
+        let a = self.cur * self.stride;
         self.flat[a..a + self.n].iter_mut().for_each(|x| *x = 0.0);
         self.cur += 1;
         if self.cur == self.depth {
@@ -134,8 +135,93 @@ impl DelayRing {
     }
 
     /// Sum of everything still queued (test/diagnostic invariant helper).
+    /// The pad lanes are permanently zero, so summing the whole flat
+    /// array still counts each queued weight exactly once.
     pub fn queued_total(&self) -> f64 {
         self.flat.iter().map(|&x| x as f64).sum()
+    }
+}
+
+/// A copyable raw view of one [`DelayRing`]'s storage at a fixed step,
+/// used by the `--compute-threads` delivery: every worker walks the same
+/// spike rows through the same shard, restricted to a disjoint target
+/// range.
+#[derive(Clone, Copy)]
+pub struct RingShard {
+    flat: *mut f32,
+    stride: usize,
+    depth: usize,
+    cur: usize,
+}
+
+// SAFETY: the shard itself is just a pointer + geometry; the aliasing
+// discipline is the deliver contract below (disjoint target ranges).
+unsafe impl Send for RingShard {}
+unsafe impl Sync for RingShard {}
+
+impl RingShard {
+    /// [`DelayRing::deliver_row_offset`] restricted to targets in
+    /// `[lo, hi)`. Rows are delay-major with ascending targets within
+    /// each delay run, so the run's sub-range is found by binary search
+    /// and the accumulate stays a unit-direction walk of one slot row.
+    ///
+    /// Writing only `[lo, hi)` means an accumulator owned by one chunk
+    /// receives exactly the adds (in exactly the spike order) that the
+    /// unranged single-thread delivery performs — the raster is bitwise
+    /// identical for every chunk count.
+    ///
+    /// # Safety
+    ///
+    /// * The parent ring must outlive the shard and not be advanced,
+    ///   resized or dropped while shards are live.
+    /// * Concurrent callers must use pairwise-disjoint `[lo, hi)` ranges
+    ///   (each f32 accumulator has exactly one writer).
+    /// * As for the unranged path: `tgt < n`, `1 <= delay <= max_delay`,
+    ///   `back < delay`, and within each equal-delay run targets ascend
+    ///   (all guaranteed by `IncomingSynapses` construction).
+    pub unsafe fn deliver_row_offset_ranged(
+        &self,
+        tgts: &[u32],
+        delays: &[u8],
+        w: f32,
+        back: u32,
+        lo: u32,
+        hi: u32,
+    ) {
+        debug_assert_eq!(tgts.len(), delays.len());
+        let m = tgts.len();
+        let back = back as usize;
+        let mut i = 0usize;
+        while i < m {
+            let d = delays[i];
+            debug_assert!((1..self.depth).contains(&(d as usize)));
+            debug_assert!(
+                (d as usize) > back,
+                "offset {back} >= delay {d}: spike delivered past its arrival step"
+            );
+            // one delay run: [i, j) with equal delay and ascending targets
+            let mut j = i + 1;
+            while j < m && delays[j] == d {
+                debug_assert!(tgts[j - 1] <= tgts[j], "targets must ascend within a run");
+                j += 1;
+            }
+            let mut slot = self.cur + d as usize - back;
+            if slot >= self.depth {
+                slot -= self.depth;
+            }
+            let base = slot * self.stride;
+            let run = &tgts[i..j];
+            let a = run.partition_point(|&t| t < lo);
+            let b = run.partition_point(|&t| t < hi);
+            for &t in &run[a..b] {
+                // SAFETY (fn contract): slot < depth and t < n <= stride
+                // (validated at build; see connectivity tests), so the
+                // index is within flat's length; the disjoint-range
+                // contract makes it data-race free.
+                *self.flat.add(base + t as usize) += w;
+            }
+            i = j;
+        }
     }
 }
 
@@ -257,6 +343,30 @@ mod tests {
             r.advance();
         }
         assert_eq!(r.current()[0], 3.0);
+    }
+
+    #[test]
+    fn ranged_shards_partition_the_unranged_delivery() {
+        // Delivering one row through disjoint target ranges must equal the
+        // unranged delivery, for any split point (including empty sides).
+        let tgts = [0u32, 1, 4, 4, 7, 2, 5];
+        let delays = [2u8, 2, 2, 2, 2, 5, 5];
+        for split in 0..=8u32 {
+            let mut whole = DelayRing::new(8, 6);
+            let mut parts = DelayRing::new(8, 6);
+            whole.deliver_row_offset(&tgts, &delays, 0.5, 1);
+            let shard = parts.shard();
+            // SAFETY: [0,split) and [split,8) are disjoint.
+            unsafe {
+                shard.deliver_row_offset_ranged(&tgts, &delays, 0.5, 1, 0, split);
+                shard.deliver_row_offset_ranged(&tgts, &delays, 0.5, 1, split, 8);
+            }
+            for _ in 0..7 {
+                assert_eq!(whole.current(), parts.current(), "split={split}");
+                whole.advance();
+                parts.advance();
+            }
+        }
     }
 
     #[test]

@@ -26,6 +26,18 @@
 //! future accumulator slots, batching the exchange changes neither the
 //! values nor (observably) the order of any accumulation: the spike
 //! raster is bitwise identical across exchange cadences.
+//!
+//! **Intra-rank threading** (`--compute-threads N`): all three compute
+//! phases run over the fixed chunks of a shared
+//! [`crate::util::pool::ComputePool`]. The Poisson fill and the neuron
+//! update split the owned slice by local index (per-lane pure functions /
+//! disjoint state slices); delivery splits by *target* range — every
+//! chunk walks every spike's row but only writes its own targets
+//! ([`crate::engine::delay_queue::RingShard`]) — so each accumulator sees
+//! the same adds in the same spike order under every chunk count, and the
+//! raster stays bitwise identical.
+
+use std::rc::Rc;
 
 use anyhow::Result;
 
@@ -33,6 +45,7 @@ use crate::config::NetworkParams;
 use crate::model::connectivity::{ConnectivityParams, IncomingSynapses};
 use crate::model::poisson::ExternalStimulus;
 use crate::runtime::NeuronBackend;
+use crate::util::pool::ComputePool;
 
 use super::delay_queue::DelayRing;
 use super::partition::OwnedGids;
@@ -64,8 +77,13 @@ pub struct RankEngine {
     /// network tolerates, and the bound [`Self::deliver`] enforces on
     /// spike age.
     delay_min: u32,
+    /// The `--compute-threads` chunking, shared with the native backend.
+    pool: Rc<ComputePool>,
+    /// Owned intervals as (local offset, first gid, len) — the map the
+    /// chunked gid-keyed Poisson fill needs.
+    segs: Vec<(usize, u32, usize)>,
     /// Scratch buffers reused every step (allocation-free hot path).
-    i_ext: Vec<f32>,
+    ext_scratch: Vec<u64>,
     spiked_local: Vec<u32>,
     /// Current network step (increments in finish_step).
     pub step: u32,
@@ -74,7 +92,8 @@ pub struct RankEngine {
 }
 
 impl RankEngine {
-    /// Build the engine for rank `rank` owning the gids in `owned`.
+    /// Build the engine for rank `rank` owning the gids in `owned`,
+    /// single-threaded (the test/bench-friendly constructor).
     pub fn new(
         net: &NetworkParams,
         seed: u64,
@@ -82,10 +101,29 @@ impl RankEngine {
         owned: OwnedGids,
         backend: Box<dyn NeuronBackend>,
     ) -> Self {
+        Self::with_pool(net, seed, rank, owned, backend, Rc::new(ComputePool::new(1)))
+    }
+
+    /// [`Self::new`] with an explicit compute pool (normally the same one
+    /// the native backend chunks over).
+    pub fn with_pool(
+        net: &NetworkParams,
+        seed: u64,
+        rank: u32,
+        owned: OwnedGids,
+        backend: Box<dyn NeuronBackend>,
+        pool: Rc<ComputePool>,
+    ) -> Self {
         assert_eq!(backend.len(), owned.len() as usize);
         let cp = ConnectivityParams::from_network(net, seed);
         let incoming = IncomingSynapses::build_owned(&cp, &owned);
         let n = owned.len() as usize;
+        let mut segs = Vec::with_capacity(owned.intervals().len());
+        let mut off = 0usize;
+        for &(lo, hi) in owned.intervals() {
+            segs.push((off, lo, (hi - lo) as usize));
+            off += (hi - lo) as usize;
+        }
         Self {
             rank,
             owned,
@@ -97,7 +135,9 @@ impl RankEngine {
             j_inh: net.j_inh,
             inh_start: net.inh_start(),
             delay_min: net.delay_min_steps.max(1),
-            i_ext: vec![0.0; n],
+            pool,
+            segs,
+            ext_scratch: Vec::new(),
             spiked_local: Vec::with_capacity(n / 4 + 8),
             step: 0,
             totals: StepOutcome::default(),
@@ -124,19 +164,18 @@ impl RankEngine {
     /// Phase 1: integrate the current step. Returns the local spikes as
     /// global-id [`Spike`]s via `out` (cleared first).
     pub fn integrate(&mut self, out: &mut Vec<Spike>) -> Result<usize> {
-        // The stimulus is keyed by global id: fill each owned interval's
-        // slice of the buffer from its own first gid.
-        let mut off = 0usize;
-        for &(lo, hi) in self.owned.intervals() {
-            let len = (hi - lo) as usize;
-            self.totals.ext_events +=
-                self.stim.fill(self.step, lo, &mut self.i_ext[off..off + len]);
-            off += len;
-        }
+        // The stimulus is keyed by global id ([`Self::segs`] carries the
+        // local-offset -> gid map), filled chunked straight into the
+        // backend's own buffer.
+        self.totals.ext_events += self.stim.fill_chunked(
+            self.step,
+            &self.segs,
+            &self.pool,
+            &mut self.ext_scratch,
+            self.backend.i_ext_mut(),
+        );
         self.spiked_local.clear();
-        let n = self
-            .backend
-            .step(self.ring.current(), &self.i_ext, &mut self.spiked_local)?;
+        let n = self.backend.step(self.ring.current(), &mut self.spiked_local)?;
         self.totals.spikes += n as u64;
         out.clear();
         let owned = &self.owned;
@@ -160,7 +199,13 @@ impl RankEngine {
     /// older than the min-delay window would already have missed their
     /// arrival step; that protocol violation panics rather than
     /// corrupting the ring (the offset delivery indexes unchecked).
+    ///
+    /// With more than one compute chunk, every chunk walks the whole
+    /// spike batch restricted to its own target range: per accumulator
+    /// the add sequence is exactly the single-chunk one, so the chunking
+    /// never shows in the raster.
     pub fn deliver(&mut self, spikes: &[Spike]) {
+        // Protocol check + event accounting stay sequential (cheap).
         for sp in spikes {
             let back = self.step.wrapping_sub(sp.step);
             assert!(
@@ -171,11 +216,45 @@ impl RankEngine {
                 self.step,
                 self.delay_min
             );
-            let w = if sp.gid < self.inh_start { self.j_exc } else { self.j_inh };
-            let (tgts, delays) = self.incoming.row(sp.gid);
-            self.ring.deliver_row_offset(tgts, delays, w, back);
-            self.totals.syn_events += tgts.len() as u64;
+            self.totals.syn_events += self.incoming.row(sp.gid).0.len() as u64;
         }
+        if self.pool.chunks() == 1 {
+            for sp in spikes {
+                let back = self.step.wrapping_sub(sp.step);
+                let w = if sp.gid < self.inh_start {
+                    self.j_exc
+                } else {
+                    self.j_inh
+                };
+                let (tgts, delays) = self.incoming.row(sp.gid);
+                self.ring.deliver_row_offset(tgts, delays, w, back);
+            }
+            return;
+        }
+        let n = self.ring.n();
+        let shard = self.ring.shard();
+        let incoming = &self.incoming;
+        let (j_exc, j_inh, inh_start, step) = (self.j_exc, self.j_inh, self.inh_start, self.step);
+        // the closure captures the chunk count, not the pool (not Sync)
+        let chunks = self.pool.chunks();
+        self.pool.run(&|c| {
+            let r = crate::util::pool::chunk_range(chunks, c, n);
+            if r.is_empty() {
+                return;
+            }
+            let (lo, hi) = (r.start as u32, r.end as u32);
+            for sp in spikes {
+                let back = step.wrapping_sub(sp.step);
+                let w = if sp.gid < inh_start { j_exc } else { j_inh };
+                let (tgts, delays) = incoming.row(sp.gid);
+                // SAFETY: chunk target ranges are pairwise disjoint and the
+                // ring outlives this closure (run() blocks); rows are
+                // build-validated (targets < n, delays in range, ascending
+                // per delay run), and `back < delay_min <= d` was asserted
+                // above.
+                unsafe { shard.deliver_row_offset_ranged(tgts, delays, w, back, lo, hi) };
+            }
+        });
     }
 
     /// Phase 4: rotate the delay ring and advance the step counter.
@@ -202,13 +281,24 @@ impl RankEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::population::PopulationState as PS;
+    use crate::model::population::PopulationSoA as PS;
     use crate::runtime::NativeBackend;
 
     fn engine(net: &NetworkParams, seed: u64, lo: u32, hi: u32) -> RankEngine {
+        engine_threaded(net, seed, lo, hi, 1)
+    }
+
+    fn engine_threaded(
+        net: &NetworkParams,
+        seed: u64,
+        lo: u32,
+        hi: u32,
+        threads: usize,
+    ) -> RankEngine {
         let pop = PS::init(net, seed, lo, hi - lo);
-        let be = Box::new(NativeBackend::new(net, pop));
-        RankEngine::new(net, seed, 0, OwnedGids::contiguous(lo, hi), be)
+        let pool = Rc::new(ComputePool::new(threads));
+        let be = Box::new(NativeBackend::with_pool(net, pop, pool.clone()));
+        RankEngine::with_pool(net, seed, 0, OwnedGids::contiguous(lo, hi), be, pool)
     }
 
     #[test]
@@ -245,6 +335,37 @@ mod tests {
             }
             e.deliver(&spikes);
             e.finish_step();
+        }
+    }
+
+    #[test]
+    fn threaded_engine_matches_single_thread_bitwise() {
+        // Full engine loop under 1/2/4 compute chunks: spike sequences,
+        // totals and final state must be identical.
+        let net = NetworkParams::tiny(300);
+        let mut reference = engine(&net, 42, 0, 300);
+        let mut ref_raster = Vec::new();
+        let mut spikes = Vec::new();
+        for _ in 0..120 {
+            reference.integrate(&mut spikes).unwrap();
+            ref_raster.push(spikes.clone());
+            reference.deliver(&spikes);
+            reference.finish_step();
+        }
+        for threads in [2usize, 4] {
+            let mut e = engine_threaded(&net, 42, 0, 300, threads);
+            for (t, expect) in ref_raster.iter().enumerate() {
+                e.integrate(&mut spikes).unwrap();
+                assert_eq!(&spikes, expect, "threads={threads} step={t}");
+                e.deliver(&spikes);
+                e.finish_step();
+            }
+            assert_eq!(e.totals, reference.totals, "threads={threads}");
+            let (v1, w1, rf1) = reference.state();
+            let (v2, w2, rf2) = e.state();
+            assert_eq!(v1, v2, "threads={threads}");
+            assert_eq!(w1, w2);
+            assert_eq!(rf1, rf2);
         }
     }
 

@@ -7,6 +7,7 @@
 //!           [--topology flat|nodes:<k>|tree:<k1>,<k2>,...]
 //!           [--partition index|round-robin|greedy-comms]
 //!           [--leader-rotation fixed|round-robin]
+//!           [--compute-threads N]
 //!           [--platform NAME] [--interconnect NAME] [--seed X] [--progress]
 //! dpsnn repro <fig1..fig8|table1..table4|all> [--fast]
 //! dpsnn bench-smoke [--neurons N] [--procs P] [--seconds S] [--out F]
@@ -72,6 +73,11 @@ RUN OPTIONS:
                      pays the aggregation CPU cost per exchange
                      (default fixed; raster and message counts are
                      identical either way)
+  --compute-threads N intra-rank worker threads for the neuron update,
+                     Poisson fill and synaptic delivery (default 1).
+                     The chunk geometry is fixed by N alone, so the
+                     raster is bitwise identical for every N on every
+                     host
   --platform NAME    modeled platform preset (default xeon)
   --interconnect IC  ib | eth1g | shm | exanest (default ib)
   --artifacts DIR    AOT artifact directory (default artifacts)
@@ -101,6 +107,12 @@ BENCH-SMOKE OPTIONS:
   --partition-seconds S  placement-run simulated seconds (default 0.1)
   --partition-out F  placement JSON output path (default
                      BENCH_partition.json)
+  --compute-out F    compute-kernel JSON output path (default
+                     BENCH_compute.json): scalar baseline vs SoA path
+                     for the neuron update, Poisson fill and synaptic
+                     delivery at the paper's 20480N size, 1/2/4
+                     compute threads, with elems/sec and the
+                     realtime_x margin over the 1 ms step budget
 
 REPRO IDS:
   fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 table1 table2 table3 table4 all
@@ -164,6 +176,7 @@ fn build_config(args: &Args) -> Result<RunConfig> {
     if let Some(r) = args.get("leader-rotation") {
         cfg.leader_rotation = r.parse()?;
     }
+    cfg.compute_threads = args.get_or("compute-threads", cfg.compute_threads)?;
     if let Some(p) = args.get("platform") {
         cfg.platform = p.to_string();
     }
@@ -275,7 +288,8 @@ fn cmd_replay(args: &Args) -> Result<()> {
 /// `BENCH_topology.json` with wall-clock, barrier/exchange counts,
 /// per-rank transport bytes/messages (intra/inter split) and the power
 /// model's J/synaptic-event, so successive PRs accumulate a perf
-/// trajectory.
+/// trajectory. Also measures the compute kernels (scalar baseline vs
+/// the SoA path at 1/2/4 threads) into `BENCH_compute.json`.
 fn cmd_bench_smoke(args: &Args) -> Result<()> {
     use dpsnn::config::{ExchangeCadence, Routing, Topology};
     use dpsnn::coordinator::RunResult;
@@ -701,14 +715,39 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
     );
     std::fs::write(&part_out, &part_json)?;
 
+    // Compute-kernel microbenchmarks at the paper's 20480N size (fixed,
+    // independent of --neurons, so the BENCH_compute.json trajectory is
+    // comparable across PRs): the scalar baseline vs the SoA production
+    // path at 1/2/4 compute threads.
+    let compute_out = args.get_or("compute-out", "BENCH_compute.json".to_string())?;
+    eprintln!("[bench-smoke] compute kernels (scalar vs SoA, 1/2/4 threads)...");
+    let mut bench = dpsnn::util::bench::Bench::fast();
+    let compute = dpsnn::profiling::run_compute_bench(&mut bench, 20_480, &[1, 2, 4]);
+    for c in &compute.cases {
+        anyhow::ensure!(
+            c.elems_per_s() > 0.0,
+            "compute kernel {}/{} t={} measured zero throughput",
+            c.kind,
+            c.variant,
+            c.threads
+        );
+    }
+    std::fs::write(&compute_out, compute.to_json())?;
+    let nu_rt = compute
+        .case("neuron_update", "soa", 1)
+        .map(|c| c.realtime_x(compute.step_ms * 1e-3))
+        .unwrap_or(0.0);
+    let nu_speedup = compute.speedup_vs_scalar("neuron_update").unwrap_or(0.0);
+
     println!("{}", filtered.summary());
     println!(
         "bench-smoke: recv bytes/run {recv_f} (filtered) vs {recv_b} (broadcast), \
          -{:.1}%; exchanges/run {x_step} (per-step) vs {x_batched} (min-delay), \
          {exchange_reduction:.1}x fewer; inter-node msgs/run {inter_flat} (flat) \
          vs {inter_hier} ({topology}); off-board payload {off_index} B (index) \
-         vs {off_greedy} B ({challenger}), -{:.2}%; wrote {out} + {topo_out} + \
-         {part_out}",
+         vs {off_greedy} B ({challenger}), -{:.2}%; neuron_update {nu_rt:.0}x \
+         real time (SoA {nu_speedup:.2}x scalar); wrote {out} + {topo_out} + \
+         {part_out} + {compute_out}",
         reduction * 100.0,
         delta_frac * 100.0
     );

@@ -7,5 +7,5 @@ pub mod connectivity;
 pub mod poisson;
 
 pub use connectivity::{ConnectivityParams, IncomingSynapses};
-pub use neuron::{step_native, StepParams};
-pub use population::PopulationState;
+pub use neuron::{collect_fired, step_native, step_native_masked, StepParams};
+pub use population::PopulationSoA;

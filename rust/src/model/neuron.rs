@@ -89,29 +89,40 @@ pub fn step_native_masked(
 }
 
 /// Collect the indices of set bytes in `mask` (sparse: ~0.3% at 3.2 Hz).
-/// Scans 8 lanes at a time through a u64 view.
-pub fn collect_fired(mask: &[u8], spiked: &mut Vec<u32>) -> usize {
+/// Appends `base + index` for each set byte; the threaded backend passes
+/// each chunk's start so per-chunk vectors concatenate into global-order
+/// local indices.
+///
+/// Scans 8 lanes at a time through a u64 view; on a nonzero word the set
+/// bytes are walked directly with `trailing_zeros` + clear-lowest-bit
+/// (mask bytes are 0/1 — `step_native_masked` writes `fired as u8` — so
+/// each set byte is exactly one set bit).
+pub fn collect_fired_offset(mask: &[u8], base: u32, spiked: &mut Vec<u32>) -> usize {
     let before = spiked.len();
     let mut j = 0usize;
     let chunks = mask.chunks_exact(8);
     let rem = chunks.remainder();
     for c in chunks {
-        let word = u64::from_le_bytes(c.try_into().unwrap());
-        if word != 0 {
-            for (b, &m) in c.iter().enumerate() {
-                if m != 0 {
-                    spiked.push((j + b) as u32);
-                }
-            }
+        let mut word = u64::from_le_bytes(c.try_into().unwrap());
+        debug_assert!(c.iter().all(|&m| m <= 1), "mask bytes must be 0/1");
+        while word != 0 {
+            let b = (word.trailing_zeros() >> 3) as usize;
+            spiked.push(base + (j + b) as u32);
+            word &= word - 1;
         }
         j += 8;
     }
     for (b, &m) in rem.iter().enumerate() {
         if m != 0 {
-            spiked.push((j + b) as u32);
+            spiked.push(base + (j + b) as u32);
         }
     }
     spiked.len() - before
+}
+
+/// [`collect_fired_offset`] from local index 0.
+pub fn collect_fired(mask: &[u8], spiked: &mut Vec<u32>) -> usize {
+    collect_fired_offset(mask, 0, spiked)
 }
 
 /// Advance one 1 ms step for a population slice.
@@ -226,17 +237,34 @@ mod tests {
 
     #[test]
     fn collect_fired_scans_all_alignments() {
-        for n in [0usize, 1, 7, 8, 9, 63, 64, 65] {
-            let mut mask = vec![0u8; n];
-            let mut expect = Vec::new();
-            for j in (0..n).step_by(3) {
-                mask[j] = 1;
-                expect.push(j as u32);
+        // sparse (every 3rd), dense all-ones, and alternating masks all
+        // exercise the per-word bit loop across word boundaries and tails
+        let patterns: [&dyn Fn(usize) -> bool; 3] =
+            [&|j| j % 3 == 0, &|_| true, &|j| j % 2 == 0];
+        for (pi, set) in patterns.iter().enumerate() {
+            for n in [0usize, 1, 7, 8, 9, 63, 64, 65] {
+                let mut mask = vec![0u8; n];
+                let mut expect = Vec::new();
+                for j in (0..n).filter(|&j| set(j)) {
+                    mask[j] = 1;
+                    expect.push(j as u32);
+                }
+                let mut got = Vec::new();
+                assert_eq!(collect_fired(&mask, &mut got), expect.len(), "p{pi} n={n}");
+                assert_eq!(got, expect, "p{pi} n={n}");
             }
-            let mut got = Vec::new();
-            assert_eq!(collect_fired(&mask, &mut got), expect.len(), "n={n}");
-            assert_eq!(got, expect, "n={n}");
         }
+    }
+
+    #[test]
+    fn collect_fired_offset_rebases_indices() {
+        let mut mask = vec![0u8; 19];
+        mask[0] = 1;
+        mask[8] = 1;
+        mask[18] = 1;
+        let mut got = Vec::new();
+        assert_eq!(collect_fired_offset(&mask, 1000, &mut got), 3);
+        assert_eq!(got, vec![1000, 1008, 1018]);
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! whole step).
 
 use crate::config::NetworkParams;
+use crate::util::pool::{ComputePool, SyncPtr};
 use crate::util::rng::hash2_fast;
 
 /// CDF table length: P(X > 40 | λ ≤ 8) < 1e-19, far below u64 resolution
@@ -108,6 +109,59 @@ impl ExternalStimulus {
         events
     }
 
+    /// [`Self::fill`] over a whole rank's owned buffer at once, chunked
+    /// across the compute pool.
+    ///
+    /// `segs` maps the buffer onto global ids: `(offset, gid0, len)` per
+    /// owned interval, ascending and tiling `i_ext` exactly. Each pool
+    /// chunk fills its fixed `[lo, hi)` sub-range of the buffer; because
+    /// every lane is a pure function of `(seed, gid, step)` and the
+    /// per-chunk event counts are exact u64s summed in chunk order, the
+    /// result — buffer and count — is identical for every chunk count.
+    ///
+    /// `events` is per-chunk scratch, resized to the pool's chunk count.
+    pub fn fill_chunked(
+        &self,
+        step: u32,
+        segs: &[(usize, u32, usize)],
+        pool: &ComputePool,
+        events: &mut Vec<u64>,
+        i_ext: &mut [f32],
+    ) -> u64 {
+        debug_assert_eq!(segs.iter().map(|s| s.2).sum::<usize>(), i_ext.len());
+        if pool.chunks() == 1 {
+            let mut total = 0u64;
+            for &(off, gid0, len) in segs {
+                total += self.fill(step, gid0, &mut i_ext[off..off + len]);
+            }
+            return total;
+        }
+        let n = i_ext.len();
+        events.clear();
+        events.resize(pool.chunks(), 0);
+        let ev = SyncPtr(events.as_mut_ptr());
+        let buf = SyncPtr(i_ext.as_mut_ptr());
+        // the closure captures the chunk count, not the pool (not Sync)
+        let chunks = pool.chunks();
+        pool.run(&|c| {
+            let r = crate::util::pool::chunk_range(chunks, c, n);
+            let mut acc = 0u64;
+            for &(off, gid0, len) in segs {
+                let lo = r.start.max(off);
+                let hi = r.end.min(off + len);
+                if lo < hi {
+                    // SAFETY: chunk ranges are disjoint; this chunk is the
+                    // only writer of buf[lo..hi) and events[c].
+                    let out =
+                        unsafe { std::slice::from_raw_parts_mut(buf.0.add(lo), hi - lo) };
+                    acc += self.fill(step, gid0 + (lo - off) as u32, out);
+                }
+            }
+            unsafe { *ev.0.add(c) = acc };
+        });
+        events.iter().sum()
+    }
+
     /// Total external events implied by a filled buffer (diagnostics).
     pub fn events_in(&self, i_ext: &[f32]) -> u64 {
         if self.j_ext == 0.0 {
@@ -197,6 +251,26 @@ mod tests {
                 (a - b).abs() < 0.01,
                 "k={k}: table {a:.4} vs knuth {b:.4}"
             );
+        }
+    }
+
+    #[test]
+    fn chunked_fill_matches_plain_fill() {
+        let (_, s) = stim();
+        // two owned intervals, like a scattered placement
+        let segs = [(0usize, 100u32, 130usize), (130usize, 700u32, 170usize)];
+        let mut reference = vec![0.0f32; 300];
+        let mut ev_ref = 0u64;
+        for &(off, gid0, len) in &segs {
+            ev_ref += s.fill(9, gid0, &mut reference[off..off + len]);
+        }
+        for threads in [1usize, 2, 3, 4] {
+            let pool = ComputePool::new(threads);
+            let mut buf = vec![0.0f32; 300];
+            let mut scratch = Vec::new();
+            let ev = s.fill_chunked(9, &segs, &pool, &mut scratch, &mut buf);
+            assert_eq!(ev, ev_ref, "threads={threads}");
+            assert_eq!(buf, reference, "threads={threads}");
         }
     }
 

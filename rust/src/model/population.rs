@@ -2,25 +2,40 @@
 
 use crate::config::NetworkParams;
 use crate::engine::partition::OwnedGids;
+use crate::util::aligned::AlignedF32;
 use crate::util::rng::keyed;
 
-/// The dynamic state of the neurons owned by one rank, in SoA layout
-/// matching the kernel ABI: v, w, rf plus the static sfa_inc vector.
+/// The dynamic state of the neurons owned by one rank, in cache-aligned
+/// SoA layout matching the kernel ABI: v, w, rf plus the static sfa_inc
+/// vector and the per-step external-input buffer i_ext. Every array is
+/// one contiguous 64 B-aligned allocation ([`AlignedF32`]), so the masked
+/// LIF+SFA update streams them with aligned vector loads and the chunked
+/// threaded update can split them on cache-line boundaries.
+///
+/// The synaptic input i_syn deliberately does *not* live here: it is the
+/// delay ring's current slot ([`crate::engine::DelayRing::current`]),
+/// borrowed per step — copying it into the SoA would cost a full memory
+/// pass per step for no locality gain (the ring slot is itself aligned
+/// and unit-stride).
+///
 /// Local index order is ascending gid over the owned set (matching
 /// [`OwnedGids`] local numbering), which is `gid0 + local` only for
 /// contiguous placements.
 #[derive(Debug, Clone)]
-pub struct PopulationState {
+pub struct PopulationSoA {
     /// Smallest owned global id.
     pub gid0: u32,
-    pub v: Vec<f32>,
-    pub w: Vec<f32>,
-    pub rf: Vec<f32>,
+    pub v: AlignedF32,
+    pub w: AlignedF32,
+    pub rf: AlignedF32,
     /// Per-neuron SFA increment: `sfa_inc` for excitatory, 0 for inhibitory.
-    pub sfa_inc: Vec<f32>,
+    pub sfa_inc: AlignedF32,
+    /// External Poisson input for the step being integrated (filled by the
+    /// engine via [`crate::runtime::NeuronBackend::i_ext_mut`]).
+    pub i_ext: AlignedF32,
 }
 
-impl PopulationState {
+impl PopulationSoA {
     /// Initialize the contiguous neurons [gid0, gid0+n).
     pub fn init(p: &NetworkParams, seed: u64, gid0: u32, n: u32) -> Self {
         Self::init_owned(p, seed, &OwnedGids::contiguous(gid0, gid0 + n))
@@ -44,10 +59,11 @@ impl PopulationState {
         }
         Self {
             gid0: owned.first(),
-            v,
-            w: vec![0.0; n],
-            rf: vec![0.0; n],
-            sfa_inc,
+            v: AlignedF32::from_slice(&v),
+            w: AlignedF32::zeroed(n),
+            rf: AlignedF32::zeroed(n),
+            sfa_inc: AlignedF32::from_slice(&sfa_inc),
+            i_ext: AlignedF32::zeroed(n),
         }
     }
 
@@ -67,9 +83,9 @@ mod tests {
     #[test]
     fn init_is_partition_independent() {
         let p = NetworkParams::tiny(256);
-        let whole = PopulationState::init(&p, 42, 0, 256);
-        let lo = PopulationState::init(&p, 42, 0, 128);
-        let hi = PopulationState::init(&p, 42, 128, 128);
+        let whole = PopulationSoA::init(&p, 42, 0, 256);
+        let lo = PopulationSoA::init(&p, 42, 0, 128);
+        let hi = PopulationSoA::init(&p, 42, 128, 128);
         assert_eq!(&whole.v[..128], &lo.v[..]);
         assert_eq!(&whole.v[128..], &hi.v[..]);
         assert_eq!(&whole.sfa_inc[..128], &lo.sfa_inc[..]);
@@ -81,9 +97,9 @@ mod tests {
         // scattered ownership gets exactly the same per-gid state the
         // whole-network init produces — placement permutes, never perturbs
         let p = NetworkParams::tiny(256);
-        let whole = PopulationState::init(&p, 42, 0, 256);
+        let whole = PopulationSoA::init(&p, 42, 0, 256);
         let owned = OwnedGids::from_intervals(vec![(16, 32), (200, 208)]);
-        let part = PopulationState::init_owned(&p, 42, &owned);
+        let part = PopulationSoA::init_owned(&p, 42, &owned);
         assert_eq!(part.gid0, 16);
         assert_eq!(part.len(), 24);
         for (local, gid) in owned.iter().enumerate() {
@@ -95,7 +111,7 @@ mod tests {
     #[test]
     fn sfa_follows_exc_inh_split() {
         let p = NetworkParams::tiny(100); // 80 exc / 20 inh
-        let s = PopulationState::init(&p, 1, 0, 100);
+        let s = PopulationSoA::init(&p, 1, 0, 100);
         assert!(s.sfa_inc[..80].iter().all(|&x| x > 0.0));
         assert!(s.sfa_inc[80..].iter().all(|&x| x == 0.0));
     }
@@ -103,9 +119,12 @@ mod tests {
     #[test]
     fn initial_v_below_threshold() {
         let p = NetworkParams::tiny(512);
-        let s = PopulationState::init(&p, 7, 0, 512);
+        let s = PopulationSoA::init(&p, 7, 0, 512);
         assert!(s.v.iter().all(|&v| v < p.theta && v >= p.v_floor));
         // and not all identical
         assert!(s.v.windows(2).any(|w| w[0] != w[1]));
+        // state arrays live on the cache-line grid (SoA contract)
+        assert_eq!(s.v.as_ptr() as usize % 64, 0);
+        assert_eq!(s.i_ext.len(), 512);
     }
 }

@@ -1,0 +1,415 @@
+//! Compute-kernel microbenchmarks shared by `benches/hot_paths.rs` and
+//! `dpsnn bench-smoke --compute-out` (the BENCH_compute.json trajectory).
+//!
+//! Three kernels dominate a rank's step under the paper's profiling:
+//! the LIF+SFA neuron update, the Poisson stimulus fill, and synaptic
+//! delivery through the CSR rows into the delay ring. Each is measured
+//! in two variants:
+//!
+//! * `scalar` — the pre-SoA reference path (the push-variant
+//!   `step_native`, the plain whole-buffer `fill`, the per-synapse
+//!   `DelayRing::add` loop), kept as the speedup baseline;
+//! * `soa` — the production path (masked SoA update via
+//!   [`NativeBackend`], chunked [`ExternalStimulus::fill_chunked`],
+//!   run-based [`DelayRing::deliver_row_offset`] / ranged shards), at
+//!   each requested `--compute-threads` count.
+//!
+//! Every case reports elems/sec and `realtime_x`: how many times faster
+//! than the real-time line (one `dt_ms` network step per `dt_ms` of wall
+//! clock) that kernel alone would run the n-neuron network.
+
+use std::rc::Rc;
+
+use crate::config::NetworkParams;
+use crate::engine::delay_queue::DelayRing;
+use crate::model::connectivity::{ConnectivityParams, IncomingSynapses};
+use crate::model::neuron::{step_native, StepParams};
+use crate::model::poisson::ExternalStimulus;
+use crate::model::population::PopulationSoA;
+use crate::runtime::{NativeBackend, NeuronBackend};
+use crate::util::aligned::AlignedF32;
+use crate::util::bench::Bench;
+use crate::util::pool::{chunk_range, ComputePool};
+use crate::util::rng::SplitMix64;
+
+/// One measured (kernel, variant, threads) cell.
+#[derive(Debug, Clone)]
+pub struct ComputeCase {
+    /// "neuron_update" | "poisson_fill" | "synaptic_delivery".
+    pub kind: &'static str,
+    /// "scalar" (pre-SoA reference) or "soa" (production path).
+    pub variant: &'static str,
+    pub threads: usize,
+    /// Elements processed per iteration (neurons or synaptic events).
+    pub elems_per_iter: f64,
+    /// Mean seconds per iteration.
+    pub secs_per_iter: f64,
+    /// Elements one network step must process (the real-time budget
+    /// denominator: neurons for update/fill, mean synaptic events for
+    /// delivery).
+    pub elems_per_step: f64,
+}
+
+impl ComputeCase {
+    pub fn elems_per_s(&self) -> f64 {
+        if self.secs_per_iter > 0.0 {
+            self.elems_per_iter / self.secs_per_iter
+        } else {
+            0.0
+        }
+    }
+
+    /// Achievable steps/sec over required steps/sec for `step_s`-second
+    /// network steps: > 1 means this kernel alone beats real time.
+    pub fn realtime_x(&self, step_s: f64) -> f64 {
+        if self.elems_per_step > 0.0 {
+            self.elems_per_s() / self.elems_per_step * step_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The full compute-bench result set for one network size.
+#[derive(Debug, Clone)]
+pub struct ComputeBenchReport {
+    pub n: u32,
+    pub step_ms: f64,
+    pub threads: Vec<usize>,
+    /// What `available_parallelism` reported on the measuring host —
+    /// thread counts above this share cores (recorded so CI floors can
+    /// be read in context).
+    pub host_parallelism: usize,
+    pub cases: Vec<ComputeCase>,
+}
+
+impl ComputeBenchReport {
+    pub fn case(&self, kind: &str, variant: &str, threads: usize) -> Option<&ComputeCase> {
+        self.cases
+            .iter()
+            .find(|c| c.kind == kind && c.variant == variant && c.threads == threads)
+    }
+
+    /// Best SoA-path throughput over the scalar baseline for one kernel.
+    pub fn speedup_vs_scalar(&self, kind: &str) -> Option<f64> {
+        let scalar = self.case(kind, "scalar", 1)?.elems_per_s();
+        let best = self
+            .cases
+            .iter()
+            .filter(|c| c.kind == kind && c.variant == "soa")
+            .map(|c| c.elems_per_s())
+            .fold(0.0f64, f64::max);
+        if scalar > 0.0 {
+            Some(best / scalar)
+        } else {
+            None
+        }
+    }
+
+    pub fn to_json(&self) -> String {
+        let step_s = self.step_ms * 1e-3;
+        let mut cases = String::new();
+        for (i, c) in self.cases.iter().enumerate() {
+            if i > 0 {
+                cases.push_str(",\n");
+            }
+            cases.push_str(&format!(
+                concat!(
+                    "    {{\"kind\": \"{}\", \"variant\": \"{}\", \"threads\": {}, ",
+                    "\"elems_per_iter\": {}, \"secs_per_iter\": {:.9}, ",
+                    "\"elems_per_s\": {:.1}, \"realtime_x\": {:.3}}}"
+                ),
+                c.kind,
+                c.variant,
+                c.threads,
+                c.elems_per_iter,
+                c.secs_per_iter,
+                c.elems_per_s(),
+                c.realtime_x(step_s),
+            ));
+        }
+        let speedup = |k: &str| self.speedup_vs_scalar(k).unwrap_or(0.0);
+        format!(
+            concat!(
+                "{{\n",
+                "  \"benchmark\": \"compute\",\n",
+                "  \"n\": {},\n",
+                "  \"step_ms\": {},\n",
+                "  \"host_parallelism\": {},\n",
+                "  \"threads\": [{}],\n",
+                "  \"cases\": [\n{}\n  ],\n",
+                "  \"speedup_vs_scalar\": {{\"neuron_update\": {:.3}, ",
+                "\"poisson_fill\": {:.3}, \"synaptic_delivery\": {:.3}}}\n",
+                "}}\n"
+            ),
+            self.n,
+            self.step_ms,
+            self.host_parallelism,
+            self.threads
+                .iter()
+                .map(|t| t.to_string())
+                .collect::<Vec<_>>()
+                .join(", "),
+            cases,
+            speedup("neuron_update"),
+            speedup("poisson_fill"),
+            speedup("synaptic_delivery"),
+        )
+    }
+}
+
+fn driven_pop(n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    // Same mixed drive the historical hot_paths bench used: random v,
+    // light adaptation, random synaptic input, uniform external input.
+    let mut rng = SplitMix64::new(1);
+    let v: Vec<f32> = (0..n).map(|_| rng.next_f64() as f32 * 19.0).collect();
+    let w = vec![0.1f32; n];
+    let i_syn: Vec<f32> = (0..n).map(|_| rng.next_f64() as f32 * 2.0).collect();
+    let i_ext = vec![1.0f32; n];
+    let sfa = vec![0.12f32; n];
+    (v, w, i_syn, i_ext, sfa)
+}
+
+/// Run the three compute kernels at network size `n` for each thread
+/// count in `threads` (the scalar baselines always run single-threaded).
+/// Prints one report line per case via `b` and returns the structured
+/// report.
+pub fn run_compute_bench(b: &mut Bench, n: u32, threads: &[usize]) -> ComputeBenchReport {
+    let net = NetworkParams::paper(n);
+    let nn = n as usize;
+    let host = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let mut cases = Vec::new();
+
+    // -- neuron update ---------------------------------------------------
+    let params = StepParams::from_network(&net);
+    let (v0, w0, i_syn, i_ext, sfa) = driven_pop(nn);
+    {
+        let (mut v, mut w) = (v0.clone(), w0.clone());
+        let mut rf = vec![0.0f32; nn];
+        let mut spiked = Vec::with_capacity(nn);
+        let st = b.bench_elems(&format!("neuron_update n={n} scalar"), nn as f64, || {
+            spiked.clear();
+            step_native(&params, &mut v, &mut w, &mut rf, &i_syn, &i_ext, &sfa, &mut spiked)
+        });
+        cases.push(ComputeCase {
+            kind: "neuron_update",
+            variant: "scalar",
+            threads: 1,
+            elems_per_iter: nn as f64,
+            secs_per_iter: st.mean,
+            elems_per_step: nn as f64,
+        });
+    }
+    for &t in threads {
+        let pop = PopulationSoA {
+            gid0: 0,
+            v: AlignedF32::from_slice(&v0),
+            w: AlignedF32::from_slice(&w0),
+            rf: AlignedF32::zeroed(nn),
+            sfa_inc: AlignedF32::from_slice(&sfa),
+            i_ext: AlignedF32::from_slice(&i_ext),
+        };
+        let pool = Rc::new(ComputePool::new(t));
+        let mut be = NativeBackend::with_pool(&net, pop, pool);
+        let mut spiked = Vec::with_capacity(nn);
+        let st = b.bench_elems(&format!("neuron_update n={n} soa t={t}"), nn as f64, || {
+            spiked.clear();
+            be.step(&i_syn, &mut spiked).unwrap()
+        });
+        cases.push(ComputeCase {
+            kind: "neuron_update",
+            variant: "soa",
+            threads: t,
+            elems_per_iter: nn as f64,
+            secs_per_iter: st.mean,
+            elems_per_step: nn as f64,
+        });
+    }
+
+    // -- poisson fill ----------------------------------------------------
+    let stim = ExternalStimulus::new(&net, 5);
+    {
+        let mut buf = vec![0.0f32; nn];
+        let mut step = 0u32;
+        let st = b.bench_elems(&format!("poisson_fill n={n} scalar"), nn as f64, || {
+            step = step.wrapping_add(1);
+            stim.fill(step, 0, &mut buf)
+        });
+        cases.push(ComputeCase {
+            kind: "poisson_fill",
+            variant: "scalar",
+            threads: 1,
+            elems_per_iter: nn as f64,
+            secs_per_iter: st.mean,
+            elems_per_step: nn as f64,
+        });
+    }
+    for &t in threads {
+        let pool = ComputePool::new(t);
+        let segs = [(0usize, 0u32, nn)];
+        let mut scratch = Vec::new();
+        let mut buf = vec![0.0f32; nn];
+        let mut step = 0u32;
+        let st = b.bench_elems(&format!("poisson_fill n={n} soa t={t}"), nn as f64, || {
+            step = step.wrapping_add(1);
+            stim.fill_chunked(step, &segs, &pool, &mut scratch, &mut buf)
+        });
+        cases.push(ComputeCase {
+            kind: "poisson_fill",
+            variant: "soa",
+            threads: t,
+            elems_per_iter: nn as f64,
+            secs_per_iter: st.mean,
+            elems_per_step: nn as f64,
+        });
+    }
+
+    // -- synaptic delivery -----------------------------------------------
+    // One step's worth of spikes at ~3.2 Hz through the full incoming
+    // rows of a single rank owning the whole network.
+    let cp = ConnectivityParams::from_network(&net, 7);
+    let inc = IncomingSynapses::build(&cp, 0, n);
+    let mut rng = SplitMix64::new(3);
+    let n_spikes = (nn as f64 * 3.2e-3).ceil() as usize;
+    let spikes: Vec<u32> = (0..n_spikes).map(|_| rng.next_below(n)).collect();
+    let events: usize = spikes.iter().map(|&s| inc.row(s).0.len()).sum();
+    {
+        let mut ring = DelayRing::new(nn, net.delay_max_steps);
+        let st = b.bench_elems(
+            &format!("synaptic_delivery {n_spikes} spikes scalar"),
+            events as f64,
+            || {
+                for &s in &spikes {
+                    let (tgts, delays) = inc.row(s);
+                    for (&tg, &d) in tgts.iter().zip(delays) {
+                        ring.add(d, tg, 0.4);
+                    }
+                }
+                ring.advance();
+            },
+        );
+        cases.push(ComputeCase {
+            kind: "synaptic_delivery",
+            variant: "scalar",
+            threads: 1,
+            elems_per_iter: events as f64,
+            secs_per_iter: st.mean,
+            elems_per_step: events as f64,
+        });
+    }
+    for &t in threads {
+        let pool = ComputePool::new(t);
+        let chunks = pool.chunks();
+        let mut ring = DelayRing::new(nn, net.delay_max_steps);
+        let st = b.bench_elems(
+            &format!("synaptic_delivery {n_spikes} spikes soa t={t}"),
+            events as f64,
+            || {
+                if chunks == 1 {
+                    for &s in &spikes {
+                        let (tgts, delays) = inc.row(s);
+                        ring.deliver_row_offset(tgts, delays, 0.4, 0);
+                    }
+                } else {
+                    let shard = ring.shard();
+                    pool.run(&|c| {
+                        let r = chunk_range(chunks, c, nn);
+                        if r.is_empty() {
+                            return;
+                        }
+                        for &s in &spikes {
+                            let (tgts, delays) = inc.row(s);
+                            // SAFETY: disjoint target ranges per chunk;
+                            // rows build-validated; back = 0 < delay.
+                            unsafe {
+                                shard.deliver_row_offset_ranged(
+                                    tgts,
+                                    delays,
+                                    0.4,
+                                    0,
+                                    r.start as u32,
+                                    r.end as u32,
+                                )
+                            };
+                        }
+                    });
+                }
+                ring.advance();
+            },
+        );
+        cases.push(ComputeCase {
+            kind: "synaptic_delivery",
+            variant: "soa",
+            threads: t,
+            elems_per_iter: events as f64,
+            secs_per_iter: st.mean,
+            elems_per_step: events as f64,
+        });
+    }
+
+    ComputeBenchReport {
+        n,
+        step_ms: net.dt_ms,
+        threads: threads.to_vec(),
+        host_parallelism: host,
+        cases,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_math_and_json_shape() {
+        let report = ComputeBenchReport {
+            n: 20_480,
+            step_ms: 1.0,
+            threads: vec![1, 2],
+            host_parallelism: 4,
+            cases: vec![
+                ComputeCase {
+                    kind: "neuron_update",
+                    variant: "scalar",
+                    threads: 1,
+                    elems_per_iter: 20_480.0,
+                    secs_per_iter: 20.48e-6, // 1 Gelem/s
+                    elems_per_step: 20_480.0,
+                },
+                ComputeCase {
+                    kind: "neuron_update",
+                    variant: "soa",
+                    threads: 2,
+                    elems_per_iter: 20_480.0,
+                    secs_per_iter: 5.12e-6, // 4 Gelem/s
+                    elems_per_step: 20_480.0,
+                },
+            ],
+        };
+        let c = report.case("neuron_update", "soa", 2).unwrap();
+        assert!((c.elems_per_s() - 4e9).abs() / 4e9 < 1e-9);
+        // 4e9 elems/s over 20480 elems/step = ~195k steps/s vs 1000 needed
+        assert!((c.realtime_x(1e-3) - 195.3125).abs() < 1e-6);
+        assert!((report.speedup_vs_scalar("neuron_update").unwrap() - 4.0).abs() < 1e-9);
+        let json = report.to_json();
+        assert!(json.contains("\"benchmark\": \"compute\""));
+        assert!(json.contains("\"speedup_vs_scalar\""));
+        assert!(json.contains("\"kind\": \"neuron_update\""));
+        assert!(json.contains("\"threads\": [1, 2]"));
+    }
+
+    #[test]
+    fn smoke_runs_tiny() {
+        // A minimal end-to-end pass of all three kernels (tiny n, fast
+        // bench budget) — checks the harness wiring, not performance.
+        let mut b = Bench::fast();
+        b.warmup = std::time::Duration::from_millis(1);
+        b.measure = std::time::Duration::from_millis(5);
+        b.max_samples = 3;
+        let report = run_compute_bench(&mut b, 2048, &[1, 2]);
+        assert_eq!(report.cases.len(), 3 + 3 * report.threads.len());
+        assert!(report.cases.iter().all(|c| c.secs_per_iter > 0.0));
+        let json = report.to_json();
+        assert!(json.contains("\"n\": 2048"));
+    }
+}

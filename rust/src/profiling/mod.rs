@@ -3,7 +3,9 @@
 //! (synchronization), per rank (Table I, Figs 3/5/6).
 
 pub mod components;
+pub mod compute_bench;
 pub mod timer;
 
 pub use components::Components;
+pub use compute_bench::{run_compute_bench, ComputeBenchReport, ComputeCase};
 pub use timer::Stopwatch;

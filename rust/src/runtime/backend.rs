@@ -6,6 +6,13 @@
 //! Both implement [`NeuronBackend`] and advance the same state with the
 //! same arithmetic; the integration tests assert their spike rasters
 //! agree on driven networks.
+//!
+//! The external-input buffer is owned by the backend (it is part of the
+//! SoA state block for the native path and the padded ABI staging buffer
+//! for XLA): the engine fills it in place via
+//! [`NeuronBackend::i_ext_mut`] — chunked across the compute pool — then
+//! calls [`NeuronBackend::step`], so no per-step copy sits between the
+//! Poisson fill and the update kernel.
 
 use std::path::Path;
 use std::rc::Rc;
@@ -13,22 +20,26 @@ use std::rc::Rc;
 use anyhow::Result;
 
 use crate::config::{Backend, NetworkParams};
-use crate::model::neuron::{step_native, StepParams};
-use crate::model::population::PopulationState;
+use crate::model::neuron::{collect_fired_offset, step_native_masked, StepParams};
+use crate::model::population::PopulationSoA;
+use crate::util::pool::{ComputePool, SyncPtr};
 
 use super::client::XlaRuntime;
+// Offline stand-in for the PJRT bindings (see xla_stub module docs).
+use super::xla_stub as xla;
 
 /// A stateful population integrator: one call = one 1 ms network step.
 pub trait NeuronBackend {
-    /// Advance one step with the given synaptic and external input
-    /// currents (length = population size). Appends the local indices of
-    /// neurons that fired to `spiked` and returns the spike count.
-    fn step(
-        &mut self,
-        i_syn: &[f32],
-        i_ext: &[f32],
-        spiked: &mut Vec<u32>,
-    ) -> Result<usize>;
+    /// The external-input buffer for the step about to run (length =
+    /// population size). The engine overwrites it every step before
+    /// calling [`Self::step`].
+    fn i_ext_mut(&mut self) -> &mut [f32];
+
+    /// Advance one step with the given synaptic input current (length =
+    /// population size); the external input is whatever the caller left
+    /// in [`Self::i_ext_mut`]. Appends the local indices of neurons that
+    /// fired to `spiked` (ascending) and returns the spike count.
+    fn step(&mut self, i_syn: &[f32], spiked: &mut Vec<u32>) -> Result<usize>;
 
     /// Population size.
     fn len(&self) -> usize;
@@ -44,37 +55,104 @@ pub trait NeuronBackend {
 }
 
 /// Pure-rust backend owning the population state.
+///
+/// The update is the branchless masked kernel (`step_native_masked` +
+/// `collect_fired`), mirroring `python/compile/kernels/lif_sfa.py` op for
+/// op so the state loop autovectorizes; the scalar push-variant
+/// `step_native` survives only as the test oracle
+/// (`masked_matches_push_variant`). Under `--compute-threads N` the
+/// population splits into the pool's fixed chunks: each chunk updates its
+/// disjoint SoA slices and collects spikes into its own vector, and the
+/// vectors concatenate in ascending chunk order — the exact sequence the
+/// single-chunk scan produces.
 pub struct NativeBackend {
     params: StepParams,
-    pop: PopulationState,
+    pop: PopulationSoA,
     /// Fired-flag scratch for the vectorized two-pass update (§Perf).
     mask: Vec<u8>,
+    pool: Rc<ComputePool>,
+    /// Per-chunk spike vectors, reduced in chunk order after each step.
+    spiked_chunks: Vec<Vec<u32>>,
 }
 
 impl NativeBackend {
-    pub fn new(net: &NetworkParams, pop: PopulationState) -> Self {
+    pub fn new(net: &NetworkParams, pop: PopulationSoA) -> Self {
+        Self::with_pool(net, pop, Rc::new(ComputePool::new(1)))
+    }
+
+    pub fn with_pool(net: &NetworkParams, pop: PopulationSoA, pool: Rc<ComputePool>) -> Self {
         let mask = vec![0u8; pop.len()];
-        Self { params: StepParams::from_network(net), pop, mask }
+        let spiked_chunks = vec![Vec::new(); pool.chunks()];
+        Self { params: StepParams::from_network(net), pop, mask, pool, spiked_chunks }
     }
 }
 
 impl NeuronBackend for NativeBackend {
-    fn step(&mut self, i_syn: &[f32], i_ext: &[f32], spiked: &mut Vec<u32>) -> Result<usize> {
-        // §Perf iteration log: the two-pass masked variant
-        // (`step_native_masked` + `collect_fired`) measured 15% slower
-        // end-to-end than this fused loop (the mask store+scan costs more
-        // than the rare in-loop push); reverted to the fused form.
-        let _ = &self.mask;
-        Ok(step_native(
-            &self.params,
-            &mut self.pop.v,
-            &mut self.pop.w,
-            &mut self.pop.rf,
-            i_syn,
-            i_ext,
-            &self.pop.sfa_inc,
-            spiked,
-        ))
+    fn i_ext_mut(&mut self) -> &mut [f32] {
+        &mut self.pop.i_ext
+    }
+
+    fn step(&mut self, i_syn: &[f32], spiked: &mut Vec<u32>) -> Result<usize> {
+        let n = self.pop.len();
+        debug_assert_eq!(i_syn.len(), n);
+        let p = self.params;
+        if self.pool.chunks() == 1 {
+            step_native_masked(
+                &p,
+                &mut self.pop.v,
+                &mut self.pop.w,
+                &mut self.pop.rf,
+                i_syn,
+                &self.pop.i_ext,
+                &self.pop.sfa_inc,
+                &mut self.mask,
+            );
+            return Ok(collect_fired_offset(&self.mask, 0, spiked));
+        }
+        // Chunked: disjoint 64-element-aligned slices per chunk (the SoA
+        // arrays and the mask never share a cache line across chunks).
+        // The closure captures the chunk count, not the pool (not Sync).
+        let chunks = self.pool.chunks();
+        let v = SyncPtr(self.pop.v.as_mut_ptr());
+        let w = SyncPtr(self.pop.w.as_mut_ptr());
+        let rf = SyncPtr(self.pop.rf.as_mut_ptr());
+        let mask = SyncPtr(self.mask.as_mut_ptr());
+        let out = SyncPtr(self.spiked_chunks.as_mut_ptr());
+        let i_ext: &[f32] = &self.pop.i_ext;
+        let sfa: &[f32] = &self.pop.sfa_inc;
+        self.pool.run(&|c| {
+            let r = crate::util::pool::chunk_range(chunks, c, n);
+            // SAFETY: chunk ranges are disjoint, so each raw slice and the
+            // per-chunk output vector have exactly one accessor.
+            let sp = unsafe { &mut *out.0.add(c) };
+            sp.clear();
+            if r.is_empty() {
+                return;
+            }
+            let (lo, len) = (r.start, r.len());
+            unsafe {
+                step_native_masked(
+                    &p,
+                    std::slice::from_raw_parts_mut(v.0.add(lo), len),
+                    std::slice::from_raw_parts_mut(w.0.add(lo), len),
+                    std::slice::from_raw_parts_mut(rf.0.add(lo), len),
+                    &i_syn[r.clone()],
+                    &i_ext[r.clone()],
+                    &sfa[r.clone()],
+                    std::slice::from_raw_parts_mut(mask.0.add(lo), len),
+                );
+                collect_fired_offset(
+                    std::slice::from_raw_parts(mask.0.add(lo), len),
+                    lo as u32,
+                    sp,
+                );
+            }
+        });
+        let before = spiked.len();
+        for sp in &self.spiked_chunks {
+            spiked.extend_from_slice(sp);
+        }
+        Ok(spiked.len() - before)
     }
 
     fn len(&self) -> usize {
@@ -106,16 +184,14 @@ pub struct XlaBackend {
     /// Packed step output (4 * rung).
     out: Vec<f32>,
     isyn_pad: Vec<f32>,
+    /// Doubles as the engine-filled i_ext buffer: the first n lanes are
+    /// [`NeuronBackend::i_ext_mut`], the pad stays zero.
     iext_pad: Vec<f32>,
     rt: XlaRuntime,
 }
 
 impl XlaBackend {
-    pub fn new(
-        net: &NetworkParams,
-        pop: PopulationState,
-        artifacts_dir: &Path,
-    ) -> Result<Self> {
+    pub fn new(net: &NetworkParams, pop: PopulationSoA, artifacts_dir: &Path) -> Result<Self> {
         let mut rt = XlaRuntime::new(artifacts_dir)?;
         let n = pop.len();
         let (rung, exe) = rt.executable_for(n as u32)?;
@@ -130,7 +206,7 @@ impl XlaBackend {
         pad(&pop.v, params.v_reset);
         pad(&pop.w, 0.0);
         pad(&pop.rf, 0.0);
-        let mut sfa = pop.sfa_inc.clone();
+        let mut sfa = pop.sfa_inc.to_vec();
         sfa.resize(rung, 0.0);
         let sfa_buf = rt.upload(&sfa)?;
         Ok(Self {
@@ -153,10 +229,13 @@ impl XlaBackend {
 }
 
 impl NeuronBackend for XlaBackend {
-    fn step(&mut self, i_syn: &[f32], i_ext: &[f32], spiked: &mut Vec<u32>) -> Result<usize> {
+    fn i_ext_mut(&mut self) -> &mut [f32] {
+        &mut self.iext_pad[..self.n]
+    }
+
+    fn step(&mut self, i_syn: &[f32], spiked: &mut Vec<u32>) -> Result<usize> {
         debug_assert_eq!(i_syn.len(), self.n);
         self.isyn_pad[..self.n].copy_from_slice(i_syn);
-        self.iext_pad[..self.n].copy_from_slice(i_ext);
         self.rt.run_step_packed(
             &self.exe,
             &self.params_buf,
@@ -200,15 +279,18 @@ impl NeuronBackend for XlaBackend {
     }
 }
 
-/// Construct the backend selected by the run config.
+/// Construct the backend selected by the run config. The pool carries the
+/// `--compute-threads` chunking; the XLA path steps as one kernel launch
+/// and ignores it.
 pub fn make_backend(
     which: Backend,
     net: &NetworkParams,
-    pop: PopulationState,
+    pop: PopulationSoA,
     artifacts_dir: &Path,
+    pool: Rc<ComputePool>,
 ) -> Result<Box<dyn NeuronBackend>> {
     Ok(match which {
-        Backend::Native => Box::new(NativeBackend::new(net, pop)),
+        Backend::Native => Box::new(NativeBackend::with_pool(net, pop, pool)),
         Backend::Xla => Box::new(XlaBackend::new(net, pop, artifacts_dir)?),
     })
 }
@@ -220,19 +302,51 @@ mod tests {
     #[test]
     fn native_backend_steps_and_reports_state() {
         let net = NetworkParams::tiny(64);
-        let pop = PopulationState::init(&net, 1, 0, 64);
+        let pop = PopulationSoA::init(&net, 1, 0, 64);
         let mut b = NativeBackend::new(&net, pop);
-        let zeros = vec![0.0f32; 64];
         let big = vec![100.0f32; 64];
         let mut spiked = Vec::new();
-        let n = b.step(&big, &zeros, &mut spiked).unwrap();
+        b.i_ext_mut().iter_mut().for_each(|x| *x = 0.0);
+        let n = b.step(&big, &mut spiked).unwrap();
         assert_eq!(n, 64, "all neurons driven far above threshold must fire");
         let (v, _, rf) = b.state();
         assert!(v.iter().all(|&x| x == 0.0));
         assert!(rf.iter().all(|&x| x == 2.0));
         // refractory: nothing fires next step
         spiked.clear();
-        let n = b.step(&big, &zeros, &mut spiked).unwrap();
+        let n = b.step(&big, &mut spiked).unwrap();
         assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn chunked_step_matches_single_chunk_bitwise() {
+        let net = NetworkParams::tiny(200);
+        let drive = |b: &mut dyn NeuronBackend, t: u32| {
+            for (j, x) in b.i_ext_mut().iter_mut().enumerate() {
+                *x = ((j as u32 ^ t) % 7) as f32;
+            }
+        };
+        let i_syn: Vec<f32> = (0..200).map(|j| (j % 11) as f32 * 0.5).collect();
+        for threads in [2usize, 3, 4] {
+            let pool = Rc::new(ComputePool::new(threads));
+            let mut b = NativeBackend::with_pool(&net, PopulationSoA::init(&net, 5, 0, 200), pool);
+            let mut sp_ref = Vec::new();
+            let mut sp = Vec::new();
+            let mut reference = NativeBackend::new(&net, PopulationSoA::init(&net, 5, 0, 200));
+            for t in 0..50 {
+                sp_ref.clear();
+                sp.clear();
+                drive(&mut reference, t);
+                drive(&mut b, t);
+                reference.step(&i_syn, &mut sp_ref).unwrap();
+                b.step(&i_syn, &mut sp).unwrap();
+                assert_eq!(sp_ref, sp, "threads={threads} t={t}");
+            }
+            let (v1, w1, rf1) = reference.state();
+            let (v2, w2, rf2) = b.state();
+            assert_eq!(v1, v2, "threads={threads}");
+            assert_eq!(w1, w2);
+            assert_eq!(rf1, rf2);
+        }
     }
 }

@@ -17,6 +17,9 @@ use std::rc::Rc;
 use anyhow::{Context, Result};
 
 use super::artifact::ArtifactRegistry;
+// The real `xla` bindings cannot be vendored offline; the stub mirrors
+// their API and reports the runtime as unavailable (see xla_stub docs).
+use super::xla_stub as xla;
 
 pub struct XlaRuntime {
     client: xla::PjRtClient,

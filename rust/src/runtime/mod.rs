@@ -8,7 +8,15 @@
 pub mod artifact;
 pub mod backend;
 pub mod client;
+pub mod xla_stub;
 
 pub use artifact::ArtifactRegistry;
 pub use backend::{make_backend, NativeBackend, NeuronBackend};
 pub use client::XlaRuntime;
+
+/// Whether this build links a real PJRT runtime. `false` means the
+/// offline [`xla_stub`] is in place: `--backend xla` fails fast with a
+/// clear error and the XLA parity tests skip themselves.
+pub fn xla_available() -> bool {
+    xla_stub::AVAILABLE
+}

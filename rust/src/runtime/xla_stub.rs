@@ -1,0 +1,125 @@
+//! API-compatible stand-in for the `xla` PJRT bindings.
+//!
+//! The real bindings (`xla_extension`) link libxla and cannot be vendored
+//! into an offline build, so the crate ships this stub instead: it mirrors
+//! exactly the surface `runtime::client` and `runtime::backend` consume,
+//! and every entry point that would touch PJRT reports the runtime as
+//! unavailable. Selecting `--backend xla` therefore fails fast with a
+//! clear error instead of failing to link, and everything else (the
+//! native SoA backend, all tests, all benches) builds and runs without
+//! the dependency. Swapping in the real crate is a one-line change at
+//! each `use super::xla_stub as xla;` site.
+//!
+//! [`AVAILABLE`] lets tests and callers gate XLA-only paths (see
+//! `rust/tests/backend_parity.rs`).
+
+use std::path::Path;
+
+/// `false` in stub builds: no PJRT runtime is linked. The parity tests
+/// and any `--backend xla` caller check this before expecting the XLA
+/// path to work.
+pub const AVAILABLE: bool = false;
+
+/// The error every stubbed entry point returns.
+#[derive(Debug, Clone, Copy)]
+pub struct Unavailable;
+
+impl std::fmt::Display for Unavailable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "PJRT runtime unavailable: this build stubs out the xla bindings \
+             (offline build without libxla); use --backend native"
+        )
+    }
+}
+
+impl std::error::Error for Unavailable {}
+
+/// Stub of `xla::PjRtClient`. The real client is created per rank thread
+/// (it is not `Send`); the stub's constructor always errors.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, Unavailable> {
+        Err(Unavailable)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Unavailable> {
+        Err(Unavailable)
+    }
+
+    pub fn buffer_from_host_buffer(
+        &self,
+        _data: &[f32],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Unavailable> {
+        Err(Unavailable)
+    }
+}
+
+/// Stub of a compiled-and-loaded PJRT executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<B>(&self, _inputs: &[B]) -> Result<Vec<Vec<PjRtBuffer>>, Unavailable> {
+        Err(Unavailable)
+    }
+}
+
+/// Stub of a device buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Unavailable> {
+        Err(Unavailable)
+    }
+}
+
+/// Stub of a host literal read back from the device.
+pub struct Literal;
+
+impl Literal {
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Unavailable> {
+        Err(Unavailable)
+    }
+}
+
+/// Stub of a parsed HLO module proto.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self, Unavailable> {
+        Err(Unavailable)
+    }
+}
+
+/// Stub of an XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        assert!(!AVAILABLE);
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("--backend native"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        // The error converts into anyhow::Error (client.rs relies on `?`).
+        let anyhow_err: anyhow::Error = Unavailable.into();
+        assert!(anyhow_err.to_string().contains("PJRT runtime unavailable"));
+    }
+}

@@ -1,0 +1,103 @@
+//! Cache-line-aligned f32 storage for the SoA compute hot path.
+//!
+//! The LIF+SFA update streams six f32 arrays per step; aligning each to a
+//! 64 B cache line (and padding lengths up to whole lines) gives the
+//! autovectorizer aligned loads/stores and keeps the per-chunk slices of
+//! the threaded update from sharing lines across chunk boundaries (see
+//! [`crate::util::pool::CHUNK_ALIGN`]).
+
+use std::ops::{Deref, DerefMut};
+
+/// f32 lanes per 64 B cache line.
+pub const LANES_PER_LINE: usize = 16;
+
+// The lanes are only ever read through the `Deref` pointer cast, never
+// through the field itself — allow(dead_code) keeps rustc's unread-field
+// lint quiet about that.
+#[derive(Clone, Copy)]
+#[repr(C, align(64))]
+struct Line(#[allow(dead_code)] [f32; LANES_PER_LINE]);
+
+/// A contiguous `[f32]` whose first element sits on a 64 B boundary and
+/// whose backing allocation is padded to whole cache lines (the pad lanes
+/// are zero and stay outside the `Deref` view).
+#[derive(Clone)]
+pub struct AlignedF32 {
+    buf: Vec<Line>,
+    len: usize,
+}
+
+impl AlignedF32 {
+    pub fn zeroed(len: usize) -> Self {
+        let lines = len.div_ceil(LANES_PER_LINE);
+        Self { buf: vec![Line([0.0; LANES_PER_LINE]); lines], len }
+    }
+
+    pub fn from_slice(xs: &[f32]) -> Self {
+        let mut a = Self::zeroed(xs.len());
+        a.copy_from_slice(xs);
+        a
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Deref for AlignedF32 {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        // SAFETY: the Vec<Line> allocation holds at least `len` contiguous
+        // f32s (lines are plain [f32; 16] with no padding between them).
+        unsafe { std::slice::from_raw_parts(self.buf.as_ptr() as *const f32, self.len) }
+    }
+}
+
+impl DerefMut for AlignedF32 {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        // SAFETY: as above, and we hold &mut self.
+        unsafe { std::slice::from_raw_parts_mut(self.buf.as_mut_ptr() as *mut f32, self.len) }
+    }
+}
+
+impl std::fmt::Debug for AlignedF32 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        std::fmt::Debug::fmt(&**self, f)
+    }
+}
+
+impl PartialEq for AlignedF32 {
+    fn eq(&self, other: &Self) -> bool {
+        **self == **other
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aligned_and_sized() {
+        for n in [0usize, 1, 15, 16, 17, 100, 4096] {
+            let a = AlignedF32::zeroed(n);
+            assert_eq!(a.len(), n);
+            assert_eq!(a.as_ptr() as usize % 64, 0, "n={n}");
+            assert!(a.iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn round_trips_a_slice() {
+        let xs: Vec<f32> = (0..37).map(|i| i as f32 * 0.5).collect();
+        let mut a = AlignedF32::from_slice(&xs);
+        assert_eq!(&*a, &xs[..]);
+        a[36] = -1.0;
+        assert_eq!(a[36], -1.0);
+        let b = a.clone();
+        assert_eq!(a, b);
+    }
+}

@@ -7,6 +7,8 @@
 
 pub mod rng;
 pub mod units;
+pub mod aligned;
+pub mod pool;
 pub mod cli;
 pub mod tomlmini;
 pub mod bench;

@@ -1,0 +1,220 @@
+//! Deterministic intra-rank compute threading (`--compute-threads N`).
+//!
+//! [`ComputePool`] splits an index space into a **fixed** number of chunks
+//! (= the requested thread count) and executes one closure call per chunk.
+//! Determinism is by construction, not by luck:
+//!
+//! * chunk boundaries are a pure function of `(n, chunks)` — they never
+//!   depend on how many OS workers actually run or how they are scheduled;
+//! * every chunk writes only its own output region (disjoint state slices,
+//!   a private spike vector, a disjoint delay-ring target range), so no
+//!   accumulator ever sees adds from two chunks;
+//! * per-chunk outputs are reduced in ascending chunk order by the caller.
+//!
+//! Under those rules the result is bitwise identical for every worker
+//! count — the pool clamps *workers* to the host parallelism but never
+//! changes the *chunk* geometry, so `--compute-threads 4` computes the
+//! same raster on a 1-core box as on a 64-core one.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+/// Chunk starts are multiples of this many elements, so no two chunks
+/// touch the same 64 B cache line of any state array (f32 = 16 lanes per
+/// line, the u8 fired-mask = 64).
+pub const CHUNK_ALIGN: usize = 64;
+
+/// The fixed split of `0..n` into `chunks` aligned ranges: every chunk is
+/// `ceil(n / chunks)` rounded up to [`CHUNK_ALIGN`] elements wide, except
+/// the tail (later chunks may be empty). Pure in `(chunks, c, n)`.
+pub fn chunk_range(chunks: usize, c: usize, n: usize) -> std::ops::Range<usize> {
+    debug_assert!(c < chunks);
+    let per = n.div_ceil(chunks).div_ceil(CHUNK_ALIGN).max(1) * CHUNK_ALIGN;
+    let lo = (c * per).min(n);
+    let hi = ((c + 1) * per).min(n);
+    lo..hi
+}
+
+/// A borrowed job, lifetime-erased for the worker channels. Sound because
+/// [`ComputePool::run`] blocks until every worker has signalled completion
+/// before returning — the borrow outlives every dereference.
+#[derive(Clone, Copy)]
+struct Job {
+    f: *const (dyn Fn(usize) + Sync),
+    chunks: usize,
+    stride: usize,
+}
+// SAFETY: the pointee is Sync and outlives the job (see above).
+unsafe impl Send for Job {}
+
+pub struct ComputePool {
+    /// Fixed chunk count (= requested threads); the determinism contract.
+    chunks: usize,
+    /// Executors actually running chunks: the caller + the workers.
+    /// Clamped to the host parallelism so oversubscription never turns
+    /// into context-switch thrash (chunk geometry is unaffected).
+    executors: usize,
+    senders: Vec<Sender<Job>>,
+    done_rx: Receiver<()>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ComputePool {
+    /// A pool computing in `threads` fixed chunks (0 is treated as 1).
+    pub fn new(threads: usize) -> Self {
+        let chunks = threads.max(1);
+        let host = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+        let executors = chunks.min(host);
+        let (done_tx, done_rx) = channel();
+        let mut senders = Vec::new();
+        let mut handles = Vec::new();
+        for i in 1..executors {
+            let (tx, rx) = channel::<Job>();
+            let done = done_tx.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("compute-{i}"))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        // SAFETY: run() keeps the closure alive until every
+                        // worker has sent its done token.
+                        let f = unsafe { &*job.f };
+                        let mut c = i;
+                        while c < job.chunks {
+                            f(c);
+                            c += job.stride;
+                        }
+                        if done.send(()).is_err() {
+                            return;
+                        }
+                    }
+                })
+                .expect("spawn compute worker");
+            senders.push(tx);
+            handles.push(h);
+        }
+        Self { chunks, executors, senders, done_rx, handles }
+    }
+
+    /// The fixed chunk count (what determinism depends on).
+    pub fn chunks(&self) -> usize {
+        self.chunks
+    }
+
+    /// Executors actually running (caller + spawned workers).
+    pub fn executors(&self) -> usize {
+        self.executors
+    }
+
+    /// [`chunk_range`] with this pool's chunk count.
+    pub fn chunk_range(&self, c: usize, n: usize) -> std::ops::Range<usize> {
+        chunk_range(self.chunks, c, n)
+    }
+
+    /// Execute `f(c)` once for every chunk `c in 0..chunks()`, spread over
+    /// the executors (worker `i` runs chunks `i, i+E, ...`; the caller
+    /// runs the `0, E, ...` series). Blocks until all chunks are done.
+    ///
+    /// `f` must confine each chunk's writes to that chunk's own output
+    /// region; which executor runs a chunk is not deterministic, only the
+    /// chunk geometry is.
+    pub fn run(&self, f: &(dyn Fn(usize) + Sync)) {
+        if self.senders.is_empty() {
+            for c in 0..self.chunks {
+                f(c);
+            }
+            return;
+        }
+        // lifetime-erase the borrow; run() outlives every use (see Job)
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+        let job = Job { f: f_static as *const _, chunks: self.chunks, stride: self.executors };
+        for tx in &self.senders {
+            tx.send(job).expect("compute worker died");
+        }
+        let mut c = 0;
+        while c < self.chunks {
+            f(c);
+            c += self.executors;
+        }
+        for _ in &self.senders {
+            self.done_rx.recv().expect("compute worker died");
+        }
+    }
+}
+
+impl Drop for ComputePool {
+    fn drop(&mut self) {
+        self.senders.clear(); // closes the channels; workers exit their loop
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A raw pointer a chunk closure may share across threads. The *user*
+/// guarantees disjoint access per chunk; the wrapper only silences the
+/// auto-trait checks that can't see that.
+#[derive(Clone, Copy)]
+pub struct SyncPtr<T>(pub *mut T);
+unsafe impl<T> Send for SyncPtr<T> {}
+unsafe impl<T> Sync for SyncPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_ranges_are_aligned_and_cover() {
+        for chunks in [1usize, 2, 3, 4, 8] {
+            for n in [0usize, 1, 63, 64, 65, 300, 1000, 20480] {
+                let mut next = 0usize;
+                for c in 0..chunks {
+                    let r = chunk_range(chunks, c, n);
+                    assert_eq!(r.start, next, "chunks={chunks} n={n} c={c}");
+                    assert!(r.start % CHUNK_ALIGN == 0 || r.start == n);
+                    next = r.end;
+                }
+                assert_eq!(next, n, "chunks={chunks} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn runs_every_chunk_exactly_once() {
+        for threads in [1usize, 2, 4, 7] {
+            let pool = ComputePool::new(threads);
+            assert_eq!(pool.chunks(), threads);
+            let hits: Vec<std::sync::atomic::AtomicU32> =
+                (0..threads).map(|_| std::sync::atomic::AtomicU32::new(0)).collect();
+            for _ in 0..50 {
+                pool.run(&|c| {
+                    hits[c].fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                });
+            }
+            for (c, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(std::sync::atomic::Ordering::Relaxed), 50, "chunk {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_writes_match_sequential() {
+        let n = 300usize;
+        let seq: Vec<f32> = (0..n).map(|j| (j * j) as f32).collect();
+        for threads in [1usize, 2, 4] {
+            let pool = ComputePool::new(threads);
+            let mut out = vec![0.0f32; n];
+            let p = SyncPtr(out.as_mut_ptr());
+            // NB: closures must not capture &pool (the pool itself is not
+            // Sync); capture the chunk count and use the free fn.
+            let chunks = pool.chunks();
+            pool.run(&|c| {
+                let r = chunk_range(chunks, c, n);
+                for j in r {
+                    // SAFETY: chunks are disjoint index ranges.
+                    unsafe { *p.0.add(j) = (j * j) as f32 };
+                }
+            });
+            assert_eq!(out, seq, "threads={threads}");
+        }
+    }
+}

@@ -2,12 +2,24 @@
 //! the pure-rust implementation must advance the same network to the same
 //! spike raster.
 //!
-//! Requires `make artifacts` (the Makefile `test` target guarantees it).
+//! Requires `make artifacts` (the Makefile `test` target guarantees it)
+//! and a build with real PJRT bindings: when `runtime::xla_available()`
+//! is false (the offline `xla_stub` build) every test here skips itself.
 
 use std::path::Path;
 
 use dpsnn::config::{Backend, Mode, NetworkParams, RunConfig};
 use dpsnn::coordinator;
+
+/// Returns true when the XLA path cannot run in this build; callers
+/// `return` early, which `cargo test` reports as a pass (skip).
+fn skip_without_runtime() -> bool {
+    if dpsnn::runtime::xla_available() {
+        return false;
+    }
+    eprintln!("skipping: PJRT bindings are stubbed out in this build");
+    true
+}
 
 fn artifacts_available() -> bool {
     Path::new("artifacts").exists()
@@ -28,6 +40,9 @@ fn cfg(backend: Backend, procs: u32) -> RunConfig {
 
 #[test]
 fn xla_and_native_rasters_agree() {
+    if skip_without_runtime() {
+        return;
+    }
     assert!(
         artifacts_available(),
         "artifacts/ missing — run `make artifacts` before `cargo test`"
@@ -44,6 +59,9 @@ fn xla_and_native_rasters_agree() {
 
 #[test]
 fn xla_backend_multi_rank() {
+    if skip_without_runtime() {
+        return;
+    }
     assert!(artifacts_available(), "run `make artifacts` first");
     // each rank thread builds its own PJRT client (the client is not Send)
     let native = coordinator::run(&cfg(Backend::Native, 2)).unwrap();
@@ -53,6 +71,9 @@ fn xla_backend_multi_rank() {
 
 #[test]
 fn xla_pads_population_to_artifact_rung() {
+    if skip_without_runtime() {
+        return;
+    }
     assert!(artifacts_available(), "run `make artifacts` first");
     // 1000 is not an artifact rung: forces padding to 1024
     let mut c = cfg(Backend::Xla, 1);

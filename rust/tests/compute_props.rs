@@ -1,0 +1,141 @@
+//! Compute-engine acceptance tests: `--compute-threads N` must be
+//! invisible in every observable output. The chunk geometry is a pure
+//! function of (population size, N), each chunk owns a disjoint output
+//! region, and per-chunk results reduce in ascending chunk order — so
+//! the raster, the totals and the final membrane state are bitwise
+//! identical for every thread count, composed with every partition
+//! policy, transport topology and exchange cadence.
+//!
+//! The SoA masked kernel itself is held to the scalar push-variant
+//! `step_native` as an op-for-op oracle over a long mixed-drive run.
+
+use std::rc::Rc;
+
+use dpsnn::config::{
+    ExchangeCadence, Mode, NetworkParams, PartitionPolicy, RunConfig, Topology, TreeShape,
+};
+use dpsnn::coordinator;
+use dpsnn::model::neuron::{step_native, StepParams};
+use dpsnn::model::population::PopulationSoA;
+use dpsnn::runtime::{NativeBackend, NeuronBackend};
+use dpsnn::util::pool::ComputePool;
+
+fn cfg(
+    threads: u32,
+    partition: PartitionPolicy,
+    topology: Topology,
+    cadence: ExchangeCadence,
+) -> RunConfig {
+    let mut c = RunConfig::default();
+    c.net = NetworkParams::tiny(512);
+    c.net.syn_per_neuron = 24; // sparse: lets greedy-comms actually move blocks
+    c.net.delay_min_steps = 4;
+    c.procs = 4;
+    c.sim_seconds = 0.15;
+    c.seed = 2026;
+    c.mode = Mode::Live;
+    c.compute_threads = threads;
+    c.partition = partition;
+    c.topology = topology;
+    c.exchange_every = cadence;
+    c
+}
+
+#[test]
+fn threaded_rasters_are_bitwise_identical() {
+    // threads {1,2,4} x partition {index, greedy-comms} x topology
+    // {flat, tree:2,2}, all under min-delay epoch batching, against the
+    // single-threaded flat per-step reference.
+    let reference = coordinator::run(&cfg(
+        1,
+        PartitionPolicy::Index,
+        Topology::Flat,
+        ExchangeCadence::Step,
+    ))
+    .unwrap();
+    assert!(reference.total_spikes > 0, "network must be active");
+    let tree = Topology::Tree(TreeShape::new(&[2, 2]).unwrap());
+    for &threads in &[1u32, 2, 4] {
+        for &partition in &[PartitionPolicy::Index, PartitionPolicy::GreedyComms] {
+            for &topology in &[Topology::Flat, tree] {
+                let run = coordinator::run(&cfg(
+                    threads,
+                    partition,
+                    topology,
+                    ExchangeCadence::MinDelay,
+                ))
+                .unwrap();
+                let tag = format!("threads={threads} partition={partition} topology={topology}");
+                assert_eq!(run.pop_counts, reference.pop_counts, "raster diverged: {tag}");
+                assert_eq!(run.total_spikes, reference.total_spikes, "{tag}");
+                assert_eq!(run.total_exc_spikes, reference.total_exc_spikes, "{tag}");
+                assert_eq!(run.total_syn_events, reference.total_syn_events, "{tag}");
+                assert_eq!(run.total_ext_events, reference.total_ext_events, "{tag}");
+            }
+        }
+    }
+}
+
+/// Deterministic mixed drive: per-neuron phase against per-step
+/// modulation, strong enough to spike and weak enough to stay irregular.
+fn drive(t: u32, j: usize) -> (f32, f32) {
+    let syn = ((t as usize * 31 + j * 7) % 13) as f32 * 0.35;
+    let ext = ((t as usize * 17 + j * 3) % 11) as f32 * 0.4;
+    (syn, ext)
+}
+
+#[test]
+fn soa_backend_matches_scalar_oracle_over_1k_steps() {
+    // n = 300: not a multiple of the 64-element chunk alignment or the
+    // 8-byte mask scan width, so tail lanes are exercised everywhere.
+    let n = 300usize;
+    let net = NetworkParams::tiny(n as u32);
+    let params = StepParams::from_network(&net);
+    let steps = 1000u32;
+
+    // Scalar push-variant oracle on plain Vecs.
+    let pop = PopulationSoA::init(&net, 2026, 0, n as u32);
+    let (mut v, mut w, mut rf) = (pop.v.to_vec(), pop.w.to_vec(), pop.rf.to_vec());
+    let sfa = pop.sfa_inc.to_vec();
+    let mut i_syn = vec![0.0f32; n];
+    let mut i_ext = vec![0.0f32; n];
+    let mut oracle_spikes: Vec<Vec<u32>> = Vec::new();
+    for t in 0..steps {
+        for j in 0..n {
+            let (s, e) = drive(t, j);
+            i_syn[j] = s;
+            i_ext[j] = e;
+        }
+        let mut spiked = Vec::new();
+        step_native(&params, &mut v, &mut w, &mut rf, &i_syn, &i_ext, &sfa, &mut spiked);
+        oracle_spikes.push(spiked);
+    }
+    let fired: usize = oracle_spikes.iter().map(|s| s.len()).sum();
+    assert!(fired > 100, "oracle drive too weak to exercise spiking ({fired} spikes)");
+
+    // The production masked SoA path, single- and multi-chunk.
+    for &threads in &[1usize, 2, 4] {
+        let pool = Rc::new(ComputePool::new(threads));
+        let soa = PopulationSoA::init(&net, 2026, 0, n as u32);
+        let mut be = NativeBackend::with_pool(&net, soa, pool);
+        let mut spiked = Vec::new();
+        for t in 0..steps {
+            let ie = be.i_ext_mut();
+            for j in 0..n {
+                let (s, e) = drive(t, j);
+                i_syn[j] = s;
+                ie[j] = e;
+            }
+            spiked.clear();
+            be.step(&i_syn, &mut spiked).unwrap();
+            assert_eq!(
+                spiked, oracle_spikes[t as usize],
+                "threads={threads}: spikes diverged at step {t}"
+            );
+        }
+        let (bv, bw, brf) = be.state();
+        assert_eq!(bv, &v[..], "threads={threads}: final v diverged");
+        assert_eq!(bw, &w[..], "threads={threads}: final w diverged");
+        assert_eq!(brf, &rf[..], "threads={threads}: final rf diverged");
+    }
+}
