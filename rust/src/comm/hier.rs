@@ -46,7 +46,7 @@
 //! Message/byte accounting per rank is specified on
 //! [`ExchangeStats`](super::transport::ExchangeStats).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
@@ -106,6 +106,14 @@ fn each_run<'a>(blob: &'a [u8], mut f: impl FnMut(Run<'a>)) {
     }
 }
 
+/// Wire encoding of the rotation policy in the cluster's atomic cell.
+fn rotation_code(rotation: LeaderRotation) -> u8 {
+    match rotation {
+        LeaderRotation::Fixed => 0,
+        LeaderRotation::RoundRobin => 1,
+    }
+}
+
 /// Append one `(src, dst, len, payload)` run to an aggregated blob.
 fn push_run(bin: &mut Vec<u8>, src: u32, dst: u32, payload: &[u8]) {
     bin.extend_from_slice(&src.to_le_bytes());
@@ -118,7 +126,11 @@ fn push_run(bin: &mut Vec<u8>, src: u32, dst: u32, payload: &[u8]) {
 /// L-level topology tree.
 pub struct HierCluster {
     tree: TopologyTree,
-    rotation: LeaderRotation,
+    /// Leader-rotation policy in force, swappable between exchanges
+    /// ([`Transport::set_rotation`]): the self-tuning runtime flips it
+    /// at window boundaries where every rank stores the same value, so
+    /// the relaxed atomic is only ever raced by identical writes.
+    rotation: AtomicU8,
     /// mailbox[src][dst]: final (source → destination) payloads — the
     /// same matrix the flat transport uses, but cross-board slots are
     /// filled by the destination board's leader during scatter.
@@ -169,7 +181,7 @@ impl HierCluster {
         let down = (1..depth).map(leader_slots).collect();
         Arc::new(Self {
             tree,
-            rotation,
+            rotation: AtomicU8::new(rotation_code(rotation)),
             mailboxes: (0..p)
                 .map(|_| (0..p).map(|_| Mutex::new(Vec::new())).collect())
                 .collect(),
@@ -184,6 +196,14 @@ impl HierCluster {
 
     pub fn topology_tree(&self) -> &TopologyTree {
         &self.tree
+    }
+
+    /// The rotation policy in force for the next exchange.
+    pub fn rotation(&self) -> LeaderRotation {
+        match self.rotation.load(Ordering::Relaxed) {
+            0 => LeaderRotation::Fixed,
+            _ => LeaderRotation::RoundRobin,
+        }
     }
 
     /// Post `payload` into the `(src, dst)` mailbox slot.
@@ -210,7 +230,8 @@ impl HierCluster {
     fn aggregate_up(&self, rank: u32, g: usize, exchange: u64, stats: &mut ExchangeStats) {
         let tree = &self.tree;
         let depth = tree.depth();
-        if tree.n_groups(g) <= 1 || !tree.is_leader(rank, g, self.rotation, exchange) {
+        let rotation = self.rotation();
+        if tree.n_groups(g) <= 1 || !tree.is_leader(rank, g, rotation, exchange) {
             return;
         }
         let gidx = tree.group_of(rank, g);
@@ -261,7 +282,7 @@ impl HierCluster {
         // (kept in place, uncounted, when this rank leads the parent
         // too — the same "frames in place" rule the rank gather uses).
         if g < depth && tree.n_groups(g + 1) > 1 {
-            if !tree.is_leader(rank, g + 1, self.rotation, exchange) {
+            if !tree.is_leader(rank, g + 1, rotation, exchange) {
                 stats.level_messages[g] += 1;
                 stats.level_bytes[g] += up_bin.len() as u64;
             }
@@ -279,7 +300,7 @@ impl HierCluster {
     fn scatter_down(&self, rank: u32, g: usize, exchange: u64) {
         let tree = &self.tree;
         let depth = tree.depth();
-        if tree.n_groups(g) <= 1 || !tree.is_leader(rank, g, self.rotation, exchange) {
+        if tree.n_groups(g) <= 1 || !tree.is_leader(rank, g, self.rotation(), exchange) {
             return;
         }
         let gidx = tree.group_of(rank, g);
@@ -378,7 +399,7 @@ impl Transport for Arc<HierCluster> {
                 blob.extend_from_slice(&(payload.len() as u32).to_le_bytes());
                 blob.extend_from_slice(payload);
             }
-            if !tree.is_leader(rank, 1, self.rotation, exchange) {
+            if !tree.is_leader(rank, 1, self.rotation(), exchange) {
                 stats.level_messages[0] += 1;
                 stats.level_bytes[0] += blob.len() as u64;
             }
@@ -427,6 +448,15 @@ impl Transport for Arc<HierCluster> {
 
     fn barrier(&self, _rank: u32) {
         self.barrier.wait();
+    }
+
+    /// Atomically swap the rotation policy. Safe between collectives:
+    /// `alltoall` reads the policy only before its final barrier, so
+    /// once any rank has returned from an exchange every rank is done
+    /// reading it for that exchange — and the self-tuning runtime has
+    /// every rank store the same value before the next one.
+    fn set_rotation(&self, rotation: LeaderRotation) {
+        self.rotation.store(rotation_code(rotation), Ordering::Relaxed);
     }
 }
 
@@ -665,6 +695,54 @@ mod tests {
             let live: u64 = results.iter().map(|r| r.1[lvl]).sum();
             assert_eq!(live, 4 * tree.messages_at_level(lvl), "level {lvl}");
         }
+    }
+
+    #[test]
+    fn rotation_swaps_between_exchanges_without_touching_payloads() {
+        // The online re-planner's contract: every rank stores the same
+        // policy after an exchange completes, and the next exchange
+        // routes identically — only who relays changes. 6 ranks on
+        // boards of 2; rounds 0-1 fixed, 2-3 round-robin.
+        let p = 6u32;
+        let cluster = HierCluster::with_tree(p, &[2], LeaderRotation::Fixed);
+        let mut handles = Vec::new();
+        for rank in 0..p {
+            let t = cluster.clone();
+            handles.push(std::thread::spawn(move || -> Vec<u64> {
+                let mut inter = Vec::new();
+                for round in 0..4u32 {
+                    if round == 2 {
+                        t.set_rotation(LeaderRotation::RoundRobin);
+                    }
+                    let outgoing: Vec<Vec<u8>> =
+                        (0..p).map(|dst| tagged(rank, dst, round)).collect();
+                    let (incoming, stats) = t.alltoall(rank, &outgoing).unwrap();
+                    for (src, buf) in incoming.iter().enumerate() {
+                        assert_eq!(buf, &tagged(src as u32, rank, round));
+                    }
+                    inter.push(stats.inter_messages);
+                }
+                inter
+            }));
+        }
+        let inter: Vec<Vec<u64>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let tree = TopologyTree::new(p, &[2]);
+        for round in 0..4usize {
+            let total: u64 = inter.iter().map(|r| r[round]).sum();
+            assert_eq!(total, tree.fabric_messages_per_exchange(), "round {round}");
+        }
+        // Fixed rounds pin the fabric load to the even (first-of-board)
+        // ranks; after the swap, round 3 (exchange counter 3, odd) hands
+        // every board's leadership to its odd member.
+        for r in (0..p as usize).step_by(2) {
+            assert!(inter[r][0] > 0 && inter[r][1] > 0, "rank {r} led under fixed");
+            assert_eq!(inter[r][3], 0, "rank {r} must hand off after the swap");
+        }
+        for r in (1..p as usize).step_by(2) {
+            assert_eq!(inter[r][0] + inter[r][1], 0, "rank {r} relayed under fixed");
+            assert!(inter[r][3] > 0, "rank {r} must take a leader turn");
+        }
+        assert_eq!(cluster.rotation(), LeaderRotation::RoundRobin);
     }
 
     #[test]

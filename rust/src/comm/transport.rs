@@ -20,6 +20,8 @@
 
 use anyhow::Result;
 
+use crate::config::LeaderRotation;
+
 /// Per-call accounting used by the profiler and the workload recorder.
 ///
 /// Byte counts are bytes moved through the transport. Sent
@@ -125,4 +127,12 @@ pub trait Transport: Send {
 
     /// Synchronization barrier across all ranks.
     fn barrier(&self, rank: u32);
+
+    /// Switch the leader-rotation policy for subsequent exchanges (the
+    /// online re-planner flips it at window boundaries). The default is
+    /// a no-op: the flat transport has no leaders to rotate. Callers
+    /// must only invoke this between collectives — e.g. right after the
+    /// per-epoch barrier — and store the same value from every rank, so
+    /// every rank derives the same leaders for the next exchange.
+    fn set_rotation(&self, _rotation: LeaderRotation) {}
 }

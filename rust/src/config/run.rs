@@ -376,6 +376,62 @@ impl std::fmt::Display for Topology {
     }
 }
 
+/// Which exchange axes the self-tuning runtime chooses (`auto` on the
+/// CLI / in TOML). The concrete [`RunConfig`] fields always hold a
+/// valid value — flagged axes are *overwritten* by the analytic
+/// planner ([`crate::simnet::autotune`]) before dispatch, and the flags
+/// survive into [`RunResult`](crate::coordinator::RunResult) so a run
+/// can report which of its resolved values were planner picks.
+///
+/// Kept as a sidecar struct (rather than `Auto` enum variants on
+/// [`Topology`] et al.) so every downstream `match` stays total over
+/// concrete values: after resolution no code path can meet an
+/// unresolved axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct AutoAxes {
+    /// `--topology auto`: planner picks flat vs a divisor-chain tree.
+    pub topology: bool,
+    /// `--exchange-every auto`: planner picks the epoch length, and
+    /// live runs re-plan it online at window boundaries.
+    pub exchange_every: bool,
+    /// `--leader-rotation auto`: planner picks fixed vs round-robin,
+    /// and live runs re-plan it online with the cadence.
+    pub leader_rotation: bool,
+    /// `--compute-threads auto`: resolved from the host parallelism.
+    pub compute_threads: bool,
+}
+
+impl AutoAxes {
+    /// Any axis left for the planner to choose?
+    pub fn any(&self) -> bool {
+        self.topology || self.exchange_every || self.leader_rotation || self.compute_threads
+    }
+
+    /// The planner-driven axes (everything except compute threads,
+    /// which resolves from the host alone).
+    pub fn any_planned(&self) -> bool {
+        self.topology || self.exchange_every || self.leader_rotation
+    }
+
+    /// Comma-separated list of the flagged axes (for run summaries).
+    pub fn describe(&self) -> String {
+        let mut v = Vec::new();
+        if self.topology {
+            v.push("topology");
+        }
+        if self.exchange_every {
+            v.push("exchange-every");
+        }
+        if self.leader_rotation {
+            v.push("leader-rotation");
+        }
+        if self.compute_threads {
+            v.push("compute-threads");
+        }
+        v.join(",")
+    }
+}
+
 /// How the run is executed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
@@ -436,6 +492,11 @@ pub struct RunConfig {
     /// value (chunk geometry is deterministic and every chunk writes a
     /// disjoint region; see `util::pool`).
     pub compute_threads: u32,
+    /// Exchange axes the self-tuning runtime resolves (`auto` values).
+    /// The concrete fields above always hold valid values; flagged axes
+    /// are overwritten by the planner before dispatch (see
+    /// [`crate::simnet::autotune::resolve`]).
+    pub auto: AutoAxes,
     /// Platform preset name for modeled runs (see `platform::presets`).
     pub platform: String,
     /// Interconnect preset for modeled runs ("ib", "eth1g", ...).
@@ -464,6 +525,7 @@ impl Default for RunConfig {
             leader_rotation: LeaderRotation::Fixed,
             partition: PartitionPolicy::Index,
             compute_threads: 1,
+            auto: AutoAxes::default(),
             platform: "xeon".to_string(),
             interconnect: "ib".to_string(),
             artifacts_dir: "artifacts".to_string(),
@@ -580,20 +642,40 @@ impl RunConfig {
         cfg.routing = doc
             .str_or("run", "routing", &cfg.routing.to_string())
             .parse()?;
-        cfg.exchange_every = doc
-            .str_or("run", "exchange_every", &cfg.exchange_every.to_string())
-            .parse()?;
-        cfg.topology = doc
-            .str_or("run", "topology", &cfg.topology.to_string())
-            .parse()?;
-        cfg.leader_rotation = doc
-            .str_or("run", "leader_rotation", &cfg.leader_rotation.to_string())
-            .parse()?;
+        // The four auto-capable axes: the literal "auto" flags the axis
+        // for the planner and leaves the (valid) default in place.
+        let cadence = doc.str_or("run", "exchange_every", &cfg.exchange_every.to_string());
+        if cadence.eq_ignore_ascii_case("auto") {
+            cfg.auto.exchange_every = true;
+        } else {
+            cfg.exchange_every = cadence.parse()?;
+        }
+        let topology = doc.str_or("run", "topology", &cfg.topology.to_string());
+        if topology.eq_ignore_ascii_case("auto") {
+            cfg.auto.topology = true;
+        } else {
+            cfg.topology = topology.parse()?;
+        }
+        let rotation = doc.str_or("run", "leader_rotation", &cfg.leader_rotation.to_string());
+        if rotation.eq_ignore_ascii_case("auto") {
+            cfg.auto.leader_rotation = true;
+        } else {
+            cfg.leader_rotation = rotation.parse()?;
+        }
         cfg.partition = doc
             .str_or("run", "partition", &cfg.partition.to_string())
             .parse()?;
-        cfg.compute_threads =
-            doc.i64_or("run", "compute_threads", cfg.compute_threads as i64) as u32;
+        match doc.get("run", "compute_threads") {
+            Some(v) if v.as_str().is_some_and(|s| s.eq_ignore_ascii_case("auto")) => {
+                cfg.auto.compute_threads = true;
+            }
+            Some(v) => {
+                cfg.compute_threads = v.as_i64().ok_or_else(|| {
+                    anyhow::anyhow!("compute_threads must be an integer or \"auto\"")
+                })? as u32;
+            }
+            None => {}
+        }
         cfg.platform = doc.str_or("run", "platform", &cfg.platform);
         cfg.interconnect = doc.str_or("run", "interconnect", &cfg.interconnect);
         cfg.artifacts_dir = doc.str_or("run", "artifacts_dir", &cfg.artifacts_dir);
@@ -805,6 +887,39 @@ mod tests {
         let mut cfg = RunConfig::default();
         cfg.topology = Topology::Nodes(0);
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn auto_axes_parse_from_toml() {
+        assert!(!RunConfig::default().auto.any());
+        let cfg = RunConfig::from_toml_str(
+            "[run]\ntopology = \"auto\"\nexchange_every = \"auto\"\n\
+             leader_rotation = \"auto\"\ncompute_threads = \"auto\"",
+        )
+        .unwrap();
+        assert!(cfg.auto.topology);
+        assert!(cfg.auto.exchange_every);
+        assert!(cfg.auto.leader_rotation);
+        assert!(cfg.auto.compute_threads);
+        assert!(cfg.auto.any() && cfg.auto.any_planned());
+        // flagged axes keep valid defaults until the planner resolves them
+        assert_eq!(cfg.topology, Topology::Flat);
+        assert_eq!(cfg.exchange_every, ExchangeCadence::Step);
+        assert_eq!(cfg.compute_threads, 1);
+        cfg.validate().unwrap();
+        assert_eq!(
+            cfg.auto.describe(),
+            "topology,exchange-every,leader-rotation,compute-threads"
+        );
+        // explicit values still parse and leave the flags unset
+        let cfg = RunConfig::from_toml_str(
+            "[run]\ntopology = \"nodes:4\"\ncompute_threads = 2",
+        )
+        .unwrap();
+        assert!(!cfg.auto.any());
+        assert_eq!(cfg.compute_threads, 2);
+        // compute_threads only accepts an integer or "auto"
+        assert!(RunConfig::from_toml_str("[run]\ncompute_threads = \"many\"").is_err());
     }
 
     #[test]

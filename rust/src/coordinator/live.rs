@@ -56,6 +56,22 @@
 //! connectome and the topology tree to keep strongly-coupled blocks on
 //! cheap links.
 //!
+//! When the run resolved `--exchange-every auto` or `--leader-rotation
+//! auto`, an [`OnlineReplanner`] shared by all ranks re-decides both
+//! axes at window boundaries from *measured* traffic: each rank reports
+//! its posted payload bytes and communication lap **before** the
+//! window's closing barrier, so once the barrier passes, the decision —
+//! the planner's crossover cadence/rotation rules
+//! ([`crate::simnet::autotune`]) applied to the measured per-pair
+//! payload — is a pure function of data every rank agrees on, and every
+//! rank derives the identical plan for the next window. A regime shift
+//! (the paper's quiet AW vs bursty SWA dynamics) therefore re-plans
+//! the cadence within one window of the complete shifted measurement,
+//! and rotation swaps ride the same boundary through
+//! [`Transport::set_rotation`]. Any per-window cadence that divides the
+//! min-delay window keeps every spike ahead of the first step it can
+//! influence, so re-planning never moves the raster.
+//!
 //! Because connectivity, stimulus and initial state are pure functions of
 //! global neuron ids, and synaptic weights live on an exact f32 grid, the
 //! spike raster is **bitwise identical for every process count, both
@@ -69,6 +85,8 @@
 //! `rust/tests/routing_props.rs`, `rust/tests/cadence_props.rs`,
 //! `rust/tests/topology_props.rs` and `rust/tests/partition_props.rs`.
 
+use std::sync::{Arc, Mutex};
+
 use anyhow::{Context, Result};
 
 use crate::comm::aer::{decode_spikes, decode_spikes_epoch, encode_spikes, encode_spikes_epoch};
@@ -77,7 +95,7 @@ use crate::comm::local::LocalCluster;
 use crate::comm::routing::RoutingTable;
 use crate::comm::topology::TopologyTree;
 use crate::comm::transport::Transport;
-use crate::config::{Mode, Routing, RunConfig, Topology};
+use crate::config::{LeaderRotation, Mode, Routing, RunConfig, Topology};
 use crate::engine::partition::{AllocContext, Partition};
 use crate::engine::rank::RankEngine;
 use crate::engine::spike::Spike;
@@ -87,6 +105,7 @@ use crate::model::population::PopulationSoA;
 use crate::profiling::components::Components;
 use crate::profiling::timer::Stopwatch;
 use crate::runtime::make_backend;
+use crate::simnet::autotune::Planner;
 use crate::util::pool::ComputePool;
 
 use super::orchestrator::RunResult;
@@ -106,7 +125,219 @@ struct RankReport {
     exc_spikes: u64,
 }
 
+/// Cadence + rotation in force for one exchange window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WindowPlan {
+    /// Steps per exchange window (a divisor of the min-delay window, so
+    /// the raster is untouched).
+    pub epoch_steps: u32,
+    /// Leader-rotation policy of the window's collective.
+    pub rotation: LeaderRotation,
+}
+
+/// One switch the online re-planner performed at a window boundary
+/// (recorded in [`RunResult::replans`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplanEvent {
+    /// Index of the completed window whose measurements triggered the
+    /// switch; the new plan is in force from the next window on.
+    pub window: u64,
+    /// Epoch length (steps) in force from the next window.
+    pub epoch_steps: u32,
+    /// Rotation policy in force from the next window.
+    pub rotation: LeaderRotation,
+    /// Mean payload bytes per ordered rank pair per step measured over
+    /// the completed window — the regime signal the switch keyed on.
+    pub measured_bytes_per_pair_step: f64,
+    /// The planner's predicted seconds for one collective of the
+    /// completed window's cadence at the measured payload.
+    pub predicted_exchange_s: f64,
+    /// Slowest rank's measured communication lap over the completed
+    /// window (AER encode + exchange) — prediction vs reality.
+    pub measured_exchange_s: f64,
+}
+
+/// The live controller behind `--exchange-every auto` and
+/// `--leader-rotation auto`: re-applies the analytic planner's
+/// crossover rules to *measured* per-window traffic and swaps cadence
+/// and rotation at window boundaries.
+///
+/// Determinism contract: ranks [`report`](Self::report) before the
+/// window's closing barrier and read the next
+/// [`window_plan`](Self::window_plan) only after it, so the memoized
+/// decision is always computed from the complete window and every rank
+/// derives the identical plan. Decisions are payload-driven (bytes are
+/// bitwise-reproducible across runs, wall-clock laps are not); the
+/// measured and predicted exchange times ride along in the
+/// [`ReplanEvent`] log for observability only.
+pub struct OnlineReplanner {
+    planner: Planner,
+    topology: Topology,
+    procs: u32,
+    /// Min-delay window (steps) — the cadence ceiling.
+    dmin: u32,
+    /// Re-plan the cadence (`--exchange-every auto`)?
+    auto_cadence: bool,
+    /// Re-plan the rotation (`--leader-rotation auto`)?
+    auto_rotation: bool,
+    /// Payload threshold (bytes) of the latency–bandwidth crossover the
+    /// decisions key on: the planner's value by default, overridable to
+    /// inject regime shifts in tests and bench harnesses.
+    crossover_bytes: f64,
+    state: Mutex<ReplanState>,
+}
+
+struct ReplanState {
+    /// Ranks that have reported the accumulating window so far.
+    reports: u32,
+    /// Payload bytes (self slot excluded) all ranks posted this window.
+    payload_bytes: u64,
+    /// Slowest reported communication lap of this window.
+    max_comm_s: f64,
+    /// Plan in force for started windows and the next boundary.
+    current: WindowPlan,
+    events: Vec<ReplanEvent>,
+}
+
+impl OnlineReplanner {
+    /// Build the controller for a (resolved) live config: the planner's
+    /// crossover threshold for the run's topology, starting from the
+    /// config's concrete cadence and rotation.
+    pub fn from_config(cfg: &RunConfig) -> Result<Self> {
+        let planner = Planner::from_config(cfg)?;
+        let crossover_bytes = planner.crossover_bytes(&cfg.topology);
+        let dmin = cfg.net.delay_min_steps.max(1);
+        Ok(Self {
+            planner,
+            topology: cfg.topology,
+            procs: cfg.procs,
+            dmin,
+            auto_cadence: cfg.auto.exchange_every,
+            auto_rotation: cfg.auto.leader_rotation,
+            crossover_bytes,
+            state: Mutex::new(ReplanState {
+                reports: 0,
+                payload_bytes: 0,
+                max_comm_s: 0.0,
+                current: WindowPlan {
+                    epoch_steps: cfg.exchange_every.epoch_steps(dmin),
+                    rotation: cfg.leader_rotation,
+                },
+                events: Vec::new(),
+            }),
+        })
+    }
+
+    /// Override the crossover threshold — tests and bench harnesses
+    /// inject regime shifts by placing it below or above the real
+    /// payload.
+    pub fn with_crossover_bytes(mut self, bytes: f64) -> Self {
+        self.crossover_bytes = bytes;
+        self
+    }
+
+    /// The plan in force for the window a rank is about to start. Safe
+    /// to read after the previous window's barrier: every rank reported
+    /// before it, so the memoized decision is complete.
+    pub fn window_plan(&self) -> WindowPlan {
+        self.state.lock().unwrap().current
+    }
+
+    /// One rank's measurements for the window it just exchanged: the
+    /// payload bytes it posted (self slot excluded), the window's step
+    /// count and its communication lap. Must be called before the
+    /// window's closing barrier; the last report of a window finalizes
+    /// the decision for the next one.
+    pub fn report(&self, window: u64, payload_bytes: u64, steps: u32, comm_s: f64) {
+        let mut st = self.state.lock().unwrap();
+        st.payload_bytes += payload_bytes;
+        st.max_comm_s = st.max_comm_s.max(comm_s);
+        st.reports += 1;
+        if st.reports < self.procs {
+            return;
+        }
+        let pairs = u64::from(self.procs) * u64::from(self.procs.saturating_sub(1));
+        let b = st.payload_bytes as f64 / (pairs.max(1) * u64::from(steps.max(1))) as f64;
+        let next = WindowPlan {
+            epoch_steps: if self.auto_cadence {
+                self.cadence_for_payload(b)
+            } else {
+                st.current.epoch_steps
+            },
+            rotation: if self.auto_rotation {
+                self.rotation_for_payload(b)
+            } else {
+                st.current.rotation
+            },
+        };
+        if next != st.current {
+            st.events.push(ReplanEvent {
+                window,
+                epoch_steps: next.epoch_steps,
+                rotation: next.rotation,
+                measured_bytes_per_pair_step: b,
+                predicted_exchange_s: self.planner.predict_exchange_s(
+                    &self.topology,
+                    st.current.epoch_steps,
+                    b,
+                ),
+                measured_exchange_s: st.max_comm_s,
+            });
+            st.current = next;
+        }
+        st.reports = 0;
+        st.payload_bytes = 0;
+        st.max_comm_s = 0.0;
+    }
+
+    /// Drain the switch log (run_live attaches it to the result).
+    pub fn take_events(&self) -> Vec<ReplanEvent> {
+        std::mem::take(&mut self.state.lock().unwrap().events)
+    }
+
+    /// The planner's crossover cadence rule at a *measured* payload:
+    /// the smallest causally-safe epoch whose payload passes the
+    /// crossover, or the full min-delay window while latency-bound.
+    fn cadence_for_payload(&self, bytes_per_pair_step: f64) -> u32 {
+        self.planner
+            .cadence_candidates()
+            .into_iter()
+            .find(|&e| bytes_per_pair_step * e as f64 >= self.crossover_bytes)
+            .unwrap_or(self.dmin)
+    }
+
+    /// The planner's rotation rule at a *measured* payload: spread the
+    /// leader CPU only when there are leaders and the window is
+    /// bandwidth-bound.
+    fn rotation_for_payload(&self, bytes_per_pair_step: f64) -> LeaderRotation {
+        match self.topology.tree() {
+            Some(shape)
+                if shape.ranks_per_board() >= 2
+                    && bytes_per_pair_step * self.dmin as f64 >= self.crossover_bytes =>
+            {
+                LeaderRotation::RoundRobin
+            }
+            _ => LeaderRotation::Fixed,
+        }
+    }
+}
+
 pub fn run_live(cfg: &RunConfig) -> Result<RunResult> {
+    let replanner = if cfg.auto.exchange_every || cfg.auto.leader_rotation {
+        Some(Arc::new(OnlineReplanner::from_config(cfg)?))
+    } else {
+        None
+    };
+    run_live_with(cfg, replanner)
+}
+
+/// [`run_live`] with an explicit (possibly custom-thresholded) online
+/// re-planner — the injected-regime-shift harness the tests and
+/// bench-smoke drive.
+pub fn run_live_with(
+    cfg: &RunConfig,
+    replanner: Option<Arc<OnlineReplanner>>,
+) -> Result<RunResult> {
     let p = cfg.procs;
     let steps = cfg.steps();
     // Placement: the allocator policy decides which rank owns which
@@ -121,19 +352,22 @@ pub fn run_live(cfg: &RunConfig) -> Result<RunResult> {
     let part = Partition::allocate(cfg.partition, cfg.net.n_neurons, p, &ctx);
 
     let t0 = std::time::Instant::now();
+    let rp = replanner.as_ref();
     let reports: Vec<RankReport> = match cfg.topology {
-        Topology::Flat => spawn_ranks(cfg, &part, LocalCluster::new(p), steps)?,
+        Topology::Flat => spawn_ranks(cfg, &part, LocalCluster::new(p), steps, rp)?,
         Topology::Nodes(k) => spawn_ranks(
             cfg,
             &part,
             HierCluster::with_tree(p, &[k], cfg.leader_rotation),
             steps,
+            rp,
         )?,
         Topology::Tree(shape) => spawn_ranks(
             cfg,
             &part,
             HierCluster::with_tree(p, shape.levels(), cfg.leader_rotation),
             steps,
+            rp,
         )?,
     };
     let wall_s = t0.elapsed().as_secs_f64();
@@ -196,6 +430,11 @@ pub fn run_live(cfg: &RunConfig) -> Result<RunResult> {
         routing: cfg.routing,
         topology: cfg.topology,
         partition: cfg.partition,
+        exchange_every: cfg.exchange_every,
+        leader_rotation: cfg.leader_rotation,
+        compute_threads: cfg.compute_threads,
+        auto: cfg.auto,
+        replans: replanner.map(|r| r.take_events()).unwrap_or_default(),
         backend: match cfg.backend {
             crate::config::Backend::Native => "native",
             crate::config::Backend::Xla => "xla",
@@ -210,6 +449,7 @@ fn spawn_ranks<T: Transport + Clone>(
     part: &Partition,
     transport: T,
     steps: u32,
+    replanner: Option<&Arc<OnlineReplanner>>,
 ) -> Result<Vec<RankReport>> {
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
@@ -217,8 +457,9 @@ fn spawn_ranks<T: Transport + Clone>(
             let transport = transport.clone();
             let cfg = cfg.clone();
             let part = part.clone();
+            let replanner = replanner.cloned();
             handles.push(scope.spawn(move || -> Result<RankReport> {
-                rank_main(rank, &cfg, &part, transport, steps)
+                rank_main(rank, &cfg, &part, transport, steps, replanner.as_deref())
             }));
         }
         handles
@@ -234,6 +475,7 @@ fn rank_main<T: Transport>(
     part: &Partition,
     transport: T,
     steps: u32,
+    replanner: Option<&OnlineReplanner>,
 ) -> Result<RankReport> {
     let owned = part.owned(rank).clone();
     let pop = PopulationSoA::init_owned(&cfg.net, cfg.seed, &owned);
@@ -270,18 +512,15 @@ fn rank_main<T: Transport>(
 
     // Exchange cadence: how many steps each communication epoch spans.
     // Validated against delay_min_steps in RunConfig::validate, so every
-    // spike still arrives before the first step it can influence.
-    let epoch = cfg
-        .exchange_every
-        .epoch_steps(cfg.net.delay_min_steps)
-        .min(steps.max(1));
-    // The paper's flat 12-byte stream needs no run headers when every
-    // exchange carries exactly one step.
-    let framed = epoch > 1;
-    let encode: fn(&[Spike], f64, &mut Vec<u8>) = if framed {
-        encode_spikes_epoch
-    } else {
-        encode_spikes
+    // spike still arrives before the first step it can influence. With
+    // the online re-planner active this is only window 0's plan — later
+    // windows read the shared, deterministically re-planned one.
+    let static_plan = WindowPlan {
+        epoch_steps: cfg
+            .exchange_every
+            .epoch_steps(cfg.net.delay_min_steps)
+            .min(steps.max(1)),
+        rotation: cfg.leader_rotation,
     };
 
     let p = transport.n_ranks() as usize;
@@ -299,8 +538,28 @@ fn rank_main<T: Transport>(
     let mut exc_spikes = 0u64;
 
     let mut step = 0u32;
+    let mut window = 0u64;
     while step < steps {
-        let len = epoch.min(steps - step);
+        // Every rank derives the identical plan for this window (the
+        // previous window's barrier made the re-planner's decision
+        // complete before anyone reads it). Framing follows the planned
+        // epoch, not the clipped tail length, so encoder and decoder
+        // agree on every rank in every window; the paper's flat
+        // 12-byte stream needs no run headers when every exchange
+        // carries exactly one step.
+        let wp = replanner.map_or(static_plan, |r| r.window_plan());
+        let framed = wp.epoch_steps > 1;
+        let encode: fn(&[Spike], f64, &mut Vec<u8>) = if framed {
+            encode_spikes_epoch
+        } else {
+            encode_spikes
+        };
+        if replanner.is_some() {
+            // Same value from every rank, between collectives — the
+            // Transport::set_rotation contract (no-op on flat).
+            transport.set_rotation(wp.rotation);
+        }
+        let len = wp.epoch_steps.min(steps - step);
 
         // 1. computation: integrate the epoch's steps, buffering local
         // emissions (tagged with their emission step) until the
@@ -363,7 +622,20 @@ fn rank_main<T: Transport>(
         }
         let (incoming, stats) = transport.alltoall(rank, &out_bufs)?;
         comm_vol.observe(&stats);
-        comp.add_communication(sw.lap());
+        let comm_lap = sw.lap();
+        comp.add_communication(comm_lap);
+        if let Some(r) = replanner {
+            // Report before the closing barrier: the barrier is what
+            // publishes every rank's measurements to the boundary
+            // decision.
+            let payload: u64 = out_bufs
+                .iter()
+                .enumerate()
+                .filter(|&(dst, _)| dst as u32 != rank)
+                .map(|(_, b)| b.len() as u64)
+                .sum();
+            r.report(window, payload, len, comm_lap);
+        }
 
         // 3. computation: decode + deliver through delay rings. Source
         // order is preserved (src 0..P, own spikes in their slot), so the
@@ -388,6 +660,7 @@ fn rank_main<T: Transport>(
         comp.add_barrier(sw.lap());
 
         step += len;
+        window += 1;
         if cfg.progress && rank == 0 && step / 1000 > (step - len) / 1000 {
             eprintln!(
                 "  [live] step {}/{} rate so far {:.2} Hz",
@@ -528,6 +801,100 @@ mod tests {
                 base.total_spikes
             );
         }
+    }
+
+    #[test]
+    fn online_replanner_switches_within_one_window_of_a_regime_shift() {
+        use crate::config::ExchangeCadence;
+        // Synthetic reports, 2 ranks, dmin = 4: quiet AW-class windows
+        // keep the full min-delay batch; an injected SWA-class burst
+        // must drop the cadence to per-step at the very next boundary
+        // (well inside the acceptance budget of 3), and the calm-down
+        // must restore batching.
+        let mut cfg = tiny_cfg(2);
+        cfg.net.delay_min_steps = 4;
+        cfg.exchange_every = ExchangeCadence::MinDelay;
+        cfg.auto.exchange_every = true;
+        let r = OnlineReplanner::from_config(&cfg)
+            .unwrap()
+            .with_crossover_bytes(1000.0);
+        assert_eq!(r.window_plan().epoch_steps, 4);
+        // window 0: quiet (25 B/pair-step) -> stay batched
+        r.report(0, 100, 4, 1e-6);
+        r.report(0, 100, 4, 1e-6);
+        assert_eq!(r.window_plan().epoch_steps, 4);
+        // window 1: burst (10 kB/pair-step) -> per-step from window 2
+        r.report(1, 40_000, 4, 1e-6);
+        r.report(1, 40_000, 4, 1e-6);
+        assert_eq!(r.window_plan().epoch_steps, 1);
+        // window 2: quiet again -> back to min-delay batching
+        r.report(2, 25, 1, 1e-6);
+        r.report(2, 25, 1, 1e-6);
+        assert_eq!(r.window_plan().epoch_steps, 4);
+        let events = r.take_events();
+        assert_eq!(events.len(), 2, "exactly the two regime switches");
+        assert_eq!((events[0].window, events[0].epoch_steps), (1, 1));
+        assert_eq!((events[1].window, events[1].epoch_steps), (2, 4));
+        assert!(events.iter().all(|e| e.predicted_exchange_s > 0.0));
+        assert!(events.iter().all(|e| e.measured_exchange_s > 0.0));
+    }
+
+    #[test]
+    fn online_replanning_keeps_the_raster_bitwise_identical() {
+        use crate::config::{ExchangeCadence, TreeShape};
+        // Baseline: static min-delay batching on the flat transport.
+        let mut cfg = tiny_cfg(4);
+        cfg.net.delay_min_steps = 4;
+        cfg.exchange_every = ExchangeCadence::MinDelay;
+        let base = run_live(&cfg).unwrap();
+        assert!(base.total_spikes > 0, "network must be active");
+
+        // Injected SWA shift: a zero crossover makes every measured
+        // window bandwidth-bound, so after window 0 the controller
+        // drops the batching to per-step and (on the tree) turns leader
+        // rotation on — and the raster must not move.
+        let mut swa = cfg.clone();
+        swa.topology = Topology::Tree(TreeShape::new(&[2, 2]).unwrap());
+        swa.auto.exchange_every = true;
+        swa.auto.leader_rotation = true;
+        let rp = OnlineReplanner::from_config(&swa)
+            .unwrap()
+            .with_crossover_bytes(0.0);
+        let shifted = run_live_with(&swa, Some(Arc::new(rp))).unwrap();
+        assert_eq!(base.pop_counts, shifted.pop_counts, "re-plan moved the raster");
+        assert_eq!(base.total_syn_events, shifted.total_syn_events);
+        let first = shifted.replans.first().expect("the shift must re-plan");
+        assert_eq!(first.window, 0, "switch at the first boundary");
+        assert_eq!(first.epoch_steps, 1);
+        assert_eq!(first.rotation, LeaderRotation::RoundRobin);
+
+        // The reverse (AW) direction: an infinite crossover pushes a
+        // per-step start back to full min-delay batching.
+        let mut aw = cfg.clone();
+        aw.exchange_every = ExchangeCadence::Step;
+        aw.auto.exchange_every = true;
+        let rp = OnlineReplanner::from_config(&aw)
+            .unwrap()
+            .with_crossover_bytes(f64::INFINITY);
+        let calmed = run_live_with(&aw, Some(Arc::new(rp))).unwrap();
+        assert_eq!(base.pop_counts, calmed.pop_counts, "re-plan moved the raster");
+        let first = calmed.replans.first().expect("the calm must re-plan");
+        assert_eq!((first.window, first.epoch_steps), (0, 4));
+    }
+
+    #[test]
+    fn run_result_records_resolved_exchange_axes() {
+        use crate::config::ExchangeCadence;
+        let mut cfg = tiny_cfg(2);
+        cfg.net.delay_min_steps = 4;
+        cfg.exchange_every = ExchangeCadence::Every(2);
+        cfg.compute_threads = 2;
+        let r = run_live(&cfg).unwrap();
+        assert_eq!(r.exchange_every, ExchangeCadence::Every(2));
+        assert_eq!(r.leader_rotation, cfg.leader_rotation);
+        assert_eq!(r.compute_threads, 2);
+        assert!(!r.auto.any(), "no axes were auto");
+        assert!(r.replans.is_empty(), "no re-planner without auto axes");
     }
 
     #[test]

@@ -10,4 +10,5 @@ pub mod live;
 pub mod modeled;
 pub mod orchestrator;
 
+pub use live::{OnlineReplanner, ReplanEvent, WindowPlan};
 pub use orchestrator::{run, EnergyReport, RunResult};

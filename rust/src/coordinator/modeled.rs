@@ -106,6 +106,11 @@ pub fn run_modeled_trace(cfg: &RunConfig, trace: &WorkloadTrace) -> Result<RunRe
         routing: cfg.routing,
         topology: cfg.topology,
         partition: cfg.partition,
+        exchange_every: cfg.exchange_every,
+        leader_rotation: cfg.leader_rotation,
+        compute_threads: cfg.compute_threads,
+        auto: cfg.auto,
+        replans: Vec::new(),
         backend: "model",
         platform: format!("{}+{}", platform.name, link.name),
         trace: None,
@@ -148,6 +153,11 @@ pub fn run_modeled_cluster(
         routing: Routing::Broadcast,
         topology: Topology::Flat,
         partition: crate::config::PartitionPolicy::Index,
+        exchange_every: crate::config::ExchangeCadence::Step,
+        leader_rotation: crate::config::LeaderRotation::Fixed,
+        compute_threads: cfg.compute_threads,
+        auto: crate::config::AutoAxes::default(),
+        replans: Vec::new(),
         backend: "model",
         platform: format!("hetero+{}", link.name),
         trace: None,

@@ -2,9 +2,14 @@
 
 use anyhow::Result;
 
-use crate::config::{Mode, PartitionPolicy, Routing, RunConfig, Topology};
+use crate::config::{
+    AutoAxes, ExchangeCadence, LeaderRotation, Mode, PartitionPolicy, Routing, RunConfig,
+    Topology,
+};
 use crate::metrics::comm_volume::CommVolume;
 use crate::profiling::components::Components;
+
+use super::live::ReplanEvent;
 
 /// Energy figures attached to modeled runs.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -55,6 +60,21 @@ pub struct RunResult {
     pub topology: Topology,
     /// Placement policy that mapped neurons onto ranks.
     pub partition: PartitionPolicy,
+    /// Exchange cadence the run used (post-`auto` resolution; live runs
+    /// with an online re-planner start here — see `replans`).
+    pub exchange_every: ExchangeCadence,
+    /// Leader-rotation policy the run started with (the online
+    /// re-planner may swap it at window boundaries — see `replans`).
+    pub leader_rotation: LeaderRotation,
+    /// Intra-rank compute threads (post-`auto` resolution).
+    pub compute_threads: u32,
+    /// Which axes were `auto` on the CLI/TOML — the concrete fields
+    /// above always hold the resolved values, so a run is replayable
+    /// by passing them back explicitly.
+    pub auto: AutoAxes,
+    /// Cadence/rotation switches the online re-planner performed (live
+    /// runs with `auto` cadence or rotation; empty otherwise).
+    pub replans: Vec<ReplanEvent>,
     pub backend: &'static str,
     pub platform: String,
     /// Recorded workload trace (live runs with `record_trace` set).
@@ -126,11 +146,29 @@ impl RunResult {
         } else {
             String::new()
         };
+        let auto = if self.auto.any() {
+            format!(
+                "  auto [{}]: resolved to topology {}, cadence {}, rotation {}, \
+                 {} threads{}\n",
+                self.auto.describe(),
+                self.topology,
+                self.exchange_every,
+                self.leader_rotation,
+                self.compute_threads,
+                if self.replans.is_empty() {
+                    String::new()
+                } else {
+                    format!(", {} online re-plans", self.replans.len())
+                },
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{} run [{}] on {}: {} procs\n\
                wall {:.2} s for {:.1} s simulated (x{:.2} real-time{})\n\
                rate {:.2} Hz | spikes {} | syn events {}\n\
-               comp {:.1}% | comm {:.1}% | barrier {:.1}%\n{}{}",
+               comp {:.1}% | comm {:.1}% | barrier {:.1}%\n{}{}{}",
             match self.mode {
                 Mode::Live => "live",
                 Mode::Modeled => "modeled",
@@ -149,17 +187,21 @@ impl RunResult {
             comm * 100.0,
             bar * 100.0,
             energy,
-            volume
+            volume,
+            auto
         )
     }
 }
 
-/// Run a configuration end to end.
+/// Run a configuration end to end: validate, resolve every `auto` axis
+/// through the analytic planner ([`crate::simnet::autotune::resolve`]),
+/// then dispatch the resolved config.
 pub fn run(cfg: &RunConfig) -> Result<RunResult> {
     cfg.validate()?;
+    let (cfg, _plan) = crate::simnet::autotune::resolve(cfg)?;
     match cfg.mode {
-        Mode::Live => super::live::run_live(cfg),
-        Mode::Modeled => super::modeled::run_modeled(cfg),
+        Mode::Live => super::live::run_live(&cfg),
+        Mode::Modeled => super::modeled::run_modeled(&cfg),
     }
 }
 
@@ -188,6 +230,11 @@ mod tests {
             routing: Routing::Filtered,
             topology: Topology::Flat,
             partition: PartitionPolicy::Index,
+            exchange_every: ExchangeCadence::Step,
+            leader_rotation: LeaderRotation::Fixed,
+            compute_threads: 1,
+            auto: AutoAxes::default(),
+            replans: Vec::new(),
             backend: "native",
             platform: "host".into(),
             trace: None,
@@ -197,5 +244,13 @@ mod tests {
         r.wall_s = 20.0;
         assert!(!r.is_realtime());
         assert!(r.summary().contains("procs"));
+        // no auto axes -> no auto line
+        assert!(!r.summary().contains("auto ["));
+        // flag an axis and the resolved values are reported
+        r.auto.exchange_every = true;
+        r.exchange_every = ExchangeCadence::MinDelay;
+        let s = r.summary();
+        assert!(s.contains("auto [exchange-every]"), "{s}");
+        assert!(s.contains("cadence min-delay"), "{s}");
     }
 }

@@ -3,11 +3,11 @@
 //! ```text
 //! dpsnn run [config.toml] [--neurons N] [--procs P] [--seconds S]
 //!           [--backend native|xla] [--mode live|modeled]
-//!           [--routing filtered|broadcast] [--exchange-every step|min-delay|N]
-//!           [--topology flat|nodes:<k>|tree:<k1>,<k2>,...]
+//!           [--routing filtered|broadcast] [--exchange-every step|min-delay|N|auto]
+//!           [--topology flat|nodes:<k>|tree:<k1>,<k2>,...|auto]
 //!           [--partition index|round-robin|greedy-comms]
-//!           [--leader-rotation fixed|round-robin]
-//!           [--compute-threads N]
+//!           [--leader-rotation fixed|round-robin|auto]
+//!           [--compute-threads N|auto]
 //!           [--platform NAME] [--interconnect NAME] [--seed X] [--progress]
 //! dpsnn repro <fig1..fig8|table1..table4|all> [--fast]
 //! dpsnn bench-smoke [--neurons N] [--procs P] [--seconds S] [--out F]
@@ -53,15 +53,22 @@ RUN OPTIONS:
   --backend B        native | xla (default native)
   --mode M           live | modeled (default live)
   --routing R        filtered | broadcast spike exchange (default filtered)
-  --exchange-every C step | min-delay | N — steps per spike exchange
-                     (default step; N must not exceed delay_min_steps)
-  --topology T       flat | nodes:<k> | tree:<k1>,<k2>,... — transport
-                     topology (default flat); tree:<k1>,<k2>,... groups
-                     k1 ranks per board, k2 boards per chassis, k3
-                     chassis per rack and aggregates boundary-crossing
-                     spikes at per-group leaders (ONE framed message per
-                     sibling-group pair at every tier); nodes:<k> is
-                     sugar for tree:<k>
+  --exchange-every C step | min-delay | N | auto — steps per spike
+                     exchange (default step; N must not exceed
+                     delay_min_steps; auto lets the analytic planner
+                     pick the latency-bandwidth crossover cadence, and
+                     live runs re-plan it online at window boundaries
+                     from measured traffic)
+  --topology T       flat | nodes:<k> | tree:<k1>,<k2>,... | auto —
+                     transport topology (default flat);
+                     tree:<k1>,<k2>,... groups k1 ranks per board, k2
+                     boards per chassis, k3 chassis per rack and
+                     aggregates boundary-crossing spikes at per-group
+                     leaders (ONE framed message per sibling-group pair
+                     at every tier); nodes:<k> is sugar for tree:<k>;
+                     auto prices flat plus every divisor-chain tree
+                     with the platform's closed forms and picks the
+                     argmin
   --partition P      index | round-robin | greedy-comms — the placement
                      policy mapping neuron blocks onto ranks (default
                      index, the historical contiguous split);
@@ -69,15 +76,17 @@ RUN OPTIONS:
                      the topology tree and keeps strongly-coupled
                      blocks on cheap links (the raster is bitwise
                      identical under every policy)
-  --leader-rotation R fixed | round-robin — which rank of each group
-                     pays the aggregation CPU cost per exchange
+  --leader-rotation R fixed | round-robin | auto — which rank of each
+                     group pays the aggregation CPU cost per exchange
                      (default fixed; raster and message counts are
-                     identical either way)
+                     identical either way; auto spreads leaders only
+                     when the measured regime is bandwidth-bound)
   --compute-threads N intra-rank worker threads for the neuron update,
-                     Poisson fill and synaptic delivery (default 1).
-                     The chunk geometry is fixed by N alone, so the
-                     raster is bitwise identical for every N on every
-                     host
+                     Poisson fill and synaptic delivery (default 1;
+                     auto divides the host's parallelism across the P
+                     rank threads). The chunk geometry is fixed by the
+                     resolved count alone, so the raster is bitwise
+                     identical for every N on every host
   --platform NAME    modeled platform preset (default xeon)
   --interconnect IC  ib | eth1g | shm | exanest (default ib)
   --artifacts DIR    AOT artifact directory (default artifacts)
@@ -113,6 +122,13 @@ BENCH-SMOKE OPTIONS:
                      delivery at the paper's 20480N size, 1/2/4
                      compute threads, with elems/sec and the
                      realtime_x margin over the 1 ms step budget
+  --autotune-out F   self-tuning JSON output path (default
+                     BENCH_autotune.json): per-platform modeled sweep
+                     at the paper's 20480N / 32-proc / 16-step point —
+                     the planner's all-auto pick vs the best hand-swept
+                     topology x cadence combination — plus the online
+                     re-planner's injected regime shifts (switch window
+                     and raster identity)
 
 REPRO IDS:
   fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 table1 table2 table3 table4 all
@@ -164,19 +180,37 @@ fn build_config(args: &Args) -> Result<RunConfig> {
     if let Some(r) = args.get("routing") {
         cfg.routing = r.parse()?;
     }
+    // `auto` flags an axis for the planner (resolved in
+    // coordinator::run); any other value is an explicit pick.
     if let Some(x) = args.get("exchange-every") {
-        cfg.exchange_every = x.parse()?;
+        if x.eq_ignore_ascii_case("auto") {
+            cfg.auto.exchange_every = true;
+        } else {
+            cfg.exchange_every = x.parse()?;
+        }
     }
     if let Some(t) = args.get("topology") {
-        cfg.topology = t.parse()?;
+        if t.eq_ignore_ascii_case("auto") {
+            cfg.auto.topology = true;
+        } else {
+            cfg.topology = t.parse()?;
+        }
     }
     if let Some(p) = args.get("partition") {
         cfg.partition = p.parse()?;
     }
     if let Some(r) = args.get("leader-rotation") {
-        cfg.leader_rotation = r.parse()?;
+        if r.eq_ignore_ascii_case("auto") {
+            cfg.auto.leader_rotation = true;
+        } else {
+            cfg.leader_rotation = r.parse()?;
+        }
     }
-    cfg.compute_threads = args.get_or("compute-threads", cfg.compute_threads)?;
+    match args.get("compute-threads") {
+        Some(t) if t.eq_ignore_ascii_case("auto") => cfg.auto.compute_threads = true,
+        Some(t) => cfg.compute_threads = t.parse()?,
+        None => {}
+    }
     if let Some(p) = args.get("platform") {
         cfg.platform = p.to_string();
     }
@@ -289,9 +323,13 @@ fn cmd_replay(args: &Args) -> Result<()> {
 /// per-rank transport bytes/messages (intra/inter split) and the power
 /// model's J/synaptic-event, so successive PRs accumulate a perf
 /// trajectory. Also measures the compute kernels (scalar baseline vs
-/// the SoA path at 1/2/4 threads) into `BENCH_compute.json`.
+/// the SoA path at 1/2/4 threads) into `BENCH_compute.json`, and the
+/// self-tuning runtime into `BENCH_autotune.json`: the planner's
+/// all-auto pick vs a hand-swept topology x cadence grid on every
+/// platform preset, plus the online re-planner's injected regime
+/// shifts.
 fn cmd_bench_smoke(args: &Args) -> Result<()> {
-    use dpsnn::config::{ExchangeCadence, Routing, Topology};
+    use dpsnn::config::{ExchangeCadence, Mode, Routing, Topology};
     use dpsnn::coordinator::RunResult;
     use dpsnn::metrics::expected_exchanges;
 
@@ -739,6 +777,225 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
         .unwrap_or(0.0);
     let nu_speedup = compute.speedup_vs_scalar("neuron_update").unwrap_or(0.0);
 
+    // Self-tuning planner: on every platform preset, resolve the
+    // all-auto config at the paper's 20480N / 32-proc / 16-step
+    // operating point and replay it against the full hand-swept
+    // topology x cadence grid (the planner's own candidate set). The
+    // pick must land within 10% of the swept best on >= 2 presets.
+    let autotune_out = args.get_or("autotune-out", "BENCH_autotune.json".to_string())?;
+    eprintln!("[bench-smoke] autotune planner vs hand-swept modeled grid...");
+    let tune_net = {
+        let mut net = NetworkParams::paper_20480();
+        net.delay_min_steps = 16;
+        net.delay_max_steps = net.delay_max_steps.max(16);
+        net
+    };
+    let base_tune = |name: &str| -> Result<RunConfig> {
+        let p = dpsnn::platform::presets::platform_by_name(name)?;
+        let mut cfg = RunConfig::default();
+        cfg.net = tune_net.clone();
+        cfg.procs = 32;
+        cfg.sim_seconds = 2.0;
+        cfg.mode = Mode::Modeled;
+        cfg.platform = name.to_string();
+        cfg.interconnect = p.default_interconnect.to_string();
+        Ok(cfg)
+    };
+    let mut tune_sections: Vec<String> = Vec::new();
+    let mut within_10 = 0u32;
+    for name in dpsnn::platform::presets::all_names() {
+        let base = base_tune(name)?;
+        let mut auto_cfg = base.clone();
+        auto_cfg.auto.topology = true;
+        auto_cfg.auto.exchange_every = true;
+        auto_cfg.auto.leader_rotation = true;
+        auto_cfg.auto.compute_threads = true;
+        let pick = coordinator::run(&auto_cfg)?;
+        let planner = dpsnn::simnet::Planner::from_config(&base)?;
+        let mut best_wall = f64::INFINITY;
+        let mut best_topo = Topology::Flat;
+        let mut best_every = 1u32;
+        let mut swept = 0u32;
+        for topo in planner.candidates() {
+            for e in planner.cadence_candidates() {
+                let mut c = base.clone();
+                c.topology = topo;
+                c.exchange_every = if e == 1 {
+                    ExchangeCadence::Step
+                } else {
+                    ExchangeCadence::Every(e)
+                };
+                let r = coordinator::run(&c)?;
+                swept += 1;
+                if r.wall_s < best_wall {
+                    best_wall = r.wall_s;
+                    best_topo = topo;
+                    best_every = e;
+                }
+            }
+        }
+        let ratio = pick.wall_s / best_wall;
+        if ratio <= 1.10 {
+            within_10 += 1;
+        }
+        eprintln!(
+            "[bench-smoke]   {name}: pick [{} every {}] {:.3} s vs swept best \
+             [{} every {}] {:.3} s over {} configs (ratio {:.3})",
+            pick.topology,
+            pick.exchange_every,
+            pick.wall_s,
+            best_topo,
+            best_every,
+            best_wall,
+            swept,
+            ratio,
+        );
+        tune_sections.push(format!(
+            concat!(
+                "    \"{}\": {{\n",
+                "      \"picked_topology\": \"{}\",\n",
+                "      \"picked_cadence\": \"{}\",\n",
+                "      \"picked_rotation\": \"{}\",\n",
+                "      \"picked_threads\": {},\n",
+                "      \"pick_wall_s\": {:.6},\n",
+                "      \"swept_best_topology\": \"{}\",\n",
+                "      \"swept_best_every\": {},\n",
+                "      \"swept_best_wall_s\": {:.6},\n",
+                "      \"pick_over_best_ratio\": {:.4},\n",
+                "      \"configs_swept\": {}\n",
+                "    }}"
+            ),
+            name,
+            pick.topology,
+            pick.exchange_every,
+            pick.leader_rotation,
+            pick.compute_threads,
+            pick.wall_s,
+            best_topo,
+            best_every,
+            best_wall,
+            ratio,
+            swept,
+        ));
+    }
+    anyhow::ensure!(
+        within_10 >= 2,
+        "planner pick within 10% of the swept best on only {within_10} platform \
+         presets (need >= 2)"
+    );
+
+    // Online re-planner on a real live run: force each side of the
+    // latency/bandwidth crossover with an injected threshold and
+    // require the cadence switch within 3 windows of the start, with
+    // the baseline raster reproduced bitwise.
+    eprintln!("[bench-smoke] online re-planner: injected regime shifts...");
+    let replan_case = |cadence: ExchangeCadence, crossover: f64| -> Result<RunResult> {
+        let mut cfg = RunConfig::default();
+        cfg.net = NetworkParams::tiny(neurons);
+        cfg.net.delay_min_steps = delay_min.clamp(1, cfg.net.delay_max_steps);
+        cfg.procs = procs;
+        cfg.sim_seconds = seconds;
+        cfg.routing = Routing::Filtered;
+        cfg.exchange_every = cadence;
+        cfg.auto.exchange_every = true;
+        cfg.auto.leader_rotation = true;
+        cfg.validate()?;
+        let rp = dpsnn::coordinator::OnlineReplanner::from_config(&cfg)?
+            .with_crossover_bytes(crossover);
+        dpsnn::coordinator::live::run_live_with(&cfg, Some(std::sync::Arc::new(rp)))
+    };
+    // crossover 0 declares every payload bandwidth-bound (the SWA
+    // side), infinity declares none (the AW side); each run must cross
+    // over from the opposite starting cadence.
+    let shift_to_step = replan_case(ExchangeCadence::MinDelay, 0.0)?;
+    let shift_to_epoch = replan_case(ExchangeCadence::Step, f64::INFINITY)?;
+    for (name, r, want_epoch) in [
+        ("to-per-step", &shift_to_step, 1u32),
+        ("to-min-delay", &shift_to_epoch, epoch),
+    ] {
+        anyhow::ensure!(
+            r.pop_counts == batched.pop_counts,
+            "online re-plan ({name}) changed the raster"
+        );
+        let first = r
+            .replans
+            .first()
+            .ok_or_else(|| anyhow::anyhow!("online re-plan ({name}) never fired"))?;
+        anyhow::ensure!(
+            first.window <= 2 && first.epoch_steps == want_epoch,
+            "online re-plan ({name}) switched to {}-step windows at window {} \
+             (want {want_epoch} within 3 windows)",
+            first.epoch_steps,
+            first.window
+        );
+    }
+
+    // All-auto live run, then an exact replay from the resolved axes
+    // the result records — the replayability contract behind the
+    // `auto` summary line.
+    eprintln!("[bench-smoke] all-auto live run vs resolved-explicit replay...");
+    let mut auto_live = RunConfig::default();
+    auto_live.net = NetworkParams::tiny(neurons);
+    auto_live.net.delay_min_steps = delay_min.clamp(1, auto_live.net.delay_max_steps);
+    auto_live.procs = procs;
+    auto_live.sim_seconds = seconds;
+    auto_live.routing = Routing::Filtered;
+    auto_live.auto.topology = true;
+    auto_live.auto.exchange_every = true;
+    auto_live.auto.leader_rotation = true;
+    auto_live.auto.compute_threads = true;
+    auto_live.validate()?;
+    let auto_run = coordinator::run(&auto_live)?;
+    anyhow::ensure!(
+        auto_run.pop_counts == filtered.pop_counts,
+        "all-auto live run changed the raster"
+    );
+    let mut explicit = auto_live.clone();
+    explicit.auto = dpsnn::config::AutoAxes::default();
+    explicit.topology = auto_run.topology;
+    explicit.exchange_every = auto_run.exchange_every;
+    explicit.leader_rotation = auto_run.leader_rotation;
+    explicit.compute_threads = auto_run.compute_threads;
+    let replayed = coordinator::run(&explicit)?;
+    anyhow::ensure!(
+        replayed.pop_counts == auto_run.pop_counts,
+        "resolved-explicit replay diverged from the all-auto run"
+    );
+
+    let tune_json = format!(
+        concat!(
+            "{{\n",
+            "  \"benchmark\": \"autotune_smoke\",\n",
+            "  \"neurons\": {},\n",
+            "  \"procs\": {},\n",
+            "  \"delay_min_steps\": {},\n",
+            "  \"sim_seconds\": {},\n",
+            "  \"presets_within_10pct\": {},\n",
+            "  \"platforms\": {{\n{}\n  }},\n",
+            "  \"online\": {{\n",
+            "    \"switch_window_to_per_step\": {},\n",
+            "    \"switch_window_to_min_delay\": {},\n",
+            "    \"all_auto_topology\": \"{}\",\n",
+            "    \"all_auto_cadence\": \"{}\",\n",
+            "    \"all_auto_threads\": {},\n",
+            "    \"raster_identical\": true\n",
+            "  }}\n",
+            "}}\n"
+        ),
+        tune_net.n_neurons,
+        32,
+        tune_net.delay_min_steps,
+        2.0,
+        within_10,
+        tune_sections.join(",\n"),
+        shift_to_step.replans[0].window,
+        shift_to_epoch.replans[0].window,
+        auto_run.topology,
+        auto_run.exchange_every,
+        auto_run.compute_threads,
+    );
+    std::fs::write(&autotune_out, &tune_json)?;
+
     println!("{}", filtered.summary());
     println!(
         "bench-smoke: recv bytes/run {recv_f} (filtered) vs {recv_b} (broadcast), \
@@ -746,10 +1003,13 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
          {exchange_reduction:.1}x fewer; inter-node msgs/run {inter_flat} (flat) \
          vs {inter_hier} ({topology}); off-board payload {off_index} B (index) \
          vs {off_greedy} B ({challenger}), -{:.2}%; neuron_update {nu_rt:.0}x \
-         real time (SoA {nu_speedup:.2}x scalar); wrote {out} + {topo_out} + \
-         {part_out} + {compute_out}",
+         real time (SoA {nu_speedup:.2}x scalar); planner within 10% of swept \
+         best on {within_10}/6 presets, online switch at windows {}/{}; wrote \
+         {out} + {topo_out} + {part_out} + {compute_out} + {autotune_out}",
         reduction * 100.0,
-        delta_frac * 100.0
+        delta_frac * 100.0,
+        shift_to_step.replans[0].window,
+        shift_to_epoch.replans[0].window,
     );
     Ok(())
 }

@@ -1,0 +1,735 @@
+//! The self-tuning planner: `auto` resolution for the exchange axes.
+//!
+//! Every exchange axis the previous PRs built — transport topology,
+//! exchange cadence, leader rotation, intra-rank compute threads — had
+//! to be hand-swept per platform, so the fastest configuration was
+//! never the default one. This module makes `auto` a first-class value:
+//! at run start it enumerates the candidate space and prices each
+//! candidate with the *same closed forms the modeled replay uses*
+//! ([`AllToAllModel::exchange_time_tree`],
+//! [`AllToAllModel::exchange_time_filtered`],
+//! [`AllToAllModel::exchange_time`], epoch framing, barrier time, and
+//! the contention/working-set computation factors from
+//! [`crate::timing::replay`]), then picks the argmin. Because the
+//! pricing mirrors [`ModelRun::replay`](crate::timing::replay::ModelRun)
+//! term by term (steady-state expectation instead of a stochastic
+//! trace), the planner's pick coincides with the best hand-swept
+//! modeled configuration up to Poisson noise — pinned by this module's
+//! tests against a brute-force priced sweep on all six platform
+//! presets, and by bench-smoke against full modeled sweeps.
+//!
+//! ## Candidate space
+//!
+//! * **Topology** — `flat` plus every divisor chain of P as a
+//!   `tree:` shape: the first factor k1 (ranks per board) ranges over
+//!   the divisors of P up to the platform's
+//!   [`ranks_per_node`](crate::platform::presets::PlatformModel::ranks_per_node)
+//!   (a board cannot hold more ranks than the node has cores), and each
+//!   further tier splits the remaining group count by another divisor
+//!   >= 2, down to [`MAX_TREE_LEVELS`]. Redundant single-group tails
+//!   are not enumerated.
+//! * **Cadence** — the divisors of `delay_min_steps` (any of them keeps
+//!   the raster bitwise identical; non-divisors are legal but never
+//!   cheaper than the neighbouring divisor under the pricing below).
+//! * **Rotation** — `fixed` or `round-robin`; per-exchange wall time is
+//!   rotation-invariant in the model (barrier-separated phases), so
+//!   rotation is chosen by a load rule, not by the argmin.
+//!
+//! ## Why cadence is a crossover rule, not a raw argmin
+//!
+//! Under the link model the per-step cost of an epoch of length `e`,
+//! `(α + cpu)/e + b/β + framing/β`, is monotonically non-increasing in
+//! `e` — a raw argmin would always answer "min-delay" and could never
+//! re-plan when the regime shifts. The principled stopping rule is the
+//! latency–bandwidth **crossover**: batching pays while the epoch
+//! message is latency-dominated; once its payload passes
+//! `CROSSOVER_FACTOR x (α + cpu + fabric) x β` of the slowest tier the
+//! collective crosses, the remaining α amortization is bounded by
+//! `1/CROSSOVER_FACTOR` of the serialization cost (so the pick stays
+//! within ~6% of the unconstrained minimum at the default factor of
+//! 16) while each extra step only grows burst memory and end-of-window
+//! skew. Concretely: the paper's AW regime (~3.2 Hz, tiny payloads)
+//! resolves to `min-delay`; SWA-class bursts (bandwidth-bound) shorten
+//! the epoch toward per-step — exactly the regime switch the online
+//! re-planner in [`crate::coordinator::live`] performs at window
+//! boundaries from *measured* payload.
+//!
+//! ## Rotation rule
+//!
+//! Leader rotation spreads the per-exchange aggregation CPU over the
+//! group members at zero modeled latency cost. It matters when the
+//! leader lap is heavy — the bandwidth-bound regime — and is pure
+//! overhead churn when exchanges are latency-bound (a fixed leader
+//! keeps its gather buffers warm). So: `round-robin` iff the topology
+//! is hierarchical and the expected min-delay window payload passes the
+//! same crossover, else `fixed`.
+
+use anyhow::{Context, Result};
+
+use crate::comm::aer::{epoch_framing_bytes, SPIKE_WIRE_BYTES};
+use crate::config::{
+    AutoAxes, ExchangeCadence, LeaderRotation, RunConfig, Topology, TreeShape, MAX_TREE_LEVELS,
+};
+use crate::metrics::comm_volume::mean_pair_coverage;
+use crate::platform::presets::{platform_by_name, PlatformModel};
+use crate::simnet::alltoall_model::AllToAllModel;
+use crate::simnet::link::LinkModel;
+use crate::simnet::presets::interconnect_by_name;
+use crate::timing::replay::{contention_factor, working_set_factor, SPIKE_OVERHEAD_S};
+use crate::trace::analytic::AnalyticWorkload;
+
+/// Batch until the epoch payload is this many times the
+/// latency–bandwidth product of the slowest link the collective
+/// crosses. Past that point the residual per-message latency is
+/// `<= 1/CROSSOVER_FACTOR` of the serialization cost, so stopping
+/// keeps the pick within ~6% of the unconstrained cadence minimum.
+pub const CROSSOVER_FACTOR: f64 = 16.0;
+
+/// Expected comm + barrier + computation cost per network step of one
+/// candidate configuration, in seconds (steady-state expectation).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PricedCost {
+    /// Slowest-rank computation (contention depends on the candidate's
+    /// claimed node packing, so this is *not* constant across shapes).
+    pub comp_s: f64,
+    /// Collective exchange, amortized over the epoch.
+    pub comm_s: f64,
+    /// Barrier: dissemination + skew terms, amortized like the replay.
+    pub barrier_s: f64,
+}
+
+impl PricedCost {
+    pub fn total(&self) -> f64 {
+        self.comp_s + self.comm_s + self.barrier_s
+    }
+}
+
+/// Axes the caller has already fixed (explicit CLI/TOML values); `None`
+/// means "planner's choice". Cadence is fixed as an epoch length in
+/// steps.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlanAxes {
+    pub topology: Option<Topology>,
+    pub cadence_steps: Option<u32>,
+    pub rotation: Option<LeaderRotation>,
+}
+
+/// The planner's pick plus its predicted cost.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub topology: Topology,
+    pub cadence: ExchangeCadence,
+    pub rotation: LeaderRotation,
+    /// Predicted per-step cost of the pick.
+    pub cost: PricedCost,
+    /// Topology candidates priced (1 when the topology was fixed).
+    pub candidates: usize,
+}
+
+/// Analytic planner for the exchange axes of one run.
+#[derive(Debug, Clone)]
+pub struct Planner {
+    platform: PlatformModel,
+    link: LinkModel,
+    net: crate::config::NetworkParams,
+    procs: u32,
+    /// Steady-state mean firing rate the payload expectation uses (Hz).
+    rate_hz: f64,
+    /// Expected payload bytes per ordered rank pair per step, before
+    /// any coverage thinning (mirrors the replay's
+    /// `mean_rank_spikes x SPIKE_WIRE_BYTES` accrual).
+    bytes_per_pair_step: f64,
+    /// Filtered-routing pair coverage (None = broadcast pricing).
+    coverage: Option<f64>,
+}
+
+impl Planner {
+    /// Build the planner from a run config: platform + interconnect
+    /// presets, and the expected payload from the stateless connectome
+    /// (steady-state rate of the paper regime; the settling transient
+    /// is ignored, as the replay's long-run behaviour is).
+    pub fn from_config(cfg: &RunConfig) -> Result<Self> {
+        let platform = platform_by_name(&cfg.platform).context("autotune planner platform")?;
+        let link =
+            interconnect_by_name(&cfg.interconnect).context("autotune planner interconnect")?;
+        let rate_hz = AnalyticWorkload::paper_regime(cfg.net.clone(), cfg.seed).rate_hz;
+        let spikes_per_rank_step =
+            cfg.net.n_neurons as f64 / cfg.procs.max(1) as f64 * rate_hz * cfg.net.dt_ms * 1e-3;
+        let coverage = (cfg.routing == crate::config::Routing::Filtered).then(|| {
+            mean_pair_coverage(cfg.net.n_neurons, cfg.net.syn_per_neuron, cfg.procs)
+        });
+        Ok(Self {
+            platform,
+            link,
+            net: cfg.net.clone(),
+            procs: cfg.procs,
+            rate_hz,
+            bytes_per_pair_step: spikes_per_rank_step * SPIKE_WIRE_BYTES as f64,
+            coverage,
+        })
+    }
+
+    /// Expected payload bytes per ordered rank pair per step.
+    pub fn bytes_per_pair_step(&self) -> f64 {
+        self.bytes_per_pair_step
+    }
+
+    /// Topology candidates: flat plus every divisor-chain tree of P
+    /// whose board size fits the platform's cores per node.
+    pub fn candidates(&self) -> Vec<Topology> {
+        let p = self.procs;
+        let mut out = vec![Topology::Flat];
+        let k1_max = self.platform.ranks_per_node().min(p);
+        for k1 in divisors(p) {
+            if k1 < 2 || k1 > k1_max {
+                continue;
+            }
+            let mut chain = vec![k1];
+            push_chains(&mut out, &mut chain, p / k1);
+        }
+        out
+    }
+
+    /// Causally-safe cadence candidates: the divisors of the network's
+    /// minimum delay, ascending.
+    pub fn cadence_candidates(&self) -> Vec<u32> {
+        divisors(self.net.delay_min_steps.max(1))
+    }
+
+    /// The latency–bandwidth crossover payload (bytes) of the slowest
+    /// tier this topology's collective crosses, scaled by
+    /// [`CROSSOVER_FACTOR`].
+    pub fn crossover_bytes(&self, topology: &Topology) -> f64 {
+        let link = match topology.tree() {
+            Some(shape) => *self
+                .platform
+                .tree_links(self.link, shape.depth())
+                .last()
+                .unwrap_or(&self.link),
+            None => self.link,
+        };
+        CROSSOVER_FACTOR
+            * (link.alpha_s + link.cpu_overhead_s + link.fabric_msg_cost_s)
+            * link.beta_bps
+    }
+
+    /// Is this per-pair-per-step payload bandwidth-bound for the given
+    /// topology — i.e. does even a full min-delay window pass the
+    /// crossover? (The SWA-vs-AW regime predicate: SWA bursts answer
+    /// true, the quiet AW regime false.)
+    pub fn bandwidth_bound(&self, topology: &Topology, bytes_per_pair_step: f64) -> bool {
+        let dmin = self.net.delay_min_steps.max(1);
+        bytes_per_pair_step * dmin as f64 >= self.crossover_bytes(topology)
+    }
+
+    /// Epoch length (steps) for the given expected payload: the
+    /// smallest min-delay divisor whose epoch payload passes the
+    /// crossover, or the full min-delay window while latency-bound.
+    pub fn cadence_steps_for(&self, topology: &Topology, bytes_per_pair_step: f64) -> u32 {
+        let dmin = self.net.delay_min_steps.max(1);
+        for e in self.cadence_candidates() {
+            if bytes_per_pair_step * e as f64 >= self.crossover_bytes(topology) {
+                return e;
+            }
+        }
+        dmin
+    }
+
+    /// [`Self::cadence_steps_for`] expressed as the config enum (the
+    /// form a replay of the resolved run passes back on the CLI).
+    pub fn cadence_for(&self, topology: &Topology, bytes_per_pair_step: f64) -> ExchangeCadence {
+        cadence_enum(
+            self.cadence_steps_for(topology, bytes_per_pair_step),
+            self.net.delay_min_steps.max(1),
+        )
+    }
+
+    /// Rotation rule: spread the leader aggregation CPU when the regime
+    /// is bandwidth-bound and the topology actually has leaders.
+    pub fn rotation_for(&self, topology: &Topology, bytes_per_pair_step: f64) -> LeaderRotation {
+        match topology.tree() {
+            Some(shape)
+                if shape.ranks_per_board() >= 2
+                    && self.bandwidth_bound(topology, bytes_per_pair_step) =>
+            {
+                LeaderRotation::RoundRobin
+            }
+            _ => LeaderRotation::Fixed,
+        }
+    }
+
+    /// Price one candidate at the planner's expected payload.
+    pub fn price(&self, topology: &Topology, epoch_steps: u32) -> PricedCost {
+        self.price_with(topology, epoch_steps, self.bytes_per_pair_step)
+    }
+
+    /// Price one candidate at an explicit per-pair-per-step payload
+    /// (the online re-planner prices *measured* windows through this).
+    ///
+    /// Mirrors one steady-state step of
+    /// [`ModelRun::replay`](crate::timing::replay::ModelRun::replay):
+    /// same exchange closed forms, same epoch framing, same barrier
+    /// dissemination + skew terms, same contention/working-set
+    /// computation factors — so an argmin over candidates here agrees
+    /// with an argmin over full modeled sweeps.
+    pub fn price_with(
+        &self,
+        topology: &Topology,
+        epoch_steps: u32,
+        bytes_per_pair_step: f64,
+    ) -> PricedCost {
+        let p = self.procs;
+        let e = epoch_steps.max(1);
+        let exch = self.exchange_s(topology, e, bytes_per_pair_step);
+        let (model, ranks_per_node) = self.model_for(topology);
+        let comp = self.comp_per_step(ranks_per_node);
+        PricedCost {
+            comp_s: comp,
+            comm_s: exch / e as f64,
+            barrier_s: 0.01 * comp + (model.barrier_time(p) + 0.05 * exch) / e as f64,
+        }
+    }
+
+    /// Predicted seconds of ONE collective exchange for a candidate at
+    /// the given payload — what the online re-planner compares its
+    /// measured per-window exchange lap against.
+    pub fn predict_exchange_s(
+        &self,
+        topology: &Topology,
+        epoch_steps: u32,
+        bytes_per_pair_step: f64,
+    ) -> f64 {
+        self.exchange_s(topology, epoch_steps.max(1), bytes_per_pair_step)
+    }
+
+    /// Pick the best configuration, honoring any axes the caller fixed.
+    /// Deterministic: candidates are enumerated in a stable order and
+    /// only a strictly cheaper candidate displaces the incumbent, so
+    /// ties resolve to the earliest (flat, then shallower trees).
+    pub fn plan(&self, fixed: PlanAxes) -> Plan {
+        let cands = match fixed.topology {
+            Some(t) => vec![t],
+            None => self.candidates(),
+        };
+        let b = self.bytes_per_pair_step;
+        let mut best: Option<(Topology, u32, PricedCost)> = None;
+        for t in &cands {
+            let e = fixed
+                .cadence_steps
+                .unwrap_or_else(|| self.cadence_steps_for(t, b));
+            let cost = self.price(t, e);
+            if best
+                .as_ref()
+                .is_none_or(|(_, _, c)| cost.total() < c.total())
+            {
+                best = Some((*t, e, cost));
+            }
+        }
+        let (topology, e, cost) = best.expect("candidate set is never empty");
+        Plan {
+            topology,
+            cadence: cadence_enum(e, self.net.delay_min_steps.max(1)),
+            rotation: fixed
+                .rotation
+                .unwrap_or_else(|| self.rotation_for(&topology, b)),
+            cost,
+            candidates: cands.len(),
+        }
+    }
+
+    /// One collective's priced seconds (shared by price/predict).
+    fn exchange_s(&self, topology: &Topology, e: u32, bytes_per_pair_step: f64) -> f64 {
+        let p = self.procs;
+        let bytes =
+            (bytes_per_pair_step * e as f64).round() as u64 + epoch_framing_bytes(e, e);
+        let (model, _) = self.model_for(topology);
+        match topology.tree() {
+            // Filtering thins the aggregated payload; the per-level
+            // pair message counts are unchanged (replay's contract).
+            Some(shape) => {
+                let thinned = (bytes as f64 * self.coverage.unwrap_or(1.0)).round() as u64;
+                let links = self.platform.tree_links(self.link, shape.depth());
+                model
+                    .exchange_time_tree(p, thinned, shape.levels(), &links)
+                    .total()
+            }
+            None => match self.coverage {
+                Some(q) => model.exchange_time_filtered(p, bytes, q).total(),
+                None => model.exchange_time(p, bytes).total(),
+            },
+        }
+    }
+
+    /// The comm model + node packing a candidate topology declares
+    /// (exactly what `coordinator::modeled` builds for it).
+    fn model_for(&self, topology: &Topology) -> (AllToAllModel, u32) {
+        match topology.ranks_per_node() {
+            Some(k1) => (AllToAllModel::new(self.link, k1), k1),
+            None => (
+                self.platform.comm_model(self.link),
+                self.platform.ranks_per_node(),
+            ),
+        }
+    }
+
+    /// Slowest-rank computation per step under the candidate's claimed
+    /// node packing (the contention term is the only packing-dependent
+    /// part; mirrors the replay's homogeneous-cluster step).
+    fn comp_per_step(&self, ranks_per_node: u32) -> f64 {
+        let p = self.procs.max(1);
+        let n = self.net.n_neurons as f64;
+        let share = 1.0 / p as f64;
+        let cont = contention_factor(p, ranks_per_node);
+        let ws = working_set_factor(n * share);
+        let spikes_net = n * self.rate_hz * self.net.dt_ms * 1e-3;
+        let syn_step = spikes_net * self.net.syn_per_neuron as f64;
+        let ext_step = n * self.net.ext_lambda_per_step();
+        let core = self.platform.node.core;
+        core.comp_time(
+            n * share,
+            syn_step * share * ws * cont,
+            ext_step * share * cont,
+        ) + spikes_net * self.coverage.unwrap_or(1.0) * SPIKE_OVERHEAD_S
+            / core.speed_vs_westmere()
+    }
+}
+
+/// Resolve every `auto` axis of a config into concrete values.
+///
+/// Returns the resolved config (the [`AutoAxes`] flags are kept as
+/// metadata recording *which* values were planner picks) and the plan
+/// when any planner-driven axis was flagged. A config with no `auto`
+/// axes passes through untouched.
+pub fn resolve(cfg: &RunConfig) -> Result<(RunConfig, Option<Plan>)> {
+    if !cfg.auto.any() {
+        return Ok((cfg.clone(), None));
+    }
+    let mut out = cfg.clone();
+    if cfg.auto.compute_threads {
+        out.compute_threads = auto_compute_threads(cfg.procs);
+    }
+    let plan = if cfg.auto.any_planned() {
+        let planner = Planner::from_config(cfg)?;
+        let dmin = cfg.net.delay_min_steps.max(1);
+        let plan = planner.plan(PlanAxes {
+            topology: (!cfg.auto.topology).then_some(cfg.topology),
+            cadence_steps: (!cfg.auto.exchange_every)
+                .then(|| cfg.exchange_every.epoch_steps(dmin)),
+            rotation: (!cfg.auto.leader_rotation).then_some(cfg.leader_rotation),
+        });
+        if cfg.auto.topology {
+            out.topology = plan.topology;
+        }
+        if cfg.auto.exchange_every {
+            out.exchange_every = plan.cadence;
+        }
+        if cfg.auto.leader_rotation {
+            out.leader_rotation = plan.rotation;
+        }
+        Some(plan)
+    } else {
+        None
+    };
+    out.validate().context("auto-resolved config")?;
+    Ok((out, plan))
+}
+
+/// `--compute-threads auto`: the host's available parallelism divided
+/// across the run's rank threads (each rank owns one compute pool, so
+/// P ranks x this many workers together fill the host without
+/// oversubscribing), clamped to the validated 1..=256 range.
+pub fn auto_compute_threads(procs: u32) -> u32 {
+    let avail = std::thread::available_parallelism()
+        .map(|n| n.get() as u32)
+        .unwrap_or(1);
+    (avail / procs.max(1)).clamp(1, 256)
+}
+
+/// Map an epoch length back to the cadence enum: the boundary values
+/// get their symbolic names so resolved summaries read like the CLI.
+fn cadence_enum(e: u32, dmin: u32) -> ExchangeCadence {
+    if e <= 1 {
+        ExchangeCadence::Step
+    } else if e == dmin {
+        ExchangeCadence::MinDelay
+    } else {
+        ExchangeCadence::Every(e)
+    }
+}
+
+/// Divisors of `n`, ascending (1 and `n` included).
+fn divisors(n: u32) -> Vec<u32> {
+    let n = n.max(1);
+    (1..=n).filter(|d| n % d == 0).collect()
+}
+
+/// DFS over the remaining group count: emit the current chain, then
+/// split further by every divisor that leaves >= 2 groups.
+fn push_chains(out: &mut Vec<Topology>, chain: &mut Vec<u32>, groups: u32) {
+    out.push(Topology::Tree(
+        TreeShape::new(chain).expect("chain factors are validated divisors"),
+    ));
+    if chain.len() >= MAX_TREE_LEVELS {
+        return;
+    }
+    for k in divisors(groups) {
+        if k >= 2 && k < groups {
+            chain.push(k);
+            push_chains(out, chain, groups / k);
+            chain.pop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Mode, NetworkParams};
+    use crate::platform::presets::all_names;
+
+    /// 20480N on 32 ranks with a 16-step min-delay window — the
+    /// bench-smoke autotune operating point.
+    fn paper_cfg(platform: &str) -> RunConfig {
+        let mut cfg = RunConfig::default();
+        cfg.net = NetworkParams::paper_20480();
+        cfg.net.delay_min_steps = 16;
+        cfg.net.delay_max_steps = cfg.net.delay_max_steps.max(16);
+        cfg.procs = 32;
+        cfg.mode = Mode::Modeled;
+        cfg.platform = platform.to_string();
+        cfg.interconnect = platform_by_name(platform)
+            .unwrap()
+            .default_interconnect
+            .to_string();
+        cfg
+    }
+
+    #[test]
+    fn candidates_are_flat_plus_divisor_chains() {
+        let mut cfg = paper_cfg("xeon");
+        cfg.procs = 8;
+        let planner = Planner::from_config(&cfg).unwrap();
+        let shapes: Vec<String> = planner.candidates().iter().map(|t| t.to_string()).collect();
+        assert_eq!(shapes, ["flat", "tree:2", "tree:2,2", "tree:4", "tree:8"]);
+        // board size capped by the platform's cores per node (trenz: 4)
+        let mut cfg = paper_cfg("trenz");
+        cfg.procs = 8;
+        let planner = Planner::from_config(&cfg).unwrap();
+        let shapes: Vec<String> = planner.candidates().iter().map(|t| t.to_string()).collect();
+        assert_eq!(shapes, ["flat", "tree:2", "tree:2,2", "tree:4"]);
+        // P=1 has no tree candidates at all
+        let mut cfg = paper_cfg("xeon");
+        cfg.procs = 1;
+        let planner = Planner::from_config(&cfg).unwrap();
+        assert_eq!(planner.candidates(), vec![Topology::Flat]);
+    }
+
+    #[test]
+    fn cadence_crossover_rule_tracks_the_regime() {
+        let cfg = paper_cfg("xeon");
+        let planner = Planner::from_config(&cfg).unwrap();
+        let flat = Topology::Flat;
+        // AW-class payloads (a few spikes per pair-window) stay far
+        // under the crossover: batch the whole min-delay window.
+        let aw = planner.bytes_per_pair_step();
+        assert!(aw < 1e3, "AW payload should be tiny, got {aw}");
+        assert!(!planner.bandwidth_bound(&flat, aw));
+        assert_eq!(planner.cadence_steps_for(&flat, aw), 16);
+        assert_eq!(planner.cadence_for(&flat, aw), ExchangeCadence::MinDelay);
+        // SWA-class bursts pass the crossover in a single step:
+        // exchange every step.
+        let swa = planner.crossover_bytes(&flat) * 2.0;
+        assert!(planner.bandwidth_bound(&flat, swa));
+        assert_eq!(planner.cadence_steps_for(&flat, swa), 1);
+        assert_eq!(planner.cadence_for(&flat, swa), ExchangeCadence::Step);
+        // intermediate payloads land on an intermediate divisor
+        let mid = planner.crossover_bytes(&flat) / 4.0;
+        assert_eq!(planner.cadence_steps_for(&flat, mid), 4);
+        assert_eq!(planner.cadence_for(&flat, mid), ExchangeCadence::Every(4));
+    }
+
+    #[test]
+    fn rotation_rule_spreads_leaders_only_when_bandwidth_bound() {
+        let cfg = paper_cfg("xeon");
+        let planner = Planner::from_config(&cfg).unwrap();
+        let tree: Topology = "tree:4,2".parse().unwrap();
+        let aw = planner.bytes_per_pair_step();
+        let swa = planner.crossover_bytes(&tree) * 2.0;
+        assert_eq!(planner.rotation_for(&tree, aw), LeaderRotation::Fixed);
+        assert_eq!(planner.rotation_for(&tree, swa), LeaderRotation::RoundRobin);
+        // flat has no leaders to rotate, whatever the regime
+        assert_eq!(
+            planner.rotation_for(&Topology::Flat, swa),
+            LeaderRotation::Fixed
+        );
+    }
+
+    #[test]
+    fn argmin_matches_brute_force_on_all_presets() {
+        for name in all_names() {
+            let cfg = paper_cfg(name);
+            let planner = Planner::from_config(&cfg).unwrap();
+            let plan = planner.plan(PlanAxes::default());
+            // Brute force: every candidate topology x every causally
+            // safe cadence (all values, not just the divisors the
+            // planner considers).
+            let mut brute = f64::INFINITY;
+            for t in planner.candidates() {
+                for e in 1..=cfg.net.delay_min_steps {
+                    brute = brute.min(planner.price(&t, e).total());
+                }
+            }
+            let pick = plan.cost.total();
+            assert!(
+                pick <= 1.10 * brute,
+                "{name}: planner pick {pick:.3e} vs brute-force best \
+                 {brute:.3e} ({:.1}% off)",
+                100.0 * (pick / brute - 1.0)
+            );
+            // With the cadence fixed the planner is a pure argmin over
+            // topologies: its pick's cost must equal the brute-force
+            // minimum exactly (identical pricing code on both sides).
+            let fixed = planner.plan(PlanAxes {
+                cadence_steps: Some(1),
+                ..Default::default()
+            });
+            let brute_topo_cost = planner
+                .candidates()
+                .iter()
+                .map(|t| planner.price(t, 1).total())
+                .fold(f64::INFINITY, f64::min);
+            assert_eq!(
+                fixed.cost.total(),
+                brute_topo_cost,
+                "{name}: fixed-cadence argmin diverged from brute force"
+            );
+        }
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_honors_fixed_axes() {
+        let cfg = paper_cfg("xeon");
+        let planner = Planner::from_config(&cfg).unwrap();
+        let a = planner.plan(PlanAxes::default());
+        let b = planner.plan(PlanAxes::default());
+        assert_eq!(a.topology, b.topology);
+        assert_eq!(a.cadence, b.cadence);
+        assert_eq!(a.rotation, b.rotation);
+        assert!(a.candidates > 1);
+        // fixed axes pass through verbatim
+        let fixed = planner.plan(PlanAxes {
+            topology: Some(Topology::Flat),
+            cadence_steps: Some(2),
+            rotation: Some(LeaderRotation::RoundRobin),
+        });
+        assert_eq!(fixed.topology, Topology::Flat);
+        assert_eq!(fixed.cadence, ExchangeCadence::Every(2));
+        assert_eq!(fixed.rotation, LeaderRotation::RoundRobin);
+        assert_eq!(fixed.candidates, 1);
+    }
+
+    #[test]
+    fn resolve_replaces_only_flagged_axes() {
+        let mut cfg = paper_cfg("xeon");
+        cfg.auto.topology = true;
+        cfg.auto.exchange_every = true;
+        cfg.auto.leader_rotation = true;
+        cfg.auto.compute_threads = true;
+        let (resolved, plan) = resolve(&cfg).unwrap();
+        let plan = plan.expect("planned axes were flagged");
+        assert_eq!(resolved.topology, plan.topology);
+        assert_eq!(resolved.exchange_every, plan.cadence);
+        assert_eq!(resolved.leader_rotation, plan.rotation);
+        assert!((1..=256).contains(&resolved.compute_threads));
+        assert!(resolved.auto.any(), "flags survive as metadata");
+        resolved.validate().unwrap();
+        // AW payloads are latency-bound: the planner must batch
+        assert_eq!(resolved.exchange_every, ExchangeCadence::MinDelay);
+        // a config without auto axes passes through untouched
+        let cfg = paper_cfg("xeon");
+        let (same, plan) = resolve(&cfg).unwrap();
+        assert!(plan.is_none());
+        assert_eq!(same.topology, cfg.topology);
+        assert_eq!(same.exchange_every, cfg.exchange_every);
+        assert_eq!(same.compute_threads, cfg.compute_threads);
+        // partial: only compute-threads flagged -> no plan needed
+        let mut cfg = paper_cfg("xeon");
+        cfg.auto.compute_threads = true;
+        let (resolved, plan) = resolve(&cfg).unwrap();
+        assert!(plan.is_none());
+        assert!((1..=256).contains(&resolved.compute_threads));
+    }
+
+    #[test]
+    fn auto_compute_threads_stays_in_range() {
+        for procs in [1, 2, 8, 1024] {
+            let t = auto_compute_threads(procs);
+            assert!((1..=256).contains(&t), "procs={procs} -> {t}");
+        }
+        // dividing the host across many ranks floors at one worker
+        assert_eq!(auto_compute_threads(u32::MAX), 1);
+    }
+
+    #[test]
+    fn pricing_mirrors_the_modeled_replay() {
+        // The planner's steady-state per-step price must match a real
+        // replay of a constant-rate trace through ModelRun within the
+        // Poisson noise — this is the contract that makes the argmin
+        // transfer to full modeled sweeps.
+        use crate::platform::hetero::HeteroCluster;
+        use crate::timing::replay::ModelRun;
+        use crate::trace::analytic::AnalyticWorkload;
+
+        let cfg = paper_cfg("xeon");
+        let planner = Planner::from_config(&cfg).unwrap();
+        let platform = platform_by_name("xeon").unwrap();
+        let link = interconnect_by_name("ib").unwrap();
+        let w = AnalyticWorkload::paper_regime(cfg.net.clone(), cfg.seed);
+        let trace = w.generate(cfg.procs, 10.0);
+        let steps = trace.steps() as f64;
+
+        for (topo, e) in [
+            (Topology::Flat, 1u32),
+            (Topology::Flat, 16),
+            ("tree:8,2".parse().unwrap(), 16),
+        ] {
+            let run = match topo.tree() {
+                None => ModelRun::new(
+                    HeteroCluster::homogeneous(
+                        platform.node.core,
+                        cfg.procs,
+                        platform.ranks_per_node(),
+                    ),
+                    platform.comm_model(link),
+                ),
+                Some(shape) => ModelRun::new(
+                    HeteroCluster::homogeneous(
+                        platform.node.core,
+                        cfg.procs,
+                        shape.ranks_per_board(),
+                    ),
+                    AllToAllModel::new(link, shape.ranks_per_board()),
+                )
+                .with_tree(
+                    shape.levels().to_vec(),
+                    platform.tree_links(link, shape.depth()),
+                ),
+            }
+            .with_exchange_every(e)
+            .with_filter_coverage(mean_pair_coverage(
+                cfg.net.n_neurons,
+                cfg.net.syn_per_neuron,
+                cfg.procs,
+            ));
+            let outcome = run.replay(&trace);
+            let priced = planner.price(&topo, e);
+            let ratio = priced.total() / (outcome.wall_s / steps);
+            assert!(
+                (0.9..1.1).contains(&ratio),
+                "{topo} e={e}: planner {:.3e}/step vs replay {:.3e}/step",
+                priced.total(),
+                outcome.wall_s / steps
+            );
+        }
+    }
+}

@@ -12,8 +12,10 @@
 
 pub mod link;
 pub mod alltoall_model;
+pub mod autotune;
 pub mod presets;
 
 pub use alltoall_model::AllToAllModel;
+pub use autotune::{Plan, PlanAxes, Planner};
 pub use link::LinkModel;
 pub use presets::interconnect_by_name;

@@ -33,10 +33,32 @@ use crate::simnet::link::LinkModel;
 use crate::trace::workload::WorkloadTrace;
 
 /// Per-spike fixed overhead (decode + row lookup) at Westmere speed, s.
-const SPIKE_OVERHEAD_S: f64 = 3.0e-6;
+pub const SPIKE_OVERHEAD_S: f64 = 3.0e-6;
 /// Cache level the per-rank target accumulator must fit in for the
 /// calibrated synaptic-event rate to hold (bytes, ~L2).
 const TARGET_CACHE_BYTES: f64 = 131_072.0;
+
+/// Memory-contention multiplier for `p` ranks packed `ranks_per_node`
+/// to a node. Calibrated on Table II, where 16 cores on one node run
+/// *slower* than 8 (25.3 s -> 26.1 s): quadratic beyond the 4 cores a
+/// socket's memory channels feed comfortably. Shared with the autotune
+/// planner ([`crate::simnet::autotune`]), whose pricing must mirror
+/// [`ModelRun::replay`] exactly for its argmin to match modeled sweeps.
+pub fn contention_factor(p: u32, ranks_per_node: u32) -> f64 {
+    let k = p.min(ranks_per_node);
+    1.0 + 0.012 * (k.saturating_sub(4) as f64).powi(2)
+}
+
+/// Working-set multiplier: the synaptic-delivery loop random-writes a
+/// per-rank target accumulator of 4*N_r bytes; once it spills the L2
+/// every event is a cache miss. Calibrated on Table I's 4-process
+/// column (event cost grows ~2.2x from 20480N to 320KN and again to
+/// 1280KN). Shared with the autotune planner like
+/// [`contention_factor`].
+pub fn working_set_factor(n_local: f64) -> f64 {
+    let bytes = n_local * 4.0;
+    1.0 + 0.9 * (bytes / TARGET_CACHE_BYTES).max(1.0).log2()
+}
 
 /// A modeled execution: cluster (possibly heterogeneous) + interconnect.
 #[derive(Debug, Clone)]
@@ -165,23 +187,16 @@ impl ModelRun {
         self
     }
 
-    /// Memory-contention multiplier for `k` ranks sharing a node.
-    /// Calibrated on Table II, where 16 cores on one node run *slower*
-    /// than 8 (25.3 s -> 26.1 s): quadratic beyond the 4 cores a socket's
-    /// memory channels feed comfortably.
+    /// Memory-contention multiplier for this run's node packing (see
+    /// [`contention_factor`]).
     fn contention(&self, p: u32) -> f64 {
-        let k = p.min(self.comm.ranks_per_node);
-        1.0 + 0.012 * (k.saturating_sub(4) as f64).powi(2)
+        contention_factor(p, self.comm.ranks_per_node)
     }
 
-    /// Working-set multiplier: the synaptic-delivery loop random-writes a
-    /// per-rank target accumulator of 4*N_r bytes; once it spills the L2
-    /// every event is a cache miss. Calibrated on Table I's 4-process
-    /// column (event cost grows ~2.2x from 20480N to 320KN and again to
-    /// 1280KN).
+    /// Working-set multiplier for a rank holding `n_local` neurons (see
+    /// [`working_set_factor`]).
     fn working_set(&self, n_local: f64) -> f64 {
-        let bytes = n_local * 4.0;
-        1.0 + 0.9 * (bytes / TARGET_CACHE_BYTES).max(1.0).log2()
+        working_set_factor(n_local)
     }
 
     /// Replay a workload trace through the cost model.

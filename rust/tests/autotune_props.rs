@@ -1,0 +1,146 @@
+//! Self-tuning acceptance tests: `--topology auto` (and friends) must
+//! resolve through the analytic planner without touching the physics —
+//! the raster stays bitwise identical to the flat reference across
+//! routing protocols, exchange cadences and process counts, the result
+//! records the resolved axes so any auto run is exactly replayable with
+//! explicit flags, and the online re-planner switches cadence within
+//! three windows of an injected regime shift without changing the
+//! raster.
+
+use std::sync::Arc;
+
+use dpsnn::config::{
+    AutoAxes, ExchangeCadence, LeaderRotation, Mode, NetworkParams, Routing, RunConfig,
+};
+use dpsnn::coordinator::live::run_live_with;
+use dpsnn::coordinator::{self, OnlineReplanner, RunResult};
+
+fn cfg(procs: u32, routing: Routing, cadence: ExchangeCadence) -> RunConfig {
+    let mut c = RunConfig::default();
+    c.net = NetworkParams::tiny(512);
+    c.net.syn_per_neuron = 24; // sparse enough for pair filtering at P=8
+    c.net.delay_min_steps = 4;
+    c.procs = procs;
+    c.sim_seconds = 0.15;
+    c.seed = 2026;
+    c.mode = Mode::Live;
+    c.routing = routing;
+    c.exchange_every = cadence;
+    c
+}
+
+/// Re-run an auto-resolved result with its recorded concrete axes and
+/// no auto flags — the replayability contract.
+fn replay_explicit(base: &RunConfig, r: &RunResult) -> RunResult {
+    let mut c = base.clone();
+    c.auto = AutoAxes::default();
+    c.topology = r.topology;
+    c.exchange_every = r.exchange_every;
+    c.leader_rotation = r.leader_rotation;
+    c.compute_threads = r.compute_threads;
+    coordinator::run(&c).unwrap()
+}
+
+#[test]
+fn auto_topology_raster_is_bitwise_identical() {
+    // routing × cadence × P: every all-auto run must match the flat
+    // single-rank per-step reference raster bitwise, and its recorded
+    // resolution must replay to the identical result.
+    for &routing in &[Routing::Broadcast, Routing::Filtered] {
+        let reference = coordinator::run(&cfg(1, routing, ExchangeCadence::Step)).unwrap();
+        assert!(reference.total_spikes > 0, "network must be active");
+        for &cadence in &[ExchangeCadence::Step, ExchangeCadence::MinDelay] {
+            for &procs in &[1u32, 2, 4, 8] {
+                let mut auto_cfg = cfg(procs, routing, cadence);
+                auto_cfg.auto.topology = true;
+                auto_cfg.auto.leader_rotation = true;
+                auto_cfg.auto.compute_threads = true;
+                let run = coordinator::run(&auto_cfg).unwrap();
+                let tag = format!(
+                    "P={procs} routing={routing} cadence={cadence} -> {}",
+                    run.topology
+                );
+                assert_eq!(run.pop_counts, reference.pop_counts, "raster diverged: {tag}");
+                assert_eq!(run.total_spikes, reference.total_spikes, "{tag}");
+                assert_eq!(run.total_syn_events, reference.total_syn_events, "{tag}");
+                assert!(run.auto.topology, "{tag}: auto flags must survive as metadata");
+                // the recorded resolution replays bitwise
+                let replay = replay_explicit(&auto_cfg, &run);
+                assert_eq!(replay.pop_counts, run.pop_counts, "replay diverged: {tag}");
+                assert_eq!(replay.topology, run.topology, "{tag}");
+                assert!(!replay.auto.any(), "{tag}: explicit replay has no auto axes");
+                assert!(replay.replans.is_empty(), "{tag}: no re-planner without auto");
+            }
+        }
+    }
+}
+
+#[test]
+fn all_auto_result_records_resolved_axes() {
+    // Every axis on auto: the result must carry concrete post-planner
+    // values (never a sentinel) plus the auto flags, and a modeled run
+    // of the same config resolves to the same topology/cadence pick —
+    // the planner is deterministic and mode-independent.
+    let mut auto_cfg = cfg(8, Routing::Filtered, ExchangeCadence::Step);
+    auto_cfg.auto.topology = true;
+    auto_cfg.auto.exchange_every = true;
+    auto_cfg.auto.leader_rotation = true;
+    auto_cfg.auto.compute_threads = true;
+    let live = coordinator::run(&auto_cfg).unwrap();
+    assert!(live.auto.any());
+    assert!((1..=256).contains(&live.compute_threads));
+    // the summary names the resolved values
+    let s = live.summary();
+    assert!(s.contains("auto ["), "{s}");
+    assert!(
+        s.contains("topology") && s.contains("cadence") && s.contains("rotation"),
+        "{s}"
+    );
+    let mut modeled_cfg = auto_cfg.clone();
+    modeled_cfg.mode = Mode::Modeled;
+    let modeled = coordinator::run(&modeled_cfg).unwrap();
+    assert_eq!(modeled.topology, live.topology, "planner pick depends on mode");
+    assert_eq!(
+        modeled.exchange_every, live.exchange_every,
+        "cadence pick depends on mode"
+    );
+}
+
+#[test]
+fn online_controller_switches_within_three_windows() {
+    // Inject a regime shift by pinning the crossover threshold to each
+    // extreme: the controller must cross over from the opposite
+    // starting cadence at the first window boundary (well inside the
+    // 3-window acceptance bound) and the raster must stay bitwise
+    // identical to the static run either way.
+    let base = cfg(4, Routing::Filtered, ExchangeCadence::MinDelay);
+    let reference = coordinator::run(&base).unwrap();
+    assert!(reference.total_spikes > 0, "network must be active");
+
+    let run_with = |cadence: ExchangeCadence, crossover: f64| -> RunResult {
+        let mut c = cfg(4, Routing::Filtered, cadence);
+        c.auto.exchange_every = true;
+        c.auto.leader_rotation = true;
+        let rp = OnlineReplanner::from_config(&c)
+            .unwrap()
+            .with_crossover_bytes(crossover);
+        run_live_with(&c, Some(Arc::new(rp))).unwrap()
+    };
+
+    // crossover 0: every payload reads as bandwidth-bound (the SWA
+    // burst side) -> drop from min-delay batching to per-step.
+    let to_step = run_with(ExchangeCadence::MinDelay, 0.0);
+    assert_eq!(to_step.pop_counts, reference.pop_counts, "re-plan changed the raster");
+    let first = to_step.replans.first().expect("controller never re-planned");
+    assert!(first.window <= 2, "switched only at window {}", first.window);
+    assert_eq!(first.epoch_steps, 1);
+
+    // crossover ∞: nothing is ever bandwidth-bound (the quiet AW side)
+    // -> stretch from per-step to the full min-delay window.
+    let to_epoch = run_with(ExchangeCadence::Step, f64::INFINITY);
+    assert_eq!(to_epoch.pop_counts, reference.pop_counts, "re-plan changed the raster");
+    let first = to_epoch.replans.first().expect("controller never re-planned");
+    assert!(first.window <= 2, "switched only at window {}", first.window);
+    assert_eq!(first.epoch_steps, 4);
+    assert_eq!(first.rotation, LeaderRotation::Fixed, "flat has no leaders");
+}
