@@ -6,6 +6,6 @@ pub mod run;
 
 pub use network::NetworkParams;
 pub use run::{
-    AutoAxes, Backend, ExchangeCadence, LeaderRotation, Mode, PartitionPolicy, Routing,
-    RunConfig, Topology, TreeShape, MAX_TREE_LEVELS,
+    AutoAxes, Backend, ConnectivityMode, ExchangeCadence, LeaderRotation, Mode,
+    PartitionPolicy, Routing, RunConfig, Topology, TreeShape, MAX_TREE_LEVELS,
 };

@@ -114,6 +114,47 @@ impl std::fmt::Display for PartitionPolicy {
     }
 }
 
+/// How each rank holds its incoming-synapse table (see
+/// [`crate::model::connectivity`]).
+///
+/// `materialized` builds the delay-major CSR rows up front — O(synapse)
+/// resident bytes, fastest delivery. `procedural` keeps only the
+/// generator parameters and the rank's owned intervals, regenerating a
+/// firing source's row on the fly from the counter-keyed RNG — O(state)
+/// resident bytes, the unlock for 100×-scale networks whose synapse
+/// tables no longer fit in RAM (Knight & Nowotny; Kurth et al. 2021).
+/// The connectome is a pure function of `(seed, source, k)` either way,
+/// so the spike raster is bitwise identical between the modes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ConnectivityMode {
+    /// Prebuilt incoming-synapse CSR rows (O(synapse) memory).
+    #[default]
+    Materialized,
+    /// Rows regenerated on demand from the stateless connectome
+    /// (O(state) memory), paired with the compressed delay ring.
+    Procedural,
+}
+
+impl std::str::FromStr for ConnectivityMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "materialized" | "mat" => Ok(ConnectivityMode::Materialized),
+            "procedural" | "proc" => Ok(ConnectivityMode::Procedural),
+            other => bail!("unknown connectivity mode {other:?} (materialized|procedural)"),
+        }
+    }
+}
+
+impl std::fmt::Display for ConnectivityMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConnectivityMode::Materialized => write!(f, "materialized"),
+            ConnectivityMode::Procedural => write!(f, "procedural"),
+        }
+    }
+}
+
 /// How often ranks exchange spikes and synchronize (the live step
 /// protocol in [`crate::coordinator`]; modeled runs price the same
 /// choice analytically).
@@ -399,12 +440,20 @@ pub struct AutoAxes {
     pub leader_rotation: bool,
     /// `--compute-threads auto`: resolved from the host parallelism.
     pub compute_threads: bool,
+    /// `--connectivity auto`: resolved from the analytic memory model
+    /// (materialized when the synapse table fits the per-rank budget,
+    /// procedural beyond it).
+    pub connectivity: bool,
 }
 
 impl AutoAxes {
     /// Any axis left for the planner to choose?
     pub fn any(&self) -> bool {
-        self.topology || self.exchange_every || self.leader_rotation || self.compute_threads
+        self.topology
+            || self.exchange_every
+            || self.leader_rotation
+            || self.compute_threads
+            || self.connectivity
     }
 
     /// The planner-driven axes (everything except compute threads,
@@ -427,6 +476,9 @@ impl AutoAxes {
         }
         if self.compute_threads {
             v.push("compute-threads");
+        }
+        if self.connectivity {
+            v.push("connectivity");
         }
         v.join(",")
     }
@@ -486,6 +538,12 @@ pub struct RunConfig {
     /// index layout). `greedy-comms` reads the connectome and the
     /// topology tree at startup to co-locate strongly-coupled blocks.
     pub partition: PartitionPolicy,
+    /// How each rank stores its incoming synapses: prebuilt CSR rows
+    /// (`materialized`, O(synapse) memory) or on-the-fly regeneration
+    /// from the stateless connectome (`procedural`, O(state) memory,
+    /// paired with the compressed delay ring). Rasters are bitwise
+    /// identical between the modes.
+    pub connectivity: ConnectivityMode,
     /// Intra-rank compute threads (`--compute-threads`): the neuron
     /// update, Poisson fill and synaptic delivery split into this many
     /// fixed chunks per rank. Rasters are bitwise identical for every
@@ -524,6 +582,7 @@ impl Default for RunConfig {
             topology: Topology::Flat,
             leader_rotation: LeaderRotation::Fixed,
             partition: PartitionPolicy::Index,
+            connectivity: ConnectivityMode::Materialized,
             compute_threads: 1,
             auto: AutoAxes::default(),
             platform: "xeon".to_string(),
@@ -665,6 +724,12 @@ impl RunConfig {
         cfg.partition = doc
             .str_or("run", "partition", &cfg.partition.to_string())
             .parse()?;
+        let connectivity = doc.str_or("run", "connectivity", &cfg.connectivity.to_string());
+        if connectivity.eq_ignore_ascii_case("auto") {
+            cfg.auto.connectivity = true;
+        } else {
+            cfg.connectivity = connectivity.parse()?;
+        }
         match doc.get("run", "compute_threads") {
             Some(v) if v.as_str().is_some_and(|s| s.eq_ignore_ascii_case("auto")) => {
                 cfg.auto.compute_threads = true;
@@ -874,6 +939,34 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.partition, PartitionPolicy::GreedyComms);
         assert!(RunConfig::from_toml_str("[run]\npartition = \"zorder\"").is_err());
+    }
+
+    #[test]
+    fn connectivity_mode_parses_and_defaults_to_materialized() {
+        assert_eq!(
+            RunConfig::default().connectivity,
+            ConnectivityMode::Materialized
+        );
+        let parse = |s: &str| s.parse::<ConnectivityMode>();
+        assert_eq!(parse("materialized").unwrap(), ConnectivityMode::Materialized);
+        assert_eq!(parse("PROCEDURAL").unwrap(), ConnectivityMode::Procedural);
+        assert_eq!(parse("proc").unwrap(), ConnectivityMode::Procedural);
+        assert!(parse("holographic").is_err());
+        // display round-trips through FromStr
+        for s in ["materialized", "procedural"] {
+            assert_eq!(parse(s).unwrap().to_string(), s);
+        }
+        let cfg =
+            RunConfig::from_toml_str("[run]\nconnectivity = \"procedural\"").unwrap();
+        assert_eq!(cfg.connectivity, ConnectivityMode::Procedural);
+        assert!(!cfg.auto.connectivity);
+        // "auto" flags the axis for the memory-model resolution and
+        // leaves the (valid) default in place
+        let cfg = RunConfig::from_toml_str("[run]\nconnectivity = \"auto\"").unwrap();
+        assert!(cfg.auto.connectivity && cfg.auto.any());
+        assert_eq!(cfg.connectivity, ConnectivityMode::Materialized);
+        assert_eq!(cfg.auto.describe(), "connectivity");
+        assert!(RunConfig::from_toml_str("[run]\nconnectivity = \"dense\"").is_err());
     }
 
     #[test]

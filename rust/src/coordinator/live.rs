@@ -100,6 +100,7 @@ use crate::engine::partition::{AllocContext, Partition};
 use crate::engine::rank::RankEngine;
 use crate::engine::spike::Spike;
 use crate::metrics::comm_volume::CommVolume;
+use crate::metrics::memory::MemoryUse;
 use crate::model::connectivity::ConnectivityParams;
 use crate::model::population::PopulationSoA;
 use crate::profiling::components::Components;
@@ -123,6 +124,9 @@ struct RankReport {
     /// Spikes this rank emitted from excitatory sources (gid below the
     /// exc/inh boundary) — a placement-invariant split of the totals.
     exc_spikes: u64,
+    /// Measured resident bytes of this rank's synapse + ring stores at
+    /// run end (the connectivity mode's memory footprint).
+    memory: MemoryUse,
 }
 
 /// Cadence + rotation in force for one exchange window.
@@ -392,6 +396,7 @@ pub fn run_live_with(
         }
     }
     let comm_volume: Vec<CommVolume> = reports.iter().map(|r| r.comm.clone()).collect();
+    let memory: Vec<MemoryUse> = reports.iter().map(|r| r.memory).collect();
 
     let trace = cfg.record_trace.as_ref().map(|_| {
         crate::trace::workload::WorkloadTrace {
@@ -433,6 +438,8 @@ pub fn run_live_with(
         exchange_every: cfg.exchange_every,
         leader_rotation: cfg.leader_rotation,
         compute_threads: cfg.compute_threads,
+        connectivity: cfg.connectivity,
+        memory,
         auto: cfg.auto,
         replans: replanner.map(|r| r.take_events()).unwrap_or_default(),
         backend: match cfg.backend {
@@ -490,7 +497,15 @@ fn rank_main<T: Transport>(
         pool.clone(),
     )
     .with_context(|| format!("rank {rank} backend"))?;
-    let mut engine = RankEngine::with_pool(&cfg.net, cfg.seed, rank, owned, backend, pool);
+    let mut engine = RankEngine::with_pool_mode(
+        &cfg.net,
+        cfg.seed,
+        rank,
+        owned,
+        backend,
+        pool,
+        cfg.connectivity,
+    );
 
     // Setup (outside the profiled loop, like the synapse build): the
     // destination-rank bitmap for this rank's sources.
@@ -677,6 +692,7 @@ fn rank_main<T: Transport>(
         step_spikes,
         comm: comm_vol,
         exc_spikes,
+        memory: engine.memory_use(),
     })
 }
 

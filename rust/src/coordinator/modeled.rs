@@ -6,6 +6,7 @@ use anyhow::Result;
 
 use crate::config::{Mode, Routing, RunConfig, Topology};
 use crate::metrics::comm_volume::mean_pair_coverage;
+use crate::metrics::memory::predicted_memory_use;
 use crate::metrics::energy::joules_per_synaptic_event;
 use crate::metrics::synevents::SynapticEventCount;
 use crate::platform::hetero::HeteroCluster;
@@ -109,6 +110,14 @@ pub fn run_modeled_trace(cfg: &RunConfig, trace: &WorkloadTrace) -> Result<RunRe
         exchange_every: cfg.exchange_every,
         leader_rotation: cfg.leader_rotation,
         compute_threads: cfg.compute_threads,
+        connectivity: cfg.connectivity,
+        // Closed-form prediction for the largest even-split rank —
+        // modeled runs materialize nothing.
+        memory: vec![predicted_memory_use(
+            &cfg.net,
+            cfg.net.n_neurons.div_ceil(cfg.procs.max(1)),
+            cfg.connectivity,
+        )],
         auto: cfg.auto,
         replans: Vec::new(),
         backend: "model",
@@ -156,6 +165,8 @@ pub fn run_modeled_cluster(
         exchange_every: crate::config::ExchangeCadence::Step,
         leader_rotation: crate::config::LeaderRotation::Fixed,
         compute_threads: cfg.compute_threads,
+        connectivity: cfg.connectivity,
+        memory: Vec::new(),
         auto: crate::config::AutoAxes::default(),
         replans: Vec::new(),
         backend: "model",

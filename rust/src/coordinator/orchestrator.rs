@@ -3,10 +3,11 @@
 use anyhow::Result;
 
 use crate::config::{
-    AutoAxes, ExchangeCadence, LeaderRotation, Mode, PartitionPolicy, Routing, RunConfig,
-    Topology,
+    AutoAxes, ConnectivityMode, ExchangeCadence, LeaderRotation, Mode, PartitionPolicy, Routing,
+    RunConfig, Topology,
 };
 use crate::metrics::comm_volume::CommVolume;
+use crate::metrics::memory::MemoryUse;
 use crate::profiling::components::Components;
 
 use super::live::ReplanEvent;
@@ -68,6 +69,13 @@ pub struct RunResult {
     pub leader_rotation: LeaderRotation,
     /// Intra-rank compute threads (post-`auto` resolution).
     pub compute_threads: u32,
+    /// Synapse/delay-state representation the run used (post-`auto`
+    /// resolution through the analytic memory model).
+    pub connectivity: ConnectivityMode,
+    /// Measured per-rank resident bytes of the synapse + ring stores
+    /// (live runs; modeled runs carry the closed-form prediction for
+    /// the largest even-split rank).
+    pub memory: Vec<MemoryUse>,
     /// Which axes were `auto` on the CLI/TOML — the concrete fields
     /// above always hold the resolved values, so a run is replayable
     /// by passing them back explicitly.
@@ -102,6 +110,13 @@ impl RunResult {
         }
         let total: u64 = self.comm_volume.iter().map(|c| c.bytes_recv).sum();
         total as f64 / self.comm_volume.len() as f64
+    }
+
+    /// The heaviest rank's resident synapse + ring bytes (live runs
+    /// report measurements, modeled runs the closed-form prediction;
+    /// 0 if untracked).
+    pub fn max_rank_memory_bytes(&self) -> u64 {
+        self.memory.iter().map(|m| m.total()).max().unwrap_or(0)
     }
 
     /// Mean payload bytes sent per rank (live runs; 0 if untracked).
@@ -146,15 +161,29 @@ impl RunResult {
         } else {
             String::new()
         };
+        let memory = if let Some(worst) = self.memory.iter().max_by_key(|m| m.total()) {
+            format!(
+                "  memory [{}]: max rank resident {:.2} MB \
+                 (synapses {:.2} MB, ring {:.2} MB, scratch {:.2} MB)\n",
+                self.connectivity,
+                worst.total() as f64 / 1e6,
+                worst.synapse_bytes as f64 / 1e6,
+                worst.ring_bytes as f64 / 1e6,
+                worst.scratch_bytes as f64 / 1e6,
+            )
+        } else {
+            String::new()
+        };
         let auto = if self.auto.any() {
             format!(
                 "  auto [{}]: resolved to topology {}, cadence {}, rotation {}, \
-                 {} threads{}\n",
+                 {} threads, connectivity {}{}\n",
                 self.auto.describe(),
                 self.topology,
                 self.exchange_every,
                 self.leader_rotation,
                 self.compute_threads,
+                self.connectivity,
                 if self.replans.is_empty() {
                     String::new()
                 } else {
@@ -168,7 +197,7 @@ impl RunResult {
             "{} run [{}] on {}: {} procs\n\
                wall {:.2} s for {:.1} s simulated (x{:.2} real-time{})\n\
                rate {:.2} Hz | spikes {} | syn events {}\n\
-               comp {:.1}% | comm {:.1}% | barrier {:.1}%\n{}{}{}",
+               comp {:.1}% | comm {:.1}% | barrier {:.1}%\n{}{}{}{}",
             match self.mode {
                 Mode::Live => "live",
                 Mode::Modeled => "modeled",
@@ -188,6 +217,7 @@ impl RunResult {
             bar * 100.0,
             energy,
             volume,
+            memory,
             auto
         )
     }
@@ -233,6 +263,8 @@ mod tests {
             exchange_every: ExchangeCadence::Step,
             leader_rotation: LeaderRotation::Fixed,
             compute_threads: 1,
+            connectivity: ConnectivityMode::Materialized,
+            memory: vec![],
             auto: AutoAxes::default(),
             replans: Vec::new(),
             backend: "native",
@@ -252,5 +284,16 @@ mod tests {
         let s = r.summary();
         assert!(s.contains("auto [exchange-every]"), "{s}");
         assert!(s.contains("cadence min-delay"), "{s}");
+        // memory reporting rides along once a run tracks it
+        assert!(!s.contains("memory ["), "untracked runs say nothing: {s}");
+        r.connectivity = ConnectivityMode::Procedural;
+        r.memory = vec![
+            MemoryUse { synapse_bytes: 1_000_000, ring_bytes: 500_000, scratch_bytes: 0 },
+            MemoryUse { synapse_bytes: 200, ring_bytes: 100, scratch_bytes: 0 },
+        ];
+        assert_eq!(r.max_rank_memory_bytes(), 1_500_000);
+        let s = r.summary();
+        assert!(s.contains("memory [procedural]"), "{s}");
+        assert!(s.contains("connectivity procedural"), "{s}");
     }
 }

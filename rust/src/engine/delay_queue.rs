@@ -140,6 +140,13 @@ impl DelayRing {
     pub fn queued_total(&self) -> f64 {
         self.flat.iter().map(|&x| x as f64).sum()
     }
+
+    /// Resident bytes of the dense ring: `depth * stride` f32 slots.
+    /// O(n * depth) — the closed form
+    /// `metrics::memory::dense_ring_bytes` pins.
+    pub fn resident_bytes(&self) -> usize {
+        self.depth * self.stride * 4
+    }
 }
 
 /// A copyable raw view of one [`DelayRing`]'s storage at a fixed step,
@@ -225,10 +232,253 @@ impl RingShard {
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::util::prop::forall;
+/// Memory-lean companion to [`DelayRing`] for the procedural
+/// connectivity mode: instead of a dense `depth * n` accumulator grid,
+/// it keeps ONE dense row (the step currently being integrated) plus a
+/// compressed `(target, weight)` bucket per future slot. Resident bytes
+/// are O(n + in-flight events), not O(n * depth) — at the paper's 3.2 Hz
+/// regime the in-flight population is a small multiple of the per-epoch
+/// synaptic events, so the ring shrinks by roughly the delay depth.
+///
+/// Determinism: buckets are split per compute chunk
+/// (`buckets[slot * chunks + chunk]`), each chunk's delivery worker
+/// appends only to its own bucket, and [`Self::advance`] drains the
+/// incoming slot's buckets chunk-ascending in append order. Every target
+/// lives in exactly one chunk, so its accumulator receives exactly the
+/// add sequence the dense ring's ranged delivery performs — the raster
+/// stays bitwise identical across ring kinds and chunk counts (and the
+/// exact 2^-10 weight grid makes the sums order-independent anyway).
+#[derive(Debug, Clone)]
+pub struct CompressedDelayRing {
+    /// The current step's dense accumulator row (stride-padded so the
+    /// neuron update reads a 64 B-aligned slice, like [`DelayRing`]).
+    current: AlignedF32,
+    n: usize,
+    stride: usize,
+    depth: usize,
+    cur: usize,
+    chunks: usize,
+    /// Pending arrivals per `[slot * chunks + chunk]`, in append order.
+    buckets: Vec<Vec<(u32, f32)>>,
+}
+
+impl CompressedDelayRing {
+    /// `max_delay` as for [`DelayRing::new`]; `chunks` is the delivery
+    /// chunk count (the `--compute-threads` geometry) the bucket split
+    /// mirrors.
+    pub fn new(n: usize, max_delay: u32, chunks: usize) -> Self {
+        assert!(chunks >= 1, "need at least one delivery chunk");
+        let depth = max_delay as usize + 1;
+        let stride = n.div_ceil(LANES_PER_LINE).max(1) * LANES_PER_LINE;
+        Self {
+            current: AlignedF32::zeroed(stride),
+            n,
+            stride,
+            depth,
+            cur: 0,
+            chunks,
+            buckets: vec![Vec::new(); depth * chunks],
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn chunks(&self) -> usize {
+        self.chunks
+    }
+
+    /// Queue `w` onto local neuron `tgt`, `delay` steps from the step
+    /// currently being integrated, through chunk 0's bucket (the
+    /// single-chunk convenience mirroring [`DelayRing::add`]; the
+    /// threaded path appends through [`CompressedRingShard`] instead).
+    #[inline]
+    pub fn add(&mut self, delay: u8, tgt: u32, w: f32) {
+        debug_assert!(
+            (1..self.depth).contains(&(delay as usize)),
+            "delay {delay} out of range 1..={}",
+            self.depth - 1
+        );
+        debug_assert!((tgt as usize) < self.n);
+        let mut slot = self.cur + delay as usize;
+        if slot >= self.depth {
+            slot -= self.depth;
+        }
+        self.buckets[slot * self.chunks].push((tgt, w));
+    }
+
+    /// [`DelayRing::deliver_row_offset`] on the compressed store: the
+    /// whole target range through chunk 0's buckets (one writer).
+    #[inline]
+    pub fn deliver_row_offset(&mut self, tgts: &[u32], delays: &[u8], w: f32, back: u32) {
+        let n = self.n as u32;
+        // SAFETY: full target range, chunk 0, no concurrent shards.
+        unsafe {
+            self.shard()
+                .deliver_row_offset_ranged(tgts, delays, w, back, 0, n, 0)
+        }
+    }
+
+    /// A raw, range-restrictable delivery view for the threaded path;
+    /// see the safety contract on
+    /// [`CompressedRingShard::deliver_row_offset_ranged`].
+    pub fn shard(&mut self) -> CompressedRingShard {
+        CompressedRingShard {
+            buckets: self.buckets.as_mut_ptr(),
+            chunks: self.chunks,
+            depth: self.depth,
+            cur: self.cur,
+        }
+    }
+
+    /// Borrow the accumulator for the current step.
+    pub fn current(&self) -> &[f32] {
+        &self.current[..self.n]
+    }
+
+    /// Finish the current step: zero the dense row, advance the ring,
+    /// and drain the incoming slot's buckets (chunk-ascending, append
+    /// order) into the dense row. Effective delays are always >= 1, so
+    /// no bucket of the slot being vacated can still receive appends.
+    pub fn advance(&mut self) {
+        self.current[..self.n].iter_mut().for_each(|x| *x = 0.0);
+        self.cur += 1;
+        if self.cur == self.depth {
+            self.cur = 0;
+        }
+        let base = self.cur * self.chunks;
+        for c in 0..self.chunks {
+            // take/put-back instead of split borrows: buckets and the
+            // dense row live in different fields, but the loop reads one
+            // and writes the other, so move the Vec out for the drain.
+            let mut bucket = std::mem::take(&mut self.buckets[base + c]);
+            let drained = bucket.len();
+            for &(t, w) in &bucket {
+                self.current[t as usize] += w;
+            }
+            bucket.clear();
+            // Keep capacity warm for steady-state reuse, but decay a
+            // burst's peak: capacity tracks ~2x the slot's recent load,
+            // so a synchronization transient cannot pin its high-water
+            // mark for the rest of the run (values are untouched —
+            // capacity never affects the raster).
+            if bucket.capacity() > 1024 && bucket.capacity() > 2 * drained {
+                bucket.shrink_to((2 * drained).max(1024));
+            }
+            self.buckets[base + c] = bucket;
+        }
+    }
+
+    /// Sum of everything still queued (current row + all buckets).
+    pub fn queued_total(&self) -> f64 {
+        let cur: f64 = self.current[..self.n].iter().map(|&x| x as f64).sum();
+        let pending: f64 = self
+            .buckets
+            .iter()
+            .flat_map(|b| b.iter())
+            .map(|&(_, w)| w as f64)
+            .sum();
+        cur + pending
+    }
+
+    /// Resident bytes: the dense current row, the bucket headers, and
+    /// the bucket capacities. O(n + in-flight events) — the closed form
+    /// `metrics::memory::compressed_ring_bytes_idle` is the floor.
+    pub fn resident_bytes(&self) -> usize {
+        self.stride * 4
+            + self.buckets.len() * std::mem::size_of::<Vec<(u32, f32)>>()
+            + self
+                .buckets
+                .iter()
+                .map(|b| b.capacity() * std::mem::size_of::<(u32, f32)>())
+                .sum::<usize>()
+    }
+}
+
+/// [`RingShard`]'s counterpart for [`CompressedDelayRing`]: a copyable
+/// raw view the `--compute-threads` workers append through, each into
+/// its own per-chunk bucket.
+#[derive(Clone, Copy)]
+pub struct CompressedRingShard {
+    buckets: *mut Vec<(u32, f32)>,
+    chunks: usize,
+    depth: usize,
+    cur: usize,
+}
+
+// SAFETY: pointer + geometry; the aliasing discipline is the deliver
+// contract below (each concurrent caller uses a distinct chunk index).
+unsafe impl Send for CompressedRingShard {}
+unsafe impl Sync for CompressedRingShard {}
+
+impl CompressedRingShard {
+    /// Queue one spike row's arrivals for targets in `[lo, hi)` into
+    /// `chunk`'s buckets. Same row-walk and slot arithmetic as
+    /// [`RingShard::deliver_row_offset_ranged`]; the weight lands in a
+    /// bucket instead of a dense slot row.
+    ///
+    /// # Safety
+    ///
+    /// * The parent ring must outlive the shard and not be advanced,
+    ///   resized or dropped while shards are live.
+    /// * Concurrent callers must use pairwise-distinct `chunk` indices
+    ///   (each bucket Vec has exactly one writer), and `[lo, hi)` ranges
+    ///   consistent with the ring's chunk geometry so each target is
+    ///   appended by exactly one chunk.
+    /// * As for the dense path: `tgt < n`, `1 <= delay <= max_delay`,
+    ///   `back < delay`, ascending targets within each equal-delay run.
+    pub unsafe fn deliver_row_offset_ranged(
+        &self,
+        tgts: &[u32],
+        delays: &[u8],
+        w: f32,
+        back: u32,
+        lo: u32,
+        hi: u32,
+        chunk: usize,
+    ) {
+        debug_assert_eq!(tgts.len(), delays.len());
+        debug_assert!(chunk < self.chunks);
+        let m = tgts.len();
+        let back = back as usize;
+        let mut i = 0usize;
+        while i < m {
+            let d = delays[i];
+            debug_assert!((1..self.depth).contains(&(d as usize)));
+            debug_assert!(
+                (d as usize) > back,
+                "offset {back} >= delay {d}: spike delivered past its arrival step"
+            );
+            let mut j = i + 1;
+            while j < m && delays[j] == d {
+                debug_assert!(tgts[j - 1] <= tgts[j], "targets must ascend within a run");
+                j += 1;
+            }
+            let mut slot = self.cur + d as usize - back;
+            if slot >= self.depth {
+                slot -= self.depth;
+            }
+            let run = &tgts[i..j];
+            let a = run.partition_point(|&t| t < lo);
+            let b = run.partition_point(|&t| t < hi);
+            if a < b {
+                // SAFETY (fn contract): slot < depth and chunk < chunks,
+                // so the bucket index is in bounds; the distinct-chunk
+                // contract makes the &mut Vec exclusive.
+                let bucket = &mut *self.buckets.add(slot * self.chunks + chunk);
+                for &t in &run[a..b] {
+                    bucket.push((t, w));
+                }
+            }
+            i = j;
+        }
+    }
+}
 
     #[test]
     fn delivers_at_the_right_step() {
@@ -367,6 +617,93 @@ mod tests {
                 parts.advance();
             }
         }
+    }
+
+    #[test]
+    fn compressed_ring_matches_dense_step_for_step() {
+        // Same adds, same advances: current() must agree bitwise.
+        forall("compressed ring equals dense ring", 50, |rng| {
+            let n = 1 + rng.next_below(8) as usize;
+            let maxd = 1 + rng.next_below(16);
+            let mut dense = DelayRing::new(n, maxd);
+            let mut comp = CompressedDelayRing::new(n, maxd, 1);
+            for _ in 0..50 {
+                for _ in 0..rng.next_below(5) {
+                    let d = 1 + rng.next_below(maxd) as u8;
+                    let t = rng.next_below(n as u32);
+                    let w = (rng.next_below(8) as f32) / 8.0;
+                    dense.add(d, t, w);
+                    comp.add(d, t, w);
+                }
+                assert_eq!(dense.current(), comp.current());
+                assert_eq!(dense.queued_total(), comp.queued_total());
+                dense.advance();
+                comp.advance();
+            }
+        });
+    }
+
+    #[test]
+    fn compressed_row_delivery_matches_dense() {
+        let tgts = [0u32, 2, 2, 5, 1, 4];
+        let delays = [3u8, 3, 4, 6, 6, 6];
+        for back in [0u32, 1, 2] {
+            let mut dense = DelayRing::new(6, 8);
+            let mut comp = CompressedDelayRing::new(6, 8, 1);
+            for _ in 0..back {
+                dense.advance();
+                comp.advance();
+            }
+            dense.deliver_row_offset(&tgts, &delays, 0.25, back);
+            comp.deliver_row_offset(&tgts, &delays, 0.25, back);
+            for _ in 0..9 {
+                assert_eq!(dense.current(), comp.current(), "back={back}");
+                dense.advance();
+                comp.advance();
+            }
+        }
+    }
+
+    #[test]
+    fn compressed_chunked_shards_match_dense_delivery() {
+        // Chunked bucket appends + drain must equal the dense unranged
+        // delivery for any split point (the threaded-procedural path).
+        let tgts = [0u32, 1, 4, 4, 7, 2, 5];
+        let delays = [2u8, 2, 2, 2, 2, 5, 5];
+        for split in 0..=8u32 {
+            let mut dense = DelayRing::new(8, 6);
+            let mut comp = CompressedDelayRing::new(8, 6, 2);
+            dense.deliver_row_offset(&tgts, &delays, 0.5, 1);
+            let shard = comp.shard();
+            // SAFETY: chunk indices are distinct and ranges disjoint.
+            unsafe {
+                shard.deliver_row_offset_ranged(&tgts, &delays, 0.5, 1, 0, split, 0);
+                shard.deliver_row_offset_ranged(&tgts, &delays, 0.5, 1, split, 8, 1);
+            }
+            for _ in 0..7 {
+                assert_eq!(dense.current(), comp.current(), "split={split}");
+                dense.advance();
+                comp.advance();
+            }
+        }
+    }
+
+    #[test]
+    fn compressed_ring_is_memory_lean() {
+        // A deep, wide, idle ring: the dense grid pays depth * n floats,
+        // the compressed ring pays one row + empty buckets.
+        let dense = DelayRing::new(100_000, 16);
+        let comp = CompressedDelayRing::new(100_000, 16, 4);
+        assert!(dense.resident_bytes() >= 17 * 100_000 * 4);
+        assert!(
+            comp.resident_bytes() < dense.resident_bytes() / 10,
+            "compressed {} B vs dense {} B",
+            comp.resident_bytes(),
+            dense.resident_bytes()
+        );
+        assert_eq!(comp.depth(), dense.depth());
+        assert_eq!(comp.n(), dense.n());
+        assert_eq!(comp.chunks(), 4);
     }
 
     #[test]

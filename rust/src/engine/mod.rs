@@ -7,7 +7,7 @@ pub mod delay_queue;
 pub mod partition;
 pub mod rank;
 
-pub use delay_queue::{DelayRing, RingShard};
+pub use delay_queue::{CompressedDelayRing, CompressedRingShard, DelayRing, RingShard};
 pub use partition::{
     AllocContext, Allocator, BlockGrid, GreedyCommsAllocator, IndexAllocator, OwnedGids,
     Partition, RoundRobinAllocator,

@@ -41,13 +41,14 @@ use std::rc::Rc;
 
 use anyhow::Result;
 
-use crate::config::NetworkParams;
-use crate::model::connectivity::{ConnectivityParams, IncomingSynapses};
+use crate::config::{ConnectivityMode, NetworkParams};
+use crate::metrics::memory::MemoryUse;
+use crate::model::connectivity::{ConnectivityParams, IncomingSynapses, ProceduralSynapses};
 use crate::model::poisson::ExternalStimulus;
 use crate::runtime::NeuronBackend;
 use crate::util::pool::ComputePool;
 
-use super::delay_queue::DelayRing;
+use super::delay_queue::{CompressedDelayRing, CompressedRingShard, DelayRing, RingShard};
 use super::partition::OwnedGids;
 use super::spike::Spike;
 
@@ -60,14 +61,94 @@ pub struct StepOutcome {
     pub ext_events: u64,
 }
 
+/// The rank's incoming-synapse store, by [`ConnectivityMode`]:
+/// a prebuilt CSR table or the on-demand regenerating generator.
+enum SynapseStore {
+    Materialized(IncomingSynapses),
+    Procedural(ProceduralSynapses),
+}
+
+/// The rank's delay state, paired with the synapse store: the dense
+/// accumulator grid (materialized) or the bucket-compressed ring
+/// (procedural).
+enum DelayStore {
+    Dense(DelayRing),
+    Compressed(CompressedDelayRing),
+}
+
+impl DelayStore {
+    fn n(&self) -> usize {
+        match self {
+            DelayStore::Dense(r) => r.n(),
+            DelayStore::Compressed(r) => r.n(),
+        }
+    }
+
+    fn current(&self) -> &[f32] {
+        match self {
+            DelayStore::Dense(r) => r.current(),
+            DelayStore::Compressed(r) => r.current(),
+        }
+    }
+
+    fn advance(&mut self) {
+        match self {
+            DelayStore::Dense(r) => r.advance(),
+            DelayStore::Compressed(r) => r.advance(),
+        }
+    }
+
+    fn resident_bytes(&self) -> usize {
+        match self {
+            DelayStore::Dense(r) => r.resident_bytes(),
+            DelayStore::Compressed(r) => r.resident_bytes(),
+        }
+    }
+}
+
+/// A copyable either-ring delivery view for the threaded path; the
+/// chunk index is ignored by the dense shard (disjoint target ranges
+/// already make it race-free) and selects the bucket for the
+/// compressed one.
+#[derive(Clone, Copy)]
+enum ShardRef {
+    Dense(RingShard),
+    Compressed(CompressedRingShard),
+}
+
+impl ShardRef {
+    /// # Safety
+    ///
+    /// The union of the two shard contracts:
+    /// [`RingShard::deliver_row_offset_ranged`] and
+    /// [`CompressedRingShard::deliver_row_offset_ranged`].
+    unsafe fn deliver(
+        &self,
+        tgts: &[u32],
+        delays: &[u8],
+        w: f32,
+        back: u32,
+        lo: u32,
+        hi: u32,
+        chunk: usize,
+    ) {
+        match self {
+            ShardRef::Dense(s) => s.deliver_row_offset_ranged(tgts, delays, w, back, lo, hi),
+            ShardRef::Compressed(s) => {
+                s.deliver_row_offset_ranged(tgts, delays, w, back, lo, hi, chunk)
+            }
+        }
+    }
+}
+
 pub struct RankEngine {
     pub rank: u32,
     /// Owned global ids (any union of intervals a placement policy
     /// produced; local index = ascending-gid order).
     owned: OwnedGids,
     backend: Box<dyn NeuronBackend>,
-    incoming: IncomingSynapses,
-    ring: DelayRing,
+    synapses: SynapseStore,
+    ring: DelayStore,
     stim: ExternalStimulus,
     /// Weight by source type (exc, inh) and the exc/inh boundary gid.
     j_exc: f32,
@@ -85,6 +166,15 @@ pub struct RankEngine {
     /// Scratch buffers reused every step (allocation-free hot path).
     ext_scratch: Vec<u64>,
     spiked_local: Vec<u32>,
+    /// Procedural-mode scratch: the delivery batch's regenerated rows
+    /// packed as a tiny CSR (`csr_ptr[i]..csr_ptr[i+1]` is spike i's
+    /// row), plus the per-row sort buffer. Capacity is reused across
+    /// epochs, so steady state regenerates without allocating. Empty in
+    /// materialized mode.
+    csr_ptr: Vec<u32>,
+    csr_tgt: Vec<u32>,
+    csr_delay: Vec<u8>,
+    row_scratch: Vec<(u8, u32)>,
     /// Current network step (increments in finish_step).
     pub step: u32,
     /// Running totals.
@@ -105,7 +195,8 @@ impl RankEngine {
     }
 
     /// [`Self::new`] with an explicit compute pool (normally the same one
-    /// the native backend chunks over).
+    /// the native backend chunks over). Materialized connectivity — the
+    /// historical behaviour every existing call site expects.
     pub fn with_pool(
         net: &NetworkParams,
         seed: u64,
@@ -114,10 +205,49 @@ impl RankEngine {
         backend: Box<dyn NeuronBackend>,
         pool: Rc<ComputePool>,
     ) -> Self {
+        Self::with_pool_mode(
+            net,
+            seed,
+            rank,
+            owned,
+            backend,
+            pool,
+            ConnectivityMode::Materialized,
+        )
+    }
+
+    /// [`Self::with_pool`] with an explicit [`ConnectivityMode`]:
+    /// `materialized` builds the CSR table and the dense delay ring up
+    /// front; `procedural` keeps only the generator (O(state) memory)
+    /// and pairs it with the compressed delay ring whose bucket split
+    /// mirrors the pool's chunk geometry. Rasters are bitwise identical
+    /// between the modes (tests/connectivity_modes.rs pins the matrix).
+    pub fn with_pool_mode(
+        net: &NetworkParams,
+        seed: u64,
+        rank: u32,
+        owned: OwnedGids,
+        backend: Box<dyn NeuronBackend>,
+        pool: Rc<ComputePool>,
+        mode: ConnectivityMode,
+    ) -> Self {
         assert_eq!(backend.len(), owned.len() as usize);
         let cp = ConnectivityParams::from_network(net, seed);
-        let incoming = IncomingSynapses::build_owned(&cp, &owned);
         let n = owned.len() as usize;
+        let (synapses, ring) = match mode {
+            ConnectivityMode::Materialized => (
+                SynapseStore::Materialized(IncomingSynapses::build_owned(&cp, &owned)),
+                DelayStore::Dense(DelayRing::new(n, net.delay_max_steps)),
+            ),
+            ConnectivityMode::Procedural => (
+                SynapseStore::Procedural(ProceduralSynapses::new(cp, owned.clone())),
+                DelayStore::Compressed(CompressedDelayRing::new(
+                    n,
+                    net.delay_max_steps,
+                    pool.chunks(),
+                )),
+            ),
+        };
         let mut segs = Vec::with_capacity(owned.intervals().len());
         let mut off = 0usize;
         for &(lo, hi) in owned.intervals() {
@@ -128,8 +258,8 @@ impl RankEngine {
             rank,
             owned,
             backend,
-            incoming,
-            ring: DelayRing::new(n, net.delay_max_steps),
+            synapses,
+            ring,
             stim: ExternalStimulus::new(net, seed ^ 0xEC5),
             j_exc: net.j_exc,
             j_inh: net.j_inh,
@@ -139,6 +269,10 @@ impl RankEngine {
             segs,
             ext_scratch: Vec::new(),
             spiked_local: Vec::with_capacity(n / 4 + 8),
+            csr_ptr: Vec::new(),
+            csr_tgt: Vec::new(),
+            csr_delay: Vec::new(),
+            row_scratch: Vec::new(),
             step: 0,
             totals: StepOutcome::default(),
         }
@@ -153,8 +287,45 @@ impl RankEngine {
         &self.owned
     }
 
+    /// Synapses resident on this rank. Exact for the materialized
+    /// table; the procedural store holds none (rows are regenerated per
+    /// delivery), so it reports 0 — use the analytic expectation
+    /// (`metrics::memory`) for capacity numbers in that mode.
     pub fn n_local_synapses(&self) -> usize {
-        self.incoming.n_synapses()
+        match &self.synapses {
+            SynapseStore::Materialized(inc) => inc.n_synapses(),
+            SynapseStore::Procedural(_) => 0,
+        }
+    }
+
+    /// Which connectivity mode this engine was built with.
+    pub fn connectivity_mode(&self) -> ConnectivityMode {
+        match &self.synapses {
+            SynapseStore::Materialized(_) => ConnectivityMode::Materialized,
+            SynapseStore::Procedural(_) => ConnectivityMode::Procedural,
+        }
+    }
+
+    /// Measured resident bytes of the scale-dominant stores (the
+    /// numbers RunResult/BENCH_memory.json report and the closed forms
+    /// in `metrics::memory` predict). The procedural regeneration
+    /// scratch (one delivery batch's rows, not the table) is reported
+    /// separately: it scales with batch activity, so the O(state) gate
+    /// on the persistent store must not see it.
+    pub fn memory_use(&self) -> MemoryUse {
+        let synapse_bytes = match &self.synapses {
+            SynapseStore::Materialized(inc) => inc.resident_bytes() as u64,
+            SynapseStore::Procedural(p) => p.resident_bytes() as u64,
+        };
+        MemoryUse {
+            synapse_bytes,
+            ring_bytes: self.ring.resident_bytes() as u64,
+            scratch_bytes: (self.csr_ptr.capacity() * 4
+                + self.csr_tgt.capacity() * 4
+                + self.csr_delay.capacity()
+                + self.row_scratch.capacity() * std::mem::size_of::<(u8, u32)>())
+                as u64,
+        }
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -205,7 +376,7 @@ impl RankEngine {
     /// the add sequence is exactly the single-chunk one, so the chunking
     /// never shows in the raster.
     pub fn deliver(&mut self, spikes: &[Spike]) {
-        // Protocol check + event accounting stay sequential (cheap).
+        // Protocol check stays sequential (cheap).
         for sp in spikes {
             let back = self.step.wrapping_sub(sp.step);
             assert!(
@@ -216,24 +387,75 @@ impl RankEngine {
                 self.step,
                 self.delay_min
             );
-            self.totals.syn_events += self.incoming.row(sp.gid).0.len() as u64;
+        }
+        // Procedural mode regenerates the batch's rows ONCE into the
+        // scratch CSR (sequentially — the generator sweep is per-spike
+        // O(m); chunk workers then share the regenerated rows instead of
+        // each redrawing all n*m counters). Row content and order are
+        // identical to the materialized table (`ProceduralSynapses::
+        // row_into`), so everything downstream is mode-blind.
+        if let SynapseStore::Procedural(p) = &self.synapses {
+            self.csr_ptr.clear();
+            self.csr_tgt.clear();
+            self.csr_delay.clear();
+            self.csr_ptr.push(0);
+            for sp in spikes {
+                p.row_into(
+                    sp.gid,
+                    &mut self.csr_tgt,
+                    &mut self.csr_delay,
+                    &mut self.row_scratch,
+                );
+                let len: u32 = self
+                    .csr_tgt
+                    .len()
+                    .try_into()
+                    .expect("more than u32::MAX synapses in one delivery batch");
+                self.csr_ptr.push(len);
+            }
+        }
+        // Event accounting: the regenerated row length equals the
+        // materialized row length by construction, so the syn-event
+        // totals agree across modes.
+        match &self.synapses {
+            SynapseStore::Materialized(inc) => {
+                for sp in spikes {
+                    self.totals.syn_events += inc.row(sp.gid).0.len() as u64;
+                }
+            }
+            SynapseStore::Procedural(_) => {
+                self.totals.syn_events += self.csr_tgt.len() as u64;
+            }
         }
         if self.pool.chunks() == 1 {
-            for sp in spikes {
+            for (i, sp) in spikes.iter().enumerate() {
                 let back = self.step.wrapping_sub(sp.step);
                 let w = if sp.gid < self.inh_start {
                     self.j_exc
                 } else {
                     self.j_inh
                 };
-                let (tgts, delays) = self.incoming.row(sp.gid);
-                self.ring.deliver_row_offset(tgts, delays, w, back);
+                let (tgts, delays) = match &self.synapses {
+                    SynapseStore::Materialized(inc) => inc.row(sp.gid),
+                    SynapseStore::Procedural(_) => {
+                        let (a, b) = (self.csr_ptr[i] as usize, self.csr_ptr[i + 1] as usize);
+                        (&self.csr_tgt[a..b], &self.csr_delay[a..b])
+                    }
+                };
+                match &mut self.ring {
+                    DelayStore::Dense(r) => r.deliver_row_offset(tgts, delays, w, back),
+                    DelayStore::Compressed(r) => r.deliver_row_offset(tgts, delays, w, back),
+                }
             }
             return;
         }
         let n = self.ring.n();
-        let shard = self.ring.shard();
-        let incoming = &self.incoming;
+        let shard = match &mut self.ring {
+            DelayStore::Dense(r) => ShardRef::Dense(r.shard()),
+            DelayStore::Compressed(r) => ShardRef::Compressed(r.shard()),
+        };
+        let synapses = &self.synapses;
+        let (csr_ptr, csr_tgt, csr_delay) = (&self.csr_ptr, &self.csr_tgt, &self.csr_delay);
         let (j_exc, j_inh, inh_start, step) = (self.j_exc, self.j_inh, self.inh_start, self.step);
         // the closure captures the chunk count, not the pool (not Sync)
         let chunks = self.pool.chunks();
@@ -243,16 +465,23 @@ impl RankEngine {
                 return;
             }
             let (lo, hi) = (r.start as u32, r.end as u32);
-            for sp in spikes {
+            for (i, sp) in spikes.iter().enumerate() {
                 let back = step.wrapping_sub(sp.step);
                 let w = if sp.gid < inh_start { j_exc } else { j_inh };
-                let (tgts, delays) = incoming.row(sp.gid);
-                // SAFETY: chunk target ranges are pairwise disjoint and the
-                // ring outlives this closure (run() blocks); rows are
-                // build-validated (targets < n, delays in range, ascending
-                // per delay run), and `back < delay_min <= d` was asserted
-                // above.
-                unsafe { shard.deliver_row_offset_ranged(tgts, delays, w, back, lo, hi) };
+                let (tgts, delays) = match synapses {
+                    SynapseStore::Materialized(inc) => inc.row(sp.gid),
+                    SynapseStore::Procedural(_) => {
+                        let (a, b) = (csr_ptr[i] as usize, csr_ptr[i + 1] as usize);
+                        (&csr_tgt[a..b], &csr_delay[a..b])
+                    }
+                };
+                // SAFETY: chunk target ranges are pairwise disjoint, chunk
+                // indices distinct, and the ring outlives this closure
+                // (run() blocks); rows are build-validated or regenerated
+                // by the same generator (targets < n, delays in range,
+                // ascending per delay run), and `back < delay_min <= d`
+                // was asserted above.
+                unsafe { shard.deliver(tgts, delays, w, back, lo, hi, c) };
             }
         });
     }
@@ -295,10 +524,21 @@ mod tests {
         hi: u32,
         threads: usize,
     ) -> RankEngine {
+        engine_mode(net, seed, lo, hi, threads, ConnectivityMode::Materialized)
+    }
+
+    fn engine_mode(
+        net: &NetworkParams,
+        seed: u64,
+        lo: u32,
+        hi: u32,
+        threads: usize,
+        mode: ConnectivityMode,
+    ) -> RankEngine {
         let pop = PS::init(net, seed, lo, hi - lo);
         let pool = Rc::new(ComputePool::new(threads));
         let be = Box::new(NativeBackend::with_pool(net, pop, pool.clone()));
-        RankEngine::with_pool(net, seed, 0, OwnedGids::contiguous(lo, hi), be, pool)
+        RankEngine::with_pool_mode(net, seed, 0, OwnedGids::contiguous(lo, hi), be, pool, mode)
     }
 
     #[test]
@@ -419,11 +659,62 @@ mod tests {
 
     #[test]
     fn syn_event_count_matches_fanin() {
-        // deliver one artificial spike and check the count equals the row len
+        // deliver one artificial spike and check the count equals the
+        // fan-in the stateless connectome declares — in BOTH modes
         let net = NetworkParams::tiny(64);
-        let mut e = engine(&net, 3, 0, 64);
-        let row_len = e.incoming.row(5).0.len() as u64;
-        e.deliver(&[Spike::new(5, 0)]);
-        assert_eq!(e.totals.syn_events, row_len);
+        let cp = ConnectivityParams::from_network(&net, 3);
+        let row_len = cp.targets_of(5).iter().filter(|&&(t, _)| t < 64).count() as u64;
+        for mode in [ConnectivityMode::Materialized, ConnectivityMode::Procedural] {
+            let mut e = engine_mode(&net, 3, 0, 64, 1, mode);
+            e.deliver(&[Spike::new(5, 0)]);
+            assert_eq!(e.totals.syn_events, row_len, "{mode}");
+        }
+    }
+
+    #[test]
+    fn procedural_engine_matches_materialized_bitwise() {
+        // Full engine loop in both connectivity modes, single- and
+        // multi-chunk: spike sequences, totals and final state must be
+        // identical (the in-process half of the equivalence oracle;
+        // tests/connectivity_modes.rs runs the cross-rank matrix).
+        let net = NetworkParams::tiny(300);
+        let mut reference = engine(&net, 42, 0, 300);
+        let mut ref_raster = Vec::new();
+        let mut spikes = Vec::new();
+        for _ in 0..120 {
+            reference.integrate(&mut spikes).unwrap();
+            ref_raster.push(spikes.clone());
+            reference.deliver(&spikes);
+            reference.finish_step();
+        }
+        assert!(reference.totals.spikes > 0, "network must be active");
+        for threads in [1usize, 2, 4] {
+            let mut e =
+                engine_mode(&net, 42, 0, 300, threads, ConnectivityMode::Procedural);
+            assert_eq!(e.connectivity_mode(), ConnectivityMode::Procedural);
+            for (t, expect) in ref_raster.iter().enumerate() {
+                e.integrate(&mut spikes).unwrap();
+                assert_eq!(&spikes, expect, "threads={threads} step={t}");
+                e.deliver(&spikes);
+                e.finish_step();
+            }
+            assert_eq!(e.totals, reference.totals, "threads={threads}");
+            let (v1, w1, rf1) = reference.state();
+            let (v2, w2, rf2) = e.state();
+            assert_eq!(v1, v2, "threads={threads}");
+            assert_eq!(w1, w2);
+            assert_eq!(rf1, rf2);
+            // memory accounting: the procedural store is state-bound,
+            // the materialized one holds the table
+            let mem = e.memory_use();
+            crate::metrics::memory::assert_procedural_state_bound(&mem, net.syn_per_neuron, 300);
+            assert!(mem.synapse_bytes < reference.memory_use().synapse_bytes);
+            assert!(mem.ring_bytes > 0 && reference.memory_use().ring_bytes > 0);
+        }
+        assert_eq!(
+            reference.connectivity_mode(),
+            ConnectivityMode::Materialized
+        );
+        assert!(reference.n_local_synapses() > 0);
     }
 }

@@ -4,7 +4,7 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 
-use crate::config::{ExchangeCadence, Mode, NetworkParams, Routing, RunConfig};
+use crate::config::{ExchangeCadence, Mode, NetworkParams, Routing, RunConfig, Topology};
 use crate::coordinator::{run, RunResult};
 
 /// Where harness CSVs land.
@@ -44,6 +44,22 @@ pub fn modeled(
     cfg.exchange_every = ExchangeCadence::Step;
     cfg.platform = platform.to_string();
     cfg.interconnect = interconnect.to_string();
+    run(&cfg)
+}
+
+/// A modeled run priced through the board → chassis tree model — the
+/// pricing the 100× (2M-neuron) appendix rows quote.
+pub fn modeled_tree(net: NetworkParams, procs: u32, sim_seconds: f64) -> Result<RunResult> {
+    let mut cfg = RunConfig::default();
+    cfg.net = net;
+    cfg.procs = procs;
+    cfg.sim_seconds = sim_seconds;
+    cfg.mode = Mode::Modeled;
+    cfg.routing = Routing::Broadcast;
+    cfg.exchange_every = ExchangeCadence::Step;
+    cfg.platform = "xeon".into();
+    cfg.interconnect = "ib".into();
+    cfg.topology = "tree:16,4".parse::<Topology>()?;
     run(&cfg)
 }
 

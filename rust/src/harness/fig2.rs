@@ -9,10 +9,12 @@
 
 use anyhow::Result;
 
+use crate::config::{ConnectivityMode, NetworkParams};
 use crate::metrics::comm_volume::expected_recv_bytes_per_rank;
+use crate::metrics::memory;
 use crate::util::table::{ascii_chart, Table};
 
-use super::common::{modeled, paper_networks, results_dir, sim_seconds};
+use super::common::{modeled, modeled_tree, paper_networks, results_dir, sim_seconds};
 
 pub fn run(fast: bool) -> Result<String> {
     let sim_s = sim_seconds(fast);
@@ -71,6 +73,35 @@ pub fn run(fast: bool) -> Result<String> {
         16,
     ));
     table.write_csv(&results_dir().join("fig2.csv"))?;
+
+    // 100x appendix: the 2M-neuron point procedural connectivity
+    // unlocks, priced through the tree model (board -> chassis) and
+    // the analytic per-rank memory model at the largest even-split
+    // rank. The auto column is what `--connectivity auto` resolves:
+    // materialized once enough ranks spread the table under the
+    // 2 GiB/rank budget, procedural below that.
+    let big = NetworkParams::paper(2_000_000);
+    let mut big_tbl = Table::new(
+        "2MN appendix — tree:16,4 pricing (modeled, xeon+IB) + memory model",
+        &["procs", "wall (s/10s)", "mat GB/rk", "proc MB/rk", "auto mode"],
+    );
+    for &p in &[4u32, 8, 32, 64, 256] {
+        let r = modeled_tree(big.clone(), p, sim_s)?;
+        let n_local = big.n_neurons.div_ceil(p);
+        let mat = memory::predicted_rank_bytes(&big, n_local, ConnectivityMode::Materialized);
+        let pro = memory::predicted_rank_bytes(&big, n_local, ConnectivityMode::Procedural);
+        let auto = memory::auto_connectivity_mode(&big, p, memory::DEFAULT_RANK_BUDGET_BYTES);
+        big_tbl.row(vec![
+            p.to_string(),
+            format!("{:.1}", r.wall_s * 10.0 / sim_s),
+            format!("{:.2}", mat as f64 / 1e9),
+            format!("{:.1}", pro as f64 / 1e6),
+            auto.to_string(),
+        ]);
+    }
+    out.push('\n');
+    out.push_str(&big_tbl.render());
+    big_tbl.write_csv(&results_dir().join("fig2_2m.csv"))?;
     Ok(out)
 }
 
@@ -87,5 +118,22 @@ mod tests {
         let wall256_10s = w256.wall_s * 5.0;
         assert!(wall32_10s < 14.0, "near real-time at 32: {wall32_10s}");
         assert!(wall256_10s > 3.0 * wall32_10s, "latency wall at 256");
+    }
+
+    #[test]
+    fn two_m_appendix_prices_the_tree_and_flips_the_memory_model() {
+        let big = NetworkParams::paper(2_000_000);
+        let r = modeled_tree(big.clone(), 64, 1.0).unwrap();
+        assert!(r.wall_s > 0.0);
+        // the appendix's auto column: the table busts the budget on few
+        // ranks, spreads back under it with enough of them
+        assert_eq!(
+            memory::auto_connectivity_mode(&big, 4, memory::DEFAULT_RANK_BUDGET_BYTES),
+            ConnectivityMode::Procedural
+        );
+        assert_eq!(
+            memory::auto_connectivity_mode(&big, 64, memory::DEFAULT_RANK_BUDGET_BYTES),
+            ConnectivityMode::Materialized
+        );
     }
 }

@@ -5,10 +5,20 @@
 
 use anyhow::Result;
 
+use crate::config::NetworkParams;
 use crate::metrics::comm_volume::expected_recv_bytes_per_rank;
+use crate::metrics::memory;
 use crate::util::table::Table;
 
-use super::common::{modeled, paper_networks, results_dir, sim_seconds};
+use super::common::{modeled, modeled_tree, paper_networks, results_dir, sim_seconds};
+
+/// Per-rank resident memory (largest even-split rank) in the mode
+/// `--connectivity auto` resolves for this cell, as "MB (mode)".
+fn mem_cell(net: &NetworkParams, procs: u32) -> String {
+    let mode = memory::auto_connectivity_mode(net, procs, memory::DEFAULT_RANK_BUDGET_BYTES);
+    let bytes = memory::predicted_rank_bytes(net, net.n_neurons.div_ceil(procs), mode);
+    format!("{:.0} ({})", bytes as f64 / 1e6, mode)
+}
 
 /// (net index, procs, paper wall s, paper comp %, comm %, barrier %)
 pub const PAPER_ROWS: &[(usize, u32, f64, f64, f64, f64)] = &[
@@ -29,7 +39,7 @@ pub fn run(fast: bool) -> Result<String> {
          AER bytes each rank receives per 10 s sim under filtered routing)",
         &[
             "net", "procs", "wall (s)", "paper", "comp %", "paper", "comm %", "paper",
-            "barrier %", "paper", "recv MB/r",
+            "barrier %", "paper", "recv MB/r", "mem MB/r (mode)",
         ],
     );
     for &(ni, p, pw, pc, pm, pb) in PAPER_ROWS {
@@ -56,8 +66,30 @@ pub fn run(fast: bool) -> Result<String> {
             format!("{:.1}", barrier * 100.0),
             format!("{pb:.1}"),
             format!("{:.1}", recv / 1e6),
+            mem_cell(net, p),
         ]);
     }
+    // 100x appendix row: the 2M-neuron network the paper could not
+    // host, priced through the tree model; procedural connectivity
+    // keeps the auto-resolved per-rank memory below the table's cells
+    // even though the network is 100x the paper's smallest.
+    let big = NetworkParams::paper(2_000_000);
+    let r = modeled_tree(big.clone(), 256, sim_s)?;
+    let (comp, comm, barrier) = r.components.fractions();
+    table.row(vec![
+        "2000KN".to_string(),
+        "256".to_string(),
+        format!("{:.1}", r.wall_s * 10.0 / sim_s),
+        "-".to_string(),
+        format!("{:.1}", comp * 100.0),
+        "-".to_string(),
+        format!("{:.1}", comm * 100.0),
+        "-".to_string(),
+        format!("{:.1}", barrier * 100.0),
+        "-".to_string(),
+        "-".to_string(),
+        mem_cell(&big, 256),
+    ]);
     let out = table.render();
     table.write_csv(&results_dir().join("table1.csv"))?;
     Ok(out)
@@ -83,5 +115,17 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn memory_column_reports_mode_and_megabytes() {
+        // every paper cell fits the materialized table per rank...
+        for &(ni, p, ..) in PAPER_ROWS {
+            let cell = mem_cell(&paper_networks()[ni].1, p);
+            assert!(cell.contains("(materialized)"), "{cell}");
+        }
+        // ...while the 2M appendix goes procedural on few ranks
+        let cell = mem_cell(&NetworkParams::paper(2_000_000), 4);
+        assert!(cell.contains("(procedural)"), "{cell}");
     }
 }

@@ -8,6 +8,7 @@
 //!           [--partition index|round-robin|greedy-comms]
 //!           [--leader-rotation fixed|round-robin|auto]
 //!           [--compute-threads N|auto]
+//!           [--connectivity materialized|procedural|auto]
 //!           [--platform NAME] [--interconnect NAME] [--seed X] [--progress]
 //! dpsnn repro <fig1..fig8|table1..table4|all> [--fast]
 //! dpsnn bench-smoke [--neurons N] [--procs P] [--seconds S] [--out F]
@@ -87,6 +88,16 @@ RUN OPTIONS:
                      rank threads). The chunk geometry is fixed by the
                      resolved count alone, so the raster is bitwise
                      identical for every N on every host
+  --connectivity C   materialized | procedural | auto — synapse-state
+                     representation (default materialized): materialized
+                     prebuilds the incoming CSR table, procedural
+                     regenerates each firing source's row from the
+                     stateless connectome at delivery time and swaps
+                     the dense delay ring for compressed per-slot
+                     event buckets (O(state) resident memory — 100x
+                     networks fit where the table cannot build; the
+                     raster is bitwise identical either way); auto asks
+                     the analytic memory model (2 GiB/rank budget)
   --platform NAME    modeled platform preset (default xeon)
   --interconnect IC  ib | eth1g | shm | exanest (default ib)
   --artifacts DIR    AOT artifact directory (default artifacts)
@@ -129,6 +140,15 @@ BENCH-SMOKE OPTIONS:
                      topology x cadence combination — plus the online
                      re-planner's injected regime shifts (switch window
                      and raster identity)
+  --memory-out F     connectivity-mode memory JSON output path (default
+                     BENCH_memory.json): materialized vs procedural
+                     live runs (bitwise-identical rasters, measured
+                     resident bytes vs the analytic closed forms,
+                     O(state) gate on the procedural store) plus the
+                     100x acceptance point — 2M neurons on ONE rank,
+                     resolved procedural by --connectivity auto, run
+                     inside the per-rank budget the materialized table
+                     cannot fit
 
 REPRO IDS:
   fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 table1 table2 table3 table4 all
@@ -209,6 +229,11 @@ fn build_config(args: &Args) -> Result<RunConfig> {
     match args.get("compute-threads") {
         Some(t) if t.eq_ignore_ascii_case("auto") => cfg.auto.compute_threads = true,
         Some(t) => cfg.compute_threads = t.parse()?,
+        None => {}
+    }
+    match args.get("connectivity") {
+        Some(c) if c.eq_ignore_ascii_case("auto") => cfg.auto.connectivity = true,
+        Some(c) => cfg.connectivity = c.parse()?,
         None => {}
     }
     if let Some(p) = args.get("platform") {
@@ -996,6 +1021,189 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
     );
     std::fs::write(&autotune_out, &tune_json)?;
 
+    // Connectivity-mode memory benchmark: the same tiny live workload
+    // under materialized and procedural synapse state (rasters must be
+    // bitwise identical, measured resident bytes must sit on the
+    // analytic closed forms), then the 100x acceptance point:
+    // 2_000_000 neurons on ONE rank, where the materialized closed
+    // form (~11.3 GB) busts the per-rank budget and `--connectivity
+    // auto` must therefore run procedurally — in a fraction of the
+    // memory the table alone would need.
+    use dpsnn::config::ConnectivityMode;
+    use dpsnn::metrics::memory as memmodel;
+    let memory_out = args.get_or("memory-out", "BENCH_memory.json".to_string())?;
+    let run_conn = |mode: ConnectivityMode| -> Result<RunResult> {
+        let mut cfg = RunConfig::default();
+        cfg.net = NetworkParams::tiny(neurons);
+        cfg.net.delay_min_steps = delay_min.clamp(1, cfg.net.delay_max_steps);
+        cfg.procs = procs;
+        cfg.sim_seconds = seconds;
+        cfg.routing = Routing::Filtered;
+        cfg.connectivity = mode;
+        cfg.validate()?;
+        eprintln!("[bench-smoke] {mode} connectivity, {procs} procs...");
+        coordinator::run(&cfg)
+    };
+    let conn_mat = run_conn(ConnectivityMode::Materialized)?;
+    let conn_proc = run_conn(ConnectivityMode::Procedural)?;
+    anyhow::ensure!(
+        conn_mat.pop_counts == conn_proc.pop_counts
+            && conn_mat.total_syn_events == conn_proc.total_syn_events,
+        "connectivity modes must produce identical rasters"
+    );
+    let m_tiny = NetworkParams::tiny(neurons).syn_per_neuron;
+    let n_local_even = neurons / procs.max(1);
+    for (rank, mem) in conn_mat.memory.iter().enumerate() {
+        // realized local synapse counts are stochastic around the
+        // closed form's m * n_local expectation — 15% covers it easily
+        let closed =
+            memmodel::materialized_synapse_bytes(neurons, m_tiny, n_local_even) as f64;
+        let meas = mem.synapse_bytes as f64;
+        anyhow::ensure!(
+            (meas - closed).abs() <= 0.15 * closed,
+            "rank {rank}: materialized synapse store {meas:.0} B departs >15% \
+             from the closed form {closed:.0} B"
+        );
+    }
+    for mem in &conn_proc.memory {
+        // panics loudly if the persistent store is not O(state)
+        memmodel::assert_procedural_state_bound(mem, m_tiny, n_local_even);
+    }
+    let sum_syn = |r: &RunResult| -> u64 { r.memory.iter().map(|m| m.synapse_bytes).sum() };
+    anyhow::ensure!(
+        sum_syn(&conn_proc) * 16 <= sum_syn(&conn_mat),
+        "procedural synapse store ({} B) must sit far below the materialized \
+         table ({} B)",
+        sum_syn(&conn_proc),
+        sum_syn(&conn_mat)
+    );
+
+    // The 100x acceptance point.
+    let big_net = NetworkParams::paper(2_000_000);
+    let mat_closed = memmodel::predicted_rank_bytes(
+        &big_net,
+        big_net.n_neurons,
+        ConnectivityMode::Materialized,
+    );
+    anyhow::ensure!(
+        mat_closed > memmodel::DEFAULT_RANK_BUDGET_BYTES,
+        "the 100x point must not fit materialized ({mat_closed} B under budget?)"
+    );
+    eprintln!(
+        "[bench-smoke] 100x point: {} neurons on 1 rank, --connectivity auto \
+         (materialized closed form {:.2} GB vs {} GiB/rank budget)...",
+        big_net.n_neurons,
+        mat_closed as f64 / 1e9,
+        memmodel::DEFAULT_RANK_BUDGET_BYTES >> 30,
+    );
+    let mut big = RunConfig::default();
+    big.net = big_net.clone();
+    big.procs = 1;
+    big.sim_seconds = 0.05;
+    big.auto.connectivity = true;
+    big.validate()?;
+    let big_run = coordinator::run(&big)?;
+    anyhow::ensure!(
+        big_run.connectivity == ConnectivityMode::Procedural,
+        "auto must resolve the 100x point to procedural, got {}",
+        big_run.connectivity
+    );
+    anyhow::ensure!(big_run.total_spikes > 0, "the 100x run was silent");
+    let big_mem = big_run.memory.first().copied().unwrap_or_default();
+    memmodel::assert_procedural_state_bound(
+        &big_mem,
+        big_net.syn_per_neuron,
+        big_net.n_neurons,
+    );
+    anyhow::ensure!(
+        big_mem.total() * 2 < mat_closed,
+        "100x procedural run resident {} B is not well under the materialized \
+         floor {mat_closed} B",
+        big_mem.total()
+    );
+
+    let mode_section = |r: &RunResult| -> String {
+        let u64s = |f: fn(&dpsnn::metrics::MemoryUse) -> u64| -> String {
+            let cells: Vec<String> = r.memory.iter().map(|m| f(m).to_string()).collect();
+            format!("[{}]", cells.join(","))
+        };
+        let total: u64 = r.memory.iter().map(|m| m.total()).sum();
+        let syn_expected = neurons as u64 * m_tiny as u64;
+        format!(
+            concat!(
+                "{{\n",
+                "      \"connectivity\": \"{}\",\n",
+                "      \"wall_s\": {:.6},\n",
+                "      \"total_spikes\": {},\n",
+                "      \"synapse_bytes_per_rank\": {},\n",
+                "      \"ring_bytes_per_rank\": {},\n",
+                "      \"scratch_bytes_per_rank\": {},\n",
+                "      \"max_rank_total_bytes\": {},\n",
+                "      \"bytes_per_neuron\": {:.2},\n",
+                "      \"bytes_per_synapse\": {:.4}\n",
+                "    }}"
+            ),
+            r.connectivity,
+            r.wall_s,
+            r.total_spikes,
+            u64s(|m| m.synapse_bytes),
+            u64s(|m| m.ring_bytes),
+            u64s(|m| m.scratch_bytes),
+            r.max_rank_memory_bytes(),
+            total as f64 / neurons as f64,
+            total as f64 / syn_expected as f64,
+        )
+    };
+    let mem_json = format!(
+        concat!(
+            "{{\n",
+            "  \"benchmark\": \"memory_smoke\",\n",
+            "  \"neurons\": {},\n",
+            "  \"syn_per_neuron\": {},\n",
+            "  \"procs\": {},\n",
+            "  \"sim_seconds\": {},\n",
+            "  \"raster_identical\": true,\n",
+            "  \"modes\": {{\n",
+            "    \"materialized\": {},\n",
+            "    \"procedural\": {}\n",
+            "  }},\n",
+            "  \"acceptance_2m\": {{\n",
+            "    \"neurons\": {},\n",
+            "    \"syn_per_neuron\": {},\n",
+            "    \"budget_bytes\": {},\n",
+            "    \"materialized_closed_form_bytes\": {},\n",
+            "    \"resolved_connectivity\": \"{}\",\n",
+            "    \"resident_synapse_bytes\": {},\n",
+            "    \"resident_ring_bytes\": {},\n",
+            "    \"resident_scratch_bytes\": {},\n",
+            "    \"resident_total_bytes\": {},\n",
+            "    \"table_over_resident_ratio\": {:.1},\n",
+            "    \"total_spikes\": {},\n",
+            "    \"wall_s\": {:.6}\n",
+            "  }}\n",
+            "}}\n"
+        ),
+        neurons,
+        m_tiny,
+        procs,
+        seconds,
+        mode_section(&conn_mat),
+        mode_section(&conn_proc),
+        big_net.n_neurons,
+        big_net.syn_per_neuron,
+        memmodel::DEFAULT_RANK_BUDGET_BYTES,
+        mat_closed,
+        big_run.connectivity,
+        big_mem.synapse_bytes,
+        big_mem.ring_bytes,
+        big_mem.scratch_bytes,
+        big_mem.total(),
+        mat_closed as f64 / big_mem.total().max(1) as f64,
+        big_run.total_spikes,
+        big_run.wall_s,
+    );
+    std::fs::write(&memory_out, &mem_json)?;
+
     println!("{}", filtered.summary());
     println!(
         "bench-smoke: recv bytes/run {recv_f} (filtered) vs {recv_b} (broadcast), \
@@ -1004,12 +1212,18 @@ fn cmd_bench_smoke(args: &Args) -> Result<()> {
          vs {inter_hier} ({topology}); off-board payload {off_index} B (index) \
          vs {off_greedy} B ({challenger}), -{:.2}%; neuron_update {nu_rt:.0}x \
          real time (SoA {nu_speedup:.2}x scalar); planner within 10% of swept \
-         best on {within_10}/6 presets, online switch at windows {}/{}; wrote \
-         {out} + {topo_out} + {part_out} + {compute_out} + {autotune_out}",
+         best on {within_10}/6 presets, online switch at windows {}/{}; \
+         connectivity modes raster-identical, 2M-neuron point ran {} with \
+         {:.0} MB resident vs {:.2} GB materialized closed form; wrote \
+         {out} + {topo_out} + {part_out} + {compute_out} + {autotune_out} + \
+         {memory_out}",
         reduction * 100.0,
         delta_frac * 100.0,
         shift_to_step.replans[0].window,
         shift_to_epoch.replans[0].window,
+        big_run.connectivity,
+        big_mem.total() as f64 / 1e6,
+        mat_closed as f64 / 1e9,
     );
     Ok(())
 }

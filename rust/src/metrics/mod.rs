@@ -5,10 +5,12 @@
 pub mod synevents;
 pub mod energy;
 pub mod comm_volume;
+pub mod memory;
 
 pub use comm_volume::{
     expected_exchanges, pair_liveness, payload_level_bytes, predicted_payload_level_bytes,
     CommVolume,
 };
 pub use energy::joules_per_synaptic_event;
+pub use memory::MemoryUse;
 pub use synevents::SynapticEventCount;

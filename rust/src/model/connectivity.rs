@@ -158,6 +158,85 @@ impl IncomingSynapses {
     }
 }
 
+/// Procedural stand-in for [`IncomingSynapses`]: instead of a prebuilt
+/// CSR table, a firing source's row is regenerated on demand from the
+/// stateless connectome and filtered to the rank's owned gids.
+///
+/// Resident memory is O(state) — the generator parameters plus the
+/// owned-interval list — instead of O(synapse), which is what lets a
+/// 100×-scale network fit on one node (Knight & Nowotny; Kurth et al.
+/// 2021). Because [`ConnectivityParams::synapse`] is a pure function of
+/// `(seed, s, k)` and the regenerated row is sorted exactly like
+/// [`IncomingSynapses::build_owned`] sorts its scratch (delay-major,
+/// ascending local target within each equal-delay run), delivery through
+/// a regenerated row is bitwise identical to delivery through the
+/// materialized table.
+#[derive(Debug, Clone)]
+pub struct ProceduralSynapses {
+    cp: ConnectivityParams,
+    owned: OwnedGids,
+}
+
+impl ProceduralSynapses {
+    pub fn new(cp: ConnectivityParams, owned: OwnedGids) -> Self {
+        assert!(!owned.is_empty(), "a rank must own at least one neuron");
+        assert!(
+            owned.intervals().last().unwrap().1 <= cp.n,
+            "owned gids exceed network size {}",
+            cp.n
+        );
+        Self { cp, owned }
+    }
+
+    /// Neurons resident on this rank.
+    pub fn n_local(&self) -> u32 {
+        self.owned.len()
+    }
+
+    /// The generator parameters this store regenerates rows from.
+    pub fn params(&self) -> &ConnectivityParams {
+        &self.cp
+    }
+
+    /// Regenerate source `s`'s incoming row for this rank into the
+    /// caller's buffers (appended; not cleared here so several rows can
+    /// be packed into one scratch CSR). Identical content and order to
+    /// [`IncomingSynapses::row`] on the same ownership: delay-major,
+    /// ascending local target within each equal-delay run — the
+    /// invariant `deliver_row_offset_ranged`'s run walk depends on.
+    /// Returns the number of synapses appended.
+    pub fn row_into(
+        &self,
+        s: u32,
+        tgt_local: &mut Vec<u32>,
+        delay: &mut Vec<u8>,
+        scratch: &mut Vec<(u8, u32)>,
+    ) -> usize {
+        scratch.clear();
+        for k in 0..self.cp.m {
+            let (t, d) = self.cp.synapse(s, k);
+            if let Some(local) = self.owned.try_local_of(t) {
+                scratch.push((d, local));
+            }
+        }
+        scratch.sort_unstable();
+        for &(d, t) in scratch.iter() {
+            tgt_local.push(t);
+            delay.push(d);
+        }
+        scratch.len()
+    }
+
+    /// Resident bytes of the procedural store: the generator params plus
+    /// the owned-interval list. O(state), independent of synapse count —
+    /// the closed form `metrics::memory::procedural_synapse_bytes` pins.
+    pub fn resident_bytes(&self) -> usize {
+        std::mem::size_of::<ConnectivityParams>()
+            + std::mem::size_of::<OwnedGids>()
+            + self.owned.intervals().len() * std::mem::size_of::<(u32, u32)>()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -264,6 +343,37 @@ mod tests {
         assert_eq!(a.n_synapses(), b.n_synapses());
         for s in 0..128u32 {
             assert_eq!(a.row(s), b.row(s));
+        }
+    }
+
+    #[test]
+    fn procedural_rows_match_materialized_bitwise() {
+        let c = cp(128, 32);
+        for owned in [
+            OwnedGids::contiguous(0, 128),
+            OwnedGids::contiguous(40, 73),
+            OwnedGids::from_intervals(vec![(8, 24), (96, 112)]),
+        ] {
+            let mat = IncomingSynapses::build_owned(&c, &owned);
+            let prc = ProceduralSynapses::new(c, owned.clone());
+            assert_eq!(prc.n_local(), mat.n_local());
+            let (mut tl, mut dl, mut sc) = (Vec::new(), Vec::new(), Vec::new());
+            for s in 0..128u32 {
+                tl.clear();
+                dl.clear();
+                let k = prc.row_into(s, &mut tl, &mut dl, &mut sc);
+                let (mt, md) = mat.row(s);
+                assert_eq!(k, mt.len(), "s={s}");
+                assert_eq!(&tl[..], mt, "targets differ at s={s}");
+                assert_eq!(&dl[..], md, "delays differ at s={s}");
+            }
+            // O(state): a few machine words, never O(synapse)
+            assert!(
+                prc.resident_bytes() < 256,
+                "procedural store grew with synapses: {} B",
+                prc.resident_bytes()
+            );
+            assert!(mat.resident_bytes() > prc.resident_bytes());
         }
     }
 

@@ -6,6 +6,6 @@ pub mod population;
 pub mod connectivity;
 pub mod poisson;
 
-pub use connectivity::{ConnectivityParams, IncomingSynapses};
+pub use connectivity::{ConnectivityParams, IncomingSynapses, ProceduralSynapses};
 pub use neuron::{collect_fired, step_native, step_native_masked, StepParams};
 pub use population::PopulationSoA;

@@ -14,6 +14,11 @@
 //!   run-based [`DelayRing::deliver_row_offset`] / ranged shards), at
 //!   each requested `--compute-threads` count.
 //!
+//! Synaptic delivery adds a third, `procedural`, variant: rows
+//! regenerated on the fly from the stateless connectome and delivered
+//! through the compressed ring — the compute cost of the O(state)
+//! `--connectivity procedural` memory mode.
+//!
 //! Every case reports elems/sec and `realtime_x`: how many times faster
 //! than the real-time line (one `dt_ms` network step per `dt_ms` of wall
 //! clock) that kernel alone would run the n-neuron network.
@@ -21,8 +26,9 @@
 use std::rc::Rc;
 
 use crate::config::NetworkParams;
-use crate::engine::delay_queue::DelayRing;
-use crate::model::connectivity::{ConnectivityParams, IncomingSynapses};
+use crate::engine::delay_queue::{CompressedDelayRing, DelayRing};
+use crate::engine::partition::OwnedGids;
+use crate::model::connectivity::{ConnectivityParams, IncomingSynapses, ProceduralSynapses};
 use crate::model::neuron::{step_native, StepParams};
 use crate::model::poisson::ExternalStimulus;
 use crate::model::population::PopulationSoA;
@@ -297,6 +303,37 @@ pub fn run_compute_bench(b: &mut Bench, n: u32, threads: &[usize]) -> ComputeBen
             elems_per_step: events as f64,
         });
     }
+    {
+        // procedural variant: regenerate each firing source's row from
+        // the stateless connectome (no CSR table resident) and deliver
+        // through the compressed ring — prices the compute the
+        // O(state) memory mode trades for the table's DRAM.
+        let proc_syn = ProceduralSynapses::new(cp, OwnedGids::contiguous(0, n));
+        let mut ring = CompressedDelayRing::new(nn, net.delay_max_steps, 1);
+        let (mut tgt, mut dl) = (Vec::new(), Vec::new());
+        let mut scratch: Vec<(u8, u32)> = Vec::new();
+        let st = b.bench_elems(
+            &format!("synaptic_delivery {n_spikes} spikes procedural"),
+            events as f64,
+            || {
+                for &s in &spikes {
+                    tgt.clear();
+                    dl.clear();
+                    proc_syn.row_into(s, &mut tgt, &mut dl, &mut scratch);
+                    ring.deliver_row_offset(&tgt, &dl, 0.4, 0);
+                }
+                ring.advance();
+            },
+        );
+        cases.push(ComputeCase {
+            kind: "synaptic_delivery",
+            variant: "procedural",
+            threads: 1,
+            elems_per_iter: events as f64,
+            secs_per_iter: st.mean,
+            elems_per_step: events as f64,
+        });
+    }
     for &t in threads {
         let pool = ComputePool::new(t);
         let chunks = pool.chunks();
@@ -407,8 +444,14 @@ mod tests {
         b.measure = std::time::Duration::from_millis(5);
         b.max_samples = 3;
         let report = run_compute_bench(&mut b, 2048, &[1, 2]);
-        assert_eq!(report.cases.len(), 3 + 3 * report.threads.len());
+        // 3 scalar baselines + 1 procedural delivery + 3 SoA kernels
+        // per thread count
+        assert_eq!(report.cases.len(), 4 + 3 * report.threads.len());
         assert!(report.cases.iter().all(|c| c.secs_per_iter > 0.0));
+        assert!(
+            report.case("synaptic_delivery", "procedural", 1).is_some(),
+            "procedural row-regeneration case missing"
+        );
         let json = report.to_json();
         assert!(json.contains("\"n\": 2048"));
     }

@@ -408,6 +408,16 @@ pub fn resolve(cfg: &RunConfig) -> Result<(RunConfig, Option<Plan>)> {
     if cfg.auto.compute_threads {
         out.compute_threads = auto_compute_threads(cfg.procs);
     }
+    if cfg.auto.connectivity {
+        // Memory-model axis, not a comm-planner one: materialize the
+        // synapse table while the closed-form per-rank bytes fit the
+        // budget, regenerate procedurally beyond it.
+        out.connectivity = crate::metrics::memory::auto_connectivity_mode(
+            &cfg.net,
+            cfg.procs,
+            crate::metrics::memory::DEFAULT_RANK_BUDGET_BYTES,
+        );
+    }
     let plan = if cfg.auto.any_planned() {
         let planner = Planner::from_config(cfg)?;
         let dmin = cfg.net.delay_min_steps.max(1);
@@ -658,6 +668,24 @@ mod tests {
         let (resolved, plan) = resolve(&cfg).unwrap();
         assert!(plan.is_none());
         assert!((1..=256).contains(&resolved.compute_threads));
+    }
+
+    #[test]
+    fn resolve_picks_connectivity_from_the_memory_model() {
+        use crate::config::ConnectivityMode;
+        // 20480N split over 32 ranks fits any budget: materialize.
+        let mut cfg = paper_cfg("xeon");
+        cfg.auto.connectivity = true;
+        let (resolved, plan) = resolve(&cfg).unwrap();
+        assert!(plan.is_none(), "connectivity needs no comm planner");
+        assert!(resolved.auto.connectivity, "flag survives as metadata");
+        assert_eq!(resolved.connectivity, ConnectivityMode::Materialized);
+        // The 100x point on one rank cannot materialize (~11.3 GB
+        // closed form vs the 2 GiB budget): procedural.
+        cfg.net = NetworkParams::paper(2_000_000);
+        cfg.procs = 1;
+        let (resolved, _) = resolve(&cfg).unwrap();
+        assert_eq!(resolved.connectivity, ConnectivityMode::Procedural);
     }
 
     #[test]

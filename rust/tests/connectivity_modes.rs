@@ -1,0 +1,214 @@
+//! Materialized-vs-procedural equivalence oracle.
+//!
+//! `--connectivity procedural` regenerates each firing source's
+//! incoming row from the stateless connectome instead of indexing a
+//! prebuilt CSR table, and queues it in compressed per-delay buckets
+//! instead of the dense delay grid. None of that may be observable in
+//! the physics: the raster must stay *bitwise identical* to the
+//! materialized reference across partition policies, topologies,
+//! exchange cadences, thread counts and process counts. These tests
+//! are the lockdown; the pure-connectome property tests underneath
+//! them pin the generator the procedural mode leans on.
+
+use dpsnn::config::{
+    ConnectivityMode, ExchangeCadence, Mode, NetworkParams, PartitionPolicy, RunConfig, Topology,
+};
+use dpsnn::coordinator::{self, RunResult};
+use dpsnn::engine::partition::OwnedGids;
+use dpsnn::metrics::memory;
+use dpsnn::model::connectivity::{ConnectivityParams, IncomingSynapses, ProceduralSynapses};
+use dpsnn::util::prop::forall;
+
+fn base(n: u32, procs: u32, seconds: f64) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.net = NetworkParams::tiny(n);
+    cfg.procs = procs;
+    cfg.sim_seconds = seconds;
+    cfg.seed = 42;
+    cfg.mode = Mode::Live;
+    cfg
+}
+
+/// Run the same config under both connectivity modes.
+fn run_pair(mut cfg: RunConfig) -> (RunResult, RunResult) {
+    cfg.connectivity = ConnectivityMode::Materialized;
+    let mat = coordinator::run(&cfg).unwrap();
+    cfg.connectivity = ConnectivityMode::Procedural;
+    let pro = coordinator::run(&cfg).unwrap();
+    (mat, pro)
+}
+
+fn assert_identical(mat: &RunResult, pro: &RunResult, label: &str) {
+    assert!(mat.total_spikes > 0, "{label}: reference run was silent");
+    assert_eq!(mat.pop_counts, pro.pop_counts, "{label}: raster diverged");
+    assert_eq!(mat.total_spikes, pro.total_spikes, "{label}");
+    assert_eq!(mat.total_syn_events, pro.total_syn_events, "{label}");
+    assert_eq!(mat.total_ext_events, pro.total_ext_events, "{label}");
+    assert_eq!(mat.total_exc_spikes, pro.total_exc_spikes, "{label}");
+    assert_eq!(
+        mat.rank_spikes, pro.rank_spikes,
+        "{label}: per-rank spike placement diverged"
+    );
+}
+
+#[test]
+fn equivalent_across_partition_policies_and_process_counts() {
+    for policy in [
+        PartitionPolicy::Index,
+        PartitionPolicy::RoundRobin,
+        PartitionPolicy::GreedyComms,
+    ] {
+        for procs in [1u32, 3, 4, 8] {
+            let mut cfg = base(512, procs, 0.3);
+            cfg.partition = policy;
+            let (mat, pro) = run_pair(cfg);
+            assert_identical(&mat, &pro, &format!("{policy} P={procs}"));
+        }
+    }
+}
+
+#[test]
+fn equivalent_across_topologies_and_cadences() {
+    // tree:2,2 at P=6 is the ragged case: the last chassis is missing
+    // half its boards, so leader election and chunk geometry differ
+    // from the full tree.
+    for (topo, procs) in [("nodes:2", 4u32), ("tree:2,2", 8), ("tree:2,2", 6)] {
+        for cadence in [ExchangeCadence::Step, ExchangeCadence::MinDelay] {
+            let mut cfg = base(512, procs, 0.3);
+            // widen the min delay so min-delay batching really batches
+            cfg.net.delay_min_steps = 4;
+            cfg.topology = topo.parse::<Topology>().unwrap();
+            cfg.exchange_every = cadence;
+            let (mat, pro) = run_pair(cfg);
+            assert_identical(&mat, &pro, &format!("{topo} P={procs} {cadence}"));
+        }
+    }
+}
+
+#[test]
+fn equivalent_across_compute_threads() {
+    let reference = {
+        let mut cfg = base(512, 2, 0.3);
+        cfg.compute_threads = 1;
+        coordinator::run(&cfg).unwrap()
+    };
+    for threads in [1u32, 2, 4] {
+        let mut cfg = base(512, 2, 0.3);
+        cfg.compute_threads = threads;
+        let (mat, pro) = run_pair(cfg);
+        assert_identical(&mat, &pro, &format!("threads={threads}"));
+        assert_eq!(
+            reference.pop_counts, pro.pop_counts,
+            "threads={threads}: threading must not show in the raster"
+        );
+    }
+}
+
+#[test]
+fn measured_resident_bytes_match_the_closed_forms() {
+    let net = NetworkParams::tiny(512);
+    let (n, m, n_local) = (512u32, net.syn_per_neuron, 256u32);
+    let (mat, pro) = run_pair(base(n, 2, 0.2));
+    assert_eq!(mat.connectivity, ConnectivityMode::Materialized);
+    assert_eq!(pro.connectivity, ConnectivityMode::Procedural);
+    assert_eq!(mat.memory.len(), 2);
+    assert_eq!(pro.memory.len(), 2);
+    for mem in &mat.memory {
+        // expected table size is stochastic around the closed form
+        let closed = memory::materialized_synapse_bytes(n, m, n_local) as f64;
+        let meas = mem.synapse_bytes as f64;
+        assert!(
+            (meas - closed).abs() <= 0.15 * closed,
+            "materialized table {meas} B vs closed form {closed} B"
+        );
+        // the dense ring's size is exact, and materialized mode keeps
+        // no regeneration scratch
+        assert_eq!(
+            mem.ring_bytes,
+            memory::dense_ring_bytes(n_local, net.delay_max_steps)
+        );
+        assert_eq!(mem.scratch_bytes, 0);
+    }
+    for mem in &pro.memory {
+        // index placement -> one owned interval -> the formula is exact
+        assert_eq!(mem.synapse_bytes, memory::procedural_synapse_bytes(1));
+        assert!(
+            mem.ring_bytes
+                >= memory::compressed_ring_bytes_idle(n_local, net.delay_max_steps, 1),
+            "compressed ring below its idle floor"
+        );
+        memory::assert_procedural_state_bound(mem, m, n_local);
+    }
+    let worst_pro = pro.max_rank_memory_bytes();
+    let worst_mat = mat.max_rank_memory_bytes();
+    assert!(
+        worst_pro < worst_mat,
+        "procedural rank resident {worst_pro} B not below materialized {worst_mat} B"
+    );
+}
+
+#[test]
+fn connectome_generator_properties() {
+    forall("synapse(s,k) invariants", 40, |rng| {
+        let n = 50 + rng.next_below(400);
+        let m = 1 + rng.next_below((n / 4).max(2));
+        let dmax = 1 + rng.next_below(16);
+        let dmin = 1 + rng.next_below(dmax);
+        let cp = ConnectivityParams { seed: rng.next_u64(), n, m, dmin, dmax };
+        let s = rng.next_below(n);
+        // targets_of agrees with per-key enumeration; every synapse is
+        // in range, never a self-connection, delay within [dmin, dmax]
+        let row = cp.targets_of(s);
+        assert_eq!(row.len(), m as usize);
+        for (k, &(t, d)) in row.iter().enumerate() {
+            assert!(t < n && t != s, "target {t} out of range for s={s}");
+            assert!((d as u32) >= dmin && (d as u32) <= dmax, "delay {d}");
+            assert_eq!((t, d), cp.synapse(s, k as u32), "stateless regen");
+        }
+        // however the network is split, source s lands exactly m local
+        // synapses in total across all ranks
+        let p = 1 + rng.next_below(6);
+        let mut total = 0usize;
+        for r in 0..p {
+            let lo = (n as u64 * r as u64 / p as u64) as u32;
+            let hi = (n as u64 * (r as u64 + 1) / p as u64) as u32;
+            if lo == hi {
+                continue;
+            }
+            let inc = IncomingSynapses::build(&cp, lo, hi);
+            total += inc.row(s).0.len();
+        }
+        assert_eq!(total, m as usize, "split into {p} ranks lost synapses");
+    });
+}
+
+#[test]
+fn row_regeneration_matches_the_table_on_permuted_ownership() {
+    forall("row_into == build_owned rows", 25, |rng| {
+        let n = 120 + rng.next_below(200);
+        let m = 1 + rng.next_below(n / 5);
+        let dmax = 1 + rng.next_below(12);
+        let cp = ConnectivityParams { seed: rng.next_u64(), n, m, dmin: 1, dmax };
+        // a two-interval ownership, as a round-robin or greedy
+        // placement would hand a rank
+        let a = 1 + rng.next_below(n / 3);
+        let lo2 = a + 1 + rng.next_below(n / 3);
+        let hi2 = lo2 + 1 + rng.next_below(n - lo2);
+        let owned = OwnedGids::from_intervals(vec![(0, a), (lo2, hi2)]);
+        let table = IncomingSynapses::build_owned(&cp, &owned);
+        let ps = ProceduralSynapses::new(cp, owned);
+        let (mut tgt, mut dl) = (Vec::new(), Vec::new());
+        let mut scratch: Vec<(u8, u32)> = Vec::new();
+        for s in 0..n {
+            tgt.clear();
+            dl.clear();
+            let len = ps.row_into(s, &mut tgt, &mut dl, &mut scratch);
+            let (tt, td) = table.row(s);
+            assert_eq!(len, tt.len(), "row length diverged at s={s}");
+            assert_eq!(&tgt[..], tt, "targets diverged at s={s}");
+            assert_eq!(&dl[..], td, "delays diverged at s={s}");
+        }
+        // two intervals, still O(state)
+        assert_eq!(ps.resident_bytes() as u64, memory::procedural_synapse_bytes(2));
+    });
+}
