@@ -1,0 +1,122 @@
+//! Job specs for the resident simulation server.
+//!
+//! A *job* is a named [`RunConfig`] payload. The server (`runtime::server`)
+//! accepts many of them concurrently over its in-process queue; the name
+//! travels through queueing, scheduling, and results so callers can match
+//! streamed events back to submissions.
+//!
+//! On disk a job is the same TOML a `dpsnn run config.toml` invocation
+//! takes, optionally extended with a `[job]` table:
+//!
+//! ```toml
+//! [job]
+//! name = "awake-4rank"     # default: the file stem
+//!
+//! [network]
+//! neurons = 10000
+//! # ... every [run]/[network] key RunConfig::from_toml_str accepts
+//! ```
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::tomlmini;
+
+use super::RunConfig;
+
+/// One queued simulation: a display name plus the full run configuration.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub name: String,
+    pub cfg: RunConfig,
+}
+
+impl JobSpec {
+    pub fn new(name: impl Into<String>, cfg: RunConfig) -> Self {
+        Self { name: name.into(), cfg }
+    }
+
+    /// Parse a job TOML. The `[job] name` key wins; otherwise the file
+    /// stem names the job.
+    pub fn from_toml_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading job spec {}", path.display()))?;
+        let stem = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "job".to_string());
+        Self::from_toml_str(&stem, &text)
+            .with_context(|| format!("parsing job spec {}", path.display()))
+    }
+
+    /// Parse a job TOML from a string, with `default_name` used when the
+    /// `[job]` table does not name the job.
+    pub fn from_toml_str(default_name: &str, text: &str) -> Result<Self> {
+        // The doc is parsed twice (once for the job table, once inside
+        // RunConfig) — tomlmini docs are a few dozen lines, so clarity
+        // beats threading a Doc through RunConfig's private from_doc.
+        let doc = tomlmini::parse(text)?;
+        let name = doc.str_or("job", "name", default_name);
+        let cfg = RunConfig::from_toml_str(text)?;
+        Ok(Self { name, cfg })
+    }
+}
+
+/// Resident-server sizing knobs (see `runtime::server::SimServer`).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Rank budget shared by all in-flight jobs; the scheduler never
+    /// admits a set of jobs whose `procs` sum exceeds it.
+    pub total_ranks: u32,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        let ranks = std::thread::available_parallelism()
+            .map(|n| n.get() as u32)
+            .unwrap_or(4)
+            .max(2);
+        Self { total_ranks: ranks }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BODY: &str = "\
+[network]
+neurons = 512
+
+[run]
+sim_seconds = 0.1
+procs = 2
+seed = 7
+";
+
+    #[test]
+    fn name_from_job_table() {
+        let text = format!("[job]\nname = \"alpha\"\n{BODY}");
+        let spec = JobSpec::from_toml_str("fallback", &text).unwrap();
+        assert_eq!(spec.name, "alpha");
+        assert_eq!(spec.cfg.procs, 2);
+        assert_eq!(spec.cfg.seed, 7);
+    }
+
+    #[test]
+    fn name_defaults_to_stem() {
+        let spec = JobSpec::from_toml_str("fallback", BODY).unwrap();
+        assert_eq!(spec.name, "fallback");
+    }
+
+    #[test]
+    fn bad_toml_is_an_error_not_a_panic() {
+        assert!(JobSpec::from_toml_str("x", "[run\nprocs = ").is_err());
+    }
+
+    #[test]
+    fn default_serve_options_have_ranks() {
+        assert!(ServeOptions::default().total_ranks >= 2);
+    }
+}

@@ -1,9 +1,11 @@
 //! Run and network configuration: typed parameter structs, paper presets,
 //! and TOML loading built on [`crate::util::tomlmini`].
 
+pub mod job;
 pub mod network;
 pub mod run;
 
+pub use job::{JobSpec, ServeOptions};
 pub use network::NetworkParams;
 pub use run::{
     AutoAxes, Backend, ConnectivityMode, ExchangeCadence, LeaderRotation, Mode,

@@ -342,29 +342,66 @@ pub fn run_live_with(
     cfg: &RunConfig,
     replanner: Option<Arc<OnlineReplanner>>,
 ) -> Result<RunResult> {
+    run_live_prepared(cfg, replanner, PreparedParts::default())
+}
+
+/// Coarse progress callback: `(steps_done, steps_total)`, invoked from
+/// rank 0 at window boundaries a handful of times per run. The resident
+/// server streams these to job clients.
+pub type ProgressObserver = Arc<dyn Fn(u32, u32) + Send + Sync>;
+
+/// Pre-computed run ingredients a caller may inject. The resident
+/// server uses this to share a placement across jobs with identical
+/// (net, seed, procs, policy, topology) and to observe progress; solo
+/// runs pass `PreparedParts::default()` and compute everything inline.
+#[derive(Clone, Default)]
+pub struct PreparedParts {
+    /// Placement to use instead of allocating one. Must have been
+    /// allocated for this config's (policy, n_neurons, procs, topology)
+    /// — the server's cache key guarantees that.
+    pub partition: Option<Arc<Partition>>,
+    pub progress: Option<ProgressObserver>,
+}
+
+/// [`run_live_with`] plus injected [`PreparedParts`].
+pub fn run_live_prepared(
+    cfg: &RunConfig,
+    replanner: Option<Arc<OnlineReplanner>>,
+    parts: PreparedParts,
+) -> Result<RunResult> {
     let p = cfg.procs;
     let steps = cfg.steps();
     // Placement: the allocator policy decides which rank owns which
     // gids. greedy-comms reads the stateless connectome plus the
-    // topology tree (flat runs get all-equal link costs).
-    let cp = ConnectivityParams::from_network(&cfg.net, cfg.seed);
-    let tree = cfg
-        .topology
-        .tree()
-        .map(|shape| TopologyTree::new(p, shape.levels()));
-    let ctx = AllocContext { connectivity: Some(&cp), tree: tree.as_ref() };
-    let part = Partition::allocate(cfg.partition, cfg.net.n_neurons, p, &ctx);
+    // topology tree (flat runs get all-equal link costs). A cached
+    // placement (same inputs, allocated once by the server) skips this.
+    let part: Arc<Partition> = match parts.partition {
+        Some(part) => part,
+        None => {
+            let cp = ConnectivityParams::from_network(&cfg.net, cfg.seed);
+            let tree = cfg
+                .topology
+                .tree()
+                .map(|shape| TopologyTree::new(p, shape.levels()));
+            let ctx = AllocContext { connectivity: Some(&cp), tree: tree.as_ref() };
+            Arc::new(Partition::allocate(cfg.partition, cfg.net.n_neurons, p, &ctx))
+        }
+    };
+    let progress = parts.progress.as_ref();
 
     let t0 = std::time::Instant::now();
     let rp = replanner.as_ref();
     let reports: Vec<RankReport> = match cfg.topology {
-        Topology::Flat => spawn_ranks(cfg, &part, LocalCluster::new(p), steps, rp)?,
+        Topology::Flat => {
+            spawn_ranks(cfg, &part, LocalCluster::new(p), steps, rp, progress)?
+        }
         Topology::Nodes(k) => spawn_ranks(
             cfg,
             &part,
             HierCluster::with_tree(p, &[k], cfg.leader_rotation),
             steps,
             rp,
+            progress,
         )?,
         Topology::Tree(shape) => spawn_ranks(
             cfg,
@@ -372,6 +409,7 @@ pub fn run_live_with(
             HierCluster::with_tree(p, shape.levels(), cfg.leader_rotation),
             steps,
             rp,
+            progress,
         )?,
     };
     let wall_s = t0.elapsed().as_secs_f64();
@@ -457,6 +495,7 @@ fn spawn_ranks<T: Transport + Clone>(
     transport: T,
     steps: u32,
     replanner: Option<&Arc<OnlineReplanner>>,
+    progress: Option<&ProgressObserver>,
 ) -> Result<Vec<RankReport>> {
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
@@ -465,8 +504,17 @@ fn spawn_ranks<T: Transport + Clone>(
             let cfg = cfg.clone();
             let part = part.clone();
             let replanner = replanner.cloned();
+            let progress = progress.cloned();
             handles.push(scope.spawn(move || -> Result<RankReport> {
-                rank_main(rank, &cfg, &part, transport, steps, replanner.as_deref())
+                rank_main(
+                    rank,
+                    &cfg,
+                    &part,
+                    transport,
+                    steps,
+                    replanner.as_deref(),
+                    progress.as_ref(),
+                )
             }));
         }
         handles
@@ -483,6 +531,7 @@ fn rank_main<T: Transport>(
     transport: T,
     steps: u32,
     replanner: Option<&OnlineReplanner>,
+    progress: Option<&ProgressObserver>,
 ) -> Result<RankReport> {
     let owned = part.owned(rank).clone();
     let pop = PopulationSoA::init_owned(&cfg.net, cfg.seed, &owned);
@@ -676,6 +725,15 @@ fn rank_main<T: Transport>(
 
         step += len;
         window += 1;
+        if let (Some(obs), 0) = (progress, rank) {
+            // A handful of callbacks per run: fire when an eighth-of-run
+            // boundary is crossed (and always at the end), whatever the
+            // epoch length.
+            let q = (steps / 8).max(1);
+            if step == steps || step / q > (step - len) / q {
+                obs(step.min(steps), steps);
+            }
+        }
         if cfg.progress && rank == 0 && step / 1000 > (step - len) / 1000 {
             eprintln!(
                 "  [live] step {}/{} rate so far {:.2} Hz",

@@ -10,5 +10,7 @@ pub mod live;
 pub mod modeled;
 pub mod orchestrator;
 
-pub use live::{OnlineReplanner, ReplanEvent, WindowPlan};
+pub use live::{
+    OnlineReplanner, PreparedParts, ProgressObserver, ReplanEvent, WindowPlan,
+};
 pub use orchestrator::{run, EnergyReport, RunResult};

@@ -1,0 +1,114 @@
+//! Per-job accounting for the resident simulation server.
+//!
+//! Each job that completes in `runtime::server` is condensed into a
+//! [`JobReport`]: wall clock, the paper's headline J/synaptic-event
+//! figure (same platform/power math as the `bench-smoke` subcommand),
+//! and a SHA-256 fingerprint of the spike raster. The fingerprint is the
+//! server's isolation receipt — a job run through the multi-tenant
+//! scheduler must hash identically to the same config run solo.
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::RunResult;
+use crate::util::sha256;
+
+use super::{joules_per_synaptic_event, SynapticEventCount};
+
+/// SHA-256 over the per-step population spike counts, little-endian u32
+/// wire order. Any change to spike timing or count anywhere in the run
+/// changes this digest.
+pub fn raster_hash(pop_counts: &[u32]) -> String {
+    let mut h = sha256::Sha256::new();
+    for &c in pop_counts {
+        h.update(&c.to_le_bytes());
+    }
+    sha256::to_hex(&h.finalize())
+}
+
+/// Condensed per-job result streamed back to `serve` clients and written
+/// into `BENCH_server.json`.
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    pub name: String,
+    pub wall_s: f64,
+    pub sim_s: f64,
+    pub total_spikes: u64,
+    pub total_syn_events: u64,
+    pub energy_j: f64,
+    pub uj_per_syn_event: f64,
+    pub raster_sha256: String,
+}
+
+impl JobReport {
+    /// Price a finished run on the config's platform/interconnect models,
+    /// mirroring the `bench-smoke` energy math (utilization = compute
+    /// fraction of the component breakdown).
+    pub fn from_result(name: &str, cfg: &RunConfig, r: &RunResult) -> Result<Self> {
+        let platform = crate::platform::presets::platform_by_name(&cfg.platform)?;
+        let link = crate::simnet::presets::interconnect_by_name(&cfg.interconnect)?;
+        let power = crate::power::PowerModel::new(platform, link);
+        let utilization = r.components.fractions().0;
+        let energy_j = power.energy_to_solution_j(r.procs, utilization, r.wall_s);
+        let events = SynapticEventCount::measured(r.total_syn_events, r.total_ext_events);
+        let uj = joules_per_synaptic_event(energy_j, &events) * 1e6;
+        Ok(Self {
+            name: name.to_string(),
+            wall_s: r.wall_s,
+            sim_s: r.sim_s,
+            total_spikes: r.total_spikes,
+            total_syn_events: r.total_syn_events,
+            energy_j,
+            uj_per_syn_event: uj,
+            raster_sha256: raster_hash(&r.pop_counts),
+        })
+    }
+
+    /// One JSON object, hand-formatted (no serde offline).
+    pub fn to_json(&self, indent: &str) -> String {
+        format!(
+            concat!(
+                "{{\n",
+                "{i}  \"name\": \"{name}\",\n",
+                "{i}  \"wall_s\": {wall:.6},\n",
+                "{i}  \"sim_s\": {sim:.3},\n",
+                "{i}  \"total_spikes\": {spikes},\n",
+                "{i}  \"total_syn_events\": {syn},\n",
+                "{i}  \"energy_j\": {energy:.6},\n",
+                "{i}  \"uj_per_syn_event\": {uj:.6},\n",
+                "{i}  \"raster_sha256\": \"{hash}\"\n",
+                "{i}}}"
+            ),
+            i = indent,
+            name = self.name,
+            wall = self.wall_s,
+            sim = self.sim_s,
+            spikes = self.total_spikes,
+            syn = self.total_syn_events,
+            energy = self.energy_j,
+            uj = self.uj_per_syn_event,
+            hash = self.raster_sha256,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raster_hash_is_order_and_value_sensitive() {
+        let a = raster_hash(&[1, 2, 3]);
+        assert_eq!(a, raster_hash(&[1, 2, 3]));
+        assert_ne!(a, raster_hash(&[3, 2, 1]));
+        assert_ne!(a, raster_hash(&[1, 2]));
+        assert_ne!(a, raster_hash(&[1, 2, 4]));
+        assert_eq!(a.len(), 64);
+    }
+
+    #[test]
+    fn raster_hash_distinguishes_concatenation_ambiguity() {
+        // [1, 256] and [256, 1] differ even though byte multisets match.
+        assert_ne!(raster_hash(&[1, 256]), raster_hash(&[256, 1]));
+    }
+}

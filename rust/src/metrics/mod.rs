@@ -5,6 +5,7 @@
 pub mod synevents;
 pub mod energy;
 pub mod comm_volume;
+pub mod jobs;
 pub mod memory;
 
 pub use comm_volume::{
@@ -12,5 +13,6 @@ pub use comm_volume::{
     CommVolume,
 };
 pub use energy::joules_per_synaptic_event;
+pub use jobs::{raster_hash, JobReport};
 pub use memory::MemoryUse;
 pub use synevents::SynapticEventCount;

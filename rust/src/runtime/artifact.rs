@@ -4,10 +4,63 @@
 //! population sizes; a rank population of size `n` runs on the smallest
 //! rung >= n, padded with inert neurons (zero input, v at rest — they can
 //! never cross threshold, see the padding tests in `runtime::backend`).
+//!
+//! Errors are typed ([`ArtifactError`]) rather than bare `anyhow!` strings:
+//! the resident server ([`crate::runtime::server`]) must be able to fail a
+//! single job on a bad artifact dir while continuing to serve every other
+//! job, so these errors travel through job results instead of tearing the
+//! process down.
 
+use std::fmt;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+/// Why the artifact registry could not satisfy a request. Each variant
+/// degrades exactly one job (or one scan); none is fatal to a server.
+#[derive(Debug)]
+pub enum ArtifactError {
+    /// The artifacts directory could not be opened at all.
+    DirUnreadable { dir: PathBuf, source: std::io::Error },
+    /// A directory entry failed to read mid-scan.
+    Entry { dir: PathBuf, source: std::io::Error },
+    /// The directory exists but holds no `lif_sfa_<n>.hlo.txt` rungs.
+    NoArtifacts { dir: PathBuf },
+    /// The requested population exceeds the largest compiled rung.
+    RungTooLarge { n: u32, largest: u32 },
+}
+
+impl fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::DirUnreadable { dir, source } => write!(
+                f,
+                "artifacts dir {} unreadable (run `make artifacts`): {source}",
+                dir.display()
+            ),
+            Self::Entry { dir, source } => {
+                write!(f, "reading entry in artifacts dir {}: {source}", dir.display())
+            }
+            Self::NoArtifacts { dir } => write!(
+                f,
+                "no lif_sfa_*.hlo.txt artifacts in {} — run `make artifacts`",
+                dir.display()
+            ),
+            Self::RungTooLarge { n, largest } => write!(
+                f,
+                "population {n} exceeds the largest artifact rung {largest} — \
+                 re-run aot.py with a larger --sizes ladder"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::DirUnreadable { source, .. } | Self::Entry { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct ArtifactRegistry {
@@ -18,12 +71,16 @@ pub struct ArtifactRegistry {
 
 impl ArtifactRegistry {
     /// Scan `dir` for `lif_sfa_<n>.hlo.txt` files.
-    pub fn scan(dir: &Path) -> Result<Self> {
+    pub fn scan(dir: &Path) -> Result<Self, ArtifactError> {
         let mut sizes = Vec::new();
-        let entries = std::fs::read_dir(dir)
-            .with_context(|| format!("artifacts dir {} (run `make artifacts`)", dir.display()))?;
+        let entries = std::fs::read_dir(dir).map_err(|source| ArtifactError::DirUnreadable {
+            dir: dir.to_path_buf(),
+            source,
+        })?;
         for e in entries {
-            let name = e?.file_name();
+            let name = e
+                .map_err(|source| ArtifactError::Entry { dir: dir.to_path_buf(), source })?
+                .file_name();
             let name = name.to_string_lossy();
             if let Some(num) = name
                 .strip_prefix("lif_sfa_")
@@ -35,10 +92,7 @@ impl ArtifactRegistry {
             }
         }
         if sizes.is_empty() {
-            bail!(
-                "no lif_sfa_*.hlo.txt artifacts in {} — run `make artifacts`",
-                dir.display()
-            );
+            return Err(ArtifactError::NoArtifacts { dir: dir.to_path_buf() });
         }
         sizes.sort_unstable();
         Ok(Self { dir: dir.to_path_buf(), sizes })
@@ -49,14 +103,13 @@ impl ArtifactRegistry {
     }
 
     /// Smallest rung that fits a population of `n`.
-    pub fn rung_for(&self, n: u32) -> Result<u32> {
+    pub fn rung_for(&self, n: u32) -> Result<u32, ArtifactError> {
         match self.sizes.iter().find(|&&s| s >= n) {
             Some(&s) => Ok(s),
-            None => bail!(
-                "population {n} exceeds the largest artifact rung {} — \
-                 re-run aot.py with a larger --sizes ladder",
-                self.sizes.last().unwrap()
-            ),
+            None => Err(ArtifactError::RungTooLarge {
+                n,
+                largest: self.sizes.last().copied().unwrap_or(0),
+            }),
         }
     }
 
@@ -94,13 +147,39 @@ mod tests {
         assert_eq!(r.rung_for(256).unwrap(), 256);
         assert_eq!(r.rung_for(257).unwrap(), 2048);
         assert_eq!(r.rung_for(8192).unwrap(), 8192);
-        assert!(r.rung_for(8193).is_err());
+        match r.rung_for(8193) {
+            Err(ArtifactError::RungTooLarge { n: 8193, largest: 8192 }) => {}
+            other => panic!("expected RungTooLarge, got {other:?}"),
+        }
     }
 
     #[test]
     fn empty_dir_errors() {
         let td = tempdir::TempDir::new();
-        assert!(ArtifactRegistry::scan(td.path()).is_err());
+        match ArtifactRegistry::scan(td.path()) {
+            Err(ArtifactError::NoArtifacts { dir }) => assert_eq!(dir, td.path()),
+            other => panic!("expected NoArtifacts, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        let td = tempdir::TempDir::new();
+        let missing = td.path().join("does-not-exist");
+        match ArtifactRegistry::scan(&missing) {
+            Err(ArtifactError::DirUnreadable { dir, .. }) => assert_eq!(dir, missing),
+            other => panic!("expected DirUnreadable, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn errors_display_and_chain() {
+        let err = ArtifactError::RungTooLarge { n: 10, largest: 8 };
+        let msg = err.to_string();
+        assert!(msg.contains("10") && msg.contains('8'), "{msg}");
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let err = ArtifactError::DirUnreadable { dir: PathBuf::from("x"), source: io };
+        assert!(std::error::Error::source(&err).is_some());
     }
 
     /// Minimal tempdir (std-only; the tempfile crate is unavailable).

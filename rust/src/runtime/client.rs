@@ -96,8 +96,13 @@ impl XlaRuntime {
         let result = exe.execute_b::<&xla::PjRtBuffer>(&inputs)?;
         // CopyRawToHost is unimplemented on the TFRT CPU client, so the
         // packed array comes back through one literal (still a single
-        // copy and no tuple unwrapping).
-        let lit = result[0][0]
+        // copy and no tuple unwrapping). An empty result shape would be
+        // a broken artifact, not a programming error here — surface it
+        // as a job failure rather than an index panic.
+        let lit = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow::anyhow!("executable returned no output buffers"))?
             .to_literal_sync()
             .context("reading packed step output")?;
         let vals = lit.to_vec::<f32>()?;

@@ -8,11 +8,13 @@
 pub mod artifact;
 pub mod backend;
 pub mod client;
+pub mod server;
 pub mod xla_stub;
 
-pub use artifact::ArtifactRegistry;
+pub use artifact::{ArtifactError, ArtifactRegistry};
 pub use backend::{make_backend, NativeBackend, NeuronBackend};
 pub use client::XlaRuntime;
+pub use server::{CacheStats, JobEvent, JobHandle, SimServer};
 
 /// Whether this build links a real PJRT runtime. `false` means the
 /// offline [`xla_stub`] is in place: `--backend xla` fails fast with a

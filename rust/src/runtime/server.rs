@@ -1,0 +1,640 @@
+//! The resident multi-tenant simulation server.
+//!
+//! One process, many simulation jobs: callers [`submit`](SimServer::submit)
+//! named [`JobSpec`] payloads and get back a [`JobHandle`] streaming
+//! [`JobEvent`]s (queued → started → progress → finished/failed). The
+//! point, per the paper's J/synaptic-event accounting, is to amortize
+//! every per-run fixed cost that N cold CLI invocations would pay N
+//! times:
+//!
+//! * **plan cache** — `auto` axes are resolved through the analytic
+//!   planner once per distinct config and the resolved config reused;
+//! * **placement cache** — [`Partition::allocate`] (greedy-comms walks
+//!   the whole connectome) runs once per distinct
+//!   (network, seed, procs, policy, topology) and the resulting
+//!   [`Partition`] is shared as an `Arc` with every matching job;
+//! * **connectome cache** — the [`ConnectivityParams`] procedural
+//!   parameter set, keyed by (network, seed);
+//! * **artifact cache** — one [`ArtifactRegistry`] scan per artifacts
+//!   dir, with a fail-fast rung check before any rank thread spawns
+//!   (the compiled PJRT executable itself is per rank thread by
+//!   constraint: `PjRtClient` holds an `Rc` and is not `Send`);
+//! * **job batching** — queued jobs with byte-identical configs run the
+//!   engine once and share the (cloned) result.
+//!
+//! Scheduling: jobs queue until their rank demand fits the server's
+//! free-rank budget; among the fitting jobs the scheduler starts the one
+//! with the smallest predicted wall clock, priced with the same simnet
+//! closed forms the autotuner uses ([`Planner::price`] × steps) —
+//! shortest-job-first keeps the queue latency of small jobs from hiding
+//! behind long ones, and FIFO order breaks ties. Every job gets its own
+//! result channel and its own [`RunResult`]; nothing RNG-dependent is
+//! shared unless the *entire* config (seed included — the cache key
+//! hashes every field) matches.
+//!
+//! Isolation contract: a job run through this server produces a raster
+//! bitwise identical to the same config run solo through
+//! [`coordinator::run`] — enforced by `rust/tests/server_props.rs` and
+//! the golden corpus in `rust/tests/golden_rasters.rs`. Per-job errors
+//! (bad artifacts dir, failed validation at run time) fail that job's
+//! handle and leave the server serving.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::topology::TopologyTree;
+use crate::config::{Backend, JobSpec, Mode, RunConfig, ServeOptions};
+use crate::coordinator::live::{run_live_prepared, PreparedParts, ProgressObserver};
+use crate::coordinator::{OnlineReplanner, RunResult};
+use crate::engine::partition::{AllocContext, Partition};
+use crate::model::connectivity::ConnectivityParams;
+use crate::simnet::autotune::Planner;
+
+use super::artifact::ArtifactRegistry;
+
+/// FNV-1a over the `Debug` rendering of a config. `RunConfig` derives
+/// `Debug` recursively over every field — network, seed, procs, every
+/// exchange axis — so two configs share a key iff they are
+/// byte-identical settings. Seed inclusion is what makes cache reuse
+/// RNG-safe by construction.
+pub fn config_key(cfg: &RunConfig) -> u64 {
+    fnv1a(format!("{cfg:?}").as_bytes())
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Placement cache key: exactly the inputs [`Partition::allocate`]
+/// reads — the network (connectome shape), the seed (the connectome
+/// draw), procs, policy, and topology (greedy-comms prices links
+/// through the tree).
+fn placement_key(cfg: &RunConfig) -> u64 {
+    fnv1a(
+        format!(
+            "{:?}|{}|{}|{}|{}",
+            cfg.net, cfg.seed, cfg.procs, cfg.partition, cfg.topology
+        )
+        .as_bytes(),
+    )
+}
+
+/// Connectome cache key: the two inputs of
+/// [`ConnectivityParams::from_network`].
+fn connectome_key(cfg: &RunConfig) -> u64 {
+    fnv1a(format!("{:?}|{}", cfg.net, cfg.seed).as_bytes())
+}
+
+/// Everything a job's lifetime reports back, in order. `Finished` and
+/// `Failed` are terminal; exactly one of them arrives per job.
+#[derive(Debug)]
+pub enum JobEvent {
+    Queued,
+    Started,
+    /// Coarse step progress from rank 0 (a handful per run).
+    Progress { step: u32, steps: u32 },
+    Finished(Box<RunResult>),
+    Failed(String),
+}
+
+/// Caller's end of one submitted job.
+pub struct JobHandle {
+    pub id: u64,
+    pub name: String,
+    events: Receiver<JobEvent>,
+}
+
+impl JobHandle {
+    /// Incremental event stream (blocks on `recv`, iterable).
+    pub fn events(&self) -> &Receiver<JobEvent> {
+        &self.events
+    }
+
+    /// Drain events until the job terminates; Err on failure or if the
+    /// server dropped the job.
+    pub fn wait(self) -> Result<RunResult> {
+        loop {
+            match self.events.recv() {
+                Ok(JobEvent::Finished(r)) => return Ok(*r),
+                Ok(JobEvent::Failed(msg)) => bail!("job '{}' failed: {msg}", self.name),
+                Ok(_) => continue,
+                Err(_) => bail!("server dropped job '{}' without a result", self.name),
+            }
+        }
+    }
+}
+
+/// Snapshot of the shared-cache counters (see [`SimServer::cache_stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub plan_hits: u64,
+    pub plan_misses: u64,
+    pub placement_hits: u64,
+    pub placement_misses: u64,
+    pub connectome_hits: u64,
+    pub connectome_misses: u64,
+    pub artifact_hits: u64,
+    pub artifact_misses: u64,
+    /// Jobs that rode another identical job's engine pass.
+    pub batched_jobs: u64,
+}
+
+#[derive(Default)]
+struct SharedCaches {
+    /// Pre-resolution config key → fully resolved config (auto axes
+    /// priced through the planner once).
+    resolved: Mutex<HashMap<u64, RunConfig>>,
+    placements: Mutex<HashMap<u64, Arc<Partition>>>,
+    connectomes: Mutex<HashMap<u64, ConnectivityParams>>,
+    /// Artifacts-dir path → registry scan. Only successful scans are
+    /// cached, so fixing a dir between jobs works without a restart.
+    artifacts: Mutex<HashMap<String, ArtifactRegistry>>,
+    plan_hits: AtomicU64,
+    plan_misses: AtomicU64,
+    placement_hits: AtomicU64,
+    placement_misses: AtomicU64,
+    connectome_hits: AtomicU64,
+    connectome_misses: AtomicU64,
+    artifact_hits: AtomicU64,
+    artifact_misses: AtomicU64,
+    batched_jobs: AtomicU64,
+}
+
+struct QueuedJob {
+    id: u64,
+    name: String,
+    /// Fully resolved config (no `auto` axes left).
+    cfg: RunConfig,
+    /// Batching identity: [`config_key`] of the resolved config.
+    key: u64,
+    /// Simnet-priced predicted wall clock, the scheduling cost.
+    predicted_wall_s: f64,
+    tx: Sender<JobEvent>,
+}
+
+struct SchedState {
+    queue: Vec<QueuedJob>,
+    free_ranks: u32,
+    running_jobs: u32,
+    shutting_down: bool,
+}
+
+struct ServerInner {
+    total_ranks: u32,
+    state: Mutex<SchedState>,
+    cv: Condvar,
+    caches: SharedCaches,
+    next_id: AtomicU64,
+}
+
+/// The resident server. Create with [`SimServer::start`], feed it with
+/// [`submit`](SimServer::submit); dropping it drains the queue and
+/// joins the scheduler.
+pub struct SimServer {
+    inner: Arc<ServerInner>,
+    scheduler: Option<std::thread::JoinHandle<()>>,
+}
+
+impl SimServer {
+    pub fn start(opts: ServeOptions) -> Self {
+        let total = opts.total_ranks.max(1);
+        let inner = Arc::new(ServerInner {
+            total_ranks: total,
+            state: Mutex::new(SchedState {
+                queue: Vec::new(),
+                free_ranks: total,
+                running_jobs: 0,
+                shutting_down: false,
+            }),
+            cv: Condvar::new(),
+            caches: SharedCaches::default(),
+            next_id: AtomicU64::new(1),
+        });
+        let sched_inner = inner.clone();
+        let scheduler = std::thread::spawn(move || scheduler_loop(sched_inner));
+        Self { inner, scheduler: Some(scheduler) }
+    }
+
+    /// Validate, resolve, price and enqueue one job. Submission errors
+    /// (invalid config, rank demand over the server budget) surface
+    /// here; anything that can fail *per run* (artifacts, backend)
+    /// fails the job's handle instead.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobHandle> {
+        let JobSpec { name, cfg } = spec;
+        cfg.validate().with_context(|| format!("job '{name}'"))?;
+
+        // Plan cache: resolve `auto` axes once per distinct config.
+        let pre_key = config_key(&cfg);
+        let resolved = {
+            let cached = self.inner.caches.resolved.lock().unwrap().get(&pre_key).cloned();
+            match cached {
+                Some(r) => {
+                    self.inner.caches.plan_hits.fetch_add(1, Ordering::Relaxed);
+                    r
+                }
+                None => {
+                    self.inner.caches.plan_misses.fetch_add(1, Ordering::Relaxed);
+                    let (r, _plan) = crate::simnet::autotune::resolve(&cfg)
+                        .with_context(|| format!("job '{name}': resolving auto axes"))?;
+                    self.inner
+                        .caches
+                        .resolved
+                        .lock()
+                        .unwrap()
+                        .insert(pre_key, r.clone());
+                    r
+                }
+            }
+        };
+        if resolved.procs > self.inner.total_ranks {
+            bail!(
+                "job '{name}' wants {} ranks but the server budget is {}",
+                resolved.procs,
+                self.inner.total_ranks
+            );
+        }
+
+        // Price the job with the same closed forms the autotuner uses:
+        // per-step cost of the resolved (topology, cadence) × steps.
+        // Pricing is a scheduling hint only, so an unpriceable platform
+        // falls back to FIFO (0.0) rather than rejecting the job.
+        let predicted_wall_s = Planner::from_config(&resolved)
+            .map(|pl| {
+                let epoch = resolved
+                    .exchange_every
+                    .epoch_steps(resolved.net.delay_min_steps);
+                pl.price(&resolved.topology, epoch).total() * resolved.steps() as f64
+            })
+            .unwrap_or(0.0);
+
+        let (tx, rx) = channel();
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let key = config_key(&resolved);
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            if st.shutting_down {
+                bail!("server is shutting down; job '{name}' rejected");
+            }
+            let _ = tx.send(JobEvent::Queued);
+            st.queue.push(QueuedJob {
+                id,
+                name: name.clone(),
+                cfg: resolved,
+                key,
+                predicted_wall_s,
+                tx,
+            });
+        }
+        self.inner.cv.notify_all();
+        Ok(JobHandle { id, name, events: rx })
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        let c = &self.inner.caches;
+        CacheStats {
+            plan_hits: c.plan_hits.load(Ordering::Relaxed),
+            plan_misses: c.plan_misses.load(Ordering::Relaxed),
+            placement_hits: c.placement_hits.load(Ordering::Relaxed),
+            placement_misses: c.placement_misses.load(Ordering::Relaxed),
+            connectome_hits: c.connectome_hits.load(Ordering::Relaxed),
+            connectome_misses: c.connectome_misses.load(Ordering::Relaxed),
+            artifact_hits: c.artifact_hits.load(Ordering::Relaxed),
+            artifact_misses: c.artifact_misses.load(Ordering::Relaxed),
+            batched_jobs: c.batched_jobs.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn total_ranks(&self) -> u32 {
+        self.inner.total_ranks
+    }
+
+    /// Drain the queue, wait for in-flight jobs, stop the scheduler.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutting_down = true;
+        }
+        self.inner.cv.notify_all();
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SimServer {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Pick the queued job to start next: smallest predicted wall clock
+/// among those whose rank demand fits the free budget; earliest
+/// submission breaks ties. Returns a queue index.
+fn pick_next(st: &SchedState) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, j) in st.queue.iter().enumerate() {
+        if j.cfg.procs > st.free_ranks {
+            continue;
+        }
+        match best {
+            Some(b) if st.queue[b].predicted_wall_s <= j.predicted_wall_s => {}
+            _ => best = Some(i),
+        }
+    }
+    best
+}
+
+fn scheduler_loop(inner: Arc<ServerInner>) {
+    loop {
+        // Pick the next job (plus batch passengers) under the lock.
+        let (job, passengers) = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if st.shutting_down && st.queue.is_empty() && st.running_jobs == 0 {
+                    return;
+                }
+                if let Some(i) = pick_next(&st) {
+                    let job = st.queue.remove(i);
+                    // Batch passengers: byte-identical configs run the
+                    // engine once. Collected back-to-front so removal
+                    // indices stay valid.
+                    let mut passengers = Vec::new();
+                    let mut k = st.queue.len();
+                    while k > 0 {
+                        k -= 1;
+                        if st.queue[k].key == job.key {
+                            passengers.push(st.queue.remove(k));
+                        }
+                    }
+                    passengers.reverse(); // restore submission order
+                    st.free_ranks -= job.cfg.procs;
+                    st.running_jobs += 1;
+                    break (job, passengers);
+                }
+                st = inner.cv.wait(st).unwrap();
+            }
+        };
+        let worker_inner = inner.clone();
+        std::thread::spawn(move || {
+            run_job(&worker_inner, job, passengers);
+            let mut st = worker_inner.state.lock().unwrap();
+            // free_ranks is recomputed from the job the worker owned —
+            // the job struct was moved into run_job, so the count rides
+            // through the closure instead.
+            st.running_jobs -= 1;
+            drop(st);
+            worker_inner.cv.notify_all();
+        });
+    }
+}
+
+/// Execute one job (and its batch passengers) to terminal events, then
+/// return the ranks to the budget.
+fn run_job(inner: &Arc<ServerInner>, job: QueuedJob, passengers: Vec<QueuedJob>) {
+    let procs = job.cfg.procs;
+    let _ = job.tx.send(JobEvent::Started);
+    for p in &passengers {
+        let _ = p.tx.send(JobEvent::Started);
+    }
+    if !passengers.is_empty() {
+        inner
+            .caches
+            .batched_jobs
+            .fetch_add(passengers.len() as u64, Ordering::Relaxed);
+    }
+
+    // Progress fan-out to the job and every passenger. Senders sit
+    // behind a Mutex so the observer closure is Sync.
+    let all_tx: Vec<Sender<JobEvent>> =
+        std::iter::once(job.tx.clone()).chain(passengers.iter().map(|p| p.tx.clone())).collect();
+    let progress_tx = Mutex::new(all_tx);
+    let observer: ProgressObserver = Arc::new(move |step, steps| {
+        for tx in progress_tx.lock().unwrap().iter() {
+            let _ = tx.send(JobEvent::Progress { step, steps });
+        }
+    });
+
+    match execute(inner, &job.cfg, observer) {
+        Ok(result) => {
+            for p in &passengers {
+                let _ = p.tx.send(JobEvent::Finished(Box::new(result.clone())));
+            }
+            let _ = job.tx.send(JobEvent::Finished(Box::new(result)));
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for p in &passengers {
+                let _ = p.tx.send(JobEvent::Failed(msg.clone()));
+            }
+            let _ = job.tx.send(JobEvent::Failed(msg));
+        }
+    }
+
+    let mut st = inner.state.lock().unwrap();
+    st.free_ranks += procs;
+    drop(st);
+    inner.cv.notify_all();
+}
+
+/// One engine pass for a resolved config, drawing on the shared caches.
+/// Every error here degrades this job only.
+fn execute(
+    inner: &Arc<ServerInner>,
+    cfg: &RunConfig,
+    observer: ProgressObserver,
+) -> Result<RunResult> {
+    // Fail fast on the artifact ladder before spawning rank threads:
+    // the scan is cached per dir, and the rung check prices the largest
+    // rank population this placement produces.
+    if matches!(cfg.backend, Backend::Xla) {
+        let registry = registry_for(inner, &cfg.artifacts_dir)?;
+        let part = placement_for(inner, cfg);
+        let largest = (0..part.n_ranks())
+            .map(|r| part.owned(r).len())
+            .max()
+            .unwrap_or(0);
+        registry.rung_for(largest)?;
+    }
+    match cfg.mode {
+        Mode::Live => {
+            let replanner = if cfg.auto.exchange_every || cfg.auto.leader_rotation {
+                Some(Arc::new(OnlineReplanner::from_config(cfg)?))
+            } else {
+                None
+            };
+            let parts = PreparedParts {
+                partition: Some(placement_for(inner, cfg)),
+                progress: Some(observer),
+            };
+            run_live_prepared(cfg, replanner, parts)
+        }
+        // Modeled runs replay closed forms — milliseconds, no progress.
+        Mode::Modeled => crate::coordinator::modeled::run_modeled(cfg),
+    }
+}
+
+/// Shared placement, allocated at most once per [`placement_key`].
+fn placement_for(inner: &Arc<ServerInner>, cfg: &RunConfig) -> Arc<Partition> {
+    let key = placement_key(cfg);
+    if let Some(p) = inner.caches.placements.lock().unwrap().get(&key) {
+        inner.caches.placement_hits.fetch_add(1, Ordering::Relaxed);
+        return p.clone();
+    }
+    inner.caches.placement_misses.fetch_add(1, Ordering::Relaxed);
+    // Allocate outside the lock (greedy-comms walks the connectome);
+    // a racing duplicate allocation is deterministic-identical, and
+    // the first insert wins.
+    let cp = connectome_for(inner, cfg);
+    let tree = cfg
+        .topology
+        .tree()
+        .map(|shape| TopologyTree::new(cfg.procs, shape.levels()));
+    let ctx = AllocContext { connectivity: Some(&cp), tree: tree.as_ref() };
+    let part = Arc::new(Partition::allocate(
+        cfg.partition,
+        cfg.net.n_neurons,
+        cfg.procs,
+        &ctx,
+    ));
+    inner
+        .caches
+        .placements
+        .lock()
+        .unwrap()
+        .entry(key)
+        .or_insert(part)
+        .clone()
+}
+
+/// Shared procedural-connectome parameter set, derived at most once per
+/// (network, seed).
+fn connectome_for(inner: &Arc<ServerInner>, cfg: &RunConfig) -> ConnectivityParams {
+    let key = connectome_key(cfg);
+    if let Some(cp) = inner.caches.connectomes.lock().unwrap().get(&key) {
+        inner.caches.connectome_hits.fetch_add(1, Ordering::Relaxed);
+        return *cp;
+    }
+    inner.caches.connectome_misses.fetch_add(1, Ordering::Relaxed);
+    let cp = ConnectivityParams::from_network(&cfg.net, cfg.seed);
+    *inner
+        .caches
+        .connectomes
+        .lock()
+        .unwrap()
+        .entry(key)
+        .or_insert(cp)
+}
+
+/// Shared artifact-registry scan per artifacts dir (successful scans
+/// only, so a dir fixed between jobs is rescanned).
+fn registry_for(inner: &Arc<ServerInner>, dir: &str) -> Result<ArtifactRegistry> {
+    if let Some(r) = inner.caches.artifacts.lock().unwrap().get(dir) {
+        inner.caches.artifact_hits.fetch_add(1, Ordering::Relaxed);
+        return Ok(r.clone());
+    }
+    inner.caches.artifact_misses.fetch_add(1, Ordering::Relaxed);
+    let r = ArtifactRegistry::scan(std::path::Path::new(dir))?;
+    inner
+        .caches
+        .artifacts
+        .lock()
+        .unwrap()
+        .insert(dir.to_string(), r.clone());
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetworkParams;
+
+    fn tiny_cfg(seed: u64) -> RunConfig {
+        let mut cfg = RunConfig::default();
+        cfg.net = NetworkParams::tiny(512);
+        cfg.procs = 2;
+        cfg.sim_seconds = 0.05;
+        cfg.seed = seed;
+        cfg
+    }
+
+    #[test]
+    fn config_key_separates_seeds() {
+        let a = config_key(&tiny_cfg(1));
+        let b = config_key(&tiny_cfg(2));
+        assert_ne!(a, b, "seed must be part of the cache identity");
+        assert_eq!(a, config_key(&tiny_cfg(1)));
+    }
+
+    #[test]
+    fn placement_key_ignores_non_placement_axes() {
+        let mut a = tiny_cfg(1);
+        let mut b = tiny_cfg(1);
+        a.exchange_every = crate::config::ExchangeCadence::Step;
+        b.exchange_every = crate::config::ExchangeCadence::MinDelay;
+        assert_eq!(placement_key(&a), placement_key(&b));
+        b.seed = 2;
+        assert_ne!(placement_key(&a), placement_key(&b));
+    }
+
+    #[test]
+    fn submit_run_and_wait() {
+        let server = SimServer::start(ServeOptions { total_ranks: 4 });
+        let h = server
+            .submit(JobSpec::new("t", tiny_cfg(3)))
+            .unwrap();
+        let r = h.wait().unwrap();
+        assert_eq!(r.procs, 2);
+        assert!(r.total_spikes > 0);
+    }
+
+    #[test]
+    fn oversized_job_rejected_at_submit() {
+        let server = SimServer::start(ServeOptions { total_ranks: 1 });
+        let err = server.submit(JobSpec::new("big", tiny_cfg(1))).unwrap_err();
+        assert!(err.to_string().contains("budget"), "{err}");
+    }
+
+    #[test]
+    fn identical_jobs_batch_and_distinct_seeds_do_not() {
+        let server = SimServer::start(ServeOptions { total_ranks: 2 });
+        // Same config twice: one engine pass, identical results.
+        let h1 = server.submit(JobSpec::new("a", tiny_cfg(7))).unwrap();
+        let h2 = server.submit(JobSpec::new("b", tiny_cfg(7))).unwrap();
+        // Different seed: never batched with the others.
+        let h3 = server.submit(JobSpec::new("c", tiny_cfg(8))).unwrap();
+        let r1 = h1.wait().unwrap();
+        let r2 = h2.wait().unwrap();
+        let r3 = h3.wait().unwrap();
+        assert_eq!(r1.pop_counts, r2.pop_counts);
+        assert_ne!(
+            r1.pop_counts, r3.pop_counts,
+            "distinct seeds must not share RNG-dependent state"
+        );
+    }
+
+    #[test]
+    fn bad_artifacts_dir_fails_one_job_not_the_server() {
+        let server = SimServer::start(ServeOptions { total_ranks: 2 });
+        let mut bad = tiny_cfg(1);
+        bad.backend = Backend::Xla;
+        bad.artifacts_dir = "/nonexistent/dpsnn-artifacts".to_string();
+        let h = server.submit(JobSpec::new("xla", bad)).unwrap();
+        assert!(h.wait().is_err());
+        // The server keeps serving.
+        let ok = server.submit(JobSpec::new("native", tiny_cfg(2))).unwrap();
+        assert!(ok.wait().is_ok());
+    }
+}

@@ -13,4 +13,5 @@ pub mod cli;
 pub mod tomlmini;
 pub mod bench;
 pub mod prop;
+pub mod sha256;
 pub mod table;

@@ -1,0 +1,146 @@
+//! No-panic fuzz/property tests for the AER wire decoders.
+//!
+//! The resident server feeds decoder inputs that crossed a transport,
+//! so `decode_spikes` and `decode_spikes_epoch` must be total over
+//! arbitrary bytes: corrupt, truncated and adversarial streams return
+//! `Err` — they never panic and never over-allocate from attacker-
+//! controlled headers. `util::prop::forall` catches panics per case and
+//! re-raises them with the failing seed, so "the closure returned" IS
+//! the no-panic assertion.
+
+use dpsnn::comm::aer::{
+    decode_spikes, decode_spikes_epoch, encode_spikes, encode_spikes_epoch,
+};
+use dpsnn::engine::spike::Spike;
+use dpsnn::util::prop::forall;
+use dpsnn::util::rng::SplitMix64;
+
+const DT_MS: f64 = 1.0;
+
+fn random_bytes(rng: &mut SplitMix64, max_len: u32) -> Vec<u8> {
+    let len = rng.next_below(max_len + 1) as usize;
+    (0..len).map(|_| rng.next_u64() as u8).collect()
+}
+
+/// A valid, step-sorted spike sequence for round-trip mutation tests.
+fn random_spikes(rng: &mut SplitMix64) -> Vec<Spike> {
+    let n = rng.next_below(64) as usize;
+    let mut step = 0u32;
+    (0..n)
+        .map(|_| {
+            step += rng.next_below(3);
+            Spike::new(rng.next_below(100_000), step)
+        })
+        .collect()
+}
+
+#[test]
+fn flat_decoder_never_panics_or_overallocates_on_junk() {
+    forall("aer-flat-junk", 500, |rng| {
+        let buf = random_bytes(rng, 300);
+        let mut out = Vec::new();
+        match decode_spikes(&buf, DT_MS, &mut out) {
+            Ok(n) => {
+                assert_eq!(n * 12, buf.len(), "Ok must consume whole buffer");
+                assert_eq!(out.len(), n);
+            }
+            Err(_) => {} // rejection is the expected path for junk
+        }
+        // Allocation must be bounded by the input, not by decoded
+        // content (12 wire bytes per possible record).
+        assert!(
+            out.capacity() <= buf.len().max(8),
+            "capacity {} for a {}-byte input",
+            out.capacity(),
+            buf.len()
+        );
+    });
+}
+
+#[test]
+fn epoch_decoder_never_panics_or_overallocates_on_junk() {
+    forall("aer-epoch-junk", 500, |rng| {
+        let buf = random_bytes(rng, 300);
+        let mut out = Vec::new();
+        let _ = decode_spikes_epoch(&buf, DT_MS, &mut out);
+        assert!(
+            out.capacity() <= buf.len().max(8),
+            "capacity {} for a {}-byte input",
+            out.capacity(),
+            buf.len()
+        );
+    });
+}
+
+#[test]
+fn epoch_decoder_rejects_huge_count_headers_without_allocating() {
+    forall("aer-epoch-hugecount", 200, |rng| {
+        // A single header claiming an enormous run with little payload:
+        // the decoder must Err on the length check, never reserve for
+        // the claimed count.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&rng.next_below(1000).to_le_bytes());
+        let huge = u32::MAX - rng.next_below(1000);
+        buf.extend_from_slice(&huge.to_le_bytes());
+        buf.extend(std::iter::repeat(0u8).take(rng.next_below(36) as usize));
+        let mut out = Vec::new();
+        assert!(decode_spikes_epoch(&buf, DT_MS, &mut out).is_err());
+        assert!(out.capacity() <= 64, "reserved from an unvalidated header");
+    });
+}
+
+#[test]
+fn truncated_epoch_streams_err_or_decode_a_strict_prefix() {
+    forall("aer-epoch-truncate", 300, |rng| {
+        let spikes = random_spikes(rng);
+        let mut buf = Vec::new();
+        encode_spikes_epoch(&spikes, DT_MS, &mut buf);
+        if buf.is_empty() {
+            return;
+        }
+        let cut = rng.next_below(buf.len() as u32) as usize;
+        let mut out = Vec::new();
+        match decode_spikes_epoch(&buf[..cut], DT_MS, &mut out) {
+            // A cut landing exactly on a run boundary decodes the runs
+            // before it — a strict prefix, nothing fabricated.
+            Ok(n) => {
+                assert!(n < spikes.len() || spikes.is_empty());
+                assert_eq!(&out[..], &spikes[..n], "prefix content diverged");
+            }
+            Err(_) => {}
+        }
+    });
+}
+
+#[test]
+fn single_byte_corruption_never_panics() {
+    forall("aer-epoch-bitflip", 300, |rng| {
+        let spikes = random_spikes(rng);
+        let mut buf = Vec::new();
+        encode_spikes_epoch(&spikes, DT_MS, &mut buf);
+        if buf.is_empty() {
+            return;
+        }
+        let pos = rng.next_below(buf.len() as u32) as usize;
+        let flip = 1u8 << rng.next_below(8);
+        buf[pos] ^= flip;
+        let mut out = Vec::new();
+        // Either outcome is legal; surviving the bytes is the property.
+        let _ = decode_spikes_epoch(&buf, DT_MS, &mut out);
+        let mut out = Vec::new();
+        let _ = decode_spikes(&buf, DT_MS, &mut out);
+    });
+}
+
+#[test]
+fn valid_epoch_streams_always_round_trip() {
+    forall("aer-epoch-roundtrip", 300, |rng| {
+        let spikes = random_spikes(rng);
+        let mut buf = Vec::new();
+        encode_spikes_epoch(&spikes, DT_MS, &mut buf);
+        let mut out = Vec::new();
+        let n = decode_spikes_epoch(&buf, DT_MS, &mut out).expect("valid stream");
+        assert_eq!(n, spikes.len());
+        assert_eq!(out, spikes);
+    });
+}

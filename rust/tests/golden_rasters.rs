@@ -1,0 +1,185 @@
+//! Golden-raster regression corpus.
+//!
+//! A small preset matrix — both routing modes, flat + `tree:2,2`
+//! topologies, step + min-delay cadence, materialized + procedural
+//! connectivity — is run live and its rasters pinned as SHA-256 digests
+//! in `rust/tests/data/golden_rasters.txt`. Any future change that
+//! silently moves spike output fails here loudly instead of only when a
+//! property test happens to cover the changed axis.
+//!
+//! Pin lifecycle: on the first run (no pins file) the digests are
+//! written — bootstrap mode, because the build host is the only place
+//! the crate can execute. Once the file exists it is enforced; CI runs
+//! this test target twice so the enforce path is always exercised. To
+//! intentionally re-baseline after a physics change, delete the pins
+//! file and commit the regenerated one.
+//!
+//! Independent of the pins, two invariants always hold in-process:
+//! every matrix config varies only raster-preserving axes, so ALL
+//! digests must be identical to each other; and running any config
+//! twice must reproduce its digest exactly.
+
+use std::path::PathBuf;
+
+use dpsnn::config::{
+    ConnectivityMode, ExchangeCadence, LeaderRotation, NetworkParams, Routing, RunConfig,
+    Topology, TreeShape,
+};
+use dpsnn::coordinator;
+use dpsnn::metrics::raster_hash;
+
+/// The common physics: every config shares this network (including
+/// `delay_min_steps`, part of the delay draw), seed, procs and duration,
+/// and varies only axes the determinism contract says preserve rasters.
+fn base_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.net = NetworkParams::tiny(512);
+    cfg.net.delay_min_steps = 4.min(cfg.net.delay_max_steps).max(1);
+    cfg.procs = 4;
+    cfg.sim_seconds = 0.2;
+    cfg
+}
+
+/// (key, config) preset matrix. Keys are stable identifiers used in the
+/// pins file — do not rename without re-baselining.
+fn matrix() -> Vec<(&'static str, RunConfig)> {
+    let tree22 = Topology::Tree(TreeShape::new(&[2, 2]).unwrap());
+    let mut out = Vec::new();
+
+    let cfg = base_cfg();
+    out.push(("flat-filtered-step-mat", cfg));
+
+    let mut cfg = base_cfg();
+    cfg.routing = Routing::Broadcast;
+    out.push(("flat-broadcast-step-mat", cfg));
+
+    let mut cfg = base_cfg();
+    cfg.exchange_every = ExchangeCadence::MinDelay;
+    out.push(("flat-filtered-mindelay-mat", cfg));
+
+    let mut cfg = base_cfg();
+    cfg.topology = tree22;
+    cfg.leader_rotation = LeaderRotation::RoundRobin;
+    out.push(("tree22-filtered-step-mat", cfg));
+
+    let mut cfg = base_cfg();
+    cfg.topology = tree22;
+    cfg.routing = Routing::Broadcast;
+    cfg.exchange_every = ExchangeCadence::MinDelay;
+    out.push(("tree22-broadcast-mindelay-mat", cfg));
+
+    let mut cfg = base_cfg();
+    cfg.connectivity = ConnectivityMode::Procedural;
+    out.push(("flat-filtered-step-proc", cfg));
+
+    let mut cfg = base_cfg();
+    cfg.connectivity = ConnectivityMode::Procedural;
+    cfg.routing = Routing::Broadcast;
+    cfg.exchange_every = ExchangeCadence::MinDelay;
+    out.push(("flat-broadcast-mindelay-proc", cfg));
+
+    let mut cfg = base_cfg();
+    cfg.connectivity = ConnectivityMode::Procedural;
+    cfg.topology = tree22;
+    cfg.exchange_every = ExchangeCadence::MinDelay;
+    out.push(("tree22-filtered-mindelay-proc", cfg));
+
+    for (k, cfg) in &out {
+        cfg.validate().unwrap_or_else(|e| panic!("{k}: {e}"));
+    }
+    out
+}
+
+fn pins_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/data/golden_rasters.txt")
+}
+
+fn parse_pins(text: &str) -> Vec<(String, String)> {
+    text.lines()
+        .filter(|l| !l.trim().is_empty() && !l.trim_start().starts_with('#'))
+        .filter_map(|l| {
+            let (k, v) = l.split_once('=')?;
+            Some((k.trim().to_string(), v.trim().to_string()))
+        })
+        .collect()
+}
+
+#[test]
+fn golden_raster_corpus() {
+    let matrix = matrix();
+    let digests: Vec<(String, String)> = matrix
+        .iter()
+        .map(|(key, cfg)| {
+            let r = coordinator::run(cfg).unwrap_or_else(|e| panic!("{key}: {e}"));
+            (key.to_string(), raster_hash(&r.pop_counts))
+        })
+        .collect();
+
+    // Invariant 1 (pin-independent): these axes are raster-preserving,
+    // so every config must produce the SAME raster.
+    let reference = &digests[0].1;
+    for (key, d) in &digests {
+        assert_eq!(
+            d, reference,
+            "{key} diverged from {} — a raster-preserving axis moved the raster",
+            digests[0].0
+        );
+    }
+
+    // Invariant 2: re-running one config reproduces its digest.
+    let (key0, cfg0) = &matrix[0];
+    let again = coordinator::run(cfg0).unwrap();
+    assert_eq!(
+        raster_hash(&again.pop_counts),
+        *reference,
+        "{key0} is not reproducible within one process"
+    );
+
+    // Pins: enforce when present, bootstrap otherwise.
+    let path = pins_path();
+    match std::fs::read_to_string(&path) {
+        Ok(text) => {
+            let pins = parse_pins(&text);
+            assert!(!pins.is_empty(), "pins file {} is empty", path.display());
+            for (key, hash) in &pins {
+                match digests.iter().find(|(k, _)| k == key) {
+                    Some((_, d)) => assert_eq!(
+                        d, hash,
+                        "golden raster changed for {key} — if intentional, delete {} and \
+                         commit the regenerated pins",
+                        path.display()
+                    ),
+                    None => panic!(
+                        "pinned config {key} is gone from the matrix — re-baseline {}",
+                        path.display()
+                    ),
+                }
+            }
+            for (key, _) in &digests {
+                assert!(
+                    pins.iter().any(|(k, _)| k == key),
+                    "matrix config {key} has no pin — delete {} to re-baseline",
+                    path.display()
+                );
+            }
+        }
+        Err(_) => {
+            // Bootstrap: first run on this checkout pins the corpus.
+            let mut text = String::from(
+                "# Golden raster digests (SHA-256 of per-step population spike counts).\n\
+                 # Written by rust/tests/golden_rasters.rs on first run; enforced once\n\
+                 # present. Delete this file to re-baseline after an intentional\n\
+                 # physics change.\n",
+            );
+            for (key, d) in &digests {
+                text.push_str(&format!("{key} = {d}\n"));
+            }
+            if let Some(dir) = path.parent() {
+                std::fs::create_dir_all(dir).unwrap();
+            }
+            std::fs::write(&path, text).unwrap();
+            eprintln!("bootstrapped golden raster pins at {}", path.display());
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Per-job isolation properties for the resident multi-tenant server
+//! (`runtime::server`).
+//!
+//! The load-bearing invariant: a job run through the server — with its
+//! shared plan/placement/connectome/artifact caches, simnet-priced
+//! scheduling and identical-config batching — produces a raster and
+//! spike totals **bitwise identical** to the same config run solo
+//! through `coordinator::run` (the CLI path). Exercised across
+//! partition × topology × cadence × connectivity-mode × routing combos
+//! with distinct seeds, plus a cache-poisoning check (two jobs differing
+//! only in seed must not share RNG-dependent cached state), batching
+//! identity, per-job failure containment, and progress-stream sanity.
+
+use dpsnn::config::{
+    ConnectivityMode, ExchangeCadence, JobSpec, NetworkParams, PartitionPolicy, Routing,
+    RunConfig, ServeOptions, Topology, TreeShape,
+};
+use dpsnn::coordinator;
+use dpsnn::runtime::{JobEvent, SimServer};
+
+/// The shared tiny workload. Every combo keeps the same network physics
+/// (including `delay_min_steps`, which changes the delay draw and so
+/// the raster) and varies only the exchange/placement axes.
+fn base_cfg(procs: u32, seed: u64) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.net = NetworkParams::tiny(512);
+    cfg.net.delay_min_steps = 4.min(cfg.net.delay_max_steps).max(1);
+    cfg.procs = procs;
+    cfg.sim_seconds = 0.2;
+    cfg.seed = seed;
+    cfg
+}
+
+/// One spec per combo of the cache-relevant axes, each with its own
+/// seed so no two jobs may legally share RNG-dependent state.
+fn combo_specs() -> Vec<JobSpec> {
+    let tree22 = Topology::Tree(TreeShape::new(&[2, 2]).unwrap());
+    let mut specs = Vec::new();
+
+    let mut c = base_cfg(2, 11);
+    c.partition = PartitionPolicy::Index;
+    specs.push(JobSpec::new("index-flat-step-mat", c));
+
+    let mut c = base_cfg(2, 22);
+    c.partition = PartitionPolicy::RoundRobin;
+    c.exchange_every = ExchangeCadence::MinDelay;
+    specs.push(JobSpec::new("rr-flat-mindelay-mat", c));
+
+    let mut c = base_cfg(4, 33);
+    c.partition = PartitionPolicy::GreedyComms;
+    c.topology = tree22;
+    specs.push(JobSpec::new("greedy-tree22-step-mat", c));
+
+    let mut c = base_cfg(4, 44);
+    c.topology = Topology::Nodes(2);
+    c.exchange_every = ExchangeCadence::MinDelay;
+    c.connectivity = ConnectivityMode::Procedural;
+    specs.push(JobSpec::new("index-nodes2-mindelay-proc", c));
+
+    let mut c = base_cfg(2, 55);
+    c.routing = Routing::Broadcast;
+    c.connectivity = ConnectivityMode::Procedural;
+    specs.push(JobSpec::new("index-flat-step-proc-bcast", c));
+
+    for s in &specs {
+        s.cfg.validate().unwrap();
+    }
+    specs
+}
+
+#[test]
+fn concurrent_jobs_match_solo_runs_bitwise() {
+    let specs = combo_specs();
+
+    // Solo twins first: each config through the CLI path, no sharing.
+    let solo: Vec<_> = specs
+        .iter()
+        .map(|s| coordinator::run(&s.cfg).unwrap())
+        .collect();
+
+    // All jobs through ONE resident server, concurrently (the 8-rank
+    // budget forces several to run at once and the rest to queue
+    // through the simnet-priced scheduler).
+    let server = SimServer::start(ServeOptions { total_ranks: 8 });
+    let handles: Vec<_> = specs
+        .iter()
+        .map(|s| server.submit(s.clone()).unwrap())
+        .collect();
+    let served: Vec<_> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
+
+    for ((spec, a), b) in specs.iter().zip(&solo).zip(&served) {
+        assert_eq!(
+            a.pop_counts, b.pop_counts,
+            "raster diverged for {}",
+            spec.name
+        );
+        assert_eq!(a.total_spikes, b.total_spikes, "{}", spec.name);
+        assert_eq!(a.total_syn_events, b.total_syn_events, "{}", spec.name);
+        assert_eq!(a.rank_spikes, b.rank_spikes, "{}", spec.name);
+    }
+}
+
+#[test]
+fn jobs_differing_only_in_seed_share_no_rng_state() {
+    // greedy-comms placement reads the seed-dependent connectome, so a
+    // poisoned placement/connectome cache would surface here: run two
+    // jobs identical except for seed and require each to match its own
+    // solo twin while differing from the other.
+    let mk = |seed: u64| {
+        let mut c = base_cfg(2, seed);
+        c.partition = PartitionPolicy::GreedyComms;
+        c
+    };
+    let solo_a = coordinator::run(&mk(101)).unwrap();
+    let solo_b = coordinator::run(&mk(102)).unwrap();
+
+    let server = SimServer::start(ServeOptions { total_ranks: 4 });
+    let ha = server.submit(JobSpec::new("seed101", mk(101))).unwrap();
+    let hb = server.submit(JobSpec::new("seed102", mk(102))).unwrap();
+    let ra = ha.wait().unwrap();
+    let rb = hb.wait().unwrap();
+
+    assert_eq!(solo_a.pop_counts, ra.pop_counts, "seed 101 poisoned");
+    assert_eq!(solo_b.pop_counts, rb.pop_counts, "seed 102 poisoned");
+    assert_ne!(
+        ra.pop_counts, rb.pop_counts,
+        "distinct seeds must yield distinct rasters — shared RNG state?"
+    );
+}
+
+#[test]
+fn batched_identical_jobs_return_the_solo_result() {
+    let cfg = base_cfg(2, 77);
+    let solo = coordinator::run(&cfg).unwrap();
+
+    // One rank budget below 2×procs would serialize; give exactly the
+    // demand of one job so the twin queues and batching can trigger.
+    let server = SimServer::start(ServeOptions { total_ranks: 2 });
+    let h1 = server.submit(JobSpec::new("twin-a", cfg.clone())).unwrap();
+    let h2 = server.submit(JobSpec::new("twin-b", cfg.clone())).unwrap();
+    let h3 = server.submit(JobSpec::new("twin-c", cfg)).unwrap();
+    let r1 = h1.wait().unwrap();
+    let r2 = h2.wait().unwrap();
+    let r3 = h3.wait().unwrap();
+    let stats = server.cache_stats();
+
+    for (tag, r) in [("a", &r1), ("b", &r2), ("c", &r3)] {
+        assert_eq!(solo.pop_counts, r.pop_counts, "twin-{tag}");
+        assert_eq!(solo.total_spikes, r.total_spikes, "twin-{tag}");
+    }
+    // With a 2-rank budget the first twin holds all ranks while the
+    // identical others queue; at least one must have ridden its pass.
+    assert!(
+        stats.batched_jobs >= 1,
+        "identical queued configs should batch: {stats:?}"
+    );
+}
+
+#[test]
+fn shared_caches_are_exercised_across_jobs() {
+    // Job 2 shares job 1's placement key (same net/seed/procs/policy/
+    // topology, different cadence) and must hit the placement cache;
+    // job 3 changes only the policy, so its placement misses but its
+    // connectome (net, seed) lookup hits.
+    let mut a = base_cfg(2, 88);
+    a.partition = PartitionPolicy::GreedyComms;
+    let mut b = a.clone();
+    b.exchange_every = ExchangeCadence::MinDelay;
+    let mut c = a.clone();
+    c.partition = PartitionPolicy::RoundRobin;
+
+    let server = SimServer::start(ServeOptions { total_ranks: 2 });
+    for (name, cfg) in [("warm", a), ("placement-reuse", b), ("connectome-reuse", c)] {
+        server
+            .submit(JobSpec::new(name, cfg))
+            .unwrap()
+            .wait()
+            .unwrap();
+    }
+    let stats = server.cache_stats();
+    assert!(stats.placement_hits >= 1, "{stats:?}");
+    assert!(stats.connectome_hits >= 1, "{stats:?}");
+}
+
+#[test]
+fn bad_artifact_dir_degrades_one_job_only() {
+    let server = SimServer::start(ServeOptions { total_ranks: 2 });
+    let mut bad = base_cfg(2, 5);
+    bad.backend = dpsnn::config::Backend::Xla;
+    bad.artifacts_dir = "/nonexistent/dpsnn-server-props".to_string();
+    let h = server.submit(JobSpec::new("doomed", bad)).unwrap();
+    let err = h.wait().unwrap_err().to_string();
+    assert!(
+        err.contains("artifacts") || err.contains("artifact"),
+        "unexpected failure text: {err}"
+    );
+    // The server must still serve the next (native) job.
+    let ok = server.submit(JobSpec::new("survivor", base_cfg(2, 6))).unwrap();
+    assert!(ok.wait().is_ok());
+}
+
+#[test]
+fn event_stream_is_ordered_and_progress_monotonic() {
+    let server = SimServer::start(ServeOptions { total_ranks: 2 });
+    let h = server.submit(JobSpec::new("events", base_cfg(2, 9))).unwrap();
+    let mut saw_started = false;
+    let mut last_step = 0u32;
+    let mut finished = false;
+    while let Ok(ev) = h.events().recv() {
+        match ev {
+            JobEvent::Queued => assert!(!saw_started, "Queued after Started"),
+            JobEvent::Started => saw_started = true,
+            JobEvent::Progress { step, steps } => {
+                assert!(saw_started, "Progress before Started");
+                assert!(step >= last_step, "progress went backwards");
+                assert!(step <= steps);
+                last_step = step;
+            }
+            JobEvent::Finished(r) => {
+                assert!(saw_started);
+                assert!(r.total_spikes > 0);
+                finished = true;
+                break;
+            }
+            JobEvent::Failed(m) => panic!("job failed: {m}"),
+        }
+    }
+    assert!(finished, "no terminal event");
+    assert!(last_step > 0, "no progress events streamed");
+}
